@@ -1,0 +1,74 @@
+//! Accelerator face-off: runs every (model, dataset) workload through the
+//! GHOST simulator and all nine baseline roofline models, printing a
+//! per-workload leaderboard — the data behind Figs. 10–12.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_faceoff [model] [dataset]
+//! ```
+
+use ghost::baselines::{platform_by_name, run_baseline, supports, PLATFORMS};
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::gnn::models::{Model, ModelKind};
+use ghost::gnn::workload::Workload;
+use ghost::graph::datasets::Dataset;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_filter = args.first().and_then(|m| ModelKind::by_name(m));
+    let dataset_filter = args.get(1).cloned();
+
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+
+    for kind in ModelKind::ALL {
+        if model_filter.map(|m| m != kind).unwrap_or(false) {
+            continue;
+        }
+        for ds_name in kind.datasets() {
+            if dataset_filter
+                .as_deref()
+                .map(|d| !d.eq_ignore_ascii_case(ds_name))
+                .unwrap_or(false)
+            {
+                continue;
+            }
+            let dataset = Dataset::by_name(ds_name).expect("dataset");
+            let ghost_report =
+                simulate_workload(kind, &dataset, cfg, flags).expect("simulation");
+            let model = Model::for_dataset(kind, &dataset.spec);
+            let w = Workload::characterize(&model, &dataset);
+
+            println!("== {} / {} ==", kind.name(), ds_name);
+            println!(
+                "  {:<10} {:>12} {:>14} {:>12} {:>10}",
+                "platform", "GOPS", "EPB (J/bit)", "latency", "vs GHOST"
+            );
+            println!(
+                "  {:<10} {:>12.1} {:>14.2e} {:>9.2} us {:>10}",
+                "GHOST",
+                ghost_report.metrics.gops(),
+                ghost_report.metrics.epb(),
+                ghost_report.metrics.latency_s * 1e6,
+                "--"
+            );
+            let mut rows: Vec<_> = PLATFORMS
+                .iter()
+                .filter(|p| supports(p.name, kind))
+                .map(|p| (p.name, run_baseline(&platform_by_name(p.name).unwrap(), &w)))
+                .collect();
+            rows.sort_by(|a, b| b.1.gops().partial_cmp(&a.1.gops()).unwrap());
+            for (name, m) in rows {
+                println!(
+                    "  {:<10} {:>12.2} {:>14.2e} {:>9.2} us {:>9.1}x",
+                    name,
+                    m.gops(),
+                    m.epb(),
+                    m.latency_s * 1e6,
+                    ghost_report.metrics.gops() / m.gops()
+                );
+            }
+            println!();
+        }
+    }
+}

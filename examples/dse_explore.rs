@@ -1,0 +1,69 @@
+//! Design-space exploration walkthrough: re-derives the paper's device
+//! feasibility frontiers (Figs. 7a/7b) and architecture optimum (Fig. 7c),
+//! then shows what happens to a config that violates the device limits.
+//!
+//! ```bash
+//! cargo run --release --example dse_explore
+//! ```
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::dse as arch_dse;
+use ghost::photonics::devices::DeviceParams;
+use ghost::photonics::dse as device_dse;
+use ghost::photonics::snr::required_snr_db;
+use ghost::photonics::mr::MicroringDesign;
+
+fn main() {
+    let p = DeviceParams::paper();
+    let mr = MicroringDesign::paper();
+
+    println!("== device level ==");
+    println!(
+        "SNR cutoff (eq. 12, Q={}, 2^7 levels): {:.1} dB (paper: 21.3 dB)",
+        mr.q_factor,
+        required_snr_db(&mr, ghost::config::N_LEVELS)
+    );
+    println!("\ncoherent summation chains (Fig. 7a):");
+    for lambda in [1520.0, 1540.0, 1560.0] {
+        println!(
+            "  {:.0} nm: up to {} MRs",
+            lambda,
+            device_dse::max_feasible_coherent(&p, lambda, 40)
+        );
+    }
+    println!("non-coherent WDM banks (Fig. 7b):");
+    println!(
+        "  up to {} wavelengths at 1 nm spacing from 1550 nm",
+        device_dse::max_feasible_noncoherent(30)
+    );
+
+    println!("\n== architecture level (Fig. 7c, quick workload set) ==");
+    let grid = arch_dse::default_grid();
+    let workloads = arch_dse::workload_set(true);
+    let points = arch_dse::explore(&grid, &workloads);
+    println!("swept {} feasible configurations; top 5 by EPB/GOPS:", points.len());
+    for (i, pt) in points.iter().take(5).enumerate() {
+        println!(
+            "  #{} [N={}, V={}, Rr={}, Rc={}, Tr={}]  EPB/GOPS {:.3e}  ({:.0} GOPS)",
+            i + 1,
+            pt.cfg.n,
+            pt.cfg.v,
+            pt.cfg.r_r,
+            pt.cfg.r_c,
+            pt.cfg.t_r,
+            pt.epb_per_gops,
+            pt.gops
+        );
+    }
+    let paper = GhostConfig::paper_optimal();
+    if let Some(rank) = points.iter().position(|pt| pt.cfg == paper) {
+        println!("paper optimum [20,20,18,7,17] ranks #{} of {}", rank + 1, points.len());
+    }
+
+    println!("\n== device limits enforced ==");
+    let infeasible = GhostConfig { r_c: 25, ..paper };
+    match infeasible.validate() {
+        Err(e) => println!("R_c=25 rejected: {e}"),
+        Ok(()) => unreachable!(),
+    }
+}

@@ -1,0 +1,62 @@
+//! GAT inference through the functional PJRT datapath: loads the 8-head
+//! graph-attention artifact for Citeseer, runs inference, reports accuracy
+//! at int8, and contrasts the simulator's GAT execution ordering
+//! (transform-first, §3.4.2) against the GCN ordering on the same graph.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example gat_inference
+//! ```
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("gat_citeseer.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("== GAT (8 heads -> 1 head) on Citeseer ==\n");
+    let engine = Engine::load(&dir, "gat_citeseer")?;
+    let t0 = std::time::Instant::now();
+    let outputs = engine.run()?;
+    let wall = t0.elapsed();
+    let logits = outputs[0].as_f32()?;
+    let shape = outputs[0].shape().to_vec();
+    let labels = engine.extra("labels")?;
+    let mask = engine.extra("test_mask")?;
+    let pred = argmax_rows(logits, shape[0], shape[1]);
+    let acc = masked_accuracy(&pred, labels.as_i32()?, Some(mask.as_i32()?));
+    println!("logits {shape:?}, test accuracy {:.2}%, PJRT wall {:.2?}", acc * 100.0, wall);
+
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let gat = simulate(ModelKind::Gat, "Citeseer", cfg, flags).map_err(anyhow::Error::msg)?;
+    let gcn = simulate(ModelKind::Gcn, "Citeseer", cfg, flags).map_err(anyhow::Error::msg)?;
+
+    println!("\nsimulated on the photonic architecture:");
+    let (ga, gc, gu) = gat.breakdown();
+    let (ca, cc, cu) = gcn.breakdown();
+    println!(
+        "  GAT (transform-first): {:.1} us | agg {:.0}% comb {:.0}% upd {:.0}%",
+        gat.metrics.latency_s * 1e6,
+        ga * 100.0,
+        gc * 100.0,
+        gu * 100.0
+    );
+    println!(
+        "  GCN (aggregate-first): {:.1} us | agg {:.0}% comb {:.0}% upd {:.0}%",
+        gcn.metrics.latency_s * 1e6,
+        ca * 100.0,
+        cc * 100.0,
+        cu * 100.0
+    );
+    println!(
+        "\nGAT shifts the bottleneck from aggregation to combine/update\n\
+         (8 attention heads + per-edge digital softmax), matching Fig. 9."
+    );
+    Ok(())
+}

@@ -1,0 +1,210 @@
+"""AOT lowering: JAX/Pallas forward passes → HLO text + binary artifacts.
+
+For every (model, dataset) pair this writes, under ``artifacts/``:
+
+* ``<model>_<dataset>.hlo.txt`` — the quantized, kernel-path forward pass
+  lowered to HLO **text** (the interchange format xla_extension 0.5.1 can
+  parse; jax ≥ 0.5 serialized protos are rejected — see
+  /opt/xla-example/README.md),
+* ``<dataset>.data.bin`` — the dataset arrays (features, neighbor tables,
+  labels, masks), shared across models,
+* ``<model>_<dataset>.weights.bin`` — trained parameters (from
+  ``compile.train``, invoked lazily if missing),
+* ``<model>_<dataset>.json`` — the manifest the Rust runtime consumes:
+  executable input order, tensor shapes/dtypes/offsets, eval extras, and
+  measured Table-3 accuracies.
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as D
+from . import model as M
+from . import train as T
+
+ARTIFACTS = T.ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side can uniformly unwrap outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _np_dtype_tag(a: np.ndarray) -> str:
+    if a.dtype == np.float32:
+        return "f32"
+    if a.dtype == np.int32:
+        return "i32"
+    raise ValueError(f"unsupported dtype {a.dtype}")
+
+
+class BinWriter:
+    """Accumulates raw little-endian tensors and their manifest entries."""
+
+    def __init__(self, file_key: str):
+        self.file_key = file_key
+        self.chunks = []
+        self.offset = 0
+
+    def add(self, name: str, array: np.ndarray) -> dict:
+        array = np.ascontiguousarray(array)
+        entry = {
+            "name": name,
+            "shape": list(array.shape),
+            "dtype": _np_dtype_tag(array),
+            "file": self.file_key,
+            "offset": self.offset,
+        }
+        raw = array.tobytes()
+        self.chunks.append(raw)
+        self.offset += len(raw)
+        return entry
+
+    def write(self, path: str):
+        with open(path, "wb") as f:
+            for c in self.chunks:
+                f.write(c)
+
+
+def _dataset_arrays(model: str, ds) -> list[tuple[str, np.ndarray]]:
+    """Executable data inputs, in call order."""
+    arrays = [
+        ("x", ds.x.astype(np.float32)),
+        ("nbr_idx", ds.nbr_idx.astype(np.int32)),
+        ("nbr_mask", ds.nbr_mask.astype(np.float32)),
+    ]
+    if model == "gin":
+        arrays.append(("node_mask", ds.node_mask.astype(np.float32)))
+    return arrays
+
+
+def _sorted_params(params: dict) -> list[tuple[str, np.ndarray]]:
+    return [(k, np.asarray(params[k], dtype=np.float32)) for k in sorted(params)]
+
+
+def build_artifact(model: str, dataset: str, accuracies: dict, out_dir: str):
+    """Lower one (model, dataset) pair and write all its artifact files."""
+    ds = D.load(dataset)
+    wpath = T.weights_path(model, dataset)
+    if not os.path.exists(wpath):
+        raise FileNotFoundError(f"{wpath}: run compile.train first")
+    loaded = np.load(wpath)
+    params = {k: jnp.asarray(loaded[k]) for k in loaded.files}
+    fwd = M.forward_fn(model)
+
+    data_inputs = _dataset_arrays(model, ds)
+    weight_inputs = _sorted_params(params)
+    weight_names = [k for k, _ in weight_inputs]
+
+    def flat_fwd(*args):
+        n_data = len(data_inputs)
+        data = args[:n_data]
+        p = dict(zip(weight_names, args[n_data:]))
+        return fwd(p, *data, quantized=True, use_kernels=True)
+
+    example = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in data_inputs] + [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in weight_inputs
+    ]
+    print(f"lowering {model}/{dataset}...")
+    lowered = jax.jit(flat_fwd).lower(*example)
+    hlo = to_hlo_text(lowered)
+
+    name = f"{model}_{dataset}"
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(hlo)
+
+    # Shared per-dataset data bin (idempotent across models, but GIN adds
+    # node_mask — keep it per-dataset and include every array any model
+    # needs plus eval extras).
+    data_bin = f"{dataset}.data.bin"
+    dwriter = BinWriter("data")
+    input_entries = [dwriter.add(n, a) for n, a in data_inputs]
+    extras = {
+        "labels": dwriter.add("labels", ds.labels.astype(np.int32)),
+        "test_mask": dwriter.add("test_mask", ds.test_mask.astype(np.int32)),
+        "train_mask": dwriter.add("train_mask", ds.train_mask.astype(np.int32)),
+    }
+    dwriter.write(os.path.join(out_dir, data_bin))
+
+    weights_bin = f"{name}.weights.bin"
+    wwriter = BinWriter("weights")
+    weight_entries = [wwriter.add(n, a) for n, a in weight_inputs]
+    wwriter.write(os.path.join(out_dir, weights_bin))
+
+    acc = accuracies.get((model, dataset), {})
+    manifest = {
+        "hlo": hlo_file,
+        "inputs": input_entries + weight_entries,
+        "extras": extras,
+        "files": {"data": data_bin, "weights": weights_bin},
+        "meta": {
+            "model": model,
+            "dataset": D.SPECS[dataset].name,
+            "acc_fp32": acc.get("acc_fp32"),
+            "acc_int8": acc.get("acc_int8"),
+            "quantized": True,
+        },
+    }
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {hlo_file} ({len(hlo)} chars), {weights_bin}, {name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=ARTIFACTS, help="artifacts directory")
+    ap.add_argument("--model", default=None, help="single model to build")
+    ap.add_argument("--dataset", default=None, help="single dataset to build")
+    ap.add_argument(
+        "--skip-training", action="store_true", help="fail instead of training on missing weights"
+    )
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.skip_training:
+        acc_rows = []
+        acc_path = os.path.join(out_dir, "accuracy.json")
+        if os.path.exists(acc_path):
+            with open(acc_path) as f:
+                acc_rows = json.load(f)
+    else:
+        acc_rows = T.train_all()
+    accuracies = {}
+    for r in acc_rows:
+        model_key = r["model"].lower()
+        ds_key = r["dataset"].lower()
+        accuracies[(model_key, ds_key)] = r
+
+    pairs = []
+    for model, ds_names in T.MODEL_DATASETS.items():
+        for dataset in ds_names:
+            if args.model and model != args.model:
+                continue
+            if args.dataset and dataset != args.dataset.lower():
+                continue
+            pairs.append((model, dataset))
+    for model, dataset in pairs:
+        build_artifact(model, dataset, accuracies, out_dir)
+    # Build stamp consumed by the Makefile.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

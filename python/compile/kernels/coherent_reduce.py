@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: the GHOST *reduce unit* as a chunked masked reduction.
+
+Hardware mapping: one reduce unit is an ``R_r × R_c`` coherent-summation
+array — each column imprints one neighbor's feature chunk and constructive
+interference sums the columns; the trailing recirculation MR feeds the
+partial sum back for the next ``R_c`` neighbors (Fig. 5(a)). Max-reduce
+routes through the optical comparator instead.
+
+In Pallas: the grid iterates the ``R_c``-wide neighbor column blocks —
+the *architecturally sequential* axis, with the accumulator carried across
+grid steps playing the recirculation MR. The spatially parallel hardware
+dimensions (``V`` reduce units, ``R_r`` wavelength rows) are folded into
+the block, so one grid step computes one coherent pass of the whole
+aggregate plane. Inputs are the gathered neighbor features ``g [n, D, f]``
+and the 0/1 validity mask ``m [n, D]`` from the padded neighbor table.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Reduce-array dimensions (paper-optimal config).
+R_R = 18  # feature rows (wavelengths)
+R_C = 7  # neighbor columns per coherent pass
+V = 20  # reduce units operating in parallel (one per lane)
+
+# Lowering optimization (§Perf): recirculation passes batched per grid
+# step (see photonic_mvm.PASSES_PER_STEP); accumulation order preserved.
+PASSES_PER_STEP = 8
+D_TILE = R_C * PASSES_PER_STEP
+
+_NEG = -3.4e38  # -inf stand-in for masked max entries
+
+
+def _sum_kernel(g_ref, m_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # One coherent pass: R_C neighbor columns interfere into the partial sum.
+    o_ref[...] += jnp.sum(g_ref[...] * m_ref[...][..., None], axis=1)
+
+
+def _max_kernel(g_ref, m_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, _NEG)
+
+    masked = jnp.where(m_ref[...][..., None] > 0, g_ref[...], _NEG)
+    o_ref[...] = jnp.maximum(o_ref[...], jnp.max(masked, axis=1))
+
+
+def _pad_to(a, axis, multiple):
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def coherent_reduce(gathered, mask, op="sum"):
+    """Reduce gathered neighbor features over the neighbor axis.
+
+    ``gathered [n, D, f]``, ``mask [n, D]`` → ``[n, f]``.
+    ``op``: "sum" | "mean" | "max" (the three §3.3.1 reduce modes; mean is
+    the trailing-MR 1/n scaling after the coherent sum).
+    """
+    n, d, f = gathered.shape
+    gp = _pad_to(_pad_to(_pad_to(gathered, 0, V), 1, D_TILE), 2, R_R)
+    mp = _pad_to(_pad_to(mask, 0, V), 1, D_TILE)
+    npad, dp, fp = gp.shape
+    # Grid over the sequential recirculation (pass-burst) axis only.
+    grid = (dp // D_TILE,)
+    kernel = _max_kernel if op == "max" else _sum_kernel
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((npad, D_TILE, fp), lambda kk: (0, kk, 0)),
+            pl.BlockSpec((npad, D_TILE), lambda kk: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((npad, fp), lambda kk: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, fp), jnp.float32),
+        interpret=True,
+    )(gp, mp)
+    out = out[:n, :f]
+    counts = jnp.sum(mask, axis=1)
+    if op == "mean":
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    elif op == "max":
+        # Vertices with no neighbors contribute zero (blocker-gated lanes).
+        out = jnp.where(counts[:, None] > 0, out, 0.0)
+    return out
+
+
+def coherent_reduce_batched(gathered, mask, op="sum"):
+    """Batched variant ``[B, n, D, f] → [B, n, f]``."""
+    b, n, d, f = gathered.shape
+    out = coherent_reduce(
+        gathered.reshape(b * n, d, f), mask.reshape(b * n, d), op=op
+    )
+    return out.reshape(b, n, f)

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: the GHOST *transform unit* as a blocked MVM.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): one transform unit is a
+``T_r × R_r`` microring bank — ``R_r`` WDM wavelengths carry the activation
+vector, each of the ``T_r`` rows imprints one weight row and a balanced
+photodetector accumulates one output feature per pass. The ECU re-maps
+weight tiles over multiple passes when the layer is bigger than the array.
+
+In Pallas that is a k-blocked matmul with an accumulator: the grid
+iterates the ``R_r``-wide input chunks — the *architecturally sequential*
+axis (each chunk is one optical pass, with digital partial-sum buffering
+between passes, §3.3.2). The spatially parallel hardware dimensions — the
+``V`` execution lanes and ``T_r`` BPD rows, which all fire simultaneously
+in every pass — are folded into the block so one grid step computes what
+the whole photonic plane computes in one pass. Values are fake-quantized
+to the 2⁷-per-polarity amplitude grid before entering the array — the
+imprint precision of the photonic datapath.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU tiling/roofline is estimated analytically in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import fake_quantize
+
+# Photonic array dimensions (paper-optimal [N,V,Rr,Rc,Tr] = [20,20,18,7,17]).
+R_R = 18  # wavelengths per waveguide == input chunk
+T_R = 17  # transform-unit rows == output chunk
+V = 20  # execution lanes == vertex-block rows per pass
+
+# Lowering optimization (§Perf): issue this many back-to-back optical
+# passes per grid step. The recirculation accumulation order within the
+# step is preserved (contiguous k-columns), so numerics match pass-granular
+# execution up to fp reassociation; interpret-mode per-step overhead drops
+# ~8×. One grid step = one *burst* of passes.
+PASSES_PER_STEP = 16
+K_TILE = R_R * PASSES_PER_STEP
+
+
+def _mvm_kernel(x_ref, w_ref, o_ref):
+    """One grid step = one optical pass: every lane × BPD row accumulates
+    its (·, R_R) × (R_R, ·) partial product simultaneously."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, axis, multiple):
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("quantized",))
+def photonic_mvm(x, w, quantized=True):
+    """``x [m, k] @ w [k, n]`` through the photonic transform array.
+
+    ``quantized=True`` applies the 8-bit amplitude-grid fake-quantization
+    to both operands (the deployment configuration); ``False`` bypasses it
+    (the fp32 reference configuration of Table 3).
+    """
+    if quantized:
+        x = fake_quantize(x)
+        w = fake_quantize(w)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    xp = _pad_to(_pad_to(x, 0, V), 1, K_TILE)
+    wp = _pad_to(_pad_to(w, 0, K_TILE), 1, T_R)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    # Grid over the sequential pass-burst axis only; lanes/rows are
+    # spatially parallel hardware and live inside the block.
+    grid = (kp // K_TILE,)
+    out = pl.pallas_call(
+        _mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mp, K_TILE), lambda kk: (0, kk)),
+            pl.BlockSpec((K_TILE, np_), lambda kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((mp, np_), lambda kk: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def photonic_mvm_batched(x, w, quantized=True):
+    """Batched variant for graph-classification inputs ``x [B, m, k]``:
+    flattens the batch onto the lane axis (the ECU schedules graphs
+    back-to-back on the same arrays)."""
+    b, m, k = x.shape
+    out = photonic_mvm(x.reshape(b * m, k), w, quantized=quantized)
+    return out.reshape(b, m, -1)

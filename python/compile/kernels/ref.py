@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel result is checked against these references in
+``python/tests/test_kernel.py`` (including hypothesis shape sweeps).
+"""
+
+import jax.numpy as jnp
+
+from ..quant import fake_quantize
+
+
+def mvm_ref(x, w, quantized=True):
+    """Reference for ``photonic_mvm``."""
+    if quantized:
+        x = fake_quantize(x)
+        w = fake_quantize(w)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def reduce_ref(gathered, mask, op="sum"):
+    """Reference for ``coherent_reduce``."""
+    m = mask[..., None]
+    if op == "sum":
+        return jnp.sum(gathered * m, axis=-2)
+    if op == "mean":
+        s = jnp.sum(gathered * m, axis=-2)
+        counts = jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+        return s / counts[..., None]
+    if op == "max":
+        neg = jnp.full_like(gathered, -3.4e38)
+        masked = jnp.where(m > 0, gathered, neg)
+        out = jnp.max(masked, axis=-2)
+        any_valid = jnp.sum(mask, axis=-1) > 0
+        return jnp.where(any_valid[..., None], out, 0.0)
+    raise ValueError(f"unknown op {op}")

@@ -1,0 +1,232 @@
+"""L2: the four GNN model families in JAX, calling the L1 Pallas kernels.
+
+Each forward pass exists in two numerically identical realizations:
+
+* ``use_kernels=True`` — transforms run through the Pallas
+  ``photonic_mvm`` and aggregations through ``coherent_reduce``: the
+  configuration that is AOT-lowered to the ``artifacts/*.hlo.txt`` the Rust
+  runtime executes.
+* ``use_kernels=False`` — the pure-jnp oracle path (same math via
+  ``kernels.ref``), used for training (Pallas interpret-mode calls are not
+  differentiated) and for fast Table-3 evaluation. Equality of the two
+  paths is asserted by ``python/tests/``.
+
+``quantized=True`` applies GHOST's 8-bit amplitude-grid quantization to
+every operand entering a photonic array (deployment); ``False`` is the
+fp32 reference of Table 3.
+
+Model configurations follow §4.1: GCN and GraphSAGE with 2 layers, GAT
+with 2 layers (8 heads then 1), GIN with an 8-layer MLP (2 convolutions ×
+4-layer MLPs) plus sum readout.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.coherent_reduce import coherent_reduce, coherent_reduce_batched
+from .kernels.photonic_mvm import photonic_mvm, photonic_mvm_batched
+
+HIDDEN = 16
+GIN_HIDDEN = 64
+GAT_HEADS = 8
+GAT_HEAD_DIM = 8
+SAGE_SAMPLE = 25
+
+
+def _mvm(x, w, quantized, use_kernels):
+    if use_kernels:
+        if x.ndim == 3:
+            return photonic_mvm_batched(x, w, quantized=quantized)
+        return photonic_mvm(x, w, quantized=quantized)
+    return ref.mvm_ref(x, w, quantized=quantized)
+
+
+def _reduce(g, m, op, use_kernels):
+    if use_kernels:
+        if g.ndim == 4:
+            return coherent_reduce_batched(g, m, op=op)
+        return coherent_reduce(g, m, op=op)
+    return ref.reduce_ref(g, m, op=op)
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return (scale * rng.standard_normal(shape)).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- GCN
+
+
+def gcn_init(rng, n_features, n_labels):
+    return {
+        "w0": _glorot(rng, (n_features, HIDDEN)),
+        "w1": _glorot(rng, (HIDDEN, n_labels)),
+    }
+
+
+def gcn_forward(params, x, nbr_idx, nbr_mask, quantized=True, use_kernels=True):
+    """2-layer GCN; aggregation is the paper's reduce-unit formula
+    ``h_v + mean_u h_u`` (self + trailing-MR mean). Transform-then-
+    aggregate order (linear maps commute with aggregation; keeps the
+    gathered tensor at hidden width)."""
+    h = x
+    for li, w in enumerate([params["w0"], params["w1"]]):
+        hw = _mvm(h, w, quantized, use_kernels)
+        gathered = hw[nbr_idx]  # [n, D, out]
+        agg = _reduce(gathered, nbr_mask, "mean", use_kernels)
+        h = hw + agg
+        if li == 0:
+            h = jax.nn.relu(h)
+    return (h,)
+
+
+# ------------------------------------------------------------- GraphSAGE
+
+
+def sage_init(rng, n_features, n_labels):
+    return {
+        "w_self0": _glorot(rng, (n_features, HIDDEN)),
+        "w_nbr0": _glorot(rng, (n_features, HIDDEN)),
+        "w_self1": _glorot(rng, (HIDDEN, n_labels)),
+        "w_nbr1": _glorot(rng, (HIDDEN, n_labels)),
+    }
+
+
+def sage_forward(params, x, nbr_idx, nbr_mask, quantized=True, use_kernels=True):
+    """2-layer GraphSAGE, mean aggregator over a fixed neighbor sample."""
+    idx = nbr_idx[:, :SAGE_SAMPLE]
+    mask = nbr_mask[:, :SAGE_SAMPLE]
+    h = x
+    for li in range(2):
+        w_self = params[f"w_self{li}"]
+        w_nbr = params[f"w_nbr{li}"]
+        agg = _reduce(h[idx], mask, "mean", use_kernels)
+        h = _mvm(h, w_self, quantized, use_kernels) + _mvm(agg, w_nbr, quantized, use_kernels)
+        if li == 0:
+            h = jax.nn.relu(h)
+    return (h,)
+
+
+# ------------------------------------------------------------------- GIN
+
+
+def gin_init(rng, n_features, n_labels):
+    params = {"eps0": jnp.zeros(()), "eps1": jnp.zeros(())}
+    dims0 = [n_features] + [GIN_HIDDEN] * 4
+    dims1 = [GIN_HIDDEN] + [GIN_HIDDEN] * 4
+    for conv, dims in enumerate([dims0, dims1]):
+        for i in range(4):
+            params[f"mlp{conv}_{i}"] = _glorot(rng, (dims[i], dims[i + 1]))
+    params["w_cls"] = _glorot(rng, (GIN_HIDDEN, n_labels))
+    return params
+
+
+def gin_forward(params, x, nbr_idx, nbr_mask, node_mask, quantized=True, use_kernels=True):
+    """2 GIN convolutions (4-layer MLPs → the paper's 8 MLP layers), sum
+    readout, linear classifier. Batched over padded graphs."""
+    b, n, _ = x.shape
+    batch_ix = jnp.arange(b)[:, None, None]
+    h = x
+    for conv in range(2):
+        gathered = h[batch_ix, nbr_idx]  # [B, n, D, f]
+        s = _reduce(gathered, nbr_mask, "sum", use_kernels)
+        h = (1.0 + params[f"eps{conv}"]) * h + s
+        for i in range(4):
+            h = _mvm(h, params[f"mlp{conv}_{i}"], quantized, use_kernels)
+            h = jax.nn.relu(h)
+        h = h * node_mask[..., None]
+    pooled = jnp.sum(h, axis=1)  # [B, hidden] sum readout
+    logits = _mvm(pooled, params["w_cls"], quantized, use_kernels)
+    return (logits,)
+
+
+# ------------------------------------------------------------------- GAT
+
+
+def gat_init(rng, n_features, n_labels):
+    return {
+        "w0": _glorot(rng, (n_features, GAT_HEADS * GAT_HEAD_DIM)),
+        "a_src0": _glorot(rng, (GAT_HEADS, GAT_HEAD_DIM)),
+        "a_dst0": _glorot(rng, (GAT_HEADS, GAT_HEAD_DIM)),
+        "w1": _glorot(rng, (GAT_HEADS * GAT_HEAD_DIM, n_labels)),
+        "a_src1": _glorot(rng, (1, n_labels)),
+        "a_dst1": _glorot(rng, (1, n_labels)),
+    }
+
+
+def _attn_blockdiag(a):
+    """Builds the block-diagonal [H*d, H] matrix that computes per-head
+    attention dot products on the transform arrays (the paper routes the
+    attention-vector multiplication through the combine block)."""
+    heads, dim = a.shape
+    eye = jnp.eye(heads)  # [H, H]
+    return (a[:, :, None] * eye[:, None, :]).reshape(heads * dim, heads)
+
+
+def _gat_layer(x, w, a_src, a_dst, nbr_idx, nbr_mask, quantized, use_kernels, concat):
+    heads, dim = a_src.shape
+    n = x.shape[0]
+    wh = _mvm(x, w, quantized, use_kernels)  # [n, H*d]
+    e_src = _mvm(wh, _attn_blockdiag(a_src), quantized, use_kernels)  # [n, H]
+    e_dst = _mvm(wh, _attn_blockdiag(a_dst), quantized, use_kernels)  # [n, H]
+    # Logit for destination i attending to neighbor j: src term of j plus
+    # dst term of i (LeakyReLU on the optical path, §3.4.2).
+    logits = jax.nn.leaky_relu(
+        e_src[nbr_idx] + e_dst[:, None, :], negative_slope=0.2
+    )  # [n, D, H]
+    logits = jnp.where(nbr_mask[..., None] > 0, logits, -1e9)
+    alpha = jax.nn.softmax(logits, axis=1)  # digital LUT unit
+    alpha = alpha * nbr_mask[..., None]
+    gathered = wh[nbr_idx].reshape(n, nbr_idx.shape[1], heads, dim)  # [n, D, H, d]
+    weighted = (gathered * alpha[..., None]).reshape(n, nbr_idx.shape[1], heads * dim)
+    out = _reduce(weighted, nbr_mask, "sum", use_kernels)  # [n, H*d]
+    if concat:
+        return jax.nn.elu(out)
+    # Single-head output layer: average (here heads == 1 → identity).
+    return out.reshape(n, heads, dim).mean(axis=1)
+
+
+def gat_forward(params, x, nbr_idx, nbr_mask, quantized=True, use_kernels=True):
+    h = _gat_layer(
+        x,
+        params["w0"],
+        params["a_src0"],
+        params["a_dst0"],
+        nbr_idx,
+        nbr_mask,
+        quantized,
+        use_kernels,
+        concat=True,
+    )
+    logits = _gat_layer(
+        h,
+        params["w1"],
+        params["a_src1"],
+        params["a_dst1"],
+        nbr_idx,
+        nbr_mask,
+        quantized,
+        use_kernels,
+        concat=False,
+    )
+    return (logits,)
+
+
+# ------------------------------------------------------------ dispatching
+
+MODELS = {
+    "gcn": (gcn_init, gcn_forward),
+    "graphsage": (sage_init, sage_forward),
+    "gin": (gin_init, gin_forward),
+    "gat": (gat_init, gat_forward),
+}
+
+
+def init_params(model: str, rng, n_features: int, n_labels: int):
+    return MODELS[model][0](rng, n_features, n_labels)
+
+
+def forward_fn(model: str):
+    return MODELS[model][1]

@@ -1,0 +1,47 @@
+"""Photonic analog-noise injection — ties the device-level SNR analysis to
+end-to-end model accuracy.
+
+The Fig. 7 design-space exploration admits MR banks only above the eq.-12
+SNR cutoff (≈21.2 dB for 2⁷ levels per polarity). This module injects the
+corresponding Gaussian amplitude noise into the MVM outputs so tests can
+verify the *system-level* consequence: at the design-point SNR, GNN
+accuracy is unaffected; well below the cutoff, it collapses. Used by
+``python/tests/test_noise.py``; the deployed artifacts stay noise-free
+(noise is a property of the analog hardware, not of the HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def snr_to_sigma(snr_db: float) -> float:
+    """Amplitude noise σ relative to a unit-full-scale signal for a given
+    SNR (dB): P_noise/P_signal = 10^(−SNR/10), σ = sqrt(P_noise)."""
+    return float(10.0 ** (-snr_db / 20.0))
+
+
+def noisy_mvm(key, x, w, snr_db: float, quantized=True):
+    """MVM with per-output photodetector noise at the given SNR. Noise is
+    scaled to the full-scale output amplitude (the BPD's signal swing)."""
+    out = ref.mvm_ref(x, w, quantized=quantized)
+    full_scale = jnp.max(jnp.abs(out))
+    sigma = snr_to_sigma(snr_db) * full_scale
+    return out + sigma * jax.random.normal(key, out.shape)
+
+
+def noisy_gcn_forward(params, x, nbr_idx, nbr_mask, snr_db: float, seed: int = 0):
+    """2-layer GCN with every photonic MVM subject to analog noise at
+    ``snr_db`` (mirrors ``model.gcn_forward``)."""
+    key = jax.random.PRNGKey(seed)
+    h = x
+    for li, w in enumerate([params["w0"], params["w1"]]):
+        key, sub = jax.random.split(key)
+        hw = noisy_mvm(sub, h, w, snr_db)
+        gathered = hw[nbr_idx]
+        agg = ref.reduce_ref(gathered, nbr_mask, op="mean")
+        h = hw + agg
+        if li == 0:
+            h = jax.nn.relu(h)
+    return (h,)

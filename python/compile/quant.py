@@ -1,0 +1,35 @@
+"""8-bit symmetric quantization onto GHOST's photonic amplitude levels.
+
+GHOST carries positive and negative values on separate balanced-photodetector
+arms, so each polarity resolves ``N_LEVELS = 2**(bits-1) = 128`` amplitude
+steps (paper §3.2, eq. 12). This module mirrors ``rust/src/gnn/quant.rs``
+bit-for-bit: per-tensor symmetric scale ``max|x| / (N_LEVELS - 1)``,
+round-to-nearest, clamp to ±(N_LEVELS − 1).
+"""
+
+import jax.numpy as jnp
+
+PRECISION_BITS = 8
+N_LEVELS = 1 << (PRECISION_BITS - 1)  # 128 per polarity
+_QMAX = float(N_LEVELS - 1)
+
+
+def scale_for(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor symmetric scale; zero tensors get scale 1 (zeros
+    round-trip under any scale)."""
+    max_abs = jnp.max(jnp.abs(x))
+    return jnp.where(max_abs == 0.0, 1.0, max_abs / _QMAX)
+
+
+def fake_quantize(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize → dequantize: the value the MR bank actually imprints."""
+    s = scale_for(x)
+    q = jnp.clip(jnp.round(x / s), -_QMAX, _QMAX)
+    return q * s
+
+
+def quantize_int(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integer levels plus the scale (for storage/inspection)."""
+    s = scale_for(x)
+    q = jnp.clip(jnp.round(x / s), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, s

@@ -1,0 +1,159 @@
+"""Build-time training for Table 3: trains each model on each of its four
+datasets (fp32, hand-rolled Adam), evaluates test accuracy at fp32 and at
+GHOST's 8-bit photonic quantization, and saves the trained weights for the
+AOT lowering.
+
+Run directly (``python -m compile.train``) or let ``compile.aot`` invoke it
+lazily. Outputs:
+
+* ``artifacts/weights/<model>_<dataset>.npz`` — trained parameters,
+* ``artifacts/accuracy.json`` — the Table-3 rows.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import model as M
+
+EPOCHS = 120
+LR = 0.01
+
+MODEL_DATASETS = {
+    "gcn": ["cora", "pubmed", "citeseer", "amazon"],
+    "graphsage": ["cora", "pubmed", "citeseer", "amazon"],
+    "gat": ["cora", "pubmed", "citeseer", "amazon"],
+    "gin": ["proteins", "mutag", "bzr", "imdb-binary"],
+}
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def _adam_step(params, grads, state, lr=LR, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new_params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _cross_entropy(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels).astype(jnp.float32) * mask
+    return float(jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1.0))
+
+
+def _model_inputs(model, ds):
+    if model == "gin":
+        return (
+            jnp.asarray(ds.x),
+            jnp.asarray(ds.nbr_idx),
+            jnp.asarray(ds.nbr_mask),
+            jnp.asarray(ds.node_mask),
+        )
+    return (jnp.asarray(ds.x), jnp.asarray(ds.nbr_idx), jnp.asarray(ds.nbr_mask))
+
+
+def train_one(model: str, dataset: str, epochs: int = EPOCHS, verbose: bool = True):
+    """Trains one (model, dataset) pair; returns (params, acc_fp32, acc_int8)."""
+    ds = D.load(dataset)
+    rng = np.random.default_rng(ds.spec.seed ^ 0x7A31)
+    params = M.init_params(model, rng, ds.spec.n_features, ds.spec.n_labels)
+    fwd = M.forward_fn(model)
+    inputs = _model_inputs(model, ds)
+    labels = jnp.asarray(ds.labels)
+    train_mask = jnp.asarray(ds.train_mask, dtype=jnp.float32)
+    test_mask = jnp.asarray(ds.test_mask, dtype=jnp.float32)
+
+    # Training runs the pure-jnp path in fp32 (Pallas interpret calls are
+    # not differentiated); post-training quantization gives the int8 column.
+    def loss_fn(p):
+        (logits,) = fwd(p, *inputs, quantized=False, use_kernels=False)
+        return _cross_entropy(logits, labels, train_mask)
+
+    step = jax.jit(
+        lambda p, s: (lambda g: _adam_step(p, g, s))(jax.grad(loss_fn)(p))
+    )
+    state = _adam_init(params)
+    for epoch in range(epochs):
+        params, state = step(params, state)
+        if verbose and (epoch + 1) % 40 == 0:
+            loss = float(loss_fn(params))
+            print(f"  {model}/{dataset}: epoch {epoch + 1}, train loss {loss:.4f}")
+
+    eval_fwd = jax.jit(
+        lambda p, q: fwd(p, *inputs, quantized=q, use_kernels=False)[0],
+        static_argnames="q",
+    )
+    acc_fp32 = _accuracy(eval_fwd(params, False), labels, test_mask)
+    acc_int8 = _accuracy(eval_fwd(params, True), labels, test_mask)
+    if verbose:
+        print(f"  {model}/{dataset}: fp32 {acc_fp32:.3f}  int8 {acc_int8:.3f}")
+    return params, acc_fp32, acc_int8
+
+
+def weights_path(model: str, dataset: str) -> str:
+    return os.path.join(ARTIFACTS, "weights", f"{model}_{dataset}.npz")
+
+
+def train_all(force: bool = False):
+    """Trains every Table-3 pair (skipping already-saved weights), writes
+    accuracy.json, and returns the accuracy rows."""
+    os.makedirs(os.path.join(ARTIFACTS, "weights"), exist_ok=True)
+    acc_path = os.path.join(ARTIFACTS, "accuracy.json")
+    rows = []
+    existing = {}
+    if os.path.exists(acc_path) and not force:
+        with open(acc_path) as f:
+            existing = {(r["model"], r["dataset"]): r for r in json.load(f)}
+    for model, ds_names in MODEL_DATASETS.items():
+        for dataset in ds_names:
+            wpath = weights_path(model, dataset)
+            key = (model, dataset)
+            if os.path.exists(wpath) and key in existing and not force:
+                rows.append(existing[key])
+                continue
+            print(f"training {model} on {dataset}...")
+            params, acc_fp32, acc_int8 = train_one(model, dataset)
+            flat = {k: np.asarray(v) for k, v in params.items()}
+            np.savez(wpath, **flat)
+            rows.append(
+                {
+                    "model": model.upper() if model != "graphsage" else "GraphSAGE",
+                    "dataset": D.SPECS[dataset].name,
+                    "acc_fp32": acc_fp32,
+                    "acc_int8": acc_int8,
+                }
+            )
+            with open(acc_path, "w") as f:
+                json.dump(rows, f, indent=1)
+    with open(acc_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {acc_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    train_all(force="--force" in sys.argv)

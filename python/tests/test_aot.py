@@ -1,0 +1,50 @@
+"""AOT pipeline smoke: lowering a kernel-path model produces parseable HLO
+text, and the BinWriter offsets line up with the manifest contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import BinWriter, to_hlo_text
+from compile.kernels.photonic_mvm import photonic_mvm
+
+
+def test_to_hlo_text_smoke():
+    def fn(x, w):
+        return (photonic_mvm(x, w, quantized=True),)
+
+    spec = jax.ShapeDtypeStruct((8, 6), jnp.float32)
+    wspec = jax.ShapeDtypeStruct((6, 4), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, wspec)
+    hlo = to_hlo_text(lowered)
+    assert "HloModule" in hlo
+    assert "f32[8,6]" in hlo  # parameter shape survives
+    assert "ROOT" in hlo
+
+
+def test_binwriter_offsets_and_roundtrip(tmp_path):
+    w = BinWriter("data")
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.arange(4, dtype=np.int32)
+    ea = w.add("a", a)
+    eb = w.add("b", b)
+    assert ea["offset"] == 0 and ea["dtype"] == "f32" and ea["shape"] == [2, 3]
+    assert eb["offset"] == 24 and eb["dtype"] == "i32"
+    path = tmp_path / "t.bin"
+    w.write(str(path))
+    raw = path.read_bytes()
+    assert len(raw) == 24 + 16
+    back_a = np.frombuffer(raw[:24], dtype=np.float32).reshape(2, 3)
+    back_b = np.frombuffer(raw[24:], dtype=np.int32)
+    np.testing.assert_array_equal(back_a, a)
+    np.testing.assert_array_equal(back_b, b)
+
+
+def test_lowered_hlo_is_deterministic():
+    def fn(x, w):
+        return (photonic_mvm(x, w, quantized=True),)
+
+    spec = jax.ShapeDtypeStruct((5, 5), jnp.float32)
+    l1 = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    l2 = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert l1 == l2

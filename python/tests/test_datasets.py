@@ -1,0 +1,95 @@
+"""Synthetic dataset invariants: Table-2 statistics, determinism, padded
+neighbor-table validity, and the label signal the GNNs learn from."""
+
+import numpy as np
+import pytest
+
+from compile import datasets as D
+
+
+def test_all_eight_specs_present():
+    assert len(D.SPECS) == 8
+    for name in ["cora", "pubmed", "citeseer", "amazon", "proteins", "mutag", "bzr", "imdb-binary"]:
+        assert name in D.SPECS
+
+
+def test_table2_row_values():
+    s = D.SPECS["cora"]
+    assert (s.avg_nodes, s.avg_edges, s.n_features, s.n_labels, s.n_graphs) == (
+        2708,
+        10_556,
+        1433,
+        7,
+        1,
+    )
+    s = D.SPECS["imdb-binary"]
+    assert (s.avg_nodes, s.avg_edges, s.n_graphs) == (20, 193, 1000)
+
+
+def test_node_dataset_shapes_and_masks():
+    ds = D.make_node_dataset("cora")
+    n, f = ds.spec.avg_nodes, ds.spec.n_features
+    assert ds.x.shape == (n, f)
+    assert ds.labels.shape == (n,)
+    assert ds.nbr_idx.shape == (n, D.NODE_DEGREE_CAP)
+    assert ds.nbr_mask.shape == (n, D.NODE_DEGREE_CAP)
+    assert ds.labels.min() >= 0 and ds.labels.max() < ds.spec.n_labels
+    # Padding entries point at the vertex itself (in-bounds gathers).
+    pad = ds.nbr_mask == 0
+    rows = np.arange(n)[:, None].repeat(D.NODE_DEGREE_CAP, 1)
+    np.testing.assert_array_equal(ds.nbr_idx[pad], rows[pad])
+    # Train/test masks are disjoint and non-trivial.
+    assert int((ds.train_mask & ds.test_mask).sum()) == 0
+    assert ds.train_mask.sum() > n // 3
+    assert ds.test_mask.sum() > n // 10
+
+
+def test_edge_count_close_to_spec():
+    ds = D.make_node_dataset("citeseer")
+    assert abs(len(ds.edges) - ds.spec.avg_edges) / ds.spec.avg_edges < 0.02
+
+
+def test_determinism():
+    a = D.make_node_dataset("cora")
+    b = D.make_node_dataset("cora")
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(a.nbr_idx, b.nbr_idx)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_homophily_present():
+    ds = D.make_node_dataset("cora")
+    src = np.array([s for s, _ in ds.edges])
+    dst = np.array([d for _, d in ds.edges])
+    same = (ds.labels[src] == ds.labels[dst]).mean()
+    assert same > 0.5, f"homophily {same} too low for GNN signal"
+
+
+def test_graph_dataset_shapes():
+    ds = D.make_graph_dataset("mutag")
+    b = ds.spec.n_graphs
+    assert ds.x.shape[0] == b
+    assert ds.labels.shape == (b,)
+    assert ds.nbr_idx.shape[:2] == ds.x.shape[:2]
+    # Masked-out padding nodes have zero features.
+    dead = ds.node_mask == 0
+    assert np.abs(ds.x[dead]).max() == 0.0
+    # Graph sizes vary (irregular corpus).
+    sizes = ds.node_mask.sum(axis=1)
+    assert sizes.std() > 0.5
+
+
+def test_graph_labels_balanced_enough():
+    ds = D.make_graph_dataset("proteins")
+    frac = ds.labels.mean()
+    assert 0.3 < frac < 0.7
+
+
+@pytest.mark.parametrize("name", ["proteins", "mutag", "bzr", "imdb-binary"])
+def test_loader_dispatch(name):
+    ds = D.load(name)
+    assert isinstance(ds, D.GraphDataset)
+
+
+def test_loader_dispatch_node():
+    assert isinstance(D.load("cora"), D.NodeDataset)

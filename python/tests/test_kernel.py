@@ -1,0 +1,146 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal of the functional path — including
+hypothesis sweeps over shapes (padding/masking edge cases) and all three
+reduce modes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.coherent_reduce import (
+    coherent_reduce,
+    coherent_reduce_batched,
+)
+from compile.kernels.photonic_mvm import photonic_mvm, photonic_mvm_batched
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------------ photonic_mvm
+
+
+class TestPhotonicMvm:
+    def test_matches_ref_fp32(self):
+        x, w = rand(40, 36), rand(36, 34)
+        np.testing.assert_allclose(
+            photonic_mvm(x, w, quantized=False), ref.mvm_ref(x, w, quantized=False), rtol=1e-4, atol=1e-4
+        )
+
+    def test_matches_ref_quantized(self):
+        x, w = rand(40, 36), rand(36, 34)
+        np.testing.assert_allclose(
+            photonic_mvm(x, w, quantized=True), ref.mvm_ref(x, w, quantized=True), rtol=1e-4, atol=1e-4
+        )
+
+    def test_non_divisible_shapes_padded_correctly(self):
+        # Shapes deliberately coprime with (V=20, R_R=18, T_R=17).
+        x, w = rand(7, 5), rand(5, 3)
+        np.testing.assert_allclose(
+            photonic_mvm(x, w, quantized=False), ref.mvm_ref(x, w, quantized=False), rtol=1e-4, atol=1e-4
+        )
+
+    def test_quantization_changes_result_but_bounded(self):
+        x, w = rand(30, 50), rand(50, 10)
+        exact = np.asarray(ref.mvm_ref(x, w, quantized=False))
+        quant = np.asarray(photonic_mvm(x, w, quantized=True))
+        err = np.abs(exact - quant).max()
+        assert err > 0, "int8 quantization must be visible"
+        # Worst-case error bound: k × (|x|max·sw/2 + |w|max·sx/2 + sx·sw/4).
+        sx = np.abs(x).max() / 127
+        sw = np.abs(w).max() / 127
+        bound = 50 * (np.abs(x).max() * sw / 2 + np.abs(w).max() * sx / 2 + sx * sw / 4) * 1.1
+        assert err < bound, f"err {err} above bound {bound}"
+
+    def test_batched(self):
+        x, w = rand(3, 11, 9), rand(9, 6)
+        out = photonic_mvm_batched(x, w, quantized=False)
+        assert out.shape == (3, 11, 6)
+        for b in range(3):
+            np.testing.assert_allclose(
+                out[b], ref.mvm_ref(x[b], w, quantized=False), rtol=1e-4, atol=1e-4
+            )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 45),
+        k=st.integers(1, 40),
+        n=st.integers(1, 38),
+        quantized=st.booleans(),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, n, quantized):
+        x, w = rand(m, k), rand(k, n)
+        np.testing.assert_allclose(
+            photonic_mvm(x, w, quantized=quantized),
+            ref.mvm_ref(x, w, quantized=quantized),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+# --------------------------------------------------------- coherent_reduce
+
+
+class TestCoherentReduce:
+    @pytest.mark.parametrize("op", ["sum", "mean", "max"])
+    def test_matches_ref(self, op):
+        g = rand(25, 9, 21)
+        mask = (RNG.random((25, 9)) < 0.6).astype(np.float32)
+        np.testing.assert_allclose(
+            coherent_reduce(g, mask, op=op), ref.reduce_ref(g, mask, op=op), rtol=1e-4, atol=1e-4
+        )
+
+    def test_all_masked_vertex(self):
+        g = rand(5, 4, 6)
+        mask = np.zeros((5, 4), dtype=np.float32)
+        for op in ["sum", "mean", "max"]:
+            out = np.asarray(coherent_reduce(g, mask, op=op))
+            np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+    def test_single_neighbor(self):
+        g = rand(8, 1, 5)
+        mask = np.ones((8, 1), dtype=np.float32)
+        np.testing.assert_allclose(
+            coherent_reduce(g, mask, op="mean"), g[:, 0, :], rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            coherent_reduce(g, mask, op="max"), g[:, 0, :], rtol=1e-4, atol=1e-4
+        )
+
+    def test_batched(self):
+        g = rand(2, 6, 5, 7)
+        mask = (RNG.random((2, 6, 5)) < 0.7).astype(np.float32)
+        out = coherent_reduce_batched(g, mask, op="sum")
+        assert out.shape == (2, 6, 7)
+        np.testing.assert_allclose(out, ref.reduce_ref(g, mask, op="sum"), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 30),
+        d=st.integers(1, 16),
+        f=st.integers(1, 25),
+        op=st.sampled_from(["sum", "mean", "max"]),
+        density=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_shape_sweep(self, n, d, f, op, density):
+        g = rand(n, d, f)
+        mask = (RNG.random((n, d)) < density).astype(np.float32)
+        np.testing.assert_allclose(
+            coherent_reduce(g, mask, op=op),
+            ref.reduce_ref(g, mask, op=op),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_mean_equals_sum_over_count(self):
+        g = rand(10, 6, 4)
+        mask = np.ones((10, 6), dtype=np.float32)
+        s = np.asarray(coherent_reduce(g, mask, op="sum"))
+        m = np.asarray(coherent_reduce(g, mask, op="mean"))
+        np.testing.assert_allclose(m, s / 6.0, rtol=1e-4, atol=1e-4)

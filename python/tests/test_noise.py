@@ -1,0 +1,88 @@
+"""System-level validation of the SNR design point (Fig. 7 ↔ Table 3):
+at the eq.-12 cutoff (~21.2 dB) GNN accuracy is preserved; far below it,
+inference collapses toward chance."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.noise import noisy_gcn_forward, snr_to_sigma
+
+RNG = np.random.default_rng(0x51C)
+
+
+def _toy_task(n=300, f=32, classes=4, deg=6):
+    emb = RNG.standard_normal((classes, f)).astype(np.float32)
+    labels = RNG.integers(0, classes, size=n).astype(np.int32)
+    x = (emb[labels] + 0.7 * RNG.standard_normal((n, f))).astype(np.float32)
+    # Homophilous neighbors: mostly same-class.
+    nbr_idx = np.zeros((n, deg), dtype=np.int32)
+    for v in range(n):
+        pool = np.flatnonzero(labels == labels[v])
+        nbr_idx[v] = RNG.choice(pool, size=deg)
+    nbr_mask = np.ones((n, deg), dtype=np.float32)
+    return x, labels, nbr_idx, nbr_mask
+
+
+def _train_gcn(x, labels, nbr_idx, nbr_mask, epochs=60):
+    import jax
+    import jax.numpy as jnp
+    from compile.train import _adam_init, _adam_step, _cross_entropy
+
+    params = M.init_params("gcn", np.random.default_rng(1), x.shape[1], int(labels.max()) + 1)
+    mask = jnp.ones(len(labels), dtype=jnp.float32)
+    yl = jnp.asarray(labels)
+
+    def loss_fn(p):
+        (logits,) = M.gcn_forward(p, x, nbr_idx, nbr_mask, quantized=False, use_kernels=False)
+        return _cross_entropy(logits, yl, mask)
+
+    state = _adam_init(params)
+    for _ in range(epochs):
+        grads = jax.grad(loss_fn)(params)
+        params, state = _adam_step(params, grads, state, lr=0.02)
+    return params
+
+
+def _acc(logits, labels):
+    return float((np.asarray(logits).argmax(-1) == labels).mean())
+
+
+@pytest.fixture(scope="module")
+def trained():
+    x, labels, idx, mask = _toy_task()
+    params = _train_gcn(x, labels, idx, mask)
+    (clean,) = M.gcn_forward(params, x, idx, mask, quantized=True, use_kernels=False)
+    return params, x, labels, idx, mask, _acc(clean, labels)
+
+
+def test_snr_sigma_conversion():
+    assert abs(snr_to_sigma(20.0) - 0.1) < 1e-9
+    assert abs(snr_to_sigma(0.0) - 1.0) < 1e-9
+    assert snr_to_sigma(40.0) < snr_to_sigma(10.0)
+
+
+def test_design_point_snr_preserves_accuracy(trained):
+    params, x, labels, idx, mask, clean_acc = trained
+    assert clean_acc > 0.85, f"toy task must be learnable, got {clean_acc}"
+    (noisy,) = noisy_gcn_forward(params, x, idx, mask, snr_db=21.3)
+    acc = _acc(noisy, labels)
+    assert acc > clean_acc - 0.05, f"design-point SNR degraded accuracy: {clean_acc} -> {acc}"
+
+
+def test_low_snr_destroys_accuracy(trained):
+    params, x, labels, idx, mask, clean_acc = trained
+    (noisy,) = noisy_gcn_forward(params, x, idx, mask, snr_db=-5.0)
+    acc = _acc(noisy, labels)
+    assert acc < clean_acc - 0.15, f"SNR -5 dB should collapse accuracy ({clean_acc} -> {acc})"
+
+
+def test_accuracy_monotone_in_snr(trained):
+    params, x, labels, idx, mask, _ = trained
+    accs = []
+    for snr in [-5.0, 5.0, 21.3, 40.0]:
+        (noisy,) = noisy_gcn_forward(params, x, idx, mask, snr_db=snr, seed=7)
+        accs.append(_acc(noisy, labels))
+    # Allow small non-monotonic wiggle at the top; overall trend must rise.
+    assert accs[0] < accs[2], f"accuracy vs SNR not increasing: {accs}"
+    assert accs[1] <= accs[3] + 0.03, f"accuracy vs SNR not increasing: {accs}"

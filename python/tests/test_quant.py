@@ -1,0 +1,56 @@
+"""Quantization properties — must mirror rust/src/gnn/quant.rs exactly."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import N_LEVELS, fake_quantize, quantize_int, scale_for
+
+
+def test_n_levels_is_128():
+    assert N_LEVELS == 128
+
+
+def test_zero_tensor_round_trips():
+    z = np.zeros(16, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(fake_quantize(z)), z)
+
+
+def test_extremes_hit_full_scale():
+    x = np.array([-2.0, 0.0, 2.0], dtype=np.float32)
+    q, s = quantize_int(x)
+    assert int(q[0]) == -127 and int(q[2]) == 127 and int(q[1]) == 0
+    assert abs(float(s) - 2.0 / 127) < 1e-7
+
+
+def test_error_bounded_by_half_step():
+    rng = np.random.default_rng(7)
+    x = (rng.standard_normal(1000) * 3).astype(np.float32)
+    s = float(scale_for(x))
+    err = np.abs(np.asarray(fake_quantize(x)) - x)
+    assert err.max() <= s / 2 + 1e-6
+
+
+def test_idempotent():
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal(64).astype(np.float32)
+    once = np.asarray(fake_quantize(x))
+    twice = np.asarray(fake_quantize(once))
+    np.testing.assert_allclose(once, twice, rtol=0, atol=1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=64))
+def test_hypothesis_error_bound(values):
+    x = np.asarray(values, dtype=np.float32)
+    s = float(scale_for(x))
+    err = np.abs(np.asarray(fake_quantize(x)) - x)
+    assert err.max() <= s / 2 + 1e-4 * max(1.0, np.abs(x).max())
+
+
+def test_matches_rust_convention():
+    # A vector whose quantization is easy to verify by hand, pinned so the
+    # Rust mirror (gnn::quant tests) and this file agree forever.
+    x = np.array([1.0, -0.5, 0.25, 0.0], dtype=np.float32)
+    q, s = quantize_int(x)
+    assert abs(float(s) - 1.0 / 127) < 1e-7
+    assert list(np.asarray(q)) == [127, -64, 32, 0]

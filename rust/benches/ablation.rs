@@ -1,0 +1,83 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * channel spacing vs feasible WDM bank size (the paper fixes 1 nm),
+//! * Q-factor vs SNR cutoff and tunable range (the paper picks Q = 3100),
+//! * execution-lane count V vs latency/power (the Fig. 7(c) axis),
+//! * FPV mitigation: direct trimming vs channel remapping (conclusion §5).
+
+use ghost::config::{GhostConfig, N_LEVELS};
+use ghost::coordinator::{simulate, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::photonics::crosstalk::worst_case_heterodyne;
+use ghost::photonics::devices::{linear_to_db, DeviceParams};
+use ghost::photonics::fpv::{eo_only_yield, FpvModel};
+use ghost::photonics::mr::MicroringDesign;
+use ghost::photonics::snr::required_snr_db;
+use ghost::util::bench::time_once;
+
+fn max_wavelengths_at_spacing(spacing_nm: f64) -> usize {
+    let mut best = 0;
+    for nw in 2..=40usize {
+        let mid = 1550e-9 + spacing_nm * 1e-9 * (nw as f64 - 1.0) / 2.0;
+        let mr = MicroringDesign { resonant_wavelength_m: mid, ..MicroringDesign::paper() };
+        let wavelengths: Vec<f64> =
+            (0..nw).map(|i| 1550e-9 + i as f64 * spacing_nm * 1e-9).collect();
+        let noise = worst_case_heterodyne(&mr, &wavelengths);
+        let snr = linear_to_db(1.0 / noise);
+        if snr >= required_snr_db(&mr, N_LEVELS) {
+            best = nw;
+        }
+    }
+    best
+}
+
+fn main() {
+    println!("== ablation: channel spacing vs WDM capacity (paper: 1 nm) ==");
+    time_once("ablation_channel_spacing", || {
+        for spacing in [0.5, 0.8, 1.0, 1.5, 2.0] {
+            println!("  spacing {spacing:.1} nm -> {} wavelengths", max_wavelengths_at_spacing(spacing));
+        }
+    });
+
+    println!("\n== ablation: Q-factor vs SNR cutoff & tunable range (paper: 3100) ==");
+    time_once("ablation_q_factor", || {
+        for q in [1000.0, 2000.0, 3100.0, 5000.0, 10000.0] {
+            let mr = MicroringDesign { q_factor: q, ..MicroringDesign::paper() };
+            println!(
+                "  Q {q:>6.0}: cutoff {:.1} dB, tunable range {:.2} nm",
+                required_snr_db(&mr, N_LEVELS),
+                mr.tunable_range_m() * 1e9
+            );
+        }
+    });
+
+    println!("\n== ablation: execution lanes V vs latency/power (GCN/Cora) ==");
+    time_once("ablation_lane_count", || {
+        for v in [5usize, 10, 20, 30] {
+            let cfg = GhostConfig { v, n: v, ..GhostConfig::paper_optimal() };
+            let r = simulate(ModelKind::Gcn, "Cora", cfg, OptFlags::ghost_default()).unwrap();
+            println!(
+                "  V={v:>2}: {:>9.1} us, {:>6.2} W platform, {:>8.0} GOPS, EPB/GOPS {:.2e}",
+                r.metrics.latency_s * 1e6,
+                r.platform_w,
+                r.metrics.gops(),
+                r.metrics.epb_per_gops()
+            );
+        }
+    });
+
+    println!("\n== ablation: FPV mitigation (paper §5 future work) ==");
+    time_once("ablation_fpv", || {
+        let p = DeviceParams::paper();
+        let mr = MicroringDesign::paper();
+        for sigma in [0.3, 0.5, 0.8] {
+            let model = FpvModel { sigma_nm: sigma, mean_nm: 0.2 };
+            let (direct, remap) = eo_only_yield(&p, &mr, &model, 18, 1.0, 500, 7);
+            println!(
+                "  sigma {sigma:.1} nm: EO-only yield {:.0}% direct -> {:.0}% with remapping",
+                direct * 100.0,
+                remap * 100.0
+            );
+        }
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerates Fig. 9 — per-block latency breakdown across all 16
+//! model × dataset workloads — and times per-model simulation.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate, OptFlags};
+use ghost::figures;
+use ghost::gnn::models::ModelKind;
+use ghost::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let cfg = GhostConfig::paper_optimal();
+    let rows = time_once("fig9_full_evaluation", || figures::fig9(cfg));
+    println!("== Fig. 9: latency breakdown ==");
+    println!("  {:<10} {:<12} {:>9} {:>9} {:>9}", "Model", "Dataset", "Agg", "Comb", "Upd");
+    for r in &rows {
+        println!(
+            "  {:<10} {:<12} {:>8.1}% {:>8.1}% {:>8.1}%",
+            r.model,
+            r.dataset,
+            r.aggregate * 100.0,
+            r.combine * 100.0,
+            r.update * 100.0
+        );
+    }
+
+    for (kind, ds) in
+        [(ModelKind::Gcn, "PubMed"), (ModelKind::Gat, "Amazon"), (ModelKind::GraphSage, "Cora")]
+    {
+        bench(&format!("simulate_{}_{ds}", kind.name()), 1, 15, || {
+            black_box(simulate(kind, ds, cfg, OptFlags::ghost_default()).unwrap());
+        });
+    }
+}

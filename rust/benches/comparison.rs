@@ -1,0 +1,33 @@
+//! Bench: regenerates Figs. 10, 11 and 12 — the GHOST vs GPU/TPU/CPU/GNN-
+//! accelerator comparison — printing the per-platform geomean ratios and
+//! per-workload detail rows, and timing the full comparison pipeline.
+
+use ghost::config::GhostConfig;
+use ghost::figures;
+use ghost::util::bench::time_once;
+
+fn main() {
+    let cfg = GhostConfig::paper_optimal();
+    let summary = time_once("fig10_11_12_summary", || figures::comparison_summary(cfg));
+    println!("== Figs. 10-12: GHOST vs platforms (geomean, >1 = GHOST wins) ==");
+    println!(
+        "  {:<10} {:>12} {:>12} {:>14}",
+        "Platform", "GOPS ratio", "EPB ratio", "EPB/GOPS ratio"
+    );
+    for r in &summary {
+        println!(
+            "  {:<10} {:>11.1}x {:>11.1}x {:>13.2e}",
+            r.platform, r.gops_ratio, r.epb_ratio, r.epb_gops_ratio
+        );
+    }
+
+    println!("\n== per-workload detail (Fig. 10 series) ==");
+    let detail = time_once("fig10_detail", || figures::comparison_detail(cfg));
+    for (kind, ds, ghost_m, rows) in &detail {
+        print!("  {:<10} {:<12} GHOST {:>9.1} GOPS |", kind.name(), ds, ghost_m.gops());
+        for (name, m) in rows {
+            print!(" {name} {:.1}x", ghost_m.gops() / m.gops());
+        }
+        println!();
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerates Fig. 7(c) — the architectural [N,V,Rr,Rc,Tr] sweep —
+//! printing the EPB/GOPS frontier and the rank of the paper's optimum, and
+//! times a single-configuration evaluation plus the full parallel sweep.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::dse;
+use ghost::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let workloads = dse::workload_set(true); // one dataset per model
+    let grid = dse::default_grid();
+    println!("grid size: {} configurations x {} workloads", grid.len(), workloads.len());
+
+    let points = time_once("fig7c_full_sweep", || dse::explore(&grid, &workloads));
+    println!("== Fig. 7(c): top configurations by EPB/GOPS ==");
+    for (i, p) in points.iter().take(8).enumerate() {
+        println!(
+            "  #{:<2} [{}, {}, {}, {}, {}]  EPB/GOPS {:.3e}",
+            i + 1,
+            p.cfg.n,
+            p.cfg.v,
+            p.cfg.r_r,
+            p.cfg.r_c,
+            p.cfg.t_r,
+            p.epb_per_gops
+        );
+    }
+    if let Some(rank) = points.iter().position(|p| p.cfg == GhostConfig::paper_optimal()) {
+        println!("  paper point [20,20,18,7,17] ranks #{} of {}", rank + 1, points.len());
+    }
+
+    bench("fig7c_single_config_eval", 1, 10, || {
+        black_box(dse::evaluate(GhostConfig::paper_optimal(), &workloads));
+    });
+}

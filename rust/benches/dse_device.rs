@@ -1,0 +1,27 @@
+//! Bench: regenerates Figs. 7(a) and 7(b) — the device-level design-space
+//! exploration — and times the sweeps. Prints the feasibility frontiers
+//! the paper reports (20 MRs coherent @ 1520 nm, 18 λ non-coherent).
+
+use ghost::photonics::devices::DeviceParams;
+use ghost::photonics::dse;
+use ghost::util::bench::{bench, black_box};
+
+fn main() {
+    let p = DeviceParams::paper();
+
+    println!("== Fig. 7(a): coherent MR-bank DSE ==");
+    for lambda in [1520.0, 1530.0, 1540.0, 1550.0, 1560.0, 1570.0] {
+        let max = dse::max_feasible_coherent(&p, lambda, 40);
+        println!("  lambda {lambda:.0} nm -> max {max} MRs");
+    }
+    println!("== Fig. 7(b): non-coherent WDM DSE ==");
+    println!("  max wavelengths = {}", dse::max_feasible_noncoherent(30));
+
+    let lambdas: Vec<f64> = (0..6).map(|i| 1520.0 + 10.0 * i as f64).collect();
+    bench("fig7a_coherent_sweep", 3, 50, || {
+        black_box(dse::coherent_sweep(&p, &lambdas, 40));
+    });
+    bench("fig7b_noncoherent_sweep", 3, 50, || {
+        black_box(dse::noncoherent_sweep(30));
+    });
+}

@@ -1,0 +1,74 @@
+//! Bench: simulator hot paths — partition construction, per-group stage
+//! evaluation, pipeline DP, noise models — plus the PJRT execute path when
+//! artifacts are present. This is the §Perf profiling driver.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::graph::datasets::Dataset;
+use ghost::graph::partition::PartitionMatrix;
+use ghost::photonics::crosstalk::worst_case_heterodyne;
+use ghost::photonics::mr::MicroringDesign;
+use ghost::runtime::Engine;
+use ghost::sim;
+use ghost::util::bench::{bench, black_box};
+use ghost::util::rng::Pcg64;
+
+fn main() {
+    // Partition construction on the largest single graph (PubMed).
+    let pubmed = Dataset::by_name("PubMed").unwrap();
+    bench("partition_build_pubmed", 2, 30, || {
+        black_box(PartitionMatrix::build(&pubmed.graphs[0], 20, 20));
+    });
+
+    let amazon = Dataset::by_name("Amazon").unwrap();
+    bench("partition_build_amazon_238k_edges", 2, 30, || {
+        black_box(PartitionMatrix::build(&amazon.graphs[0], 20, 20));
+    });
+
+    // Full simulation of the heaviest workloads.
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    bench("simulate_pubmed_gcn_e2e", 1, 15, || {
+        black_box(simulate_workload(ModelKind::Gcn, &pubmed, cfg, flags).unwrap());
+    });
+    let proteins = Dataset::by_name("Proteins").unwrap();
+    bench("simulate_proteins_gin_1113_graphs", 1, 10, || {
+        black_box(simulate_workload(ModelKind::Gin, &proteins, cfg, flags).unwrap());
+    });
+
+    // Pipeline DP on a large synthetic schedule.
+    let mut rng = Pcg64::seed_from_u64(42);
+    let schedule: Vec<Vec<f64>> =
+        (0..10_000).map(|_| (0..4).map(|_| rng.next_f64()).collect()).collect();
+    bench("pipeline_dp_10k_groups", 3, 100, || {
+        black_box(sim::pipelined(&schedule));
+    });
+
+    // Crosstalk noise model inner loop.
+    let mr = MicroringDesign::paper();
+    let wavelengths: Vec<f64> = (0..18).map(|i| 1550e-9 + i as f64 * 1e-9).collect();
+    bench("heterodyne_noise_18ch", 10, 200, || {
+        black_box(worst_case_heterodyne(&mr, &wavelengths));
+    });
+
+    // Dataset generation (offline preprocessing path).
+    bench("generate_amazon_dataset", 1, 5, || {
+        black_box(Dataset::by_name("Amazon").unwrap());
+    });
+
+    // PJRT execute path (functional datapath), artifacts permitting.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("gcn_cora.json").exists() {
+        match Engine::load(&dir, "gcn_cora") {
+            Ok(engine) => {
+                bench("pjrt_execute_gcn_cora", 1, 5, || {
+                    black_box(engine.run().expect("execute"));
+                });
+            }
+            Err(e) => println!("skipping pjrt bench: {e}"),
+        }
+    } else {
+        println!("skipping pjrt bench: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerates Fig. 8 — the orchestration/scheduling optimization
+//! sensitivity analysis — printing normalized energy per combination, and
+//! times the full 9-combination × 16-workload evaluation.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate, OptFlags};
+use ghost::figures;
+use ghost::gnn::models::ModelKind;
+use ghost::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let cfg = GhostConfig::paper_optimal();
+    let rows = time_once("fig8_full_evaluation", || figures::fig8(cfg));
+    println!("== Fig. 8: normalized energy (baseline = 1.0) ==");
+    for r in &rows {
+        println!("  {:<22} mean {:.3} ({:.2}x reduction)", r.label, r.mean, 1.0 / r.mean);
+    }
+
+    bench("simulate_gcn_cora_default", 2, 30, || {
+        black_box(simulate(ModelKind::Gcn, "Cora", cfg, OptFlags::ghost_default()).unwrap());
+    });
+    bench("simulate_gcn_cora_baseline", 2, 30, || {
+        black_box(simulate(ModelKind::Gcn, "Cora", cfg, OptFlags::baseline()).unwrap());
+    });
+    bench("simulate_gin_proteins_default", 1, 10, || {
+        black_box(simulate(ModelKind::Gin, "Proteins", cfg, OptFlags::ghost_default()).unwrap());
+    });
+}

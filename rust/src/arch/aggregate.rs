@@ -1,0 +1,161 @@
+//! Aggregate-block cost model (§3.3.1): `N` edge-control units, `V` gather
+//! units, and `V` reduce units (coherent-summation arrays of `R_r × R_c`
+//! MRs plus one recirculation MR per feature row).
+
+use super::{ArchContext, StageCost};
+use crate::config::ceil_div;
+use crate::gnn::models::Reduction;
+use crate::graph::partition::OutputGroupPlan;
+
+/// Gather-stage cost for one output-vertex group.
+///
+/// * With buffer-and-partition (`bp = true`): the offline prefetch order
+///   lets the ECU *stream* exactly the distinct source-vertex feature
+///   vectors the group needs (plus its edge block descriptors); DRAM
+///   latency is overlapped by prefetching the next block.
+/// * Without (`bp = false`, the Fig. 8 baseline): each gather unit requests
+///   its lane's neighbors sequentially and on demand; the stage ends with
+///   the slowest lane, and every request pays full DRAM access latency at
+///   the random-access bandwidth plus the per-burst activation energy.
+pub fn gather_cost(
+    ctx: &ArchContext,
+    group: &OutputGroupPlan,
+    feat_bytes_per_vertex: usize,
+    bp: bool,
+) -> StageCost {
+    let hbm = &ctx.hbm;
+    let buf = &ctx.buffers.input_vertices;
+    if bp {
+        let bytes = group.distinct_sources as u64 * feat_bytes_per_vertex as u64
+            + group.blocks.len() as u64 * 8; // block descriptors
+        let latency = bytes as f64 / hbm.sustained_bw()
+            + hbm.access_latency_s // first-block fill; rest is prefetched
+            + buf.access_latency_s;
+        let energy = hbm.transfer_energy_j(bytes)
+            + hbm.burst_overhead_j * group.blocks.len() as f64
+            + buf.stream_energy_j(bytes as usize) * 2.0; // write + read
+        StageCost { latency_s: latency, energy_j: energy }
+    } else {
+        let per_fetch_latency = hbm.access_latency_s
+            + feat_bytes_per_vertex as f64
+                / (hbm.peak_bw_bytes_per_s * hbm.random_efficiency);
+        // Slowest lane serializes its neighbor fetches.
+        let latency = group.max_lane_degree as f64 * per_fetch_latency + buf.access_latency_s;
+        let bytes = group.total_edges as u64 * feat_bytes_per_vertex as u64;
+        let energy = hbm.transfer_energy_j(bytes)
+            + hbm.burst_overhead_j * group.total_edges as f64
+            + buf.stream_energy_j(bytes as usize) * 2.0;
+        StageCost { latency_s: latency, energy_j: energy }
+    }
+}
+
+/// Reduce-stage cost for one output-vertex group aggregating `agg_dim`
+/// features per vertex.
+///
+/// The coherent array sums `R_c` neighbors × `R_r` features per pass; a
+/// vertex with `d` neighbors needs `ceil(d / R_c)` passes (the recirculation
+/// MR carries the partial sum between passes) and `ceil(agg_dim / R_r)`
+/// feature chunks. Without workload balancing the group runs at its
+/// slowest lane (`max_lane_degree`); with it (`wb = true`), finished lanes
+/// absorb the remainder so the effective depth approaches the group mean,
+/// plus a 10 % redistribution overhead (§3.4.4).
+pub fn reduce_cost(
+    ctx: &ArchContext,
+    group: &OutputGroupPlan,
+    agg_dim: usize,
+    reduction: Reduction,
+    wb: bool,
+) -> StageCost {
+    let cfg = &ctx.cfg;
+    let dev = &ctx.dev;
+    let effective_degree = if wb {
+        let mean = group.total_edges as f64 / cfg.v as f64;
+        (mean * 1.10).max(1.0)
+    } else {
+        (group.max_lane_degree as f64).max(1.0)
+    };
+    let passes = (effective_degree / cfg.r_c as f64).ceil() as usize;
+    let chunks = ceil_div(agg_dim, cfg.r_r);
+    // Mean divides by n via the trailing MR (one extra pipelined imprint);
+    // max routes through the optical comparator with the same pass count.
+    let extra_pass = match reduction {
+        Reduction::Mean => 1,
+        Reduction::Sum | Reduction::Max => 0,
+    };
+    let total_passes = passes * chunks + extra_pass;
+    let latency = dev.eo_tuning.latency_s // bank retarget settle (pipelined after fill)
+        + total_passes as f64 * ctx.symbol_s()
+        + dev.photodetector.latency_s; // recirculation PD at chunk boundaries
+    // Imprint energy: each aggregated value is one DAC conversion + one EO
+    // nudge on its MR. Values = edges × features for the group.
+    let values = group.total_edges as f64 * agg_dim as f64;
+    let eo_energy_per_imprint = dev.eo_tuning.power_w * 0.5 * dev.eo_tuning.latency_s; // ~0.5 nm avg shift
+    let energy = values * (dev.dac.energy_j() + eo_energy_per_imprint)
+        // VCSELs + recirculation PDs active for the stage duration.
+        + (cfg.v * cfg.r_r) as f64 * (dev.vcsel.power_w + dev.photodetector.power_w) * latency;
+    StageCost { latency_s: latency, energy_j: energy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GhostConfig;
+
+    fn ctx() -> ArchContext {
+        ArchContext::paper(GhostConfig::paper_optimal())
+    }
+
+    fn group(max_deg: u32, edges: u32, distinct: u32, blocks: usize) -> OutputGroupPlan {
+        OutputGroupPlan {
+            out_group: 0,
+            blocks: (0..blocks)
+                .map(|i| crate::graph::partition::BlockRef {
+                    input_group: i as u32,
+                    n_edges: edges / blocks.max(1) as u32,
+                })
+                .collect(),
+            max_lane_degree: max_deg,
+            total_edges: edges,
+            distinct_sources: distinct,
+        }
+    }
+
+    #[test]
+    fn bp_gather_faster_than_on_demand() {
+        let c = ctx();
+        let g = group(30, 100, 80, 5);
+        let bp = gather_cost(&c, &g, 1433, true);
+        let od = gather_cost(&c, &g, 1433, false);
+        assert!(bp.latency_s < od.latency_s, "bp={} od={}", bp.latency_s, od.latency_s);
+        assert!(bp.energy_j < od.energy_j);
+    }
+
+    #[test]
+    fn reduce_scales_with_degree_and_dim() {
+        let c = ctx();
+        let small = reduce_cost(&c, &group(5, 50, 40, 3), 16, Reduction::Sum, false);
+        let deep = reduce_cost(&c, &group(50, 500, 400, 3), 16, Reduction::Sum, false);
+        let wide = reduce_cost(&c, &group(5, 50, 40, 3), 1433, Reduction::Sum, false);
+        assert!(deep.latency_s > small.latency_s);
+        assert!(wide.latency_s > small.latency_s);
+    }
+
+    #[test]
+    fn workload_balancing_helps_skewed_groups() {
+        let c = ctx();
+        // One lane with 100 neighbors, group total 150 → mean 7.5 ≪ 100.
+        let g = group(100, 150, 120, 4);
+        let without = reduce_cost(&c, &g, 64, Reduction::Sum, false);
+        let with = reduce_cost(&c, &g, 64, Reduction::Sum, true);
+        assert!(with.latency_s < without.latency_s);
+    }
+
+    #[test]
+    fn mean_costs_one_extra_pass() {
+        let c = ctx();
+        let g = group(7, 70, 60, 3);
+        let sum = reduce_cost(&c, &g, 18, Reduction::Sum, false);
+        let mean = reduce_cost(&c, &g, 18, Reduction::Mean, false);
+        assert!((mean.latency_s - sum.latency_s - c.symbol_s()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,132 @@
+//! Combine-block cost model (§3.3.2): `V` transform units, each a
+//! non-coherent `T_r × R_r` MR-bank MVM array with balanced photodetectors
+//! and optional broadband-MR batch normalization.
+
+use super::{ArchContext, StageCost};
+use crate::config::ceil_div;
+
+/// Transform-stage cost for one output-vertex group applying a
+/// `in_dim → out_width` linear map (heads folded into `out_width`).
+///
+/// Mapping: the aggregated feature vector rides `R_r` wavelengths; each of
+/// the `T_r` rows produces one output feature per pass. A full transform
+/// needs `ceil(in_dim/R_r) × ceil(out_width/T_r)` passes. When
+/// `in_dim > R_r` the partial products must be converted (ADC) and
+/// accumulated digitally between input chunks (§3.3.2's "otherwise the
+/// output will need to be converted to the digital domain and buffered").
+///
+/// `dac_sharing` selects whether one weight-tile conversion is broadcast to
+/// all `V` units (shared) or each unit re-converts its copy (unshared —
+/// `V×` the conversion energy). `optical_input` marks that the activations
+/// arrive directly on the waveguide from the reduce units (no input DACs);
+/// GAT's transform-first ordering instead drives inputs electrically.
+pub fn transform_cost(
+    ctx: &ArchContext,
+    in_dim: usize,
+    out_width: usize,
+    dac_sharing: bool,
+    optical_input: bool,
+) -> StageCost {
+    let cfg = &ctx.cfg;
+    let dev = &ctx.dev;
+    let in_chunks = ceil_div(in_dim, cfg.r_r);
+    let out_chunks = ceil_div(out_width, cfg.t_r);
+    let passes = in_chunks * out_chunks;
+
+    let mut latency = dev.eo_tuning.latency_s // weight-tile settle (pipelined)
+        + passes as f64 * ctx.symbol_s()
+        + dev.photodetector.latency_s; // BPD readout
+    if in_chunks > 1 {
+        // Partial-sum conversion + buffering per output chunk (pipelined,
+        // one ADC latency exposed per chunk boundary).
+        latency += out_chunks as f64 * dev.adc.latency_s;
+    }
+
+    // Weight-tile conversions: T_r × R_r values per pass.
+    let tile_values = (cfg.t_r * cfg.r_r) as f64;
+    let weight_conversions =
+        passes as f64 * tile_values * if dac_sharing { 1.0 } else { cfg.v as f64 };
+    let eo_energy_per_imprint = dev.eo_tuning.power_w * 0.5 * dev.eo_tuning.latency_s;
+    let mut energy = weight_conversions * dev.dac.energy_j()
+        // Every weight MR in every unit still gets its EO nudge.
+        + passes as f64 * tile_values * cfg.v as f64 * eo_energy_per_imprint
+        // BPDs active for the stage.
+        + (cfg.v * cfg.t_r) as f64 * dev.photodetector.power_w * latency;
+    if !optical_input {
+        // Inputs imprinted electrically: one DAC conversion per input value
+        // per vertex (V vertices in parallel).
+        energy += (cfg.v * in_dim) as f64 * dev.dac.energy_j();
+    }
+    if in_chunks > 1 {
+        // ADC + buffer traffic for partial sums: V × out_width values per
+        // input chunk.
+        let conversions = (cfg.v * out_width * in_chunks) as f64;
+        energy += conversions * dev.adc.energy_j()
+            + ctx.buffers.output_vertices.stream_energy_j(cfg.v * out_width * in_chunks);
+    }
+    StageCost { latency_s: latency, energy_j: energy }
+}
+
+/// Optional broadband-MR batch-normalization cost: one extra pipelined
+/// imprint per output element (bypassed when the model has no BN).
+pub fn batchnorm_cost(ctx: &ArchContext, out_width: usize) -> StageCost {
+    let dev = &ctx.dev;
+    let elements = (ctx.cfg.v * out_width) as f64;
+    StageCost {
+        latency_s: ctx.symbol_s(),
+        energy_j: elements * dev.eo_tuning.power_w * 0.5 * dev.eo_tuning.latency_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GhostConfig;
+
+    fn ctx() -> ArchContext {
+        ArchContext::paper(GhostConfig::paper_optimal())
+    }
+
+    #[test]
+    fn passes_scale_with_dims() {
+        let c = ctx();
+        let small = transform_cost(&c, 16, 7, true, true);
+        let wide_in = transform_cost(&c, 1433, 7, true, true);
+        let wide_out = transform_cost(&c, 16, 64, true, true);
+        assert!(wide_in.latency_s > small.latency_s);
+        assert!(wide_out.latency_s > small.latency_s);
+    }
+
+    #[test]
+    fn dac_sharing_saves_energy_not_time() {
+        let c = ctx();
+        let shared = transform_cost(&c, 128, 16, true, true);
+        let unshared = transform_cost(&c, 128, 16, false, true);
+        assert_eq!(shared.latency_s, unshared.latency_s);
+        assert!(unshared.energy_j > 2.0 * shared.energy_j);
+    }
+
+    #[test]
+    fn single_chunk_needs_no_adc() {
+        let c = ctx();
+        // in_dim ≤ R_r → all-optical path, no ADC latency term.
+        let direct = transform_cost(&c, 18, 17, true, true);
+        let buffered = transform_cost(&c, 19, 17, true, true);
+        assert!(buffered.latency_s > direct.latency_s + c.symbol_s() * 0.5);
+    }
+
+    #[test]
+    fn electrical_input_costs_more() {
+        let c = ctx();
+        let optical = transform_cost(&c, 1433, 16, true, true);
+        let electrical = transform_cost(&c, 1433, 16, true, false);
+        assert!(electrical.energy_j > optical.energy_j);
+    }
+
+    #[test]
+    fn batchnorm_is_one_symbol() {
+        let c = ctx();
+        let bn = batchnorm_cost(&c, 16);
+        assert_eq!(bn.latency_s, c.symbol_s());
+    }
+}

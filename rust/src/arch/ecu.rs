@@ -1,0 +1,86 @@
+//! Electronic Control Unit: memory interfacing, weight staging, and the
+//! platform power breakdown.
+
+use super::{ArchContext, StageCost};
+
+/// ECU digital logic power (partition sequencing, lane control, address
+//  generation) — 7 nm-class estimate, watts.
+pub const ECU_LOGIC_W: f64 = 1.5;
+
+/// HBM2 PHY + controller standby power, watts.
+pub const HBM_INTERFACE_W: f64 = 1.0;
+
+/// Laser (VCSEL array) supply power attributable to always-on sources,
+/// watts. Sized from `photonics::laser` for the combine block's 18-λ combs
+/// across V units at the paper loss budget.
+pub const LASER_SUPPLY_W: f64 = 1.2;
+
+/// Always-on platform power, watts: every biased device plus ECU logic and
+/// the memory interface. This is the figure the paper quotes as GHOST's
+/// ~18 W power draw (for the DAC-shared configuration).
+pub fn platform_power_w(ctx: &ArchContext, dac_sharing: bool) -> f64 {
+    let cfg = &ctx.cfg;
+    let dev = &ctx.dev;
+    // DACs: the aggregate block needs one per reduce-array MR (neighbor
+    // values are all distinct), the combine block shares weight DACs across
+    // the V transform units when enabled (§3.4.3).
+    let aggregate_dacs = cfg.v * cfg.r_r * cfg.r_c;
+    let combine_dacs =
+        if dac_sharing { cfg.combine_dacs_shared() } else { cfg.combine_dacs_unshared() };
+    let dac_w = (aggregate_dacs + combine_dacs) as f64 * dev.dac.power_w;
+    // ADCs: one per transform-unit output row.
+    let adc_w = (cfg.v * cfg.t_r) as f64 * dev.adc.power_w;
+    // VCSELs: reduce-unit sources (R_r per unit) + update-unit drivers.
+    let vcsel_w = (cfg.v * (cfg.r_r + cfg.t_r)) as f64 * dev.vcsel.power_w;
+    // PDs: recirculation PDs (R_r per reduce unit) + BPDs (T_r per
+    // transform unit, two arms).
+    let pd_w = (cfg.v * (cfg.r_r + 2 * cfg.t_r)) as f64 * dev.photodetector.power_w;
+    // SOAs: T_r per update unit.
+    let soa_w = (cfg.v * cfg.t_r) as f64 * dev.soa.power_w;
+    let leakage_w = ctx.buffers.total_leakage_w();
+    dac_w + adc_w + vcsel_w + pd_w + soa_w + leakage_w + ECU_LOGIC_W + HBM_INTERFACE_W
+        + LASER_SUPPLY_W
+}
+
+/// Cost of staging one layer's weight matrix from DRAM into the weight
+/// buffer (once per layer, amortized across all vertex groups).
+pub fn weight_stage_cost(ctx: &ArchContext, weight_bytes: u64) -> StageCost {
+    let hbm = &ctx.hbm;
+    StageCost {
+        latency_s: hbm.stream_time_s(weight_bytes),
+        energy_j: hbm.transfer_energy_j(weight_bytes)
+            + ctx.buffers.weights.stream_energy_j(weight_bytes as usize),
+    }
+}
+
+/// Cost of streaming the edge-list/partition descriptors for one graph.
+pub fn edge_stage_cost(ctx: &ArchContext, edge_bytes: u64) -> StageCost {
+    let hbm = &ctx.hbm;
+    StageCost {
+        latency_s: hbm.stream_time_s(edge_bytes),
+        energy_j: hbm.transfer_energy_j(edge_bytes)
+            + ctx.buffers.edges.stream_energy_j(edge_bytes as usize),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GhostConfig;
+
+    #[test]
+    fn power_breakdown_components_positive() {
+        let ctx = ArchContext::paper(GhostConfig::paper_optimal());
+        let p = platform_power_w(&ctx, true);
+        assert!(p > ECU_LOGIC_W + HBM_INTERFACE_W + LASER_SUPPLY_W);
+    }
+
+    #[test]
+    fn weight_staging_scales() {
+        let ctx = ArchContext::paper(GhostConfig::paper_optimal());
+        let small = weight_stage_cost(&ctx, 1024);
+        let big = weight_stage_cost(&ctx, 1024 * 1024);
+        assert!(big.latency_s > small.latency_s);
+        assert!(big.energy_j > small.energy_j);
+    }
+}

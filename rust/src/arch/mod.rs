@@ -1,0 +1,118 @@
+//! The GHOST architecture blocks (Fig. 4): aggregate, combine, update, and
+//! the electronic control unit.
+//!
+//! Each block exposes *stage-cost* functions: given one output-vertex
+//! group's work (from the partition matrix) and the layer dimensions, they
+//! return the latency and dynamic energy of that pipeline stage. The
+//! coordinator assembles stage costs into a pipelined schedule
+//! ([`crate::sim`]) and adds the platform's always-on power.
+//!
+//! Timing convention: analog values are imprinted through a pipelined
+//! DAC → EO-tune chain, so a bank performs one *pass* (a full parallel
+//! MAC/sum across its MRs) per symbol period
+//! ([`crate::config::SYMBOL_RATE_HZ`], 1 GHz, set by the 8-bit converters),
+//! after a one-time EO settle (20 ns) when the bank is retargeted.
+
+pub mod aggregate;
+pub mod combine;
+pub mod ecu;
+pub mod update;
+
+
+use crate::config::GhostConfig;
+use crate::memory::hbm::Hbm2;
+use crate::memory::sram::EcuBuffers;
+use crate::photonics::devices::DeviceParams;
+
+/// Latency + dynamic energy of one pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+impl StageCost {
+    pub const ZERO: StageCost = StageCost { latency_s: 0.0, energy_j: 0.0 };
+
+    /// Sequential composition: latencies and energies add.
+    pub fn then(self, other: StageCost) -> StageCost {
+        StageCost {
+            latency_s: self.latency_s + other.latency_s,
+            energy_j: self.energy_j + other.energy_j,
+        }
+    }
+
+    /// Parallel composition: max latency, summed energy.
+    pub fn alongside(self, other: StageCost) -> StageCost {
+        StageCost {
+            latency_s: self.latency_s.max(other.latency_s),
+            energy_j: self.energy_j + other.energy_j,
+        }
+    }
+}
+
+/// Everything the block cost models need, bundled.
+#[derive(Debug, Clone, Copy)]
+pub struct ArchContext {
+    pub cfg: GhostConfig,
+    pub dev: DeviceParams,
+    pub buffers: EcuBuffers,
+    pub hbm: Hbm2,
+}
+
+impl ArchContext {
+    pub fn paper(cfg: GhostConfig) -> Self {
+        Self {
+            cfg,
+            dev: DeviceParams::paper(),
+            buffers: EcuBuffers::paper(),
+            hbm: Hbm2::paper(),
+        }
+    }
+
+    /// One symbol period of the analog datapath, seconds.
+    pub fn symbol_s(&self) -> f64 {
+        1.0 / crate::config::SYMBOL_RATE_HZ
+    }
+}
+
+/// Always-on platform power, watts — lasers, converter bias, PD/SOA bias,
+/// buffer leakage, and ECU logic. This is the power the paper quotes as
+/// "relatively low power consumption of 18 W" for the optimized (DAC-shared)
+/// configuration; see `ecu::platform_power_w` for the component breakdown.
+pub fn platform_power_w(ctx: &ArchContext, dac_sharing: bool) -> f64 {
+    ecu::platform_power_w(ctx, dac_sharing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_cost_composition() {
+        let a = StageCost { latency_s: 1.0, energy_j: 2.0 };
+        let b = StageCost { latency_s: 3.0, energy_j: 4.0 };
+        let seq = a.then(b);
+        assert_eq!(seq.latency_s, 4.0);
+        assert_eq!(seq.energy_j, 6.0);
+        let par = a.alongside(b);
+        assert_eq!(par.latency_s, 3.0);
+        assert_eq!(par.energy_j, 6.0);
+    }
+
+    #[test]
+    fn paper_platform_power_near_18w() {
+        let ctx = ArchContext::paper(GhostConfig::paper_optimal());
+        let p = platform_power_w(&ctx, true);
+        // The paper quotes 18 W for the DAC-shared configuration.
+        assert!((p - 18.0).abs() < 3.0, "platform power = {p} W");
+    }
+
+    #[test]
+    fn dac_sharing_cuts_platform_power() {
+        let ctx = ArchContext::paper(GhostConfig::paper_optimal());
+        let shared = platform_power_w(&ctx, true);
+        let unshared = platform_power_w(&ctx, false);
+        assert!(unshared > 1.5 * shared, "shared={shared}, unshared={unshared}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Update-block cost model (§3.3.3): `V` update units of `T_r` SOA-based
+//! activate rows, plus the digital LUT softmax unit [37] for functions that
+//! resist optical implementation.
+
+use super::{ArchContext, StageCost};
+use crate::config::ceil_div;
+use crate::gnn::models::Activation;
+
+/// Energy of one digital LUT softmax element (lookup + add/sub datapath at
+/// 7 nm) — CACTI-class estimate.
+pub const SOFTMAX_ENERGY_PER_OP_J: f64 = 5e-12;
+
+/// Update-stage cost for one output-vertex group producing `out_width`
+/// activated features per vertex.
+///
+/// * ReLU / LeakyReLU: the transform output drives VCSELs whose light
+///   passes through SOAs — fully pipelined, `ceil(out_width/T_r)` passes.
+/// * Softmax: routed to the digital unit; `softmax_elems` elements are
+///   processed at 294 MHz, one element per cycle per lane.
+/// * None: pass-through (final-layer logits go straight to the buffer).
+pub fn update_cost(
+    ctx: &ArchContext,
+    activation: Activation,
+    out_width: usize,
+    softmax_elems_per_group: usize,
+) -> StageCost {
+    let cfg = &ctx.cfg;
+    let dev = &ctx.dev;
+    match activation {
+        Activation::Relu | Activation::LeakyRelu => {
+            let passes = ceil_div(out_width, cfg.t_r);
+            let latency = passes as f64 * ctx.symbol_s() + dev.soa.latency_s;
+            let elements = (cfg.v * out_width) as f64;
+            let energy = elements * (dev.vcsel.energy_j() + dev.soa.energy_j());
+            StageCost { latency_s: latency, energy_j: energy }
+        }
+        Activation::Softmax => {
+            // V lanes each own a softmax pipeline; elements are spread
+            // across lanes.
+            let per_lane = ceil_div(softmax_elems_per_group.max(1), cfg.v);
+            let latency = per_lane as f64 / dev.softmax_freq_hz + dev.adc.latency_s;
+            let energy = softmax_elems_per_group as f64
+                * (SOFTMAX_ENERGY_PER_OP_J + dev.adc.energy_j());
+            StageCost { latency_s: latency, energy_j: energy }
+        }
+        Activation::None => StageCost::ZERO,
+    }
+}
+
+/// Cost of writing the group's updated vertex features back to the
+/// intermediate vertex buffer (ADC conversion + SRAM write).
+pub fn writeback_cost(ctx: &ArchContext, out_width: usize) -> StageCost {
+    let dev = &ctx.dev;
+    let values = ctx.cfg.v * out_width;
+    StageCost {
+        latency_s: dev.adc.latency_s + ctx.buffers.output_vertices.access_latency_s,
+        energy_j: values as f64 * dev.adc.energy_j()
+            + ctx.buffers.output_vertices.stream_energy_j(values),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GhostConfig;
+
+    fn ctx() -> ArchContext {
+        ArchContext::paper(GhostConfig::paper_optimal())
+    }
+
+    #[test]
+    fn relu_is_fast_and_cheap() {
+        let c = ctx();
+        let relu = update_cost(&c, Activation::Relu, 16, 0);
+        assert!(relu.latency_s < 10e-9);
+        assert!(relu.energy_j > 0.0);
+    }
+
+    #[test]
+    fn softmax_much_slower_than_relu() {
+        let c = ctx();
+        let relu = update_cost(&c, Activation::Relu, 16, 0);
+        // 800 neighbor-logits per group through the 294 MHz unit.
+        let sm = update_cost(&c, Activation::Softmax, 16, 800);
+        assert!(sm.latency_s > 10.0 * relu.latency_s, "sm={} relu={}", sm.latency_s, relu.latency_s);
+    }
+
+    #[test]
+    fn none_activation_is_free() {
+        let c = ctx();
+        assert_eq!(update_cost(&c, Activation::None, 64, 0), StageCost::ZERO);
+    }
+
+    #[test]
+    fn writeback_scales_with_width() {
+        let c = ctx();
+        let narrow = writeback_cost(&c, 7);
+        let wide = writeback_cost(&c, 64);
+        assert!(wide.energy_j > narrow.energy_j);
+    }
+}

@@ -1,0 +1,169 @@
+//! Analytic roofline models of the nine comparison platforms (§4.6):
+//! GRIP, HyGCN, EnGN, HW_ACC, ReGNN, ReGraphX, TPU v4, Xeon CPU, A100 GPU.
+//!
+//! We cannot re-run the authors' testbeds, so each platform is modeled as a
+//! roofline driven by the *same* workload characterization GHOST uses:
+//!
+//! `latency = n_graphs · overhead + max(dense/(peak·u_d) + sparse/(peak·u_s),
+//!            bytes/bw)`,  `energy = power · latency`.
+//!
+//! `peak`, `power`, and `bw` come from each platform's published
+//! specification; the effective utilizations (`u_d` dense, `u_s` sparse)
+//! and per-inference overheads are *calibrated* so the GHOST-vs-platform
+//! ratios land near the paper's reported averages (Figs. 10–12). The
+//! calibration lives entirely in [`PLATFORMS`]; the ratios' *shape* across
+//! models/datasets (who wins where, the GIN-overhead effect, the
+//! GPU/CPU/TPU cluster) emerges from the shared workload model.
+
+
+use crate::energy::Metrics;
+use crate::gnn::workload::Workload;
+
+/// A comparison platform's roofline parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    /// Peak throughput, ops/s (published spec, int8/fp16 as appropriate).
+    pub peak_ops_per_s: f64,
+    /// Wall power while busy, watts (published TDP / reported power).
+    pub power_w: f64,
+    /// Memory bandwidth, bytes/s.
+    pub mem_bw_bytes_per_s: f64,
+    /// Effective utilization on the dense combine phase.
+    pub util_dense: f64,
+    /// Effective utilization on sparse aggregation / attention phases.
+    pub util_sparse: f64,
+    /// Fixed overhead per inference invocation (framework dispatch, kernel
+    /// launch, graph setup) — dominates the many-small-graph GIN datasets.
+    pub overhead_s: f64,
+}
+
+/// The nine platforms, in the paper's comparison order.
+///
+/// Peak throughput, power, and bandwidth are published specifications
+/// (ReGNN/ReGraphX power includes the ReRAM periphery the papers charge to
+/// the accelerator). The utilizations/overheads are calibrated to the
+/// paper's *measured* GHOST-vs-platform throughput ratios (Fig. 10); the
+/// EPB ratios (Fig. 11) then follow from the published powers under our
+/// uniform bit convention — see EXPERIMENTS.md for where that deviates
+/// from the paper's vendor-reported-EPB accounting (notably HW_ACC).
+pub const PLATFORMS: [PlatformSpec; 9] = [
+    // GRIP [23]: 28 nm ASIC, specialized edge/vertex units.
+    PlatformSpec { name: "GRIP", peak_ops_per_s: 2.0e12, power_w: 4.9, mem_bw_bytes_per_s: 128e9, util_dense: 7.0e-3, util_sparse: 1.9e-3, overhead_s: 4e-6 },
+    // HyGCN [22]: hybrid aggregation+combination engines, 32×128 MACs;
+    // severely underutilized on small sparse graphs (their own analysis).
+    PlatformSpec { name: "HyGCN", peak_ops_per_s: 9.2e12, power_w: 6.7, mem_bw_bytes_per_s: 256e9, util_dense: 5.1e-4, util_sparse: 1.2e-4, overhead_s: 8e-6 },
+    // EnGN [21]: unified dataflow, ring-edge-reduce; best electronic EPB.
+    PlatformSpec { name: "EnG", peak_ops_per_s: 4.1e12, power_w: 2.56, mem_bw_bytes_per_s: 256e9, util_dense: 7.7e-3, util_sparse: 2.2e-3, overhead_s: 3e-6 },
+    // HW_ACC [20]: tiled AGG/DNA modules; closest GOPS to GHOST.
+    PlatformSpec { name: "HW_ACC", peak_ops_per_s: 0.8e12, power_w: 11.0, mem_bw_bytes_per_s: 128e9, util_dense: 0.315, util_sparse: 0.108, overhead_s: 2e-6 },
+    // ReGNN [24]: ReRAM analog+digital PIM.
+    PlatformSpec { name: "ReGNN", peak_ops_per_s: 1.4e12, power_w: 27.0, mem_bw_bytes_per_s: 192e9, util_dense: 0.070, util_sparse: 0.022, overhead_s: 3e-6 },
+    // ReGraphX [25]: 3D ReRAM, training-oriented (inference inefficient).
+    PlatformSpec { name: "ReGraphX", peak_ops_per_s: 1.1e12, power_w: 45.0, mem_bw_bytes_per_s: 192e9, util_dense: 8.1e-3, util_sparse: 2.0e-3, overhead_s: 6e-6 },
+    // TPU v4: 275 TOPS int8, but batch-1 tiny-graph GNNs leave the MXU
+    // idle and pay full host-dispatch per graph.
+    PlatformSpec { name: "TPU", peak_ops_per_s: 275e12, power_w: 170.0, mem_bw_bytes_per_s: 1200e9, util_dense: 1.66e-5, util_sparse: 1.66e-6, overhead_s: 21.7e-3 },
+    // Xeon CPU: PyG/framework-inclusive effective throughput.
+    PlatformSpec { name: "CPU", peak_ops_per_s: 3.2e12, power_w: 150.0, mem_bw_bytes_per_s: 100e9, util_dense: 8.7e-4, util_sparse: 8.7e-5, overhead_s: 4.3e-3 },
+    // NVIDIA A100: 312 TOPS int8 peak; kernel-launch bound on small graphs.
+    PlatformSpec { name: "GPU", peak_ops_per_s: 312e12, power_w: 250.0, mem_bw_bytes_per_s: 1555e9, util_dense: 4.9e-5, util_sparse: 4.9e-6, overhead_s: 9.7e-3 },
+];
+
+/// Which models each platform supports, per §4.6 (comparisons are made
+/// only on supported models).
+pub fn supports(platform: &str, model: crate::gnn::models::ModelKind) -> bool {
+    use crate::gnn::models::ModelKind::*;
+    match platform {
+        "GRIP" | "HyGCN" => matches!(model, Gcn | GraphSage | Gin),
+        "EnG" => matches!(model, Gcn | GraphSage),
+        "HW_ACC" => matches!(model, Gcn | Gat),
+        "ReGNN" | "ReGraphX" => matches!(model, Gcn | GraphSage),
+        "TPU" | "CPU" | "GPU" => true,
+        _ => false,
+    }
+}
+
+/// Look a platform up by name.
+pub fn platform_by_name(name: &str) -> Option<PlatformSpec> {
+    PLATFORMS.iter().copied().find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+/// Evaluate a workload on a platform roofline.
+pub fn run_baseline(spec: &PlatformSpec, w: &Workload) -> Metrics {
+    // Dense = linear transforms; sparse = aggregation + attention +
+    // softmax + readout.
+    let dense_ops: u64 = w.per_layer.iter().map(|l| 2 * l.comb_macs).sum();
+    let total = w.total_ops();
+    let sparse_ops = total.saturating_sub(dense_ops);
+    let compute_s = dense_ops as f64 / (spec.peak_ops_per_s * spec.util_dense)
+        + sparse_ops as f64 / (spec.peak_ops_per_s * spec.util_sparse);
+    let memory_s = w.total_bytes() as f64 / spec.mem_bw_bytes_per_s;
+    let latency = w.n_graphs as f64 * spec.overhead_s + compute_s.max(memory_s);
+    Metrics {
+        latency_s: latency,
+        energy_j: spec.power_w * latency,
+        ops: total,
+        bits: w.total_bits(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::models::{Model, ModelKind};
+    use crate::graph::datasets::Dataset;
+
+    fn workload(kind: ModelKind, ds: &str) -> Workload {
+        let dataset = Dataset::by_name(ds).unwrap();
+        let model = Model::for_dataset(kind, &dataset.spec);
+        Workload::characterize(&model, &dataset)
+    }
+
+    #[test]
+    fn nine_platforms() {
+        assert_eq!(PLATFORMS.len(), 9);
+        assert!(platform_by_name("hygcn").is_some());
+        assert!(platform_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn support_matrix_matches_paper() {
+        use crate::gnn::models::ModelKind::*;
+        assert!(supports("GRIP", Gin));
+        assert!(!supports("GRIP", Gat));
+        assert!(supports("EnG", GraphSage));
+        assert!(!supports("EnG", Gin));
+        assert!(supports("HW_ACC", Gat));
+        assert!(!supports("HW_ACC", Gin));
+        assert!(supports("TPU", Gat));
+    }
+
+    #[test]
+    fn baselines_produce_positive_metrics() {
+        let w = workload(ModelKind::Gcn, "Cora");
+        for p in &PLATFORMS {
+            let m = run_baseline(p, &w);
+            assert!(m.latency_s > 0.0 && m.energy_j > 0.0, "{}", p.name);
+            assert!(m.gops() > 0.0);
+        }
+    }
+
+    #[test]
+    fn overhead_dominates_gin_on_commodity_platforms() {
+        let w = workload(ModelKind::Gin, "Proteins");
+        let tpu = platform_by_name("TPU").unwrap();
+        let m = run_baseline(&tpu, &w);
+        // 1113 graphs × 9 ms overhead ≈ 10 s — overhead-bound.
+        assert!(m.latency_s > 0.9 * w.n_graphs as f64 * tpu.overhead_s);
+    }
+
+    #[test]
+    fn accelerators_beat_commodity_on_gcn() {
+        let w = workload(ModelKind::Gcn, "Cora");
+        let hw = run_baseline(&platform_by_name("HW_ACC").unwrap(), &w);
+        let cpu = run_baseline(&platform_by_name("CPU").unwrap(), &w);
+        assert!(hw.gops() > cpu.gops());
+        assert!(hw.epb() < cpu.epb());
+    }
+}

@@ -1,0 +1,162 @@
+//! Global architectural configuration for the GHOST accelerator.
+//!
+//! The five architectural parameters from §3.3 / §4.3 of the paper:
+//!
+//! * `n` — number of edge-control units = input-vertex group size (the `N`
+//!   dimension of the partition matrix),
+//! * `v` — number of execution lanes = output-vertex group size (`V`),
+//! * `r_r` — rows per reduce unit (feature lanes of the coherent-summation
+//!   array; also the number of WDM wavelengths feeding a transform unit),
+//! * `r_c` — columns per reduce unit (neighbor vertices summed per pass),
+//! * `t_r` — rows per transform unit (output features produced per pass).
+//!
+//! The paper's DSE (Fig. 7(c)) selects `[N, V, Rr, Rc, Tr] = [20, 20, 18, 7,
+//! 17]`; [`GhostConfig::paper_optimal`] pins that point, and
+//! [`crate::coordinator::dse`] re-derives it.
+
+
+/// Precision of GNN parameters/activations mapped onto the photonic levels.
+pub const PRECISION_BITS: u32 = 8;
+
+/// Amplitude levels per polarity: positive and negative values are carried
+/// on separate BPD arms, so `N_levels = 2^(n-1)` (paper §3.2).
+pub const N_LEVELS: u32 = 1 << (PRECISION_BITS - 1);
+
+/// Symbol (modulation) rate of the photonic datapath, Hz. Set by the slowest
+/// converter in the loop — the 8-bit ADC at 1.2 GS/s (Table 1, [47]) — and
+/// rounded down to 1 GHz as a conservative system clock for the analog path.
+pub const SYMBOL_RATE_HZ: f64 = 1.0e9;
+
+/// Architectural configuration of one GHOST accelerator instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GhostConfig {
+    /// `N`: edge-control units / input-vertex group size.
+    pub n: usize,
+    /// `V`: execution lanes / output-vertex group size.
+    pub v: usize,
+    /// `R_r`: rows (feature lanes) per reduce unit == wavelengths per
+    /// transform-unit waveguide.
+    pub r_r: usize,
+    /// `R_c`: columns (neighbors per pass) per reduce unit.
+    pub r_c: usize,
+    /// `T_r`: rows (output features per pass) per transform unit.
+    pub t_r: usize,
+}
+
+impl GhostConfig {
+    /// The paper's DSE-optimal configuration `[20, 20, 18, 7, 17]`.
+    pub fn paper_optimal() -> Self {
+        Self { n: 20, v: 20, r_r: 18, r_c: 7, t_r: 17 }
+    }
+
+    /// Validates the configuration against the device-level feasibility
+    /// bounds established by the Fig. 7(a)/(b) exploration:
+    /// coherent summation arrays support at most
+    /// [`crate::photonics::dse::MAX_COHERENT_MRS`] MRs per summation chain
+    /// and non-coherent waveguides at most
+    /// [`crate::photonics::dse::MAX_NONCOHERENT_WAVELENGTHS`] wavelengths.
+    pub fn validate(&self) -> Result<(), String> {
+        use crate::photonics::dse::{MAX_COHERENT_MRS, MAX_NONCOHERENT_WAVELENGTHS};
+        if self.n == 0 || self.v == 0 || self.r_r == 0 || self.r_c == 0 || self.t_r == 0 {
+            return Err("all GhostConfig dimensions must be non-zero".into());
+        }
+        if self.r_c > MAX_COHERENT_MRS {
+            return Err(format!(
+                "R_c={} exceeds coherent bank limit of {MAX_COHERENT_MRS} MRs (Fig. 7a)",
+                self.r_c
+            ));
+        }
+        if self.r_r > MAX_NONCOHERENT_WAVELENGTHS {
+            return Err(format!(
+                "R_r={} exceeds non-coherent waveguide limit of {MAX_NONCOHERENT_WAVELENGTHS} wavelengths (Fig. 7b)",
+                self.r_r
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total MR count in the aggregate block (`V` reduce units of
+    /// `R_r × R_c` MRs plus one recirculation MR per feature row).
+    pub fn aggregate_mrs(&self) -> usize {
+        self.v * self.r_r * (self.r_c + 1)
+    }
+
+    /// Total MR count in the combine block (`V` transform units of
+    /// `T_r × R_r` MRs plus `T_r` broadband BN MRs each).
+    pub fn combine_mrs(&self) -> usize {
+        self.v * self.t_r * (self.r_r + 1)
+    }
+
+    /// DAC count for the combine block *without* weight-DAC sharing: one DAC
+    /// per weight MR.
+    pub fn combine_dacs_unshared(&self) -> usize {
+        self.v * self.t_r * self.r_r
+    }
+
+    /// DAC count for the combine block *with* weight-DAC sharing (§3.4.3):
+    /// all `V` transform units are tuned with the same weights, so the DAC
+    /// count drops by a factor of `V` to one per MR of a single unit.
+    pub fn combine_dacs_shared(&self) -> usize {
+        self.t_r * self.r_r
+    }
+}
+
+impl Default for GhostConfig {
+    fn default() -> Self {
+        Self::paper_optimal()
+    }
+}
+
+/// Integer ceil-division helper used across the timing models when mapping
+/// graph/model dimensions onto the photonic array dimensions.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_optimal_matches_fig7c() {
+        let c = GhostConfig::paper_optimal();
+        assert_eq!((c.n, c.v, c.r_r, c.r_c, c.t_r), (20, 20, 18, 7, 17));
+        c.validate().expect("paper point must be device-feasible");
+    }
+
+    #[test]
+    fn validate_rejects_zero_dims() {
+        let mut c = GhostConfig::paper_optimal();
+        c.v = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_infeasible_banks() {
+        let mut c = GhostConfig::paper_optimal();
+        c.r_c = 21; // > 20 coherent MRs
+        assert!(c.validate().is_err());
+        let mut c = GhostConfig::paper_optimal();
+        c.r_r = 19; // > 18 wavelengths
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dac_sharing_reduces_by_v() {
+        let c = GhostConfig::paper_optimal();
+        assert_eq!(c.combine_dacs_unshared(), c.combine_dacs_shared() * c.v);
+    }
+
+    #[test]
+    fn n_levels_is_two_pow_seven() {
+        assert_eq!(N_LEVELS, 128);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 7), 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Architectural design-space exploration — Fig. 7(c).
+//!
+//! Sweeps `[N, V, R_r, R_c, T_r]` within the device-level feasibility
+//! bounds (R_c ≤ 20 coherent MRs, R_r ≤ 18 wavelengths), evaluating the
+//! average EPB/GOPS across the evaluation workloads, and reports the
+//! frontier. The paper's optimum is `[20, 20, 18, 7, 17]`.
+
+use crate::config::GhostConfig;
+use crate::energy::geomean;
+use crate::gnn::models::ModelKind;
+use crate::graph::datasets::Dataset;
+use crate::graph::partition::PartitionMatrix;
+
+use super::optimizations::OptFlags;
+use super::schedule::{simulate_with_partitions, simulate_workload};
+
+/// One evaluated architecture point.
+#[derive(Debug, Clone, Copy)]
+pub struct ArchDsePoint {
+    pub cfg: GhostConfig,
+    /// Geometric-mean EPB/GOPS across the workload set (lower = better).
+    pub epb_per_gops: f64,
+    /// Geometric-mean GOPS.
+    pub gops: f64,
+    /// Geometric-mean EPB (J/bit).
+    pub epb: f64,
+}
+
+/// The sweep grid: a lattice over the five parameters within device
+/// feasibility, always containing the paper's optimum.
+pub fn default_grid() -> Vec<GhostConfig> {
+    let ns = [10usize, 20, 30];
+    let vs = [10usize, 20, 30];
+    let rrs = [6usize, 12, 18];
+    let rcs = [3usize, 7, 14, 20];
+    let trs = [5usize, 11, 17];
+    let mut grid = Vec::new();
+    for &n in &ns {
+        for &v in &vs {
+            for &r_r in &rrs {
+                for &r_c in &rcs {
+                    for &t_r in &trs {
+                        let cfg = GhostConfig { n, v, r_r, r_c, t_r };
+                        if cfg.validate().is_ok() {
+                            grid.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let paper = GhostConfig::paper_optimal();
+    if !grid.contains(&paper) {
+        grid.push(paper);
+    }
+    grid
+}
+
+/// Workload set for the sweep. `quick = true` uses one representative
+/// dataset per model (the Fig. 7(c) shape at ~4× less compute);
+/// `quick = false` uses all 16 model × dataset pairs as in the paper.
+pub fn workload_set(quick: bool) -> Vec<(ModelKind, Dataset)> {
+    let mut out = Vec::new();
+    for kind in ModelKind::ALL {
+        let names: &[&str] = if quick { &kind.datasets()[..1] } else { &kind.datasets()[..] };
+        for name in names {
+            out.push((kind, Dataset::by_name(name).expect("table-2 dataset")));
+        }
+    }
+    out
+}
+
+/// Evaluate one configuration over a workload set (geometric means).
+pub fn evaluate(cfg: GhostConfig, workloads: &[(ModelKind, Dataset)]) -> Option<ArchDsePoint> {
+    let flags = OptFlags::ghost_default();
+    let mut epb_gops = Vec::with_capacity(workloads.len());
+    let mut gops = Vec::with_capacity(workloads.len());
+    let mut epb = Vec::with_capacity(workloads.len());
+    for (kind, ds) in workloads {
+        let r = simulate_workload(*kind, ds, cfg, flags).ok()?;
+        epb_gops.push(r.metrics.epb_per_gops());
+        gops.push(r.metrics.gops());
+        epb.push(r.metrics.epb());
+    }
+    Some(ArchDsePoint {
+        cfg,
+        epb_per_gops: geomean(epb_gops),
+        gops: geomean(gops),
+        epb: geomean(epb),
+    })
+}
+
+/// Evaluate with partitions amortized per `(V, N)` (the configs sharing a
+/// partition shape reuse the same preprocessing).
+fn evaluate_with_partitions(
+    cfg: GhostConfig,
+    workloads: &[(ModelKind, Dataset)],
+    partitions: &[Vec<PartitionMatrix>],
+) -> Option<ArchDsePoint> {
+    let flags = OptFlags::ghost_default();
+    let mut epb_gops = Vec::with_capacity(workloads.len());
+    let mut gops = Vec::with_capacity(workloads.len());
+    let mut epb = Vec::with_capacity(workloads.len());
+    for ((kind, ds), pms) in workloads.iter().zip(partitions) {
+        let r = simulate_with_partitions(*kind, ds, pms, cfg, flags).ok()?;
+        epb_gops.push(r.metrics.epb_per_gops());
+        gops.push(r.metrics.gops());
+        epb.push(r.metrics.epb());
+    }
+    Some(ArchDsePoint {
+        cfg,
+        epb_per_gops: geomean(epb_gops),
+        gops: geomean(gops),
+        epb: geomean(epb),
+    })
+}
+
+/// Run the sweep (thread-pool parallel) and return points sorted by
+/// EPB/GOPS ascending (the best configuration first). Partition matrices
+/// are built once per distinct `(V, N)` pair and shared across the grid —
+/// the sweep's dominant cost otherwise.
+pub fn explore(grid: &[GhostConfig], workloads: &[(ModelKind, Dataset)]) -> Vec<ArchDsePoint> {
+    use std::collections::HashMap;
+    let mut shapes: Vec<(usize, usize)> = grid.iter().map(|c| (c.v, c.n)).collect();
+    shapes.sort_unstable();
+    shapes.dedup();
+    let partition_sets: HashMap<(usize, usize), Vec<Vec<PartitionMatrix>>> =
+        crate::util::parallel::par_map(&shapes, |&(v, n)| {
+            let per_workload: Vec<Vec<PartitionMatrix>> = workloads
+                .iter()
+                .map(|(_, ds)| {
+                    ds.graphs.iter().map(|g| PartitionMatrix::build(g, v, n)).collect()
+                })
+                .collect();
+            ((v, n), per_workload)
+        })
+        .into_iter()
+        .collect();
+    let mut points: Vec<ArchDsePoint> = crate::util::parallel::par_map(grid, |&cfg| {
+        evaluate_with_partitions(cfg, workloads, &partition_sets[&(cfg.v, cfg.n)])
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    points.sort_by(|a, b| a.epb_per_gops.partial_cmp(&b.epb_per_gops).unwrap());
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_contains_paper_point_and_respects_device_limits() {
+        let grid = default_grid();
+        assert!(grid.contains(&GhostConfig::paper_optimal()));
+        for cfg in &grid {
+            cfg.validate().unwrap();
+        }
+        assert!(grid.len() > 100, "grid too small: {}", grid.len());
+    }
+
+    #[test]
+    fn paper_point_is_near_optimal() {
+        // Small sweep around the paper point: it must rank in the top
+        // quartile of its neighborhood on EPB/GOPS.
+        let workloads = workload_set(true);
+        let paper = GhostConfig::paper_optimal();
+        let mut neighborhood = vec![paper];
+        for (dn, dv) in [(-10i64, 0i64), (10, 0), (0, -10), (0, 10)] {
+            let cfg = GhostConfig {
+                n: (paper.n as i64 + dn).max(5) as usize,
+                v: (paper.v as i64 + dv).max(5) as usize,
+                ..paper
+            };
+            if cfg.validate().is_ok() {
+                neighborhood.push(cfg);
+            }
+        }
+        let pts = explore(&neighborhood, &workloads);
+        let rank = pts.iter().position(|p| p.cfg == paper).unwrap();
+        assert!(rank <= pts.len() / 2, "paper point ranked {rank} of {}", pts.len());
+    }
+
+    #[test]
+    fn evaluate_produces_finite_metrics() {
+        let workloads = workload_set(true);
+        let p = evaluate(GhostConfig::paper_optimal(), &workloads).unwrap();
+        assert!(p.epb_per_gops.is_finite() && p.epb_per_gops > 0.0);
+        assert!(p.gops.is_finite() && p.gops > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The GHOST coordinator — the paper's L3 system contribution.
+//!
+//! * [`optimizations`] — the four orchestration/scheduling optimizations of
+//!   §3.4 as toggleable flags (buffer & partition, pipelining, weight-DAC
+//!   sharing, workload balancing) with the preset combinations of Fig. 8.
+//! * [`schedule`] — maps a `(model, dataset, config, flags)` tuple onto
+//!   per-group pipeline stages and evaluates latency/energy with the
+//!   [`crate::sim`] pipeline model: the full GHOST simulator.
+//! * [`dse`] — the architectural design-space exploration of Fig. 7(c)
+//!   over `[N, V, R_r, R_c, T_r]`.
+
+pub mod dse;
+pub mod optimizations;
+pub mod schedule;
+
+pub use optimizations::OptFlags;
+pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

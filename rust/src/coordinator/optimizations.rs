@@ -1,0 +1,153 @@
+//! Orchestration & scheduling optimization flags (§3.4) and the Fig. 8
+//! preset combinations.
+
+
+/// Which of the four §3.4 optimizations are active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OptFlags {
+    /// §3.4.1 graph buffering & partitioning (prefetched block streaming +
+    /// all-zero-block skipping). Off = on-demand sequential gathers.
+    pub buffer_partition: bool,
+    /// §3.4.2 two-level execution pipelining. Off = fully sequential
+    /// stages and groups.
+    pub pipelining: bool,
+    /// §3.4.3 weight-DAC sharing across the V transform units.
+    pub dac_sharing: bool,
+    /// §3.4.4 workload balancing across execution lanes.
+    pub workload_balancing: bool,
+}
+
+impl OptFlags {
+    pub const fn baseline() -> Self {
+        Self {
+            buffer_partition: false,
+            pipelining: false,
+            dac_sharing: false,
+            workload_balancing: false,
+        }
+    }
+
+    /// The configuration GHOST ships with (§4.4: BP + PP + DAC sharing).
+    pub const fn ghost_default() -> Self {
+        Self {
+            buffer_partition: true,
+            pipelining: true,
+            dac_sharing: true,
+            workload_balancing: false,
+        }
+    }
+
+    /// BP + PP + WB — the alternative §4.4 explores (WB precludes DAC
+    /// sharing because lanes run at different rates).
+    pub const fn bp_pp_wb() -> Self {
+        Self {
+            buffer_partition: true,
+            pipelining: true,
+            dac_sharing: false,
+            workload_balancing: true,
+        }
+    }
+
+    /// Workload balancing requires BP (synchronized, prefetched accesses —
+    /// §4.4 explains WB in isolation is impractical) and conflicts with
+    /// DAC sharing (lanes at different speeds can't share weight DACs).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workload_balancing && !self.buffer_partition {
+            return Err("workload balancing requires buffer & partition (§4.4)".into());
+        }
+        if self.workload_balancing && self.dac_sharing {
+            return Err("workload balancing precludes weight-DAC sharing (§4.4)".into());
+        }
+        Ok(())
+    }
+
+    /// Short label matching the Fig. 8 x-axis.
+    pub fn label(&self) -> String {
+        if *self == Self::baseline() {
+            return "Baseline".into();
+        }
+        let mut parts = Vec::new();
+        if self.buffer_partition {
+            parts.push("BP");
+        }
+        if self.pipelining {
+            parts.push("PP");
+        }
+        if self.dac_sharing {
+            parts.push("DAC_Sharing");
+        }
+        if self.workload_balancing {
+            parts.push("WB");
+        }
+        parts.join("+")
+    }
+
+    /// The combination set evaluated in Fig. 8 (WB only alongside BP+PP,
+    /// per §4.4).
+    pub fn fig8_presets() -> Vec<OptFlags> {
+        let f = |bp, pp, dac, wb| OptFlags {
+            buffer_partition: bp,
+            pipelining: pp,
+            dac_sharing: dac,
+            workload_balancing: wb,
+        };
+        vec![
+            Self::baseline(),
+            f(true, false, false, false),  // BP
+            f(false, true, false, false),  // PP
+            f(false, false, true, false),  // DAC_Sharing
+            f(true, true, false, false),   // BP+PP
+            f(true, false, true, false),   // BP+DAC
+            f(false, true, true, false),   // PP+DAC
+            f(true, true, true, false),    // BP+PP+DAC (ghost default)
+            f(true, true, false, true),    // BP+PP+WB
+        ]
+    }
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        Self::ghost_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for p in OptFlags::fig8_presets() {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.label()));
+        }
+    }
+
+    #[test]
+    fn wb_without_bp_rejected() {
+        let bad = OptFlags {
+            buffer_partition: false,
+            pipelining: true,
+            dac_sharing: false,
+            workload_balancing: true,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn wb_with_dac_sharing_rejected() {
+        let bad = OptFlags { workload_balancing: true, ..OptFlags::ghost_default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(OptFlags::baseline().label(), "Baseline");
+        assert_eq!(OptFlags::ghost_default().label(), "BP+PP+DAC_Sharing");
+        assert_eq!(OptFlags::bp_pp_wb().label(), "BP+PP+WB");
+    }
+
+    #[test]
+    fn fig8_has_nine_bars() {
+        assert_eq!(OptFlags::fig8_presets().len(), 9);
+    }
+}

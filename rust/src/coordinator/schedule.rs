@@ -1,0 +1,430 @@
+//! The GHOST simulator: maps a `(model, dataset, config, optimization
+//! flags)` tuple onto per-group pipeline stages, evaluates the schedule
+//! with the [`crate::sim`] pipeline model, and accounts energy.
+//!
+//! Execution orderings (§3.4.2 / Fig. 6):
+//! * GCN / GraphSAGE / GIN — gather → reduce → transform → update per
+//!   output-vertex group, groups pipelined against each other;
+//! * GAT — gather → transform(+attention) → update(LeakyReLU+softmax) →
+//!   reduce, same two-level pipelining.
+//!
+//! Multi-graph datasets are scheduled layer-major (all graphs through layer
+//! `l`, then layer `l+1`) so each weight matrix is staged and the banks
+//! TO-retargeted once per layer per dataset, not once per graph.
+
+
+use crate::arch::{aggregate, combine, ecu, update, ArchContext, StageCost};
+use crate::config::{ceil_div, GhostConfig};
+use crate::energy::Metrics;
+use crate::gnn::models::{Activation, ExecOrdering, LayerSpec, Model, ModelKind};
+use crate::gnn::workload::Workload;
+use crate::graph::datasets::Dataset;
+use crate::graph::partition::{OutputGroupPlan, PartitionMatrix};
+use crate::sim;
+
+use super::optimizations::OptFlags;
+
+/// Fraction of MR banks whose per-layer retarget exceeds the EO range and
+/// needs the TO heater (with TED decoupling).
+pub const TO_RETUNE_FRACTION: f64 = 0.05;
+
+/// Full simulation result for one `(model, dataset)` workload.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub model: ModelKind,
+    pub dataset: String,
+    pub config: GhostConfig,
+    pub flags: OptFlags,
+    pub metrics: Metrics,
+    /// Busy time of the aggregate block (gather + reduce stages), seconds.
+    pub aggregate_s: f64,
+    /// Busy time of the combine block (transform stages), seconds.
+    pub combine_s: f64,
+    /// Busy time of the update block, seconds.
+    pub update_s: f64,
+    /// Always-on platform power for this configuration, watts.
+    pub platform_w: f64,
+}
+
+impl SimReport {
+    /// Fractional latency breakdown `(aggregate, combine, update)` — the
+    /// Fig. 9 bars.
+    pub fn breakdown(&self) -> (f64, f64, f64) {
+        let total = self.aggregate_s + self.combine_s + self.update_s;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (self.aggregate_s / total, self.combine_s / total, self.update_s / total)
+    }
+}
+
+/// Simulate a model over a named Table-2 dataset.
+pub fn simulate(
+    kind: ModelKind,
+    dataset_name: &str,
+    cfg: GhostConfig,
+    flags: OptFlags,
+) -> Result<SimReport, String> {
+    let dataset = Dataset::by_name(dataset_name)
+        .ok_or_else(|| format!("unknown dataset {dataset_name}"))?;
+    simulate_workload(kind, &dataset, cfg, flags)
+}
+
+/// Simulate a model over an already-realized dataset. Partitions every
+/// graph with the configuration's `(V, N)` first — use
+/// [`simulate_with_partitions`] to amortize that offline preprocessing
+/// across multiple simulations (the Fig. 8 sensitivity sweep and the
+/// Fig. 7(c) DSE reuse partitions this way).
+pub fn simulate_workload(
+    kind: ModelKind,
+    dataset: &Dataset,
+    cfg: GhostConfig,
+    flags: OptFlags,
+) -> Result<SimReport, String> {
+    let partitions: Vec<PartitionMatrix> =
+        dataset.graphs.iter().map(|g| PartitionMatrix::build(g, cfg.v, cfg.n)).collect();
+    simulate_with_partitions(kind, dataset, &partitions, cfg, flags)
+}
+
+/// Simulate with pre-built partition matrices (offline preprocessing per
+/// the paper; `partitions[i]` must be the `(cfg.v, cfg.n)` partition of
+/// `dataset.graphs[i]`).
+pub fn simulate_with_partitions(
+    kind: ModelKind,
+    dataset: &Dataset,
+    partitions: &[PartitionMatrix],
+    cfg: GhostConfig,
+    flags: OptFlags,
+) -> Result<SimReport, String> {
+    cfg.validate()?;
+    flags.validate()?;
+    debug_assert_eq!(partitions.len(), dataset.graphs.len());
+    debug_assert!(partitions.iter().all(|p| p.v == cfg.v && p.n == cfg.n));
+    let ctx = ArchContext::paper(cfg);
+    let model = Model::for_dataset(kind, &dataset.spec);
+    let workload = Workload::characterize(&model, dataset);
+
+    let mut latency = 0.0f64;
+    let mut dynamic_energy = 0.0f64;
+    let mut aggregate_s = 0.0f64;
+    let mut combine_s = 0.0f64;
+    let mut update_s = 0.0f64;
+
+    // Edge/partition descriptors stream in once per graph.
+    for g in &dataset.graphs {
+        let ec = ecu::edge_stage_cost(&ctx, g.n_edges() as u64 * 8);
+        latency += ec.latency_s;
+        dynamic_energy += ec.energy_j;
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        // Stage the layer's weights + TO-retarget the banks (once per layer
+        // per dataset; graphs are scheduled layer-major).
+        let wc = ecu::weight_stage_cost(
+            &ctx,
+            (layer.in_dim * layer.out_dim * layer.heads) as u64,
+        );
+        latency += wc.latency_s.max(ctx.dev.to_tuning.latency_s);
+        dynamic_energy += wc.energy_j + to_retune_energy(&ctx);
+
+        // Does this layer's input feature map live on-chip?
+        let feat_bytes_total = workload.n_vertices as usize * layer.in_dim;
+        let from_dram = li == 0
+            || feat_bytes_total > ctx.buffers.input_vertices.size_bytes;
+
+        for pm in partitions {
+            let mut group_stages: Vec<sim::GroupStages> = Vec::with_capacity(pm.groups.len());
+            for grp in &pm.groups {
+                let (stages, block_split) =
+                    layer_group_stages(&ctx, &model, layer, grp, flags, from_dram);
+                dynamic_energy += stages.iter().map(|s| s.energy_j).sum::<f64>();
+                aggregate_s += block_split.0;
+                combine_s += block_split.1;
+                update_s += block_split.2;
+                group_stages.push(stages.iter().map(|s| s.latency_s).collect());
+            }
+            let sched = if flags.pipelining {
+                sim::pipelined(&group_stages)
+            } else {
+                sim::sequential(&group_stages)
+            };
+            latency += sched.makespan_s;
+        }
+    }
+
+    // Graph-classification readout: sum-pool each graph's vertex embeddings
+    // on the reduce arrays.
+    if model.has_readout {
+        for g in &dataset.graphs {
+            let hidden = model.layers.last().map(|l| l.in_dim).unwrap_or(0);
+            let passes = ceil_div(g.n_vertices, cfg.v * cfg.r_c) * ceil_div(hidden, cfg.r_r);
+            let cost = StageCost {
+                latency_s: passes as f64 * ctx.symbol_s(),
+                energy_j: (g.n_vertices * hidden) as f64 * ctx.dev.dac.energy_j(),
+            };
+            latency += cost.latency_s;
+            dynamic_energy += cost.energy_j;
+            aggregate_s += cost.latency_s;
+        }
+    }
+
+    let platform_w = crate::arch::platform_power_w(&ctx, flags.dac_sharing);
+    let energy = dynamic_energy + platform_w * latency;
+    Ok(SimReport {
+        model: kind,
+        dataset: dataset.spec.name.to_string(),
+        config: cfg,
+        flags,
+        metrics: Metrics {
+            latency_s: latency,
+            energy_j: energy,
+            ops: workload.total_ops(),
+            bits: workload.total_bits(),
+        },
+        aggregate_s,
+        combine_s,
+        update_s,
+        platform_w,
+    })
+}
+
+/// Energy of one per-layer TO retarget event across the banks that need it,
+/// with TED keeping heaters decoupled (so each pays only its own shift).
+fn to_retune_energy(ctx: &ArchContext) -> f64 {
+    let cfg = &ctx.cfg;
+    let n_mrs = cfg.aggregate_mrs() + cfg.combine_mrs();
+    n_mrs as f64
+        * TO_RETUNE_FRACTION
+        * ctx.dev.to_tuning.power_w
+        * 0.25 // quarter-FSR average shift
+        * ctx.dev.to_tuning.latency_s
+}
+
+/// Builds the pipeline stages of one output-vertex group for one layer.
+/// Returns the stage costs plus the `(aggregate, combine, update)` busy-time
+/// split for the Fig. 9 breakdown.
+fn layer_group_stages(
+    ctx: &ArchContext,
+    model: &Model,
+    layer: &LayerSpec,
+    grp: &OutputGroupPlan,
+    flags: OptFlags,
+    from_dram: bool,
+) -> (Vec<StageCost>, (f64, f64, f64)) {
+    let out_width = layer.out_dim * layer.heads;
+    // GraphSAGE-style neighbor sampling caps the effective group shape.
+    let grp_eff = effective_group(grp, layer.neighbor_sample, ctx.cfg.v);
+
+    match (layer.reduction, model.ordering) {
+        (None, _) => {
+            // Pure MLP layer (GIN inner layers): features already on-chip,
+            // transform + update only.
+            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
+            let u = update::update_cost(ctx, layer.activation, out_width, 0)
+                .then(update::writeback_cost(ctx, out_width));
+            let split = (0.0, t.latency_s, u.latency_s);
+            (vec![StageCost::ZERO, StageCost::ZERO, t, u], split)
+        }
+        (Some(red), ExecOrdering::AggregateFirst) => {
+            let g = gather_stage(ctx, &grp_eff, layer.in_dim, flags.buffer_partition, from_dram);
+            let r = aggregate::reduce_cost(ctx, &grp_eff, layer.in_dim, red, flags.workload_balancing);
+            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, true);
+            let u = update::update_cost(ctx, layer.activation, out_width, 0)
+                .then(update::writeback_cost(ctx, out_width));
+            let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
+            (vec![g, r, t, u], split)
+        }
+        (Some(red), ExecOrdering::TransformFirst) => {
+            // GAT: each lane fetches *its own* vertex once (transforms are
+            // independent, §3.4.2), W-transforms it and computes attention
+            // logits; LeakyReLU + neighborhood softmax run in the update
+            // block; the final reduce aggregates the *transformed*
+            // (out_width-dim) neighbor features from the intermediate
+            // buffer.
+            let g = own_vertex_gather(ctx, layer.in_dim, flags.buffer_partition, from_dram);
+            let mut t =
+                combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
+            t = t.then(attention_cost(ctx, layer, &grp_eff));
+            let softmax_elems = grp_eff.total_edges as usize * layer.heads;
+            let u = update::update_cost(ctx, Activation::Softmax, out_width, softmax_elems)
+                .then(update::writeback_cost(ctx, out_width));
+            // Neighbor fetch of transformed features (on-chip intermediate
+            // buffer) + the coherent summation itself.
+            let nbr_bytes = grp_eff.distinct_sources as usize * out_width;
+            let fetch = StageCost {
+                latency_s: ctx.buffers.input_vertices.stream_latency_s(nbr_bytes),
+                energy_j: ctx.buffers.input_vertices.stream_energy_j(nbr_bytes),
+            };
+            let r = fetch
+                .then(aggregate::reduce_cost(ctx, &grp_eff, out_width, red, flags.workload_balancing));
+            let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
+            (vec![g, t, u, r], split)
+        }
+    }
+}
+
+/// Applies a neighbor-sample cap to a group's shape (GraphSAGE §2.1).
+fn effective_group(
+    grp: &OutputGroupPlan,
+    sample: Option<usize>,
+    v: usize,
+) -> OutputGroupPlan {
+    match sample {
+        None => grp.clone(),
+        Some(s) => {
+            let max_deg = grp.max_lane_degree.min(s as u32);
+            let total = grp.total_edges.min((v * s) as u32);
+            OutputGroupPlan {
+                out_group: grp.out_group,
+                blocks: grp.blocks.clone(),
+                max_lane_degree: max_deg,
+                total_edges: total,
+                distinct_sources: grp.distinct_sources.min(total),
+            }
+        }
+    }
+}
+
+/// Gather stage: DRAM-backed for layer-0 / spilled feature maps, on-chip
+/// intermediate-buffer reads otherwise.
+fn gather_stage(
+    ctx: &ArchContext,
+    grp: &OutputGroupPlan,
+    in_dim: usize,
+    bp: bool,
+    from_dram: bool,
+) -> StageCost {
+    if from_dram {
+        aggregate::gather_cost(ctx, grp, in_dim, bp)
+    } else {
+        // Intermediate vertex buffer: streamed (BP) or per-neighbor (no BP).
+        let buf = &ctx.buffers.input_vertices;
+        if bp {
+            let bytes = grp.distinct_sources as usize * in_dim;
+            StageCost {
+                latency_s: buf.stream_latency_s(bytes),
+                energy_j: buf.stream_energy_j(bytes),
+            }
+        } else {
+            let per = buf.access_latency_s * ceil_div(in_dim, 64).max(1) as f64;
+            let bytes = grp.total_edges as usize * in_dim;
+            StageCost {
+                latency_s: grp.max_lane_degree as f64 * per,
+                energy_j: buf.stream_energy_j(bytes),
+            }
+        }
+    }
+}
+
+/// Transform-first own-vertex fetch: each of the `V` lanes streams the
+/// feature vector of the single vertex it will transform. With BP the
+/// fetches are one prefetched stream; without, each lane issues an
+/// on-demand access.
+fn own_vertex_gather(ctx: &ArchContext, in_dim: usize, bp: bool, from_dram: bool) -> StageCost {
+    let bytes = ctx.cfg.v * in_dim;
+    if from_dram {
+        let hbm = &ctx.hbm;
+        if bp {
+            StageCost {
+                latency_s: hbm.access_latency_s + bytes as f64 / hbm.sustained_bw(),
+                energy_j: hbm.transfer_energy_j(bytes as u64)
+                    + ctx.buffers.input_vertices.stream_energy_j(bytes),
+            }
+        } else {
+            StageCost {
+                latency_s: hbm.access_latency_s
+                    + in_dim as f64 / (hbm.peak_bw_bytes_per_s * hbm.random_efficiency),
+                energy_j: hbm.transfer_energy_j(bytes as u64)
+                    + hbm.burst_overhead_j * ctx.cfg.v as f64
+                    + ctx.buffers.input_vertices.stream_energy_j(bytes),
+            }
+        }
+    } else {
+        StageCost {
+            latency_s: ctx.buffers.input_vertices.stream_latency_s(bytes),
+            energy_j: ctx.buffers.input_vertices.stream_energy_j(bytes),
+        }
+    }
+}
+
+/// GAT attention-logit cost: `aᵀ[Wh_i ‖ Wh_j]` per edge per head on the
+/// transform arrays (2·out_dim-long dot products).
+fn attention_cost(ctx: &ArchContext, layer: &LayerSpec, grp: &OutputGroupPlan) -> StageCost {
+    let cfg = &ctx.cfg;
+    let per_lane_logits = grp.max_lane_degree as usize * layer.heads;
+    let passes = ceil_div(per_lane_logits.max(1), cfg.t_r) * ceil_div(2 * layer.out_dim, cfg.r_r);
+    let values = grp.total_edges as f64 * (2 * layer.out_dim * layer.heads) as f64;
+    StageCost {
+        latency_s: passes as f64 * ctx.symbol_s(),
+        energy_j: values * ctx.dev.dac.energy_j(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(kind: ModelKind, ds: &str, flags: OptFlags) -> SimReport {
+        simulate(kind, ds, GhostConfig::paper_optimal(), flags).unwrap()
+    }
+
+    #[test]
+    fn gcn_cora_runs_and_is_fast() {
+        let r = sim(ModelKind::Gcn, "Cora", OptFlags::ghost_default());
+        assert!(r.metrics.latency_s > 0.0 && r.metrics.latency_s < 1e-2,
+            "latency = {}", r.metrics.latency_s);
+        assert!(r.metrics.gops() > 100.0, "gops = {}", r.metrics.gops());
+        assert!(r.metrics.power_w() > 10.0 && r.metrics.power_w() < 60.0,
+            "power = {}", r.metrics.power_w());
+    }
+
+    #[test]
+    fn optimizations_reduce_energy() {
+        let base = sim(ModelKind::Gcn, "Cora", OptFlags::baseline());
+        let opt = sim(ModelKind::Gcn, "Cora", OptFlags::ghost_default());
+        let ratio = base.metrics.energy_j / opt.metrics.energy_j;
+        assert!(ratio > 1.5, "energy ratio = {ratio}");
+    }
+
+    #[test]
+    fn gcn_aggregate_dominates_on_big_graphs() {
+        let r = sim(ModelKind::Gcn, "PubMed", OptFlags::ghost_default());
+        let (agg, _, _) = r.breakdown();
+        assert!(agg > 0.5, "aggregate share = {agg}");
+    }
+
+    #[test]
+    fn gat_combine_update_dominate() {
+        let r = sim(ModelKind::Gat, "Cora", OptFlags::ghost_default());
+        let (agg, comb, upd) = r.breakdown();
+        assert!(comb + upd > agg, "agg={agg} comb={comb} upd={upd}");
+    }
+
+    #[test]
+    fn gin_combine_dominates() {
+        let r = sim(ModelKind::Gin, "Proteins", OptFlags::ghost_default());
+        let (agg, comb, _) = r.breakdown();
+        assert!(comb > agg, "agg={agg} comb={comb}");
+    }
+
+    #[test]
+    fn pipelining_reduces_latency() {
+        let no_pp = OptFlags { pipelining: false, ..OptFlags::ghost_default() };
+        let with_pp = OptFlags::ghost_default();
+        let a = sim(ModelKind::Gcn, "Citeseer", no_pp);
+        let b = sim(ModelKind::Gcn, "Citeseer", with_pp);
+        assert!(b.metrics.latency_s < a.metrics.latency_s);
+    }
+
+    #[test]
+    fn all_sixteen_workloads_simulate() {
+        for kind in ModelKind::ALL {
+            for ds in kind.datasets() {
+                let r = sim(kind, ds, OptFlags::ghost_default());
+                assert!(r.metrics.latency_s > 0.0, "{:?}/{ds}", kind);
+                assert!(r.metrics.energy_j > 0.0);
+                assert!(r.metrics.ops > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! EPB / GOPS / EPB-per-GOPS accounting — the shared metric convention for
+//! GHOST and every baseline (Figs. 10–12).
+
+
+/// Throughput/efficiency metrics of one workload execution on one platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// End-to-end latency, seconds.
+    pub latency_s: f64,
+    /// Total energy, joules.
+    pub energy_j: f64,
+    /// Ops executed (2 per MAC + 1 per add/activation; shared convention).
+    pub ops: u64,
+    /// Bits moved across the memory interface.
+    pub bits: u64,
+}
+
+impl Metrics {
+    /// Giga-operations per second.
+    pub fn gops(&self) -> f64 {
+        self.ops as f64 / self.latency_s / 1e9
+    }
+
+    /// Energy per bit, joules/bit.
+    pub fn epb(&self) -> f64 {
+        self.energy_j / self.bits as f64
+    }
+
+    /// The paper's combined figure of merit (lower is better).
+    pub fn epb_per_gops(&self) -> f64 {
+        self.epb() / self.gops()
+    }
+
+    /// Average power, watts.
+    pub fn power_w(&self) -> f64 {
+        self.energy_j / self.latency_s
+    }
+}
+
+/// Geometric mean of a sequence of positive ratios — the paper's "on
+/// average n× better" aggregation across model × dataset pairs.
+pub fn geomean(values: impl IntoIterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for v in values {
+        debug_assert!(v > 0.0);
+        log_sum += v.ln();
+        n += 1;
+    }
+    if n == 0 {
+        return f64::NAN;
+    }
+    (log_sum / n as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_arithmetic() {
+        let m = Metrics { latency_s: 1e-3, energy_j: 1e-2, ops: 2_000_000_000, bits: 1_000_000 };
+        assert!((m.gops() - 2000.0).abs() < 1e-9);
+        assert!((m.epb() - 1e-8).abs() < 1e-20);
+        assert!((m.power_w() - 10.0).abs() < 1e-9);
+        assert!((m.epb_per_gops() - 1e-8 / 2000.0).abs() < 1e-20);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean([4.0, 1.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean([10.0, 10.0, 10.0]) - 10.0).abs() < 1e-9);
+        assert!(geomean(std::iter::empty()).is_nan());
+    }
+}

@@ -1,0 +1,326 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! section (§4). Each function returns structured rows; `print_*` helpers
+//! render them as the text tables the CLI and benches emit.
+
+
+use crate::baselines::{run_baseline, supports, PLATFORMS};
+use crate::config::GhostConfig;
+use crate::coordinator::{simulate_workload, OptFlags, SimReport};
+use crate::energy::{geomean, Metrics};
+use crate::gnn::models::{Model, ModelKind};
+use crate::gnn::workload::Workload;
+use crate::graph::datasets::{Dataset, ALL_DATASETS};
+use crate::photonics::devices::DeviceParams;
+
+/// All 16 evaluated `(model, dataset)` workloads, paper order.
+pub fn all_pairs() -> Vec<(ModelKind, &'static str)> {
+    let mut v = Vec::new();
+    for kind in ModelKind::ALL {
+        for ds in kind.datasets() {
+            v.push((kind, ds));
+        }
+    }
+    v
+}
+
+/// Runs the GHOST simulator on every workload with the given flags.
+pub fn ghost_reports(cfg: GhostConfig, flags: OptFlags) -> Vec<SimReport> {
+    all_pairs()
+        .into_iter()
+        .map(|(kind, ds)| {
+            let dataset = Dataset::by_name(ds).expect("table-2 dataset");
+            simulate_workload(kind, &dataset, cfg, flags).expect("simulation")
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Table 1: device latency/power parameters.
+pub fn table1() -> Vec<(String, f64, f64)> {
+    let p = DeviceParams::paper();
+    vec![
+        ("EO Tuning".into(), p.eo_tuning.latency_s, p.eo_tuning.power_w),
+        ("TO Tuning".into(), p.to_tuning.latency_s, p.to_tuning.power_w),
+        ("VCSEL".into(), p.vcsel.latency_s, p.vcsel.power_w),
+        ("Photodetector".into(), p.photodetector.latency_s, p.photodetector.power_w),
+        ("SOA".into(), p.soa.latency_s, p.soa.power_w),
+        ("DAC (8 bit)".into(), p.dac.latency_s, p.dac.power_w),
+        ("ADC (8 bit)".into(), p.adc.latency_s, p.adc.power_w),
+    ]
+}
+
+pub fn print_table1() {
+    println!("Table 1: device parameters");
+    println!("{:<16} {:>12} {:>12}", "Device", "Latency", "Power");
+    for (name, lat, pow) in table1() {
+        println!("{name:<16} {:>10.3} ns {:>9.3} mW", lat * 1e9, pow * 1e3);
+    }
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Table 2: dataset statistics (measured from the generated graphs, which
+/// must match the paper's spec).
+#[derive(Debug)]
+pub struct Table2Row {
+    pub name: &'static str,
+    pub avg_nodes: f64,
+    pub avg_edges: f64,
+    pub n_features: usize,
+    pub n_labels: usize,
+    pub n_graphs: usize,
+}
+
+pub fn table2() -> Vec<Table2Row> {
+    ALL_DATASETS
+        .iter()
+        .map(|spec| {
+            let d = Dataset::generate(*spec);
+            Table2Row {
+                name: spec.name,
+                avg_nodes: d.total_vertices() as f64 / d.graphs.len() as f64,
+                avg_edges: d.total_edges() as f64 / d.graphs.len() as f64,
+                n_features: spec.n_features,
+                n_labels: spec.n_labels,
+                n_graphs: spec.n_graphs,
+            }
+        })
+        .collect()
+}
+
+pub fn print_table2() {
+    println!("Table 2: graph dataset parameters (generated)");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "Dataset", "#Nodes", "#Edges", "#Feat", "#Labels", "#Graphs"
+    );
+    for r in table2() {
+        println!(
+            "{:<12} {:>10.1} {:>10.1} {:>10} {:>8} {:>8}",
+            r.name, r.avg_nodes, r.avg_edges, r.n_features, r.n_labels, r.n_graphs
+        );
+    }
+}
+
+// ----------------------------------------------------------------- Fig. 8
+
+/// One Fig. 8 bar: normalized energy (baseline = 1.0) per workload for an
+/// optimization combination.
+#[derive(Debug)]
+pub struct Fig8Row {
+    pub label: String,
+    /// `(model, dataset, normalized energy)` per workload.
+    pub per_workload: Vec<(String, String, f64)>,
+    /// Geometric-mean normalized energy.
+    pub mean: f64,
+}
+
+pub fn fig8(cfg: GhostConfig) -> Vec<Fig8Row> {
+    // Partition every workload once; the 9 preset evaluations reuse them
+    // (offline preprocessing is flag-independent).
+    let prepared: Vec<(ModelKind, Dataset, Vec<crate::graph::PartitionMatrix>)> = all_pairs()
+        .into_iter()
+        .map(|(kind, ds)| {
+            let dataset = Dataset::by_name(ds).expect("table-2 dataset");
+            let partitions = dataset
+                .graphs
+                .iter()
+                .map(|g| crate::graph::PartitionMatrix::build(g, cfg.v, cfg.n))
+                .collect();
+            (kind, dataset, partitions)
+        })
+        .collect();
+    let run = |flags: OptFlags| -> Vec<SimReport> {
+        prepared
+            .iter()
+            .map(|(kind, dataset, partitions)| {
+                crate::coordinator::simulate_with_partitions(
+                    *kind, dataset, partitions, cfg, flags,
+                )
+                .expect("simulation")
+            })
+            .collect()
+    };
+    let baseline: Vec<SimReport> = run(OptFlags::baseline());
+    OptFlags::fig8_presets()
+        .into_iter()
+        .map(|flags| {
+            let reports = run(flags);
+            let per_workload: Vec<(String, String, f64)> = reports
+                .iter()
+                .zip(&baseline)
+                .map(|(r, b)| {
+                    (
+                        r.model.name().to_string(),
+                        r.dataset.clone(),
+                        r.metrics.energy_j / b.metrics.energy_j,
+                    )
+                })
+                .collect();
+            let mean = geomean(per_workload.iter().map(|(_, _, e)| *e));
+            Fig8Row { label: flags.label(), per_workload, mean }
+        })
+        .collect()
+}
+
+pub fn print_fig8(cfg: GhostConfig) {
+    println!("Fig. 8: normalized energy per optimization combination (baseline = 1.0)");
+    for row in fig8(cfg) {
+        println!("{:<22} mean {:.3}  (reduction {:.2}x)", row.label, row.mean, 1.0 / row.mean);
+    }
+}
+
+// ----------------------------------------------------------------- Fig. 9
+
+/// One Fig. 9 bar: per-block latency fractions.
+#[derive(Debug)]
+pub struct Fig9Row {
+    pub model: String,
+    pub dataset: String,
+    pub aggregate: f64,
+    pub combine: f64,
+    pub update: f64,
+}
+
+pub fn fig9(cfg: GhostConfig) -> Vec<Fig9Row> {
+    ghost_reports(cfg, OptFlags::ghost_default())
+        .into_iter()
+        .map(|r| {
+            let (a, c, u) = r.breakdown();
+            Fig9Row {
+                model: r.model.name().to_string(),
+                dataset: r.dataset,
+                aggregate: a,
+                combine: c,
+                update: u,
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig9(cfg: GhostConfig) {
+    println!("Fig. 9: latency breakdown per block");
+    println!("{:<10} {:<12} {:>10} {:>10} {:>10}", "Model", "Dataset", "Aggregate", "Combine", "Update");
+    for r in fig9(cfg) {
+        println!(
+            "{:<10} {:<12} {:>9.1}% {:>9.1}% {:>9.1}%",
+            r.model,
+            r.dataset,
+            r.aggregate * 100.0,
+            r.combine * 100.0,
+            r.update * 100.0
+        );
+    }
+}
+
+// ----------------------------------------------------- Figs. 10 / 11 / 12
+
+/// One comparison row: GHOST-vs-platform ratios averaged (geomean) over the
+/// workloads that platform supports.
+#[derive(Debug)]
+pub struct ComparisonRow {
+    pub platform: &'static str,
+    /// GHOST GOPS ÷ platform GOPS (Fig. 10; > 1 = GHOST wins).
+    pub gops_ratio: f64,
+    /// Platform EPB ÷ GHOST EPB (Fig. 11; > 1 = GHOST wins).
+    pub epb_ratio: f64,
+    /// Platform EPB/GOPS ÷ GHOST EPB/GOPS (Fig. 12; > 1 = GHOST wins).
+    pub epb_gops_ratio: f64,
+    /// Workloads compared.
+    pub n_workloads: usize,
+}
+
+/// Per-workload metrics for GHOST and every supporting platform.
+pub fn comparison_detail(
+    cfg: GhostConfig,
+) -> Vec<(ModelKind, &'static str, Metrics, Vec<(&'static str, Metrics)>)> {
+    all_pairs()
+        .into_iter()
+        .map(|(kind, ds)| {
+            let dataset = Dataset::by_name(ds).expect("dataset");
+            let ghost = simulate_workload(kind, &dataset, cfg, OptFlags::ghost_default())
+                .expect("sim")
+                .metrics;
+            let model = Model::for_dataset(kind, &dataset.spec);
+            let w = Workload::characterize(&model, &dataset);
+            let rows: Vec<(&'static str, Metrics)> = PLATFORMS
+                .iter()
+                .filter(|p| supports(p.name, kind))
+                .map(|p| (p.name, run_baseline(p, &w)))
+                .collect();
+            (kind, ds, ghost, rows)
+        })
+        .collect()
+}
+
+/// The Figs. 10–12 summary: geomean ratios per platform.
+pub fn comparison_summary(cfg: GhostConfig) -> Vec<ComparisonRow> {
+    let detail = comparison_detail(cfg);
+    PLATFORMS
+        .iter()
+        .map(|p| {
+            let mut gops = Vec::new();
+            let mut epb = Vec::new();
+            let mut eg = Vec::new();
+            for (_, _, ghost, rows) in &detail {
+                if let Some((_, m)) = rows.iter().find(|(n, _)| *n == p.name) {
+                    gops.push(ghost.gops() / m.gops());
+                    epb.push(m.epb() / ghost.epb());
+                    eg.push(m.epb_per_gops() / ghost.epb_per_gops());
+                }
+            }
+            ComparisonRow {
+                platform: p.name,
+                gops_ratio: geomean(gops.iter().copied()),
+                epb_ratio: geomean(epb.iter().copied()),
+                epb_gops_ratio: geomean(eg.iter().copied()),
+                n_workloads: gops.len(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_comparison(cfg: GhostConfig) {
+    println!("Figs. 10-12: GHOST vs platforms (geomean ratios, >1 = GHOST wins)");
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>6}",
+        "Platform", "GOPS ratio", "EPB ratio", "EPB/GOPS", "N"
+    );
+    for r in comparison_summary(cfg) {
+        println!(
+            "{:<10} {:>11.1}x {:>11.1}x {:>13.2e} {:>6}",
+            r.platform, r.gops_ratio, r.epb_ratio, r.epb_gops_ratio, r.n_workloads
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_pairs() {
+        assert_eq!(all_pairs().len(), 16);
+    }
+
+    #[test]
+    fn table1_has_seven_devices() {
+        assert_eq!(table1().len(), 7);
+    }
+
+    #[test]
+    fn table2_matches_spec() {
+        for r in table2() {
+            let spec = crate::graph::datasets::spec_by_name(r.name).unwrap();
+            assert_eq!(r.n_graphs, spec.n_graphs);
+            // Single-graph datasets match exactly; multi-graph within 30 %.
+            if spec.n_graphs == 1 {
+                assert_eq!(r.avg_nodes as usize, spec.avg_nodes);
+                assert_eq!(r.avg_edges as usize, spec.avg_edges);
+            } else {
+                assert!((r.avg_nodes - spec.avg_nodes as f64).abs() / (spec.avg_nodes as f64) < 0.3);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! GNN model descriptors and workload characterization.
+//!
+//! * [`models`] — the four evaluated model families (GCN, GraphSAGE, GIN,
+//!   GAT) with the exact layer configurations of §4.1.
+//! * [`workload`] — converts a `(model, dataset)` pair into the MAC / byte /
+//!   stage-op counts that drive both the GHOST simulator and the baseline
+//!   roofline models (one shared convention, so comparisons are fair).
+//! * [`quant`] — the 8-bit symmetric quantization GHOST maps onto its
+//!   photonic amplitude levels (mirrors `python/compile/` exactly; used by
+//!   the runtime verification path).
+
+pub mod models;
+pub mod quant;
+pub mod workload;
+
+pub use models::{ExecOrdering, LayerSpec, Model, ModelKind, Reduction};
+pub use workload::{LayerWork, Workload};

@@ -1,0 +1,326 @@
+//! The four GNN model families evaluated in the paper (§4.1):
+//!
+//! * **GCN** — 2 layers, mean(-normalized sum) aggregation;
+//! * **GraphSAGE** — 2 layers, mean aggregation over a fixed neighbor
+//!   sample;
+//! * **GIN** — graph classification; the conv's MLP totals 8 layers
+//!   (we realize it as 2 GIN convolutions with 4-layer MLPs each, plus a
+//!   sum readout and linear classifier);
+//! * **GAT** — 2 layers, 8 attention heads then 1, with the
+//!   transform-before-aggregate execution ordering of §3.4.2.
+
+
+use crate::graph::datasets::DatasetSpec;
+
+/// Which model family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Gcn,
+    GraphSage,
+    Gin,
+    Gat,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] =
+        [ModelKind::Gcn, ModelKind::GraphSage, ModelKind::Gin, ModelKind::Gat];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "GCN",
+            ModelKind::GraphSage => "GraphSAGE",
+            ModelKind::Gin => "GIN",
+            ModelKind::Gat => "GAT",
+        }
+    }
+
+    /// Datasets each model processes in the paper's evaluation: the
+    /// node-classification corpora for GCN/GraphSAGE/GAT, the
+    /// graph-classification corpora for GIN.
+    pub fn datasets(&self) -> [&'static str; 4] {
+        match self {
+            ModelKind::Gin => ["Proteins", "Mutag", "BZR", "IMDB-binary"],
+            _ => ["Cora", "PubMed", "Citeseer", "Amazon"],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "gcn" => Some(ModelKind::Gcn),
+            "graphsage" | "sage" | "gs" => Some(ModelKind::GraphSage),
+            "gin" => Some(ModelKind::Gin),
+            "gat" => Some(ModelKind::Gat),
+            _ => None,
+        }
+    }
+}
+
+/// Reduce operation of the aggregation stage (§3.3.1: the reduce unit
+/// supports sum, mean via the trailing scaling MR, and max via the optical
+/// comparator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Reduction {
+    Sum,
+    Mean,
+    Max,
+}
+
+/// Execution ordering a model requires (§3.4.2 / Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecOrdering {
+    /// Gather → reduce → transform → update (GCN, GraphSAGE, GIN).
+    AggregateFirst,
+    /// Gather → transform (+attention) → update → … → reduce at the end
+    /// (GAT).
+    TransformFirst,
+}
+
+/// Non-linearity applied by the update block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    /// SOA-implemented (gain ≈ 1) ReLU — optical.
+    Relu,
+    /// LeakyReLU for GAT attention — optical (SOA with adjusted gain).
+    LeakyRelu,
+    /// Digital LUT softmax [37] — electronic, 294 MHz.
+    Softmax,
+    /// No activation (final layer logits).
+    None,
+}
+
+/// One GNN layer as mapped onto the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerSpec {
+    /// Input feature dimensionality.
+    pub in_dim: usize,
+    /// Output feature dimensionality (per head).
+    pub out_dim: usize,
+    /// Attention heads (1 for non-GAT layers).
+    pub heads: usize,
+    /// Aggregation reduce op; `None` for pure-MLP layers (GIN's inner MLP).
+    pub reduction: Option<Reduction>,
+    /// Update-block activation.
+    pub activation: Activation,
+    /// Neighbor sample cap (GraphSAGE); `None` aggregates the full
+    /// neighborhood.
+    pub neighbor_sample: Option<usize>,
+}
+
+/// A model instantiated for a dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub kind: ModelKind,
+    pub layers: Vec<LayerSpec>,
+    pub ordering: ExecOrdering,
+    /// Graph-classification models add a readout (sum pool) + classifier.
+    pub has_readout: bool,
+}
+
+/// Hidden width for GCN/GraphSAGE, and per-head width for GAT layer 1.
+pub const HIDDEN_DIM: usize = 16;
+/// GIN hidden width.
+pub const GIN_HIDDEN: usize = 64;
+/// GAT layer-1 heads (paper: 8 then 1).
+pub const GAT_HEADS: usize = 8;
+/// GAT per-head hidden width.
+pub const GAT_HEAD_DIM: usize = 8;
+/// GraphSAGE neighbor sample size (standard [13] fan-out).
+pub const SAGE_SAMPLE: usize = 25;
+
+impl Model {
+    /// Instantiate the paper's configuration of `kind` for a dataset.
+    pub fn for_dataset(kind: ModelKind, ds: &DatasetSpec) -> Self {
+        let f = ds.n_features;
+        let c = ds.n_labels;
+        match kind {
+            ModelKind::Gcn => Model {
+                kind,
+                ordering: ExecOrdering::AggregateFirst,
+                has_readout: false,
+                layers: vec![
+                    LayerSpec {
+                        in_dim: f,
+                        out_dim: HIDDEN_DIM,
+                        heads: 1,
+                        reduction: Some(Reduction::Mean),
+                        activation: Activation::Relu,
+                        neighbor_sample: None,
+                    },
+                    LayerSpec {
+                        in_dim: HIDDEN_DIM,
+                        out_dim: c,
+                        heads: 1,
+                        reduction: Some(Reduction::Mean),
+                        activation: Activation::None,
+                        neighbor_sample: None,
+                    },
+                ],
+            },
+            ModelKind::GraphSage => Model {
+                kind,
+                ordering: ExecOrdering::AggregateFirst,
+                has_readout: false,
+                layers: vec![
+                    LayerSpec {
+                        in_dim: f,
+                        out_dim: HIDDEN_DIM,
+                        heads: 1,
+                        reduction: Some(Reduction::Mean),
+                        activation: Activation::Relu,
+                        neighbor_sample: Some(SAGE_SAMPLE),
+                    },
+                    LayerSpec {
+                        in_dim: HIDDEN_DIM,
+                        out_dim: c,
+                        heads: 1,
+                        reduction: Some(Reduction::Mean),
+                        activation: Activation::None,
+                        neighbor_sample: Some(SAGE_SAMPLE),
+                    },
+                ],
+            },
+            ModelKind::Gin => {
+                // Two GIN convolutions, each with a 4-layer MLP → the
+                // paper's 8 MLP layers; sum readout + linear classifier.
+                let mut layers = Vec::new();
+                for conv in 0..2 {
+                    let in0 = if conv == 0 { f } else { GIN_HIDDEN };
+                    // First MLP layer of the conv aggregates neighbors.
+                    layers.push(LayerSpec {
+                        in_dim: in0,
+                        out_dim: GIN_HIDDEN,
+                        heads: 1,
+                        reduction: Some(Reduction::Sum),
+                        activation: Activation::Relu,
+                        neighbor_sample: None,
+                    });
+                    for _ in 0..3 {
+                        layers.push(LayerSpec {
+                            in_dim: GIN_HIDDEN,
+                            out_dim: GIN_HIDDEN,
+                            heads: 1,
+                            reduction: None,
+                            activation: Activation::Relu,
+                            neighbor_sample: None,
+                        });
+                    }
+                }
+                // Classifier over the pooled graph embedding.
+                layers.push(LayerSpec {
+                    in_dim: GIN_HIDDEN,
+                    out_dim: c,
+                    heads: 1,
+                    reduction: None,
+                    activation: Activation::None,
+                    neighbor_sample: None,
+                });
+                Model {
+                    kind,
+                    ordering: ExecOrdering::AggregateFirst,
+                    has_readout: true,
+                    layers,
+                }
+            }
+            ModelKind::Gat => Model {
+                kind,
+                ordering: ExecOrdering::TransformFirst,
+                has_readout: false,
+                layers: vec![
+                    LayerSpec {
+                        in_dim: f,
+                        out_dim: GAT_HEAD_DIM,
+                        heads: GAT_HEADS,
+                        reduction: Some(Reduction::Sum),
+                        activation: Activation::Softmax, // attention softmax
+                        neighbor_sample: None,
+                    },
+                    LayerSpec {
+                        in_dim: GAT_HEADS * GAT_HEAD_DIM,
+                        out_dim: c,
+                        heads: 1,
+                        reduction: Some(Reduction::Sum),
+                        activation: Activation::Softmax,
+                        neighbor_sample: None,
+                    },
+                ],
+            },
+        }
+    }
+
+    /// Count of MLP (non-aggregating) + conv layers; sanity handle.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total weight parameter count (including attention vectors for GAT).
+    pub fn n_parameters(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                let w = l.in_dim * l.out_dim * l.heads;
+                let attn = if self.kind == ModelKind::Gat { 2 * l.out_dim * l.heads } else { 0 };
+                w + attn
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::spec_by_name;
+
+    #[test]
+    fn gcn_is_two_layers() {
+        let ds = spec_by_name("Cora").unwrap();
+        let m = Model::for_dataset(ModelKind::Gcn, &ds);
+        assert_eq!(m.n_layers(), 2);
+        assert_eq!(m.layers[0].in_dim, 1433);
+        assert_eq!(m.layers[1].out_dim, 7);
+        assert_eq!(m.ordering, ExecOrdering::AggregateFirst);
+    }
+
+    #[test]
+    fn gin_mlp_totals_eight_layers() {
+        let ds = spec_by_name("Mutag").unwrap();
+        let m = Model::for_dataset(ModelKind::Gin, &ds);
+        // 8 MLP layers + classifier.
+        assert_eq!(m.n_layers(), 9);
+        assert!(m.has_readout);
+        assert_eq!(m.layers.iter().filter(|l| l.reduction.is_some()).count(), 2);
+    }
+
+    #[test]
+    fn gat_heads_match_paper() {
+        let ds = spec_by_name("PubMed").unwrap();
+        let m = Model::for_dataset(ModelKind::Gat, &ds);
+        assert_eq!(m.layers[0].heads, 8);
+        assert_eq!(m.layers[1].heads, 1);
+        assert_eq!(m.layers[1].in_dim, 64);
+        assert_eq!(m.ordering, ExecOrdering::TransformFirst);
+    }
+
+    #[test]
+    fn sage_samples_neighbors() {
+        let ds = spec_by_name("Amazon").unwrap();
+        let m = Model::for_dataset(ModelKind::GraphSage, &ds);
+        assert_eq!(m.layers[0].neighbor_sample, Some(SAGE_SAMPLE));
+    }
+
+    #[test]
+    fn model_dataset_pairing() {
+        assert_eq!(ModelKind::Gin.datasets()[0], "Proteins");
+        assert_eq!(ModelKind::Gcn.datasets()[0], "Cora");
+    }
+
+    #[test]
+    fn parameter_counts_positive() {
+        for kind in ModelKind::ALL {
+            for ds in kind.datasets() {
+                let spec = spec_by_name(ds).unwrap();
+                let m = Model::for_dataset(kind, &spec);
+                assert!(m.n_parameters() > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! 8-bit symmetric quantization onto the photonic amplitude levels.
+//!
+//! GHOST represents positive and negative values on separate BPD arms, so
+//! each polarity gets `N_levels = 2^(b−1) = 128` amplitude steps (§3.2).
+//! This module mirrors `python/compile/quant.py` *bit-for-bit* — the Rust
+//! runtime uses it to verify that PJRT-executed artifacts and the native
+//! reference agree on the quantization grid.
+
+use crate::config::N_LEVELS;
+
+/// Symmetric per-tensor scale for values in `data`: `max|x| / (N_levels−1)`.
+/// A zero tensor gets scale 1.0 (any scale round-trips zeros).
+pub fn scale_for(data: &[f32]) -> f32 {
+    let max_abs = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        1.0
+    } else {
+        max_abs / (N_LEVELS - 1) as f32
+    }
+}
+
+/// Quantize one value to the signed level grid, clamped to ±(N_levels−1).
+pub fn quantize(x: f32, scale: f32) -> i16 {
+    let q = (x / scale).round();
+    let lim = (N_LEVELS - 1) as f32;
+    q.clamp(-lim, lim) as i16
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: i16, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Fake-quantize a whole tensor in place (quantize→dequantize), the
+/// operation the photonic imprint performs on every parameter/activation.
+pub fn fake_quantize(data: &mut [f32]) -> f32 {
+    let scale = scale_for(data);
+    for x in data.iter_mut() {
+        *x = dequantize(quantize(*x, scale), scale);
+    }
+    scale
+}
+
+/// Worst-case absolute quantization error for a tensor with the given
+/// scale: half a step.
+pub fn max_error(scale: f32) -> f32 {
+    scale / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded() {
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.137).sin() * 3.0).collect();
+        let scale = scale_for(&data);
+        for &x in &data {
+            let err = (dequantize(quantize(x, scale), scale) - x).abs();
+            assert!(err <= max_error(scale) + 1e-6, "x={x}, err={err}");
+        }
+    }
+
+    #[test]
+    fn extremes_map_to_full_scale() {
+        let data = vec![-2.0f32, 0.0, 2.0];
+        let scale = scale_for(&data);
+        assert_eq!(quantize(2.0, scale), 127);
+        assert_eq!(quantize(-2.0, scale), -127);
+        assert_eq!(quantize(0.0, scale), 0);
+    }
+
+    #[test]
+    fn clamping_works() {
+        assert_eq!(quantize(1e9, 1.0), 127);
+        assert_eq!(quantize(-1e9, 1.0), -127);
+    }
+
+    #[test]
+    fn zero_tensor_round_trips() {
+        let mut z = vec![0.0f32; 16];
+        fake_quantize(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fake_quantize_idempotent() {
+        let mut a: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 7.0).collect();
+        fake_quantize(&mut a);
+        let b = a.clone();
+        fake_quantize(&mut a);
+        assert_eq!(a, b, "quantizing a quantized tensor must be identity");
+    }
+}

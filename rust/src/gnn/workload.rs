@@ -1,0 +1,242 @@
+//! Workload characterization: one shared convention for counting work and
+//! traffic, consumed by the GHOST simulator *and* every baseline roofline
+//! model so that Figs. 10–12 compare like against like.
+//!
+//! Conventions:
+//! * a MAC counts as 2 ops (multiply + add); an aggregation add or compare
+//!   counts as 1 op; activations count 1 op per element;
+//! * bits = everything that must cross the memory interface once:
+//!   input features, all weights, the edge list, and each layer's output
+//!   feature map (written once, read once by the next consumer) — at the
+//!   8-bit precision GHOST executes at.
+
+
+use super::models::{Activation, ExecOrdering, Model, ModelKind};
+use crate::graph::datasets::Dataset;
+
+/// Work of one layer across the whole dataset.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerWork {
+    /// Aggregation ops (adds or max-compares), all graphs.
+    pub agg_ops: u64,
+    /// Linear-transform MACs.
+    pub comb_macs: u64,
+    /// Attention-mechanism MACs (GAT only).
+    pub attn_macs: u64,
+    /// Activation ops evaluated optically (ReLU / LeakyReLU).
+    pub optical_act_ops: u64,
+    /// Softmax elements handled by the digital LUT unit.
+    pub softmax_ops: u64,
+    /// Effective edges aggregated (post neighbor-sampling), all graphs.
+    pub eff_edges: u64,
+    /// Input feature dimensionality of the layer.
+    pub in_dim: usize,
+    /// Output feature dimensionality × heads.
+    pub out_width: usize,
+    /// Weight bytes for this layer (8-bit).
+    pub weight_bytes: u64,
+    /// Output feature-map bytes (8-bit), all graphs.
+    pub out_feature_bytes: u64,
+}
+
+impl LayerWork {
+    /// Total ops of this layer under the shared convention.
+    pub fn ops(&self) -> u64 {
+        2 * (self.comb_macs + self.attn_macs)
+            + self.agg_ops
+            + self.optical_act_ops
+            + self.softmax_ops
+    }
+}
+
+/// A fully characterized `(model, dataset)` workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model_kind: ModelKind,
+    pub dataset_name: String,
+    pub ordering: ExecOrdering,
+    pub per_layer: Vec<LayerWork>,
+    /// Vertices across all graphs.
+    pub n_vertices: u64,
+    /// Edges across all graphs (before sampling).
+    pub n_edges: u64,
+    /// Input feature bytes (8-bit).
+    pub input_feature_bytes: u64,
+    /// Edge-list bytes (2 × u32 per edge).
+    pub edge_bytes: u64,
+    /// Readout (graph pooling + classify) ops, if any.
+    pub readout_ops: u64,
+    /// Number of graphs (inference invocations).
+    pub n_graphs: u64,
+}
+
+impl Workload {
+    /// Characterize `model` over the realized `dataset`.
+    pub fn characterize(model: &Model, dataset: &Dataset) -> Self {
+        let n_v: u64 = dataset.total_vertices() as u64;
+        let n_e: u64 = dataset.total_edges() as u64;
+        let mut per_layer = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            // Effective edges after (optional) neighbor sampling.
+            let eff_edges: u64 = match layer.neighbor_sample {
+                Some(s) => dataset
+                    .graphs
+                    .iter()
+                    .map(|g| {
+                        (0..g.n_vertices).map(|v| g.degree(v).min(s) as u64).sum::<u64>()
+                    })
+                    .sum(),
+                None => n_e,
+            };
+            let heads = layer.heads as u64;
+            let in_dim = layer.in_dim as u64;
+            let out = layer.out_dim as u64;
+            // Aggregation dimensionality depends on the execution ordering:
+            // aggregate-first models reduce raw in_dim features; GAT reduces
+            // the transformed per-head features.
+            let (agg_ops, attn_macs) = match layer.reduction {
+                None => (0, 0),
+                Some(_) => match model.ordering {
+                    ExecOrdering::AggregateFirst => (eff_edges * in_dim, 0),
+                    ExecOrdering::TransformFirst => {
+                        // GAT: aggregate transformed features per head, and
+                        // compute attention logits aᵀ[Wh_i ‖ Wh_j] per edge
+                        // per head (2·out MACs each).
+                        (eff_edges * out * heads, eff_edges * 2 * out * heads)
+                    }
+                },
+            };
+            let comb_macs = n_v * in_dim * out * heads;
+            let (optical_act_ops, softmax_ops) = match layer.activation {
+                Activation::Relu | Activation::LeakyRelu => (n_v * out * heads, 0),
+                Activation::Softmax => {
+                    // GAT: LeakyReLU on logits (optical) + softmax over each
+                    // vertex's neighborhood (digital LUT, one op per edge
+                    // per head).
+                    (eff_edges * heads, eff_edges * heads)
+                }
+                Activation::None => (0, 0),
+            };
+            per_layer.push(LayerWork {
+                agg_ops,
+                comb_macs,
+                attn_macs,
+                optical_act_ops,
+                softmax_ops,
+                eff_edges,
+                in_dim: layer.in_dim,
+                out_width: layer.out_dim * layer.heads,
+                weight_bytes: in_dim * out * heads,
+                out_feature_bytes: n_v * out * heads,
+            });
+        }
+        let readout_ops = if model.has_readout {
+            // Sum-pool every vertex embedding + classifier handled in the
+            // final layer already; pooling adds one add per vertex per dim.
+            n_v * model.layers.last().map(|l| l.in_dim as u64).unwrap_or(0)
+        } else {
+            0
+        };
+        Self {
+            model_kind: model.kind,
+            dataset_name: dataset.spec.name.to_string(),
+            ordering: model.ordering,
+            per_layer,
+            n_vertices: n_v,
+            n_edges: n_e,
+            input_feature_bytes: n_v * dataset.spec.n_features as u64,
+            edge_bytes: n_e * 8,
+            readout_ops,
+            n_graphs: dataset.graphs.len() as u64,
+        }
+    }
+
+    /// Total ops.
+    pub fn total_ops(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.ops()).sum::<u64>() + self.readout_ops
+    }
+
+    /// Total MACs (combine + attention).
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.comb_macs + l.attn_macs).sum()
+    }
+
+    /// Total bytes crossing the memory interface once (8-bit datapath).
+    pub fn total_bytes(&self) -> u64 {
+        let weights: u64 = self.per_layer.iter().map(|l| l.weight_bytes).sum();
+        let out_feats: u64 = self.per_layer.iter().map(|l| l.out_feature_bytes).sum();
+        // Outputs are written once and read once by the next consumer.
+        self.input_feature_bytes + self.edge_bytes + weights + 2 * out_feats
+    }
+
+    /// Total bits moved — the denominator convention for EPB.
+    pub fn total_bits(&self) -> u64 {
+        self.total_bytes() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::models::Model;
+    use crate::graph::datasets::Dataset;
+
+    fn workload(kind: ModelKind, ds: &str) -> Workload {
+        let dataset = Dataset::by_name(ds).unwrap();
+        let model = Model::for_dataset(kind, &dataset.spec);
+        Workload::characterize(&model, &dataset)
+    }
+
+    #[test]
+    fn gcn_cora_magnitudes() {
+        let w = workload(ModelKind::Gcn, "Cora");
+        // Layer-1 combine: 2708 × 1433 × 16 MACs ≈ 62.1 M.
+        assert_eq!(w.per_layer[0].comb_macs, 2708 * 1433 * 16);
+        // Layer-1 aggregation: 10556 × 1433 adds.
+        assert_eq!(w.per_layer[0].agg_ops, 10_556 * 1433);
+        assert!(w.total_ops() > 100_000_000);
+        assert_eq!(w.per_layer[0].attn_macs, 0);
+    }
+
+    #[test]
+    fn sage_sampling_reduces_edges() {
+        let full = workload(ModelKind::Gcn, "Amazon");
+        let sampled = workload(ModelKind::GraphSage, "Amazon");
+        assert!(
+            sampled.per_layer[0].eff_edges < full.per_layer[0].eff_edges,
+            "sampling must reduce effective edges on a high-degree graph"
+        );
+    }
+
+    #[test]
+    fn gat_has_attention_and_softmax() {
+        let w = workload(ModelKind::Gat, "Citeseer");
+        assert!(w.per_layer[0].attn_macs > 0);
+        assert!(w.per_layer[0].softmax_ops > 0);
+        assert_eq!(w.ordering, ExecOrdering::TransformFirst);
+        // 8 heads on layer 1.
+        assert_eq!(w.per_layer[0].out_width, 64);
+    }
+
+    #[test]
+    fn gin_has_readout_and_nine_layers() {
+        let w = workload(ModelKind::Gin, "Proteins");
+        assert_eq!(w.per_layer.len(), 9);
+        assert!(w.readout_ops > 0);
+        assert_eq!(w.n_graphs, 1113);
+    }
+
+    #[test]
+    fn bytes_dominated_by_features_for_cora() {
+        let w = workload(ModelKind::Gcn, "Cora");
+        // 2708 × 1433 input features dwarf the 16-dim intermediates.
+        assert!(w.input_feature_bytes > w.total_bytes() / 2);
+    }
+
+    #[test]
+    fn ops_layer_sum_consistent() {
+        let w = workload(ModelKind::Gat, "Cora");
+        let manual: u64 = w.per_layer.iter().map(|l| l.ops()).sum();
+        assert_eq!(w.total_ops(), manual + w.readout_ops);
+    }
+}

@@ -1,0 +1,122 @@
+//! Compressed-sparse-row directed graph.
+//!
+//! Edges are stored destination-major (`row = destination vertex`,
+//! `cols = source neighbors`) because GHOST's aggregate stage iterates over
+//! *output* vertices gathering their in-neighbors.
+
+
+/// A directed graph in CSR (destination-major) form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// Row pointers, length `n_vertices + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Column (source-neighbor) indices, length `n_edges`.
+    pub col_idx: Vec<u32>,
+    /// Number of vertices.
+    pub n_vertices: usize,
+}
+
+impl CsrGraph {
+    /// Builds from an edge list of `(src, dst)` pairs. Duplicate edges are
+    /// kept (matching how multigraph edge features would be processed);
+    /// neighbor lists are sorted by source index.
+    pub fn from_edges(n_vertices: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![0u32; n_vertices];
+        for &(_, dst) in edges {
+            degree[dst as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; n_vertices + 1];
+        for v in 0..n_vertices {
+            row_ptr[v + 1] = row_ptr[v] + degree[v];
+        }
+        let mut col_idx = vec![0u32; edges.len()];
+        let mut cursor = row_ptr[..n_vertices].to_vec();
+        for &(src, dst) in edges {
+            let c = &mut cursor[dst as usize];
+            col_idx[*c as usize] = src;
+            *c += 1;
+        }
+        for v in 0..n_vertices {
+            col_idx[row_ptr[v] as usize..row_ptr[v + 1] as usize].sort_unstable();
+        }
+        Self { row_ptr, col_idx, n_vertices }
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// In-neighbors of vertex `v`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[v] as usize..self.row_ptr[v + 1] as usize]
+    }
+
+    /// In-degree of vertex `v`.
+    pub fn degree(&self, v: usize) -> usize {
+        (self.row_ptr[v + 1] - self.row_ptr[v]) as usize
+    }
+
+    /// Maximum in-degree over all vertices.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_vertices).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Mean in-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_vertices == 0 {
+            return 0.0;
+        }
+        self.n_edges() as f64 / self.n_vertices as f64
+    }
+
+    /// Density of the adjacency matrix (fraction of non-zeros).
+    pub fn density(&self) -> f64 {
+        if self.n_vertices == 0 {
+            return 0.0;
+        }
+        self.n_edges() as f64 / (self.n_vertices as f64 * self.n_vertices as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrGraph {
+        // 0→2, 1→2, 2→0, 0→1
+        CsrGraph::from_edges(3, &[(0, 2), (1, 2), (2, 0), (0, 1)])
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = tiny();
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+        assert_eq!(g.neighbors(0), &[2]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn degree_sums_to_edges() {
+        let g = tiny();
+        let total: usize = (0..g.n_vertices).map(|v| g.degree(v)).sum();
+        assert_eq!(total, g.n_edges());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]);
+        assert_eq!(g.n_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_edges_kept() {
+        let g = CsrGraph::from_edges(2, &[(0, 1), (0, 1)]);
+        assert_eq!(g.neighbors(1), &[0, 0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Synthetic evaluation datasets matched to Table 2 of the paper.
+//!
+//! We cannot ship Cora/PubMed/Citeseer/Amazon/Proteins/Mutag/BZR/IMDB-binary
+//! downloads, so each dataset is generated synthetically with the exact
+//! Table-2 statistics — node count, edge count, feature dimensionality,
+//! label count, graph count — and a skewed (Zipf-like) in-degree
+//! distribution matching the irregularity the paper's optimizations target.
+//! Every simulator result depends on the graphs only through these
+//! statistics. Generation is fully deterministic (PCG64, fixed per-dataset
+//! seeds); `python/compile/datasets.py` regenerates the *functional-path*
+//! datasets (features + labels + topology) with its own seeded generator
+//! and exports them to `artifacts/` for the PJRT datapath.
+
+use crate::util::rng::Pcg64;
+
+use super::csr::CsrGraph;
+
+/// Which GNN task a dataset serves (Table 2 / §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Node classification (Cora, PubMed, Citeseer, Amazon).
+    NodeClassification,
+    /// Graph classification (Proteins, Mutag, BZR, IMDB-binary).
+    GraphClassification,
+}
+
+/// Static description of a dataset — the Table-2 row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// (Average) node count per graph.
+    pub avg_nodes: usize,
+    /// (Average) edge count per graph.
+    pub avg_edges: usize,
+    /// Feature dimensionality.
+    pub n_features: usize,
+    /// Label count.
+    pub n_labels: usize,
+    /// Number of graphs in the dataset.
+    pub n_graphs: usize,
+    pub task: Task,
+    /// Cap on the maximum in-degree used by the synthetic generator (keeps
+    /// the padded-neighbor functional representation bounded; Table 2 only
+    /// constrains the *average* degree).
+    pub max_degree_cap: usize,
+    /// Seed for deterministic generation.
+    pub seed: u64,
+}
+
+/// The eight Table-2 datasets.
+pub const ALL_DATASETS: [DatasetSpec; 8] = [
+    DatasetSpec { name: "Cora", avg_nodes: 2708, avg_edges: 10_556, n_features: 1433, n_labels: 7, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 128, seed: 0xC08A },
+    DatasetSpec { name: "PubMed", avg_nodes: 19_717, avg_edges: 88_651, n_features: 500, n_labels: 3, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 128, seed: 0x9B3D },
+    DatasetSpec { name: "Citeseer", avg_nodes: 3327, avg_edges: 9104, n_features: 3703, n_labels: 6, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 96, seed: 0xC17E },
+    DatasetSpec { name: "Amazon", avg_nodes: 7650, avg_edges: 238_162, n_features: 745, n_labels: 8, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 256, seed: 0xA32 },
+    DatasetSpec { name: "Proteins", avg_nodes: 39, avg_edges: 73, n_features: 3, n_labels: 2, n_graphs: 1113, task: Task::GraphClassification, max_degree_cap: 16, seed: 0x980 },
+    DatasetSpec { name: "Mutag", avg_nodes: 18, avg_edges: 40, n_features: 143, n_labels: 2, n_graphs: 188, task: Task::GraphClassification, max_degree_cap: 8, seed: 0x3074 },
+    DatasetSpec { name: "BZR", avg_nodes: 34, avg_edges: 38, n_features: 189, n_labels: 2, n_graphs: 405, task: Task::GraphClassification, max_degree_cap: 8, seed: 0xB2 },
+    DatasetSpec { name: "IMDB-binary", avg_nodes: 20, avg_edges: 193, n_features: 136, n_labels: 2, n_graphs: 1000, task: Task::GraphClassification, max_degree_cap: 19, seed: 0x1DB },
+];
+
+/// Look a dataset up by (case-insensitive) name.
+pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
+    let lower = name.to_ascii_lowercase();
+    ALL_DATASETS.iter().copied().find(|d| d.name.to_ascii_lowercase() == lower)
+}
+
+/// A realized dataset: one or more generated graph topologies.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub graphs: Vec<CsrGraph>,
+}
+
+impl Dataset {
+    /// Generates the dataset deterministically from its spec.
+    pub fn generate(spec: DatasetSpec) -> Self {
+        let mut rng = Pcg64::seed_from_u64(spec.seed);
+        let graphs = (0..spec.n_graphs)
+            .map(|_| {
+                // Multi-graph datasets vary ±30 % around the averages so
+                // the collection has the irregularity of the real corpora.
+                let (n, e) = if spec.n_graphs > 1 {
+                    let jitter = |avg: usize, rng: &mut Pcg64| {
+                        let lo = (avg as f64 * 0.7) as usize;
+                        let hi = (avg as f64 * 1.3) as usize + 1;
+                        rng.gen_range(lo.max(2), hi.max(3).max(lo.max(2) + 1))
+                    };
+                    (jitter(spec.avg_nodes, &mut rng), jitter(spec.avg_edges, &mut rng))
+                } else {
+                    (spec.avg_nodes, spec.avg_edges)
+                };
+                generate_skewed_graph(n, e, spec.max_degree_cap, &mut rng)
+            })
+            .collect();
+        Self { spec, graphs }
+    }
+
+    /// Generate a dataset by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        spec_by_name(name).map(Self::generate)
+    }
+
+    /// Total edges across all graphs.
+    pub fn total_edges(&self) -> usize {
+        self.graphs.iter().map(|g| g.n_edges()).sum()
+    }
+
+    /// Total vertices across all graphs.
+    pub fn total_vertices(&self) -> usize {
+        self.graphs.iter().map(|g| g.n_vertices).sum()
+    }
+}
+
+/// Generates a directed graph with `n_edges` edges over `n_vertices`
+/// vertices whose in-degree distribution is Zipf-skewed (exponent ≈ 0.8,
+/// citation-network-like) with a hard cap, plus a guaranteed self-loop-free
+/// edge set. Deterministic given the RNG state.
+pub fn generate_skewed_graph(
+    n_vertices: usize,
+    n_edges: usize,
+    max_degree_cap: usize,
+    rng: &mut Pcg64,
+) -> CsrGraph {
+    assert!(n_vertices >= 2, "need at least 2 vertices");
+    // The cap bounds total in-degree capacity; clamp infeasible requests
+    // (duplicate-source edges are allowed, self-loops are not).
+    let n_edges = n_edges.min(n_vertices * max_degree_cap);
+    // Zipf-ish popularity weights over destinations, randomly permuted so
+    // partitions see mixed hot/cold blocks (as in real node orderings).
+    let mut perm: Vec<usize> = (0..n_vertices).collect();
+    rng.shuffle(&mut perm);
+    let weights: Vec<f64> =
+        (0..n_vertices).map(|i| 1.0 / ((perm[i] + 1) as f64).powf(0.8)).collect();
+    // Cumulative table for weighted sampling.
+    let mut cum = Vec::with_capacity(n_vertices);
+    let mut acc = 0.0;
+    for &w in &weights {
+        acc += w;
+        cum.push(acc);
+    }
+    let total = acc;
+
+    let mut degree = vec![0usize; n_vertices];
+    let mut edges = Vec::with_capacity(n_edges);
+    let mut attempts = 0usize;
+    let max_attempts = n_edges * 20;
+    while edges.len() < n_edges && attempts < max_attempts {
+        attempts += 1;
+        let x = rng.gen_range_f64(0.0, total);
+        let dst = cum.partition_point(|&c| c < x).min(n_vertices - 1);
+        if degree[dst] >= max_degree_cap {
+            continue;
+        }
+        let src = rng.gen_range(0, n_vertices) as u32;
+        if src as usize == dst {
+            continue;
+        }
+        degree[dst] += 1;
+        edges.push((src, dst as u32));
+    }
+    // If the cap made the target unreachable, round-robin fill the slack.
+    let mut v = 0usize;
+    while edges.len() < n_edges {
+        if degree[v] < max_degree_cap {
+            let src = rng.gen_range(0, n_vertices) as u32;
+            if src as usize != v {
+                degree[v] += 1;
+                edges.push((src, v as u32));
+            }
+        }
+        v = (v + 1) % n_vertices;
+    }
+    CsrGraph::from_edges(n_vertices, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_eight_datasets_present() {
+        assert_eq!(ALL_DATASETS.len(), 8);
+        let names: Vec<_> = ALL_DATASETS.iter().map(|d| d.name).collect();
+        for n in ["Cora", "PubMed", "Citeseer", "Amazon", "Proteins", "Mutag", "BZR", "IMDB-binary"] {
+            assert!(names.contains(&n), "missing {n}");
+        }
+    }
+
+    #[test]
+    fn table2_stats_exact_for_cora() {
+        let d = Dataset::by_name("Cora").unwrap();
+        assert_eq!(d.graphs.len(), 1);
+        assert_eq!(d.graphs[0].n_vertices, 2708);
+        assert_eq!(d.graphs[0].n_edges(), 10_556);
+        assert_eq!(d.spec.n_features, 1433);
+        assert_eq!(d.spec.n_labels, 7);
+    }
+
+    #[test]
+    fn multi_graph_dataset_counts() {
+        let d = Dataset::by_name("Mutag").unwrap();
+        assert_eq!(d.graphs.len(), 188);
+        // Averages within 30 % of Table 2 values.
+        let avg_nodes = d.total_vertices() as f64 / 188.0;
+        let avg_edges = d.total_edges() as f64 / 188.0;
+        assert!((avg_nodes - 18.0).abs() / 18.0 < 0.3, "avg_nodes = {avg_nodes}");
+        assert!((avg_edges - 40.0).abs() / 40.0 < 0.3, "avg_edges = {avg_edges}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Dataset::by_name("Citeseer").unwrap();
+        let b = Dataset::by_name("Citeseer").unwrap();
+        assert_eq!(a.graphs[0], b.graphs[0]);
+    }
+
+    #[test]
+    fn degree_cap_respected() {
+        let d = Dataset::by_name("Amazon").unwrap();
+        assert!(d.graphs[0].max_degree() <= d.spec.max_degree_cap);
+    }
+
+    #[test]
+    fn skew_produces_irregularity() {
+        let d = Dataset::by_name("PubMed").unwrap();
+        let g = &d.graphs[0];
+        // Max degree should be far above the mean for a skewed graph.
+        assert!(g.max_degree() as f64 > 4.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn case_insensitive_lookup() {
+        assert!(Dataset::by_name("cora").is_some());
+        assert!(Dataset::by_name("imdb-BINARY").is_some());
+        assert!(Dataset::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph data structures and workloads.
+//!
+//! * [`csr`] — compressed-sparse-row graphs (the in-memory form the ECU
+//!   streams from HBM).
+//! * [`datasets`] — seeded synthetic generators matched to the Table-2
+//!   statistics of the eight evaluation datasets (documented substitution
+//!   for the real downloads; every simulator result depends on the graphs
+//!   only through the size/sparsity/degree statistics matched here).
+//! * [`partition`] — the V×N "buffer & partition" matrix (§3.4.1) with
+//!   all-zero-block skipping and offline prefetch ordering.
+
+pub mod csr;
+pub mod datasets;
+pub mod partition;
+
+pub use csr::CsrGraph;
+pub use datasets::{Dataset, DatasetSpec};
+pub use partition::PartitionMatrix;

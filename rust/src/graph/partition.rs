@@ -1,0 +1,235 @@
+//! The "buffer & partition" matrix — §3.4.1.
+//!
+//! Output (destination) vertices are split into groups of `V` and input
+//! (source) vertices into groups of `N`; edges fall into `V×N` blocks.
+//! Blocks with no edges are *skipped entirely*, which is how GHOST turns
+//! extreme adjacency sparsity into dense, prefetchable work units. The
+//! partition matrix, the per-group prefetch order, and the per-group
+//! worst-case neighbor counts are all computed once offline (graph
+//! preprocessing), exactly as in the paper.
+
+
+use super::csr::CsrGraph;
+
+/// One non-empty `V×N` block of the partition matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRef {
+    /// Index of the input-vertex group (column block).
+    pub input_group: u32,
+    /// Number of edges inside this block.
+    pub n_edges: u32,
+}
+
+/// Execution plan for one output-vertex group (one assignment of the `V`
+/// execution lanes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputGroupPlan {
+    /// Index of the output group.
+    pub out_group: u32,
+    /// Non-empty input blocks, in ascending input-group (prefetch) order.
+    pub blocks: Vec<BlockRef>,
+    /// Largest in-degree among the vertices of this group — the aggregate
+    /// stage of the group finishes with its slowest lane (§3.3.1).
+    pub max_lane_degree: u32,
+    /// Total edges aggregated by this group.
+    pub total_edges: u32,
+    /// Distinct source vertices feeding this group — the number of feature
+    /// vectors the buffer-and-partition prefetch actually streams (sources
+    /// with several destinations in the group are fetched once).
+    pub distinct_sources: u32,
+}
+
+/// The full offline partition of one graph for a `(V, N)` configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionMatrix {
+    /// Output-group size (`V` execution lanes).
+    pub v: usize,
+    /// Input-group size (`N` edge-control units).
+    pub n: usize,
+    /// Vertex count of the partitioned graph.
+    pub n_vertices: usize,
+    /// Per-output-group plans, ascending group index.
+    pub groups: Vec<OutputGroupPlan>,
+}
+
+impl PartitionMatrix {
+    /// Builds the partition matrix from a destination-major CSR graph.
+    /// Runs in `O(E + groups)`: distinct-source counting uses an epoch-
+    /// stamped scratch array (no per-group sort), and block discovery
+    /// reuses a per-input-group counter array across output groups.
+    pub fn build(graph: &CsrGraph, v: usize, n: usize) -> Self {
+        assert!(v > 0 && n > 0);
+        let n_out_groups = graph.n_vertices.div_ceil(v).max(1);
+        let n_in_groups = graph.n_vertices.div_ceil(n).max(1);
+        let mut groups = Vec::with_capacity(n_out_groups);
+        // Scratch: edge counts per input group, reused across output groups.
+        let mut block_edges = vec![0u32; n_in_groups];
+        // Scratch: epoch stamps for distinct-source counting; a source is
+        // new in this group iff its stamp differs from the group epoch.
+        let mut seen_epoch = vec![u32::MAX; graph.n_vertices];
+        for og in 0..n_out_groups {
+            let lo = og * v;
+            let hi = ((og + 1) * v).min(graph.n_vertices);
+            let mut max_lane_degree = 0u32;
+            let mut total_edges = 0u32;
+            let mut distinct_sources = 0u32;
+            let mut touched: Vec<u32> = Vec::new();
+            let epoch = og as u32;
+            for dst in lo..hi {
+                let deg = graph.degree(dst) as u32;
+                max_lane_degree = max_lane_degree.max(deg);
+                total_edges += deg;
+                for &src in graph.neighbors(dst) {
+                    if seen_epoch[src as usize] != epoch {
+                        seen_epoch[src as usize] = epoch;
+                        distinct_sources += 1;
+                    }
+                    let ig = src as usize / n;
+                    if block_edges[ig] == 0 {
+                        touched.push(ig as u32);
+                    }
+                    block_edges[ig] += 1;
+                }
+            }
+            touched.sort_unstable();
+            let blocks: Vec<BlockRef> = touched
+                .iter()
+                .map(|&ig| {
+                    let e = block_edges[ig as usize];
+                    block_edges[ig as usize] = 0; // reset scratch
+                    BlockRef { input_group: ig, n_edges: e }
+                })
+                .collect();
+            groups.push(OutputGroupPlan {
+                out_group: og as u32,
+                blocks,
+                max_lane_degree,
+                total_edges,
+                distinct_sources,
+            });
+        }
+        Self { v, n, n_vertices: graph.n_vertices, groups }
+    }
+
+    /// Number of output groups (lane assignments).
+    pub fn n_output_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of input groups.
+    pub fn n_input_groups(&self) -> usize {
+        self.n_vertices.div_ceil(self.n).max(1)
+    }
+
+    /// Total block slots in the dense `V×N` grid.
+    pub fn total_block_slots(&self) -> usize {
+        self.n_output_groups() * self.n_input_groups()
+    }
+
+    /// Non-empty blocks actually fetched.
+    pub fn nonzero_blocks(&self) -> usize {
+        self.groups.iter().map(|g| g.blocks.len()).sum()
+    }
+
+    /// Fraction of block slots skipped by the all-zero-block optimization.
+    pub fn skip_ratio(&self) -> f64 {
+        if self.total_block_slots() == 0 {
+            return 0.0;
+        }
+        1.0 - self.nonzero_blocks() as f64 / self.total_block_slots() as f64
+    }
+
+    /// Total edges covered by the plan (must equal the graph's edge count).
+    pub fn total_edges(&self) -> u64 {
+        self.groups.iter().map(|g| g.total_edges as u64).sum()
+    }
+
+    /// Total distinct-source fetches across all groups — the feature
+    /// vectors the BP prefetcher streams from memory (≤ total edges).
+    pub fn total_distinct_source_fetches(&self) -> u64 {
+        self.groups.iter().map(|g| g.distinct_sources as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::Dataset;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let edges: Vec<(u32, u32)> = (1..n).map(|i| (i as u32 - 1, i as u32)).collect();
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn covers_all_edges() {
+        let g = path_graph(103);
+        let pm = PartitionMatrix::build(&g, 20, 20);
+        assert_eq!(pm.total_edges(), g.n_edges() as u64);
+        assert_eq!(pm.n_output_groups(), 6); // ceil(103/20)
+    }
+
+    #[test]
+    fn path_graph_blocks_hug_diagonal() {
+        let g = path_graph(100);
+        let pm = PartitionMatrix::build(&g, 10, 10);
+        // A path graph's edges live on the diagonal ± one block.
+        for grp in &pm.groups {
+            for b in &grp.blocks {
+                let diff = (b.input_group as i64 - grp.out_group as i64).abs();
+                assert!(diff <= 1, "off-diagonal block {b:?} in group {}", grp.out_group);
+            }
+        }
+        // Massive skip on a path graph.
+        assert!(pm.skip_ratio() > 0.7, "skip = {}", pm.skip_ratio());
+    }
+
+    #[test]
+    fn blocks_in_prefetch_order() {
+        let d = Dataset::by_name("Cora").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        for grp in &pm.groups {
+            for w in grp.blocks.windows(2) {
+                assert!(w[0].input_group < w[1].input_group);
+            }
+        }
+    }
+
+    #[test]
+    fn real_dataset_skips_blocks() {
+        let d = Dataset::by_name("Cora").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        assert_eq!(pm.total_edges(), 10_556);
+        // Cora is very sparse: most 20×20 blocks are empty.
+        assert!(pm.skip_ratio() > 0.5, "skip = {}", pm.skip_ratio());
+    }
+
+    #[test]
+    fn max_lane_degree_matches_graph() {
+        let d = Dataset::by_name("Citeseer").unwrap();
+        let g = &d.graphs[0];
+        let pm = PartitionMatrix::build(g, 20, 20);
+        let global_max: u32 = pm.groups.iter().map(|gr| gr.max_lane_degree).max().unwrap();
+        assert_eq!(global_max as usize, g.max_degree());
+    }
+
+    #[test]
+    fn distinct_sources_bounded_by_edges() {
+        let d = Dataset::by_name("Amazon").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        for grp in &pm.groups {
+            assert!(grp.distinct_sources <= grp.total_edges.max(1));
+        }
+        assert!(pm.total_distinct_source_fetches() <= pm.total_edges());
+        // A hub-heavy graph must show real fetch dedup.
+        assert!(pm.total_distinct_source_fetches() < pm.total_edges());
+    }
+
+    #[test]
+    fn single_group_when_v_exceeds_n_vertices() {
+        let g = path_graph(5);
+        let pm = PartitionMatrix::build(&g, 100, 100);
+        assert_eq!(pm.n_output_groups(), 1);
+        assert_eq!(pm.nonzero_blocks(), 1);
+    }
+}

@@ -1,0 +1,49 @@
+//! # GHOST — a silicon-photonic GNN inference accelerator
+//!
+//! Reproduction of *GHOST: A Graph Neural Network Accelerator using Silicon
+//! Photonics* (Afifi et al., 2023). The crate contains:
+//!
+//! * [`photonics`] — device and circuit models: microring resonators (MRs),
+//!   VCSELs, photodetectors, SOAs, hybrid EO/TO tuning with TED
+//!   thermal-crosstalk cancellation, heterodyne/homodyne crosstalk noise,
+//!   SNR feasibility (paper eqs. 2–13), and the device-level design-space
+//!   exploration behind Figs. 7(a)/7(b).
+//! * [`memory`] — HBM2 main-memory and ECU SRAM-buffer models.
+//! * [`graph`] — CSR graphs, the V×N partition matrix ("buffer & partition"),
+//!   and the seeded synthetic dataset generators matched to Table 2.
+//! * [`gnn`] — GNN model descriptors (GCN / GraphSAGE / GIN / GAT) and the
+//!   workload characterization (MACs / bytes / stage ops) that drives both
+//!   the GHOST simulator and the baseline roofline models.
+//! * [`arch`] — the three photonic pipeline blocks (aggregate / combine /
+//!   update) and the electronic control unit (ECU).
+//! * [`sim`] — the pipeline-stage latency/energy simulator.
+//! * [`coordinator`] — the L3 contribution: partition scheduling, two-level
+//!   pipelining (GCN-family and GAT orderings), weight-DAC sharing, and
+//!   workload balancing; plus the architectural DSE of Fig. 7(c).
+//! * [`baselines`] — analytic roofline models of the nine comparison
+//!   platforms (GRIP, HyGCN, EnGN, HW_ACC, ReGNN, ReGraphX, TPU, CPU, GPU).
+//! * [`energy`] — EPB / GOPS / EPB-per-GOPS accounting shared by all models.
+//! * [`runtime`] — the PJRT functional datapath: loads `artifacts/*.hlo.txt`
+//!   lowered from the JAX/Pallas model (build-time Python) and executes real
+//!   GNN inference from Rust.
+//! * [`figures`] — regenerates every table and figure in the paper's
+//!   evaluation section.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod gnn;
+pub mod graph;
+pub mod memory;
+pub mod photonics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::GhostConfig;

@@ -1,0 +1,278 @@
+//! `ghost` — CLI for the GHOST silicon-photonic GNN accelerator
+//! reproduction: run the simulator, regenerate the paper's tables and
+//! figures, explore the design space, and drive real PJRT inference over
+//! the AOT-compiled artifacts.
+//!
+//! Argument parsing is hand-rolled (the build is offline; see
+//! `rust/src/util/`): `ghost <subcommand> [--flag[ value]]...`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{dse as arch_dse, simulate, OptFlags};
+use ghost::figures;
+use ghost::gnn::models::ModelKind;
+use ghost::photonics::devices::DeviceParams;
+use ghost::photonics::dse as device_dse;
+use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
+use ghost::util::json::Json;
+
+const USAGE: &str = "\
+ghost — GHOST silicon-photonic GNN accelerator (paper reproduction)
+
+USAGE:
+  ghost run --model <gcn|graphsage|gin|gat> --dataset <name>
+            [--no-bp] [--no-pp] [--no-dac-sharing] [--wb]
+  ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
+  ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
+                [--comparison] [--all]
+  ghost infer --artifact <name> [--dir artifacts] [--reps N]
+  ghost help
+";
+
+/// Tiny flag parser: `--key value` for options, `--key` for booleans.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], boolean_flags: &[&str]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument '{a}'"))?
+                .to_string();
+            if boolean_flags.contains(&key.as_str()) {
+                flags.insert(key, "true".into());
+                i += 1;
+            } else {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} expects a value"))?
+                    .clone();
+                flags.insert(key, val);
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "dse" => cmd_dse(rest),
+        "figures" => cmd_figures(rest),
+        "infer" => cmd_infer(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["no-bp", "no-pp", "no-dac-sharing", "wb"])?;
+    let model = args.require("model")?;
+    let dataset = args.require("dataset")?;
+    let kind = ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let wb = args.has("wb");
+    let flags = OptFlags {
+        buffer_partition: !args.has("no-bp"),
+        pipelining: !args.has("no-pp"),
+        dac_sharing: !args.has("no-dac-sharing") && !wb,
+        workload_balancing: wb,
+    };
+    let r =
+        simulate(kind, dataset, GhostConfig::paper_optimal(), flags).map_err(|e| anyhow!(e))?;
+    println!("GHOST simulation: {} / {}", r.model.name(), r.dataset);
+    println!("  flags        : {}", r.flags.label());
+    println!("  latency      : {:.3} us", r.metrics.latency_s * 1e6);
+    println!("  energy       : {:.3} mJ", r.metrics.energy_j * 1e3);
+    println!("  power        : {:.2} W (platform {:.2} W)", r.metrics.power_w(), r.platform_w);
+    println!("  throughput   : {:.1} GOPS", r.metrics.gops());
+    println!("  EPB          : {:.3e} J/bit", r.metrics.epb());
+    println!("  EPB/GOPS     : {:.3e}", r.metrics.epb_per_gops());
+    let (a, c, u) = r.breakdown();
+    println!(
+        "  breakdown    : aggregate {:.1}% | combine {:.1}% | update {:.1}%",
+        a * 100.0,
+        c * 100.0,
+        u * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_dse(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["coherent", "noncoherent", "arch", "quick"])?;
+    let all = !args.has("coherent") && !args.has("noncoherent") && !args.has("arch");
+    if args.has("coherent") || all {
+        let p = DeviceParams::paper();
+        println!("Fig. 7(a): coherent MR bank feasibility (SNR cutoff per eq. 12)");
+        for lambda in [1520.0, 1530.0, 1540.0, 1550.0, 1560.0, 1570.0] {
+            let max = device_dse::max_feasible_coherent(&p, lambda, 40);
+            println!("  lambda {lambda:.0} nm: up to {max} MRs per coherent chain");
+        }
+    }
+    if args.has("noncoherent") || all {
+        println!("Fig. 7(b): non-coherent WDM bank feasibility (1 nm spacing from 1550 nm)");
+        let max = device_dse::max_feasible_noncoherent(30);
+        println!("  up to {max} wavelengths ({} MRs)", 2 * max);
+        for pt in device_dse::noncoherent_sweep(24) {
+            println!(
+                "  {:>2} MRs: SNR {:.2} dB (cutoff {:.2} dB) {}",
+                pt.n_mrs,
+                pt.snr_db,
+                pt.cutoff_db,
+                if pt.feasible { "ok" } else { "infeasible" }
+            );
+        }
+    }
+    if args.has("arch") || all {
+        println!("Fig. 7(c): architectural DSE over [N,V,Rr,Rc,Tr] (EPB/GOPS, lower = better)");
+        let grid = arch_dse::default_grid();
+        let workloads = arch_dse::workload_set(args.has("quick"));
+        let points = arch_dse::explore(&grid, &workloads);
+        for (i, p) in points.iter().take(10).enumerate() {
+            println!(
+                "  #{:<2} [{}, {}, {}, {}, {}]  EPB/GOPS {:.3e}  GOPS {:.0}  EPB {:.3e}",
+                i + 1,
+                p.cfg.n,
+                p.cfg.v,
+                p.cfg.r_r,
+                p.cfg.r_c,
+                p.cfg.t_r,
+                p.epb_per_gops,
+                p.gops,
+                p.epb
+            );
+        }
+        if let Some(rank) = points.iter().position(|p| p.cfg == GhostConfig::paper_optimal()) {
+            println!("  paper point [20,20,18,7,17] ranks #{} of {}", rank + 1, points.len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "all"],
+    )?;
+    let all = args.has("all")
+        || !(args.has("table1")
+            || args.has("table2")
+            || args.has("table3")
+            || args.has("fig8")
+            || args.has("fig9")
+            || args.has("comparison"));
+    let cfg = GhostConfig::paper_optimal();
+    if args.has("table1") || all {
+        figures::print_table1();
+        println!();
+    }
+    if args.has("table2") || all {
+        figures::print_table2();
+        println!();
+    }
+    if args.has("table3") || all {
+        print_table3()?;
+        println!();
+    }
+    if args.has("fig8") || all {
+        figures::print_fig8(cfg);
+        println!();
+    }
+    if args.has("fig9") || all {
+        figures::print_fig9(cfg);
+        println!();
+    }
+    if args.has("comparison") || all {
+        figures::print_comparison(cfg);
+    }
+    Ok(())
+}
+
+fn cmd_infer(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let artifact = args.require("artifact")?;
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let reps: usize = args.get("reps").unwrap_or("3").parse()?;
+    let engine = Engine::load(dir, artifact)?;
+    println!("loaded {artifact} on {}", engine.platform());
+    let mut last = None;
+    let mut times = Vec::new();
+    for _ in 0..reps.max(1) {
+        let t0 = std::time::Instant::now();
+        let out = engine.run()?;
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    let outputs = last.unwrap();
+    let logits = outputs[0].as_f32()?;
+    let shape = outputs[0].shape().to_vec();
+    println!("output logits shape {shape:?}");
+    if let (Ok(labels), 2) = (engine.extra("labels"), shape.len()) {
+        let pred = argmax_rows(logits, shape[0], shape[1]);
+        let mask = engine.extra("test_mask").ok();
+        let acc = masked_accuracy(
+            &pred,
+            labels.as_i32()?,
+            mask.as_ref().and_then(|m| m.as_i32().ok()),
+        );
+        println!("accuracy: {:.2}%", acc * 100.0);
+    }
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("PJRT execute latency: best {:.3} ms over {} reps", best * 1e3, times.len());
+    Ok(())
+}
+
+/// Table 3: model accuracies at fp32 vs int8, measured by
+/// `python/compile/train.py` during `make artifacts`.
+fn print_table3() -> Result<()> {
+    let path = "artifacts/accuracy.json";
+    match std::fs::read_to_string(path) {
+        Ok(s) => {
+            let rows = Json::parse(&s).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            println!("Table 3: GNN model accuracy (fp32 vs int8), measured");
+            println!("{:<10} {:<12} {:>10} {:>10}", "Model", "Dataset", "fp32", "int8");
+            if let Some(arr) = rows.as_array() {
+                for r in arr {
+                    println!(
+                        "{:<10} {:<12} {:>9.1}% {:>9.1}%",
+                        r.get("model").and_then(Json::as_str).unwrap_or("?"),
+                        r.get("dataset").and_then(Json::as_str).unwrap_or("?"),
+                        r.get("acc_fp32").and_then(Json::as_f64).unwrap_or(0.0) * 100.0,
+                        r.get("acc_int8").and_then(Json::as_f64).unwrap_or(0.0) * 100.0,
+                    );
+                }
+            }
+        }
+        Err(_) => println!("Table 3: run `make artifacts` first ({path} not found)"),
+    }
+    Ok(())
+}

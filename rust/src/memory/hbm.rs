@@ -1,0 +1,108 @@
+//! HBM2 off-chip memory model (§4.1: 8 GB HBM2, 256 GB/s peak).
+//!
+//! The paper runs DRAMsim3; the GHOST simulator consumes sustained
+//! bandwidth, first-access latency, and per-bit access energy, so we use a
+//! bandwidth/latency queueing model with HBM2 datasheet constants. The
+//! paper's largest workload demands 174.4 GB/s, under the 256 GB/s peak.
+
+
+/// HBM2 main memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hbm2 {
+    /// Capacity, bytes (8 GB).
+    pub capacity_bytes: u64,
+    /// Peak bandwidth, bytes/second (256 GB/s).
+    pub peak_bw_bytes_per_s: f64,
+    /// Fraction of peak achievable for the streaming, partition-ordered
+    /// access pattern produced by the buffer-and-partition preprocessing.
+    pub streaming_efficiency: f64,
+    /// Fraction of peak achievable for irregular (non-partitioned,
+    /// on-demand) access — the baseline configuration of Fig. 8.
+    pub random_efficiency: f64,
+    /// First-word latency of a burst, seconds.
+    pub access_latency_s: f64,
+    /// Energy per bit moved, joules (≈ 3.9 pJ/bit for HBM2).
+    pub energy_per_bit_j: f64,
+    /// Fixed energy per independent (row-activating) burst, joules — paid
+    /// once per random access, amortized away by partition-ordered
+    /// streaming.
+    pub burst_overhead_j: f64,
+}
+
+impl Hbm2 {
+    pub fn paper() -> Self {
+        Self {
+            capacity_bytes: 8 * (1 << 30),
+            peak_bw_bytes_per_s: 256e9,
+            streaming_efficiency: 0.70, // covers the paper peak demand of 174.4 GB/s
+            random_efficiency: 0.12,
+            access_latency_s: 100e-9,
+            energy_per_bit_j: 3.9e-12,
+            burst_overhead_j: 1.5e-9,
+        }
+    }
+
+    /// Time to move `bytes` with the partition-ordered streaming pattern.
+    pub fn stream_time_s(&self, bytes: u64) -> f64 {
+        self.access_latency_s
+            + bytes as f64 / (self.peak_bw_bytes_per_s * self.streaming_efficiency)
+    }
+
+    /// Time to move `bytes` with irregular on-demand accesses of
+    /// `burst_bytes` each (each burst pays the access latency).
+    pub fn random_time_s(&self, bytes: u64, burst_bytes: u64) -> f64 {
+        let bursts = bytes.div_ceil(burst_bytes.max(1));
+        bursts as f64 * self.access_latency_s
+            + bytes as f64 / (self.peak_bw_bytes_per_s * self.random_efficiency)
+    }
+
+    /// Energy to move `bytes`.
+    pub fn transfer_energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.energy_per_bit_j
+    }
+
+    /// Sustained streaming bandwidth, bytes/s.
+    pub fn sustained_bw(&self) -> f64 {
+        self.peak_bw_bytes_per_s * self.streaming_efficiency
+    }
+}
+
+impl Default for Hbm2 {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_bw_supports_paper_peak_demand() {
+        let m = Hbm2::paper();
+        // The paper's max workload needs 174.4 GB/s; sustained must cover it.
+        assert!(m.sustained_bw() >= 174.4e9, "sustained = {}", m.sustained_bw());
+        assert!(m.sustained_bw() <= m.peak_bw_bytes_per_s);
+    }
+
+    #[test]
+    fn streaming_beats_random() {
+        let m = Hbm2::paper();
+        let bytes = 1 << 20; // 1 MiB
+        assert!(m.stream_time_s(bytes) < m.random_time_s(bytes, 64));
+    }
+
+    #[test]
+    fn transfer_energy_linear() {
+        let m = Hbm2::paper();
+        let e1 = m.transfer_energy_j(1000);
+        let e2 = m.transfer_energy_j(2000);
+        assert!((e2 - 2.0 * e1).abs() < 1e-18);
+    }
+
+    #[test]
+    fn stream_time_monotone() {
+        let m = Hbm2::paper();
+        assert!(m.stream_time_s(2 << 20) > m.stream_time_s(1 << 20));
+    }
+}

@@ -1,0 +1,14 @@
+//! Memory-system models: HBM2 off-chip DRAM and the ECU's on-chip SRAM
+//! buffers.
+//!
+//! The paper simulates buffers with CACTI (scaled 20 nm → 7 nm using the
+//! Stillmaker–Baas relations [40]) and the 8 GB HBM2 main memory with
+//! DRAMsim3. The simulator consumes only per-access latencies/energies and
+//! sustained bandwidth, so we embed analytic models with CACTI-class /
+//! HBM2-spec constants (documented substitution in `DESIGN.md`).
+
+pub mod hbm;
+pub mod sram;
+
+pub use hbm::Hbm2;
+pub use sram::SramBuffer;

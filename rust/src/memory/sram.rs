@@ -1,0 +1,119 @@
+//! On-chip SRAM buffer model (the ECU's four buffers, §4.1).
+//!
+//! Per-access latency and energy follow CACTI-class values for small
+//! single-bank SRAMs, scaled to 7 nm with the Stillmaker–Baas factors [40]
+//! (latency ×0.28, energy ×0.133 from 20 nm — folded into the constants).
+
+
+/// Width of one buffer access in bytes (64 B line).
+pub const ACCESS_WIDTH_BYTES: usize = 64;
+
+/// A single on-chip SRAM buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramBuffer {
+    /// Human-readable role of the buffer.
+    pub name: &'static str,
+    /// Capacity in bytes.
+    pub size_bytes: usize,
+    /// Per-access latency, seconds.
+    pub access_latency_s: f64,
+    /// Per-access energy for one 64 B line, joules.
+    pub access_energy_j: f64,
+    /// Leakage power, watts.
+    pub leakage_w: f64,
+}
+
+impl SramBuffer {
+    /// CACTI-7 nm-class constants for a buffer of `size_kb` kilobytes:
+    /// latency and energy grow weakly (≈ √size) with capacity.
+    pub fn cacti_7nm(name: &'static str, size_kb: usize) -> Self {
+        let scale = (size_kb as f64 / 128.0).sqrt();
+        Self {
+            name,
+            size_bytes: size_kb * 1024,
+            access_latency_s: 0.25e-9 * scale.max(0.5),
+            access_energy_j: 9.6e-12 * scale.max(0.5), // per 64 B line
+            leakage_w: 0.4e-3 * (size_kb as f64 / 128.0),
+        }
+    }
+
+    /// Latency to stream `bytes` through the buffer (line-granular,
+    /// fully pipelined at one access per cycle → one line per access
+    /// latency).
+    pub fn stream_latency_s(&self, bytes: usize) -> f64 {
+        let lines = bytes.div_ceil(ACCESS_WIDTH_BYTES);
+        lines as f64 * self.access_latency_s
+    }
+
+    /// Energy to stream `bytes` through the buffer.
+    pub fn stream_energy_j(&self, bytes: usize) -> f64 {
+        let lines = bytes.div_ceil(ACCESS_WIDTH_BYTES);
+        lines as f64 * self.access_energy_j
+    }
+}
+
+/// The ECU buffer set from §4.1: input vertices (128 KB), output vertices
+/// (128 KB), edges (256 KB), weights (128 KB).
+#[derive(Debug, Clone, Copy)]
+pub struct EcuBuffers {
+    pub input_vertices: SramBuffer,
+    pub output_vertices: SramBuffer,
+    pub edges: SramBuffer,
+    pub weights: SramBuffer,
+}
+
+impl EcuBuffers {
+    pub fn paper() -> Self {
+        Self {
+            input_vertices: SramBuffer::cacti_7nm("input_vertices", 128),
+            output_vertices: SramBuffer::cacti_7nm("output_vertices", 128),
+            edges: SramBuffer::cacti_7nm("edges", 256),
+            weights: SramBuffer::cacti_7nm("weights", 128),
+        }
+    }
+
+    /// Total leakage of the buffer set, watts.
+    pub fn total_leakage_w(&self) -> f64 {
+        self.input_vertices.leakage_w
+            + self.output_vertices.leakage_w
+            + self.edges.leakage_w
+            + self.weights.leakage_w
+    }
+}
+
+impl Default for EcuBuffers {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_buffer_sizes() {
+        let b = EcuBuffers::paper();
+        assert_eq!(b.input_vertices.size_bytes, 128 * 1024);
+        assert_eq!(b.output_vertices.size_bytes, 128 * 1024);
+        assert_eq!(b.edges.size_bytes, 256 * 1024);
+        assert_eq!(b.weights.size_bytes, 128 * 1024);
+    }
+
+    #[test]
+    fn bigger_buffer_slower_and_hungrier() {
+        let small = SramBuffer::cacti_7nm("s", 128);
+        let big = SramBuffer::cacti_7nm("b", 256);
+        assert!(big.access_latency_s > small.access_latency_s);
+        assert!(big.access_energy_j > small.access_energy_j);
+        assert!(big.leakage_w > small.leakage_w);
+    }
+
+    #[test]
+    fn stream_costs_are_line_granular() {
+        let b = SramBuffer::cacti_7nm("s", 128);
+        assert_eq!(b.stream_latency_s(1), b.stream_latency_s(64));
+        assert!((b.stream_latency_s(128) - 2.0 * b.stream_latency_s(64)).abs() < 1e-18);
+        assert!(b.stream_energy_j(65) > b.stream_energy_j(64));
+    }
+}

@@ -1,0 +1,154 @@
+//! Crosstalk noise models — paper eqs. 2, 3 and 6.
+//!
+//! Two noise mechanisms limit MR bank sizes:
+//!
+//! * **Heterodyne (inter-channel) crosstalk** in the non-coherent WDM
+//!   multiply circuits: power from neighboring wavelengths leaks through a
+//!   ring's filter skirt (eqs. 2–3), plus a small incoherent scatter
+//!   contribution from every ring a signal passes through.
+//!
+//! * **Homodyne (coherent) crosstalk** in the coherent-summation circuits:
+//!   same-wavelength leakage with a phase mismatch interferes at the output
+//!   (eq. 6: `P_hom = Σᵢ P_in · X_MR^i(ρ) · L_P^{n−i}`).
+//!
+//! The paper extracts the coupling factors `Φ(λᵢ, λⱼ, Q)` and
+//! `X_MR(ρ)·L_P^{n−i}` from Ansys Lumerical multiphysics simulations that we
+//! cannot run; we substitute closed-form models *calibrated to the paper's
+//! own published design-space cutoffs* (Fig. 7): ≤ 20 MRs per coherent chain
+//! at 1520 nm and ≤ 18 wavelengths (36 MRs) per non-coherent waveguide at
+//! 1 nm spacing, both at the ≈ 21.2 dB SNR cutoff of eq. 12. The calibrated
+//! constants ([`X_MR_REF`], [`SCATTER_PER_PASS`], the filter order) are all
+//! within physically reported ranges for SOI add-drop rings [33].
+
+use super::devices::db_to_linear;
+use super::mr::MicroringDesign;
+
+/// Per-MR same-wavelength leakage fraction `X_MR` at the reference
+/// wavelength (1520 nm). −34.4 dB: calibrated so the coherent-summation
+/// feasibility cutoff of Fig. 7(a) lands at exactly 20 MRs at 1520 nm.
+pub const X_MR_REF: f64 = 3.6e-4;
+
+/// Reference wavelength for [`X_MR_REF`], meters.
+pub const X_MR_REF_LAMBDA_M: f64 = 1520e-9;
+
+/// Wavelength scaling exponent for the homodyne leakage: the leaked
+/// fraction grows with the resonance line width (∝ λ at fixed Q) and the
+/// mode overlap; the quartic captures the steep Lumerical-observed trend
+/// that makes 1520 nm the quietest operating point in the paper's sweep.
+pub const X_MR_LAMBDA_EXP: i32 = 4;
+
+/// Incoherent scatter coupled into a channel per off-resonance MR passage
+/// in the WDM multiply circuit (−36.8 dB). Calibrated so the non-coherent
+/// waveguide of Fig. 7(b) saturates at 18 wavelengths; within the
+/// backscatter range measured for SOI rings.
+pub const SCATTER_PER_PASS: f64 = 2.1e-4;
+
+/// Effective filter order of the add-drop skirt suppressing neighboring
+/// channels: the fabricated design's roll-off is steeper than a first-order
+/// Lorentzian; the cubed line shape matches the paper's 1 nm channel
+/// spacing feasibility.
+pub const FILTER_ORDER: i32 = 3;
+
+/// Spectra-overlap coupling factor `Φ(λᵢ, λⱼ, Q)` between two channels
+/// (paper eqs. 2–3): the Lorentzian response of the ring tuned to `λᵢ`
+/// evaluated at the neighbor `λⱼ`.
+pub fn phi(mr: &MicroringDesign, lambda_i_m: f64, lambda_j_m: f64) -> f64 {
+    mr.lorentzian(lambda_j_m - lambda_i_m)
+}
+
+/// Heterodyne noise power seen by channel `victim` in a WDM multiply bank
+/// of `wavelengths` (paper eq. 3), normalized to unit per-channel input
+/// power. Two terms:
+///
+/// * filtered adjacent-channel leakage `Σ_{j≠v} Φ(λᵥ, λⱼ)^FILTER_ORDER`,
+/// * accumulated scatter from the `2·(n−1)` off-resonance rings the victim
+///   traverses across the two MR banks of the multiply circuit.
+pub fn heterodyne_noise(mr: &MicroringDesign, wavelengths_m: &[f64], victim: usize) -> f64 {
+    let leak: f64 = wavelengths_m
+        .iter()
+        .enumerate()
+        .filter(|&(j, _)| j != victim)
+        .map(|(_, &lj)| phi(mr, wavelengths_m[victim], lj).powi(FILTER_ORDER))
+        .sum();
+    let passes = 2 * (wavelengths_m.len().saturating_sub(1));
+    leak + passes as f64 * SCATTER_PER_PASS
+}
+
+/// Worst-case heterodyne noise over all channels in the bank (the victim
+/// with the most/closest neighbors — the middle channel).
+pub fn worst_case_heterodyne(mr: &MicroringDesign, wavelengths_m: &[f64]) -> f64 {
+    (0..wavelengths_m.len())
+        .map(|v| heterodyne_noise(mr, wavelengths_m, v))
+        .fold(0.0, f64::max)
+}
+
+/// Same-wavelength leakage fraction of one MR at wavelength `lambda_m`
+/// (see [`X_MR_REF`] / [`X_MR_LAMBDA_EXP`]).
+pub fn x_mr(lambda_m: f64) -> f64 {
+    X_MR_REF * (lambda_m / X_MR_REF_LAMBDA_M).powi(X_MR_LAMBDA_EXP)
+}
+
+/// Homodyne crosstalk noise power in a coherent-summation chain of
+/// `n_mrs` rings (paper eq. 6), normalized to unit input power:
+///
+/// `P_hom = Σ_{i=1}^{n} X_MR(λ) · L_P^{n−i}`
+///
+/// where `L_P` is the linear per-MR passing transmission the leaked signal
+/// experiences on its way to the output.
+pub fn homodyne_noise(n_mrs: usize, lambda_m: f64, mr_through_loss_db: f64) -> f64 {
+    let lp = 1.0 / db_to_linear(mr_through_loss_db); // transmission < 1
+    let x = x_mr(lambda_m);
+    (1..=n_mrs).map(|i| x * lp.powi((n_mrs - i) as i32)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_mr() -> MicroringDesign {
+        MicroringDesign::paper()
+    }
+
+    #[test]
+    fn phi_symmetric_and_decaying() {
+        let mr = paper_mr();
+        let l0 = 1550e-9;
+        let p1 = phi(&mr, l0, l0 + 1e-9);
+        let p2 = phi(&mr, l0, l0 + 2e-9);
+        assert!(p1 > p2, "coupling must decay with spacing");
+        assert!((phi(&mr, l0, l0 + 1e-9) - phi(&mr, l0 + 1e-9, l0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heterodyne_grows_with_bank_size() {
+        let mr = paper_mr();
+        let mk = |n: usize| -> Vec<f64> { (0..n).map(|i| 1550e-9 + i as f64 * 1e-9).collect() };
+        let n4 = worst_case_heterodyne(&mr, &mk(4));
+        let n18 = worst_case_heterodyne(&mr, &mk(18));
+        assert!(n18 > n4);
+    }
+
+    #[test]
+    fn middle_channel_is_worst_victim() {
+        let mr = paper_mr();
+        let w: Vec<f64> = (0..9).map(|i| 1550e-9 + i as f64 * 1e-9).collect();
+        let mid = heterodyne_noise(&mr, &w, 4);
+        let edge = heterodyne_noise(&mr, &w, 0);
+        assert!(mid > edge);
+    }
+
+    #[test]
+    fn homodyne_monotone_in_n_and_lambda() {
+        let loss = 0.02;
+        assert!(homodyne_noise(20, 1520e-9, loss) > homodyne_noise(10, 1520e-9, loss));
+        assert!(homodyne_noise(20, 1560e-9, loss) > homodyne_noise(20, 1520e-9, loss));
+    }
+
+    #[test]
+    fn homodyne_scale_matches_calibration() {
+        // 20 MRs at 1520 nm ≈ 20 × X_MR_REF (through loss ≈ 1).
+        let p = homodyne_noise(20, 1520e-9, 0.02);
+        let approx = 20.0 * X_MR_REF;
+        assert!((p - approx).abs() / approx < 0.05, "p = {p}, approx = {approx}");
+    }
+}

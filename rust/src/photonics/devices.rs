@@ -1,0 +1,147 @@
+//! Optoelectronic device parameters — Table 1 of the paper, plus the
+//! photonic-loss budget from §4.1.
+//!
+//! All latencies are seconds, powers are watts, losses are dB. Sources are
+//! the paper's citations: EO tuning [29], TO tuning [28], VCSEL/PD/SOA [10],
+//! DAC [46], ADC [47], losses [42][44][45][29].
+
+
+/// Latency + power pair for a single device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    /// Per-operation latency in seconds.
+    pub latency_s: f64,
+    /// Active power draw in watts.
+    pub power_w: f64,
+}
+
+impl Device {
+    /// Energy of one operation, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.latency_s * self.power_w
+    }
+}
+
+/// The full Table-1 parameter set plus the loss budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceParams {
+    /// Electro-optic tuning: 20 ns, 4 µW/nm (power here is per-nm of shift;
+    /// see [`crate::photonics::tuning`] for the nm-dependent energy).
+    pub eo_tuning: Device,
+    /// Thermo-optic tuning: 4 µs, 27.5 mW/FSR.
+    pub to_tuning: Device,
+    /// Vertical-cavity surface-emitting laser: 0.07 ns, 1.3 mW.
+    pub vcsel: Device,
+    /// Photodetector: 5.8 ps, 2.8 mW.
+    pub photodetector: Device,
+    /// Semiconductor optical amplifier (non-linearity): 0.3 ns, 2.2 mW.
+    pub soa: Device,
+    /// 8-bit DAC: 0.29 ns, 3 mW.
+    pub dac: Device,
+    /// 8-bit ADC: 0.82 ns, 3.1 mW.
+    pub adc: Device,
+
+    /// Waveguide propagation loss, dB/cm.
+    pub waveguide_loss_db_per_cm: f64,
+    /// Splitter loss, dB (0.13 dB [42]).
+    pub splitter_loss_db: f64,
+    /// Combiner loss, dB (0.9 dB [42]).
+    pub combiner_loss_db: f64,
+    /// MR through (passing) loss, dB (0.02 dB [44]).
+    pub mr_through_loss_db: f64,
+    /// MR modulation loss, dB (0.72 dB [45]).
+    pub mr_modulation_loss_db: f64,
+    /// EO tuning loss, dB/cm (6 dB/cm [29]).
+    pub eo_tuning_loss_db_per_cm: f64,
+    /// Photodetector sensitivity, dBm. The paper does not list it in
+    /// Table 1; −20 dBm is the value used by the same group's CrossLight /
+    /// RecLight accelerators and is assumed here (documented substitution).
+    pub pd_sensitivity_dbm: f64,
+    /// Laser wall-plug efficiency used to convert required optical power to
+    /// electrical draw (VCSEL arrays, ≈ 25 %).
+    pub laser_wall_plug_efficiency: f64,
+    /// Digital LUT softmax unit max frequency, Hz (294 MHz design of [37]).
+    pub softmax_freq_hz: f64,
+}
+
+impl DeviceParams {
+    /// The exact Table-1 values.
+    pub const fn paper() -> Self {
+        Self {
+            eo_tuning: Device { latency_s: 20e-9, power_w: 4e-6 },
+            to_tuning: Device { latency_s: 4e-6, power_w: 27.5e-3 },
+            vcsel: Device { latency_s: 0.07e-9, power_w: 1.3e-3 },
+            photodetector: Device { latency_s: 5.8e-12, power_w: 2.8e-3 },
+            soa: Device { latency_s: 0.3e-9, power_w: 2.2e-3 },
+            dac: Device { latency_s: 0.29e-9, power_w: 3.0e-3 },
+            adc: Device { latency_s: 0.82e-9, power_w: 3.1e-3 },
+            waveguide_loss_db_per_cm: 1.0,
+            splitter_loss_db: 0.13,
+            combiner_loss_db: 0.9,
+            mr_through_loss_db: 0.02,
+            mr_modulation_loss_db: 0.72,
+            eo_tuning_loss_db_per_cm: 6.0,
+            pd_sensitivity_dbm: -20.0,
+            laser_wall_plug_efficiency: 0.25,
+            softmax_freq_hz: 294e6,
+        }
+    }
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// dB → linear power ratio.
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Linear power ratio → dB.
+pub fn linear_to_db(ratio: f64) -> f64 {
+    10.0 * ratio.log10()
+}
+
+/// dBm → watts.
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    1e-3 * db_to_linear(dbm)
+}
+
+/// Watts → dBm.
+pub fn watts_to_dbm(w: f64) -> f64 {
+    linear_to_db(w / 1e-3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let p = DeviceParams::paper();
+        assert_eq!(p.eo_tuning.latency_s, 20e-9);
+        assert_eq!(p.to_tuning.power_w, 27.5e-3);
+        assert_eq!(p.vcsel.latency_s, 0.07e-9);
+        assert_eq!(p.photodetector.latency_s, 5.8e-12);
+        assert_eq!(p.soa.power_w, 2.2e-3);
+        assert_eq!(p.dac.latency_s, 0.29e-9);
+        assert_eq!(p.adc.power_w, 3.1e-3);
+    }
+
+    #[test]
+    fn db_round_trip() {
+        for &db in &[-30.0, -3.0, 0.0, 10.0, 21.3] {
+            assert!((linear_to_db(db_to_linear(db)) - db).abs() < 1e-9);
+        }
+        assert!((dbm_to_watts(0.0) - 1e-3).abs() < 1e-12);
+        assert!((watts_to_dbm(1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_energy() {
+        let d = Device { latency_s: 1e-9, power_w: 2e-3 };
+        assert!((d.energy_j() - 2e-12).abs() < 1e-20);
+    }
+}

@@ -1,0 +1,182 @@
+//! Device-level design-space exploration — Figs. 7(a) and 7(b).
+//!
+//! Sweeps the coherent-summation chain length (vs. operating wavelength)
+//! and the non-coherent WDM bank size against the SNR cutoff of paper
+//! eq. 12, reproducing the paper's feasibility frontiers:
+//!
+//! * coherent: up to **20 MRs** per summation chain at **1520 nm**,
+//! * non-coherent: up to **36 MRs = 18 wavelengths** (1550–1568 nm, 1 nm
+//!   channel spacing).
+
+
+use super::crosstalk::{homodyne_noise, worst_case_heterodyne};
+use super::devices::{linear_to_db, DeviceParams};
+use super::mr::MicroringDesign;
+use super::snr::required_snr_db;
+use crate::config::N_LEVELS;
+
+/// Feasibility frontier established by [`coherent_sweep`]; pinned here so
+/// the architectural layer can validate against it cheaply.
+pub const MAX_COHERENT_MRS: usize = 20;
+
+/// Feasibility frontier established by [`noncoherent_sweep`].
+pub const MAX_NONCOHERENT_WAVELENGTHS: usize = 18;
+
+/// First wavelength of the non-coherent WDM comb, meters (paper §4.2).
+pub const NONCOHERENT_BASE_LAMBDA_M: f64 = 1550e-9;
+
+/// Channel spacing of the WDM comb, meters.
+pub const CHANNEL_SPACING_M: f64 = 1e-9;
+
+/// One sample of a device-level sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct DsePoint {
+    /// Operating (or base) wavelength, nm.
+    pub lambda_nm: f64,
+    /// Number of MRs in the circuit.
+    pub n_mrs: usize,
+    /// Achieved worst-case SNR, dB.
+    pub snr_db: f64,
+    /// Required SNR at this design point, dB (eq. 12 cutoff).
+    pub cutoff_db: f64,
+    /// Whether the point satisfies eq. 12.
+    pub feasible: bool,
+}
+
+fn mr_at(lambda_m: f64) -> MicroringDesign {
+    MicroringDesign { resonant_wavelength_m: lambda_m, ..MicroringDesign::paper() }
+}
+
+/// Achieved SNR of a coherent-summation chain of `n_mrs` rings at
+/// wavelength `lambda_m`: the signal accumulates per-MR through losses
+/// while eq.-6 homodyne leakage builds the noise floor.
+pub fn coherent_snr_db(p: &DeviceParams, lambda_m: f64, n_mrs: usize) -> f64 {
+    let signal = 1.0 / super::devices::db_to_linear(p.mr_through_loss_db * n_mrs as f64);
+    let noise = homodyne_noise(n_mrs, lambda_m, p.mr_through_loss_db);
+    linear_to_db(signal / noise)
+}
+
+/// Achieved worst-case SNR of a non-coherent WDM multiply circuit with
+/// `n_wavelengths` channels starting at `base_lambda_m` with 1 nm spacing.
+/// Signal and heterodyne leakage co-propagate through the same waveguide,
+/// so path losses cancel in the ratio.
+pub fn noncoherent_snr_db(base_lambda_m: f64, n_wavelengths: usize) -> f64 {
+    let mid = base_lambda_m + CHANNEL_SPACING_M * (n_wavelengths as f64 - 1.0) / 2.0;
+    let mr = mr_at(mid);
+    let wavelengths: Vec<f64> =
+        (0..n_wavelengths).map(|i| base_lambda_m + i as f64 * CHANNEL_SPACING_M).collect();
+    let noise = worst_case_heterodyne(&mr, &wavelengths);
+    linear_to_db(1.0 / noise)
+}
+
+/// Fig. 7(a): sweep coherent chain length × operating wavelength.
+/// `lambdas_nm` defaults in callers to 1520..=1570 step 10.
+pub fn coherent_sweep(p: &DeviceParams, lambdas_nm: &[f64], max_mrs: usize) -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    for &lnm in lambdas_nm {
+        let lm = lnm * 1e-9;
+        let cutoff = required_snr_db(&mr_at(lm), N_LEVELS);
+        for n in 2..=max_mrs {
+            let snr = coherent_snr_db(p, lm, n);
+            out.push(DsePoint {
+                lambda_nm: lnm,
+                n_mrs: n,
+                snr_db: snr,
+                cutoff_db: cutoff,
+                feasible: snr >= cutoff,
+            });
+        }
+    }
+    out
+}
+
+/// Fig. 7(b): sweep the WDM bank size (x-axis in MRs = 2 × wavelengths,
+/// as the multiply circuit needs an activation bank and a weight bank).
+pub fn noncoherent_sweep(max_wavelengths: usize) -> Vec<DsePoint> {
+    (2..=max_wavelengths)
+        .map(|nw| {
+            let mid =
+                NONCOHERENT_BASE_LAMBDA_M + CHANNEL_SPACING_M * (nw as f64 - 1.0) / 2.0;
+            let cutoff = required_snr_db(&mr_at(mid), N_LEVELS);
+            let snr = noncoherent_snr_db(NONCOHERENT_BASE_LAMBDA_M, nw);
+            DsePoint {
+                lambda_nm: NONCOHERENT_BASE_LAMBDA_M * 1e9,
+                n_mrs: 2 * nw,
+                snr_db: snr,
+                cutoff_db: cutoff,
+                feasible: snr >= cutoff,
+            }
+        })
+        .collect()
+}
+
+/// Largest feasible coherent chain at a given wavelength.
+pub fn max_feasible_coherent(p: &DeviceParams, lambda_nm: f64, search_to: usize) -> usize {
+    coherent_sweep(p, &[lambda_nm], search_to)
+        .into_iter()
+        .filter(|pt| pt.feasible)
+        .map(|pt| pt.n_mrs)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Largest feasible wavelength count for the non-coherent circuit.
+pub fn max_feasible_noncoherent(search_to: usize) -> usize {
+    noncoherent_sweep(search_to)
+        .into_iter()
+        .filter(|pt| pt.feasible)
+        .map(|pt| pt.n_mrs / 2)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_cutoff_is_20_mrs_at_1520() {
+        let p = DeviceParams::paper();
+        assert_eq!(max_feasible_coherent(&p, 1520.0, 40), MAX_COHERENT_MRS);
+    }
+
+    #[test]
+    fn fig7a_higher_wavelengths_are_worse() {
+        let p = DeviceParams::paper();
+        let at_1520 = max_feasible_coherent(&p, 1520.0, 40);
+        let at_1550 = max_feasible_coherent(&p, 1550.0, 40);
+        let at_1570 = max_feasible_coherent(&p, 1570.0, 40);
+        assert!(at_1550 < at_1520, "1550: {at_1550} vs 1520: {at_1520}");
+        assert!(at_1570 <= at_1550);
+    }
+
+    #[test]
+    fn fig7b_cutoff_is_18_wavelengths() {
+        assert_eq!(max_feasible_noncoherent(30), MAX_NONCOHERENT_WAVELENGTHS);
+    }
+
+    #[test]
+    fn fig7b_comb_spans_1550_to_1568() {
+        // 18 wavelengths at 1 nm spacing from 1550 nm end at 1567 nm +
+        // base = the paper's quoted 1550–1568 nm window (inclusive bounds).
+        let last =
+            NONCOHERENT_BASE_LAMBDA_M + 17.0 * CHANNEL_SPACING_M;
+        assert!((last * 1e9 - 1567.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snr_decreases_with_bank_size() {
+        let p = DeviceParams::paper();
+        assert!(coherent_snr_db(&p, 1520e-9, 5) > coherent_snr_db(&p, 1520e-9, 20));
+        assert!(noncoherent_snr_db(NONCOHERENT_BASE_LAMBDA_M, 4) > noncoherent_snr_db(NONCOHERENT_BASE_LAMBDA_M, 18));
+    }
+
+    #[test]
+    fn sweep_shapes() {
+        let p = DeviceParams::paper();
+        let pts = coherent_sweep(&p, &[1520.0, 1550.0], 25);
+        assert_eq!(pts.len(), 2 * 24);
+        let pts = noncoherent_sweep(25);
+        assert_eq!(pts.len(), 24);
+    }
+}

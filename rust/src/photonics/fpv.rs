@@ -1,0 +1,222 @@
+//! Fabrication-process-variation (FPV) analysis — the paper's §5 names FPV
+//! as the key open silicon-photonic challenge and points at optical channel
+//! remapping and intra-channel wavelength tuning [7] as mitigations. This
+//! module implements that extension: die-level resonance-shift variation,
+//! its SNR/tuning-power consequences, and both mitigation strategies.
+//!
+//! Model: each fabricated MR's resonance deviates from nominal by a
+//! Gaussian shift (σ_fpv, typically 0.3–0.8 nm for SOI [27][49]). Untuned,
+//! the deviation eats into the 2×FWHM tunable range and forces the hybrid
+//! tuning circuit to burn TO power for shifts beyond the EO range.
+
+use crate::photonics::devices::DeviceParams;
+use crate::photonics::mr::MicroringDesign;
+use crate::photonics::tuning::{plan_tuning, EO_RANGE_NM};
+use crate::util::rng::Pcg64;
+
+/// Die-level FPV model.
+#[derive(Debug, Clone, Copy)]
+pub struct FpvModel {
+    /// Std-dev of the per-MR resonance shift, nm.
+    pub sigma_nm: f64,
+    /// Systematic (wafer-level) offset, nm.
+    pub mean_nm: f64,
+}
+
+impl FpvModel {
+    /// Typical SOI corner from the paper's own characterization work [27].
+    pub fn typical() -> Self {
+        Self { sigma_nm: 0.5, mean_nm: 0.2 }
+    }
+
+    /// Samples the resonance deviations of a bank of `n` MRs.
+    pub fn sample_shifts(&self, n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        (0..n).map(|_| self.mean_nm + self.sigma_nm * rng.next_gaussian()).collect()
+    }
+}
+
+/// Per-bank FPV compensation report.
+#[derive(Debug, Clone, Copy)]
+pub struct FpvReport {
+    /// MRs whose deviation the fast EO tuner absorbs.
+    pub eo_corrected: usize,
+    /// MRs needing the slow TO heater.
+    pub to_corrected: usize,
+    /// Total static correction power, watts.
+    pub correction_power_w: f64,
+    /// Worst-case residual deviation after correction, nm (0 when every
+    /// ring can be pulled on-grid).
+    pub residual_nm: f64,
+}
+
+/// Corrects a sampled bank with the hybrid tuning circuit directly
+/// (no remapping): every ring is pulled back to its nominal channel.
+pub fn correct_direct(p: &DeviceParams, mr: &MicroringDesign, shifts_nm: &[f64]) -> FpvReport {
+    let mut eo = 0;
+    let mut to = 0;
+    let mut power = 0.0;
+    for &s in shifts_nm {
+        let ev = plan_tuning(p, mr, s);
+        if ev.used_thermal {
+            to += 1;
+            power += p.to_tuning.power_w * (s.abs() / (mr.fsr_m() * 1e9));
+        } else {
+            eo += 1;
+            power += p.eo_tuning.power_w * s.abs();
+        }
+    }
+    FpvReport { eo_corrected: eo, to_corrected: to, correction_power_w: power, residual_nm: 0.0 }
+}
+
+/// Optical channel remapping: instead of forcing ring `i` onto channel
+/// `i`, greedily assign fabricated rings to the nearest free channel
+/// (channels at `spacing_nm` apart), then EO/TO-trim the much smaller
+/// residuals. This is the [7] mitigation the paper's conclusion cites.
+pub fn correct_with_remapping(
+    p: &DeviceParams,
+    mr: &MicroringDesign,
+    shifts_nm: &[f64],
+    spacing_nm: f64,
+) -> FpvReport {
+    let n = shifts_nm.len();
+    // Fabricated absolute detunings relative to channel 0, in channel
+    // units: ring i sits near channel i + shift/spacing.
+    let mut pos: Vec<(f64, usize)> = shifts_nm
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| (i as f64 + s / spacing_nm, i))
+        .collect();
+    // Sorted fabricated positions map onto sorted channel indices — the
+    // optimal assignment for 1-D transport cost.
+    pos.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Comb-level alignment ("intra-channel wavelength tuning" [7]): the
+    // laser comb absorbs the mean systematic offset, leaving only the
+    // ring-to-ring spread to trim.
+    let comb_offset_nm = pos
+        .iter()
+        .enumerate()
+        .map(|(rank, &(fab_pos, _))| (fab_pos - rank as f64) * spacing_nm)
+        .sum::<f64>()
+        / n.max(1) as f64;
+    let mut eo = 0;
+    let mut to = 0;
+    let mut power = 0.0;
+    let mut worst: f64 = 0.0;
+    for (rank, &(fab_pos, _ring)) in pos.iter().enumerate() {
+        let residual_nm = (fab_pos - rank as f64) * spacing_nm - comb_offset_nm;
+        worst = worst.max(residual_nm.abs());
+        let ev = plan_tuning(p, mr, residual_nm);
+        if ev.used_thermal {
+            to += 1;
+            power += p.to_tuning.power_w * (residual_nm.abs() / (mr.fsr_m() * 1e9));
+        } else {
+            eo += 1;
+            power += p.eo_tuning.power_w * residual_nm.abs();
+        }
+    }
+    debug_assert_eq!(eo + to, n);
+    FpvReport {
+        eo_corrected: eo,
+        to_corrected: to,
+        correction_power_w: power,
+        residual_nm: worst,
+    }
+}
+
+/// Fraction of dies (banks) fully correctable with EO-only tuning, under
+/// direct assignment vs remapping — the headline FPV-mitigation metric.
+pub fn eo_only_yield(
+    p: &DeviceParams,
+    mr: &MicroringDesign,
+    model: &FpvModel,
+    bank_size: usize,
+    spacing_nm: f64,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut direct_ok = 0;
+    let mut remap_ok = 0;
+    for _ in 0..trials {
+        let shifts = model.sample_shifts(bank_size, &mut rng);
+        if correct_direct(p, mr, &shifts).to_corrected == 0 {
+            direct_ok += 1;
+        }
+        if correct_with_remapping(p, mr, &shifts, spacing_nm).to_corrected == 0 {
+            remap_ok += 1;
+        }
+    }
+    (direct_ok as f64 / trials as f64, remap_ok as f64 / trials as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (DeviceParams, MicroringDesign) {
+        (DeviceParams::paper(), MicroringDesign::paper())
+    }
+
+    #[test]
+    fn direct_correction_splits_eo_to_by_range() {
+        let (p, mr) = setup();
+        let shifts = vec![0.2, -0.8, 1.5, 0.0, -2.5];
+        let r = correct_direct(&p, &mr, &shifts);
+        assert_eq!(r.eo_corrected, 3); // |s| ≤ 1 nm
+        assert_eq!(r.to_corrected, 2);
+        assert!(r.correction_power_w > 0.0);
+    }
+
+    #[test]
+    fn remapping_reduces_thermal_corrections() {
+        let (p, mr) = setup();
+        let model = FpvModel { sigma_nm: 0.8, mean_nm: 0.3 };
+        let mut rng = Pcg64::seed_from_u64(11);
+        let mut direct_to = 0usize;
+        let mut remap_to = 0usize;
+        for _ in 0..50 {
+            let shifts = model.sample_shifts(18, &mut rng);
+            direct_to += correct_direct(&p, &mr, &shifts).to_corrected;
+            remap_to += correct_with_remapping(&p, &mr, &shifts, 1.0).to_corrected;
+        }
+        assert!(
+            remap_to < direct_to,
+            "remapping must cut TO corrections: direct={direct_to}, remap={remap_to}"
+        );
+    }
+
+    #[test]
+    fn remapping_improves_eo_only_yield() {
+        let (p, mr) = setup();
+        let model = FpvModel::typical();
+        let (direct, remap) = eo_only_yield(&p, &mr, &model, 18, 1.0, 200, 42);
+        assert!(remap >= direct, "remap yield {remap} < direct yield {direct}");
+        assert!(remap > 0.3, "remapped yield should be non-trivial, got {remap}");
+    }
+
+    #[test]
+    fn zero_variation_is_free() {
+        let (p, mr) = setup();
+        let shifts = vec![0.0; 10];
+        let r = correct_direct(&p, &mr, &shifts);
+        assert_eq!(r.to_corrected, 0);
+        assert!(r.correction_power_w < 1e-12);
+        let r2 = correct_with_remapping(&p, &mr, &shifts, 1.0);
+        assert_eq!(r2.to_corrected, 0);
+        assert!(r2.residual_nm < 1e-12);
+    }
+
+    #[test]
+    fn systematic_offset_handled_by_remapping() {
+        // A pure wafer-level offset shifts every ring identically —
+        // remapping absorbs it almost entirely (rings keep their order).
+        let (p, mr) = setup();
+        let shifts = vec![1.4; 12]; // beyond EO range individually
+        let direct = correct_direct(&p, &mr, &shifts);
+        assert_eq!(direct.to_corrected, 12);
+        let remap = correct_with_remapping(&p, &mr, &shifts, 1.0);
+        // Comb alignment absorbs the offset entirely.
+        assert_eq!(remap.to_corrected, 0);
+        assert!(remap.residual_nm < 1e-9);
+    }
+}

@@ -1,0 +1,89 @@
+//! Laser-power sizing — the paper's second eq. 13 (§4.1):
+//!
+//! `P_laser − S_detector ≥ P_photo_loss + 10·log₁₀(N_λ)`
+//!
+//! The laser must overcome every loss on the optical path plus the 1/N_λ
+//! power split across wavelengths, and still deliver the photodetector's
+//! sensitivity at the output.
+
+use super::devices::{dbm_to_watts, DeviceParams};
+
+/// Loss accumulated along one optical path, in dB.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PathLoss {
+    /// Waveguide length traversed, cm.
+    pub waveguide_cm: f64,
+    /// Number of splitters on the path.
+    pub splitters: usize,
+    /// Number of combiners on the path.
+    pub combiners: usize,
+    /// Number of MRs passed *through* (off-resonance).
+    pub mr_throughs: usize,
+    /// Number of MRs that actively modulate the signal.
+    pub mr_modulations: usize,
+    /// EO-tuned waveguide length, cm (EO junctions add 6 dB/cm).
+    pub eo_cm: f64,
+}
+
+impl PathLoss {
+    /// Total path loss in dB for the given device parameter set.
+    pub fn total_db(&self, p: &DeviceParams) -> f64 {
+        self.waveguide_cm * p.waveguide_loss_db_per_cm
+            + self.splitters as f64 * p.splitter_loss_db
+            + self.combiners as f64 * p.combiner_loss_db
+            + self.mr_throughs as f64 * p.mr_through_loss_db
+            + self.mr_modulations as f64 * p.mr_modulation_loss_db
+            + self.eo_cm * p.eo_tuning_loss_db_per_cm
+    }
+}
+
+/// Required laser output power (dBm) for a path with `n_wavelengths`
+/// multiplexed channels and total photonic loss `path_loss_db`.
+pub fn required_laser_dbm(p: &DeviceParams, path_loss_db: f64, n_wavelengths: usize) -> f64 {
+    p.pd_sensitivity_dbm + path_loss_db + 10.0 * (n_wavelengths.max(1) as f64).log10()
+}
+
+/// Electrical power (watts) drawn to produce the required optical power,
+/// given the wall-plug efficiency.
+pub fn laser_electrical_w(p: &DeviceParams, path_loss_db: f64, n_wavelengths: usize) -> f64 {
+    dbm_to_watts(required_laser_dbm(p, path_loss_db, n_wavelengths)) / p.laser_wall_plug_efficiency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_budget_adds_up() {
+        let p = DeviceParams::paper();
+        let path = PathLoss {
+            waveguide_cm: 1.0,
+            splitters: 2,
+            combiners: 1,
+            mr_throughs: 10,
+            mr_modulations: 2,
+            eo_cm: 0.01,
+        };
+        let db = path.total_db(&p);
+        let expect = 1.0 + 2.0 * 0.13 + 0.9 + 10.0 * 0.02 + 2.0 * 0.72 + 0.01 * 6.0;
+        assert!((db - expect).abs() < 1e-9, "db = {db}, expect = {expect}");
+    }
+
+    #[test]
+    fn laser_power_grows_with_wavelength_count() {
+        let p = DeviceParams::paper();
+        let one = required_laser_dbm(&p, 3.0, 1);
+        let eighteen = required_laser_dbm(&p, 3.0, 18);
+        // 18 wavelengths cost 10·log10(18) ≈ 12.6 dB more.
+        assert!((eighteen - one - 12.55).abs() < 0.05);
+    }
+
+    #[test]
+    fn electrical_power_positive_and_sane() {
+        let p = DeviceParams::paper();
+        let w = laser_electrical_w(&p, 5.0, 18);
+        // −20 dBm sensitivity + 5 dB loss + 12.6 dB → ≈ −2.4 dBm ≈ 0.57 mW
+        // optical → ~2.3 mW electrical at 25 % wall-plug.
+        assert!(w > 1e-3 && w < 1e-2, "w = {w}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Photonic device and circuit models for the GHOST accelerator.
+//!
+//! Everything the paper obtains from Ansys Lumerical multiphysics sweeps is
+//! reproduced here with closed-form models: Lorentzian microring line
+//! shapes, the crosstalk coupling factors Φ(λᵢ, λⱼ, Q) and X_MR(ρ)·L_P^{n−i}
+//! (paper eqs. 2–7), SNR feasibility (eqs. 8–13), laser-power sizing, and
+//! the hybrid EO/TO tuning circuit with TED thermal-crosstalk cancellation.
+//!
+//! The [`dse`] submodule re-derives the paper's Fig. 7(a)/(b) bank-size
+//! cutoffs (≤ 20 MRs coherent @ 1520 nm, ≤ 36 MRs = 18 wavelengths
+//! non-coherent from 1550 nm at 1 nm spacing) from these models.
+
+pub mod crosstalk;
+pub mod devices;
+pub mod dse;
+pub mod fpv;
+pub mod laser;
+pub mod mr;
+pub mod snr;
+pub mod tuning;
+
+pub use devices::DeviceParams;
+pub use mr::MicroringDesign;

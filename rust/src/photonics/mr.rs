@@ -1,0 +1,157 @@
+//! Microring-resonator (MR) device model.
+//!
+//! The paper extracts its MR operating point from Lumerical FDTD / CHARGE /
+//! MODE / INTERCONNECT simulations (§4.2): ring + input waveguide width
+//! 450 nm, radius 10 µm, gap 300 nm, Q ≈ 3100. We reproduce the *derived*
+//! quantities those tools feed into the noise analysis with closed-form
+//! models: the Lorentzian line shape of an all-pass/add-drop ring, the
+//! FWHM = λ/Q relation (paper eq. 5), and the Q(a, κ) relation (paper
+//! eq. 7).
+
+
+/// Group index of the Si ridge waveguide used for FSR/Q calculations
+/// (typical SOI value at 1550 nm).
+pub const GROUP_INDEX: f64 = 4.2;
+
+/// Geometric + spectral design of a single microring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MicroringDesign {
+    /// Ring radius, meters.
+    pub radius_m: f64,
+    /// Waveguide (ring and bus) width, meters.
+    pub waveguide_width_m: f64,
+    /// Bus-to-ring coupling gap, meters.
+    pub gap_m: f64,
+    /// Loaded quality factor.
+    pub q_factor: f64,
+    /// Resonant wavelength, meters.
+    pub resonant_wavelength_m: f64,
+}
+
+impl MicroringDesign {
+    /// The paper's chosen design point (§4.2): 450 nm width, 10 µm radius,
+    /// 300 nm gap, Q = 3100, resonance at 1550 nm.
+    pub fn paper() -> Self {
+        Self {
+            radius_m: 10e-6,
+            waveguide_width_m: 450e-9,
+            gap_m: 300e-9,
+            q_factor: 3100.0,
+            resonant_wavelength_m: 1550e-9,
+        }
+    }
+
+    /// Ring circumference `L = 2πR`, meters.
+    pub fn circumference_m(&self) -> f64 {
+        2.0 * std::f64::consts::PI * self.radius_m
+    }
+
+    /// Full width at half maximum of the resonance, meters
+    /// (paper eq. 5: `FWHM = λ_res / Q`).
+    pub fn fwhm_m(&self) -> f64 {
+        self.resonant_wavelength_m / self.q_factor
+    }
+
+    /// Free spectral range `FSR = λ² / (n_g · L)`, meters.
+    pub fn fsr_m(&self) -> f64 {
+        self.resonant_wavelength_m.powi(2) / (GROUP_INDEX * self.circumference_m())
+    }
+
+    /// Tunable range available for imprinting parameters: `2 × FWHM`
+    /// (paper §3.2).
+    pub fn tunable_range_m(&self) -> f64 {
+        2.0 * self.fwhm_m()
+    }
+
+    /// Lorentzian drop-port transmission at detuning `delta_lambda_m` from
+    /// resonance: `T(Δλ) = 1 / (1 + (2Δλ/FWHM)²)`. This is the line shape a
+    /// first-order add-drop ring presents; it is also the spectra-overlap
+    /// factor `Φ(λᵢ, λⱼ, Q)` of paper eqs. 2–3 when evaluated at the channel
+    /// spacing.
+    pub fn lorentzian(&self, delta_lambda_m: f64) -> f64 {
+        let x = 2.0 * delta_lambda_m / self.fwhm_m();
+        1.0 / (1.0 + x * x)
+    }
+
+    /// Loaded Q from round-trip amplitude transmission `a` and cross-over
+    /// coupling coefficient `kappa` (paper eq. 7):
+    ///
+    /// `Q = π n_g L sqrt((1−κ²) a) / (λ (1 − a(1−κ²)))`.
+    pub fn q_from_coupling(&self, a: f64, kappa: f64) -> f64 {
+        let t2 = 1.0 - kappa * kappa; // |t|² = 1 − κ²
+        let num = std::f64::consts::PI * GROUP_INDEX * self.circumference_m() * (t2 * a).sqrt();
+        let den = self.resonant_wavelength_m * (1.0 - a * t2);
+        num / den
+    }
+
+    /// Inverts eq. 7 for the coupling coefficient κ that yields this
+    /// design's `q_factor` given round-trip amplitude transmission `a`
+    /// (bisection; used by the homodyne-crosstalk mitigation study which
+    /// trades κ against Q by widening the gap).
+    pub fn kappa_for_q(&self, a: f64) -> Option<f64> {
+        let (mut lo, mut hi) = (1e-4, 0.999);
+        // Q decreases monotonically with κ (more coupling → lower Q).
+        let f = |k: f64| self.q_from_coupling(a, k) - self.q_factor;
+        if f(lo) < 0.0 || f(hi) > 0.0 {
+            return None;
+        }
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if f(mid) > 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(0.5 * (lo + hi))
+    }
+}
+
+impl Default for MicroringDesign {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwhm_is_half_nm_at_paper_point() {
+        let mr = MicroringDesign::paper();
+        // 1550 nm / 3100 = 0.5 nm
+        assert!((mr.fwhm_m() - 0.5e-9).abs() < 1e-12);
+        assert!((mr.tunable_range_m() - 1.0e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lorentzian_shape() {
+        let mr = MicroringDesign::paper();
+        assert!((mr.lorentzian(0.0) - 1.0).abs() < 1e-12);
+        // At Δλ = FWHM/2 the transmission is exactly 1/2.
+        let half = mr.lorentzian(mr.fwhm_m() / 2.0);
+        assert!((half - 0.5).abs() < 1e-12);
+        // 1 nm away (two FWHM) it is strongly suppressed.
+        assert!(mr.lorentzian(1e-9) < 0.06);
+    }
+
+    #[test]
+    fn fsr_in_plausible_range() {
+        let mr = MicroringDesign::paper();
+        let fsr_nm = mr.fsr_m() * 1e9;
+        // 10 µm radius Si ring: FSR ≈ 9 nm.
+        assert!(fsr_nm > 5.0 && fsr_nm < 15.0, "fsr = {fsr_nm} nm");
+    }
+
+    #[test]
+    fn q_coupling_round_trip() {
+        let mr = MicroringDesign::paper();
+        let a = 0.99; // low-loss ring
+        let kappa = mr.kappa_for_q(a).expect("paper Q reachable");
+        let q = mr.q_from_coupling(a, kappa);
+        assert!((q - mr.q_factor).abs() / mr.q_factor < 1e-3);
+        // Wider gap → smaller κ → larger Q (monotonicity used in §3.2).
+        assert!(mr.q_from_coupling(a, kappa * 0.8) > q);
+    }
+}

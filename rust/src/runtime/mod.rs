@@ -1,0 +1,398 @@
+//! The functional PJRT datapath.
+//!
+//! `make artifacts` (build-time Python, never on the request path) lowers
+//! each `(model, dataset)` forward pass — JAX calling the Pallas photonic
+//! kernels — to HLO **text** under `artifacts/`, together with a JSON
+//! manifest describing the input tensors and the binary files holding the
+//! trained weights and the dataset arrays. This module loads an artifact,
+//! compiles it on the PJRT CPU client, binds its inputs from the manifest,
+//! and executes real GNN inference from Rust.
+//!
+//! HLO text (not a serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a manifest tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// A tensor stored in one of the artifact's binary files.
+#[derive(Debug, Clone)]
+pub struct TensorRef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// Key into [`Manifest::files`].
+    pub file: String,
+    /// Byte offset within the file.
+    pub offset: u64,
+}
+
+impl TensorRef {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor missing name"))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|d| d as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let file = v
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor {name} missing file"))?
+            .to_string();
+        let offset = v.get("offset").and_then(Json::as_u64).unwrap_or(0);
+        Ok(Self { name, shape, dtype, file, offset })
+    }
+}
+
+/// Artifact manifest written by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// HLO text filename (relative to the artifacts dir).
+    pub hlo: String,
+    /// Executable inputs, in call order.
+    pub inputs: Vec<TensorRef>,
+    /// Non-input tensors (labels, masks) for evaluation.
+    pub extras: HashMap<String, TensorRef>,
+    /// Logical file key → filename.
+    pub files: HashMap<String, String>,
+    /// Free-form metadata (model, dataset, measured accuracies, …).
+    pub meta: Json,
+}
+
+impl Manifest {
+    /// Parses the manifest JSON document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let hlo = v
+            .get("hlo")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'hlo'"))?
+            .to_string();
+        let inputs = v
+            .get("inputs")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing 'inputs'"))?
+            .iter()
+            .map(TensorRef::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut extras = HashMap::new();
+        if let Some(obj) = v.get("extras").and_then(Json::as_object) {
+            for (k, t) in obj {
+                extras.insert(k.clone(), TensorRef::from_json(t)?);
+            }
+        }
+        let mut files = HashMap::new();
+        if let Some(obj) = v.get("files").and_then(Json::as_object) {
+            for (k, f) in obj {
+                files.insert(
+                    k.clone(),
+                    f.as_str().ok_or_else(|| anyhow!("bad file entry"))?.to_string(),
+                );
+            }
+        }
+        let meta = v.get("meta").cloned().unwrap_or(Json::Null);
+        Ok(Self { hlo, inputs, extras, files, meta })
+    }
+}
+
+/// Raw host copy of a tensor.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Converts to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?
+            }
+            HostTensor::I32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A loaded, compiled artifact ready to execute.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    /// Cache of the binary files backing the manifest tensors.
+    file_cache: HashMap<String, Vec<u8>>,
+}
+
+impl Engine {
+    /// Loads `artifacts_dir/<name>.json`, compiles its HLO on the PJRT CPU
+    /// client, and memory-loads the referenced binary files.
+    pub fn load(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join(format!("{name}.json"));
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?}"))?,
+        )?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(dir.join(&manifest.hlo))
+            .map_err(|e| anyhow!("parsing HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling: {e:?}"))?;
+        let mut file_cache = HashMap::new();
+        for (key, fname) in &manifest.files {
+            let bytes = std::fs::read(dir.join(fname))
+                .with_context(|| format!("reading artifact file {fname}"))?;
+            file_cache.insert(key.clone(), bytes);
+        }
+        Ok(Self { client, exe, manifest, dir, file_cache })
+    }
+
+    /// The artifacts directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (always "cpu" in this build).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Reads a manifest tensor from the cached binary files.
+    pub fn host_tensor(&self, t: &TensorRef) -> Result<HostTensor> {
+        let file = self
+            .file_cache
+            .get(&t.file)
+            .ok_or_else(|| anyhow!("manifest references unknown file key {}", t.file))?;
+        let start = t.offset as usize;
+        let end = start + t.byte_len();
+        if end > file.len() {
+            bail!(
+                "tensor {} spans {}..{} but file {} has {} bytes",
+                t.name,
+                start,
+                end,
+                t.file,
+                file.len()
+            );
+        }
+        let bytes = &file[start..end];
+        Ok(match t.dtype {
+            Dtype::F32 => HostTensor::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                t.shape.clone(),
+            ),
+            Dtype::I32 => HostTensor::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                t.shape.clone(),
+            ),
+        })
+    }
+
+    /// Reads an `extras` tensor by name.
+    pub fn extra(&self, name: &str) -> Result<HostTensor> {
+        let t = self
+            .manifest
+            .extras
+            .get(name)
+            .ok_or_else(|| anyhow!("no extra tensor named {name}"))?;
+        self.host_tensor(t)
+    }
+
+    /// Executes the artifact with its manifest-bound inputs. Returns the
+    /// flattened output tensors (the lowering uses `return_tuple=True`).
+    pub fn run(&self) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = self
+            .manifest
+            .inputs
+            .iter()
+            .map(|t| self.host_tensor(t)?.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_with(&literals)
+    }
+
+    /// Executes with caller-provided input literals (manifest order).
+    pub fn run_with(&self, inputs: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let result =
+            self.exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                match shape.ty() {
+                    xla::ElementType::F32 => Ok(HostTensor::F32(
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+                        dims,
+                    )),
+                    xla::ElementType::S32 => Ok(HostTensor::I32(
+                        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+                        dims,
+                    )),
+                    other => bail!("unsupported output element type {other:?}"),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Row-wise argmax of a `[n, c]` logits tensor.
+pub fn argmax_rows(logits: &[f32], n: usize, c: usize) -> Vec<usize> {
+    (0..n)
+        .map(|i| {
+            let row = &logits[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Accuracy of predictions against labels over an optional 0/1 mask.
+pub fn masked_accuracy(pred: &[usize], labels: &[i32], mask: Option<&[i32]>) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..pred.len() {
+        if mask.map(|m| m[i] != 0).unwrap_or(true) {
+            total += 1;
+            if pred[i] == labels[i] as usize {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basics() {
+        let logits = [0.1, 0.9, 0.0, 3.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 2, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn masked_accuracy_counts() {
+        let pred = vec![0usize, 1, 2, 1];
+        let labels = vec![0i32, 1, 0, 1];
+        assert!((masked_accuracy(&pred, &labels, None) - 0.75).abs() < 1e-12);
+        let mask = vec![1i32, 1, 0, 0];
+        assert!((masked_accuracy(&pred, &labels, Some(&mask)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "hlo": "m.hlo.txt",
+            "inputs": [{"name":"x","shape":[2,3],"dtype":"f32","file":"data","offset":0}],
+            "files": {"data": "d.bin"},
+            "meta": {"model": "GCN"}
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.inputs[0].element_count(), 6);
+        assert_eq!(m.inputs[0].byte_len(), 24);
+        assert_eq!(m.files["data"], "d.bin");
+        assert_eq!(m.meta.get("model").unwrap().as_str(), Some("GCN"));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        let json = r#"{
+            "hlo": "m.hlo.txt",
+            "inputs": [{"name":"x","shape":[2],"dtype":"f64","file":"d","offset":0}],
+            "files": {}
+        }"#;
+        assert!(Manifest::parse(json).is_err());
+    }
+
+    #[test]
+    fn tensor_ref_sizes() {
+        let t = TensorRef {
+            name: "w".into(),
+            shape: vec![4, 5],
+            dtype: Dtype::I32,
+            file: "data".into(),
+            offset: 16,
+        };
+        assert_eq!(t.element_count(), 20);
+        assert_eq!(t.byte_len(), 80);
+    }
+}

@@ -1,0 +1,135 @@
+//! Pipeline-stage simulator.
+//!
+//! GHOST processes output-vertex groups through a fixed stage sequence
+//! (gather → reduce → transform → update for GCN-family models; the GAT
+//! ordering re-arranges the same stages, §3.4.2). Stage `s` of group `g`
+//! can start only when stage `s−1` of the same group *and* stage `s` of the
+//! previous group have finished — the classic non-reordering pipeline
+//! recurrence, which this module evaluates exactly:
+//!
+//! `end[g][s] = max(end[g][s−1], end[g−1][s]) + t[g][s]`
+//!
+//! With pipelining disabled (the Fig. 8 baseline) groups and stages run
+//! back-to-back and the makespan is the plain sum.
+
+
+/// Per-stage latencies of one group, seconds. All groups in a schedule must
+/// have the same stage count.
+pub type GroupStages = Vec<f64>;
+
+/// Result of evaluating a schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleResult {
+    /// End-to-end makespan, seconds.
+    pub makespan_s: f64,
+    /// Sum of all stage latencies (the no-overlap lower bound on energy
+    /// accounting and the sequential makespan).
+    pub total_stage_time_s: f64,
+}
+
+/// Exact makespan of the two-level pipelined schedule (§3.4.2: stages
+/// overlap within a group via the early-start rules, and group `V_{i+1}`
+/// overlaps with `V_i`).
+pub fn pipelined(groups: &[GroupStages]) -> ScheduleResult {
+    if groups.is_empty() {
+        return ScheduleResult { makespan_s: 0.0, total_stage_time_s: 0.0 };
+    }
+    let n_stages = groups[0].len();
+    debug_assert!(groups.iter().all(|g| g.len() == n_stages));
+    let mut prev_end = vec![0.0f64; n_stages];
+    let mut total = 0.0;
+    for g in groups {
+        let mut cur_end = vec![0.0f64; n_stages];
+        let mut prev_stage_end = 0.0f64;
+        for (s, &t) in g.iter().enumerate() {
+            let start = prev_stage_end.max(prev_end[s]);
+            cur_end[s] = start + t;
+            prev_stage_end = cur_end[s];
+            total += t;
+        }
+        prev_end = cur_end;
+    }
+    ScheduleResult { makespan_s: *prev_end.last().unwrap(), total_stage_time_s: total }
+}
+
+/// Makespan with no pipelining: every stage of every group runs
+/// sequentially.
+pub fn sequential(groups: &[GroupStages]) -> ScheduleResult {
+    let total: f64 = groups.iter().flat_map(|g| g.iter()).sum();
+    ScheduleResult { makespan_s: total, total_stage_time_s: total }
+}
+
+/// Per-stage busy time across all groups — drives the Fig. 9 latency
+/// breakdown.
+pub fn stage_totals(groups: &[GroupStages]) -> Vec<f64> {
+    if groups.is_empty() {
+        return Vec::new();
+    }
+    let n_stages = groups[0].len();
+    let mut totals = vec![0.0; n_stages];
+    for g in groups {
+        for (s, &t) in g.iter().enumerate() {
+            totals[s] += t;
+        }
+    }
+    totals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_schedule() {
+        assert_eq!(pipelined(&[]).makespan_s, 0.0);
+        assert_eq!(sequential(&[]).makespan_s, 0.0);
+    }
+
+    #[test]
+    fn single_group_equals_sum() {
+        let g = vec![vec![1.0, 2.0, 3.0]];
+        assert_eq!(pipelined(&g).makespan_s, 6.0);
+        assert_eq!(sequential(&g).makespan_s, 6.0);
+    }
+
+    #[test]
+    fn uniform_pipeline_formula() {
+        // G groups of S stages, each of latency t:
+        // makespan = (S + G − 1) · t.
+        let g: Vec<GroupStages> = (0..10).map(|_| vec![1.0; 4]).collect();
+        let r = pipelined(&g);
+        assert!((r.makespan_s - 13.0).abs() < 1e-12);
+        assert!((sequential(&g).makespan_s - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bottleneck_stage_dominates() {
+        // One slow stage of latency 5 in each of 8 groups → makespan ≈
+        // fill + 8×5.
+        let g: Vec<GroupStages> = (0..8).map(|_| vec![1.0, 5.0, 1.0]).collect();
+        let r = pipelined(&g);
+        assert!((r.makespan_s - (1.0 + 8.0 * 5.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_sequential() {
+        let g: Vec<GroupStages> =
+            (0..7).map(|i| vec![0.5 + i as f64, 2.0, 1.0 / (1 + i) as f64]).collect();
+        assert!(pipelined(&g).makespan_s <= sequential(&g).makespan_s + 1e-12);
+    }
+
+    #[test]
+    fn stage_totals_sum() {
+        let g = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(stage_totals(&g), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn irregular_groups_exact() {
+        // Hand-computed DP check.
+        let g = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        // g0: s0 ends 2, s1 ends 3. g1: s0 starts max(0,2)=2 ends 3;
+        // s1 starts max(3,3)=3 ends 6.
+        assert!((pipelined(&g).makespan_s - 6.0).abs() < 1e-12);
+    }
+}

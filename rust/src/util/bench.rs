@@ -1,0 +1,86 @@
+//! Micro-benchmark harness used by `rust/benches/` (criterion is not
+//! available in the offline build). Provides warmup, timed repetitions,
+//! and median/mean/min reporting, plus a black-box to defeat
+//! const-propagation.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box`.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    fn from_samples(mut samples: Vec<Duration>) -> Self {
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        Self {
+            iters: n as u32,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Runs `f` with `warmup` unmeasured and `iters` measured repetitions and
+/// prints a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    let stats = BenchStats::from_samples(samples);
+    println!(
+        "bench {name:<40} median {:>12?} mean {:>12?} min {:>12?} (n={})",
+        stats.median, stats.mean, stats.min, stats.iters
+    );
+    stats
+}
+
+/// Times a single invocation (for long-running whole-figure regenerations).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("bench {name:<40} single run {:>12?}", t0.elapsed());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("noop", 1, 5, || {
+            black_box(1 + 1);
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let v = time_once("ret", || 42);
+        assert_eq!(v, 42);
+    }
+}

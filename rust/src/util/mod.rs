@@ -1,0 +1,11 @@
+//! In-crate substrates for an offline build: deterministic RNG, JSON
+//! parsing/serialization, a scoped thread-pool map, and the
+//! micro-benchmark harness used by `rust/benches/`.
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Pcg64;

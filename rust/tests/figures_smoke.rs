@@ -1,0 +1,83 @@
+//! Smoke tests for every table/figure regeneration path (the same code the
+//! CLI and benches run), plus the device-level DSE anchors.
+
+use ghost::config::GhostConfig;
+use ghost::figures;
+use ghost::photonics::devices::DeviceParams;
+use ghost::photonics::dse;
+
+#[test]
+fn table1_prints_paper_rows() {
+    let rows = figures::table1();
+    assert_eq!(rows.len(), 7);
+    let eo = &rows[0];
+    assert_eq!(eo.0, "EO Tuning");
+    assert_eq!(eo.1, 20e-9);
+}
+
+#[test]
+fn table2_has_all_eight_datasets() {
+    let rows = figures::table2();
+    assert_eq!(rows.len(), 8);
+    let cora = rows.iter().find(|r| r.name == "Cora").unwrap();
+    assert_eq!(cora.avg_nodes as usize, 2708);
+    assert_eq!(cora.avg_edges as usize, 10_556);
+}
+
+#[test]
+fn fig7a_anchor_20_mrs_at_1520nm() {
+    let p = DeviceParams::paper();
+    assert_eq!(dse::max_feasible_coherent(&p, 1520.0, 40), 20);
+    // And the wavelength trend of the paper's surface plot.
+    assert!(dse::max_feasible_coherent(&p, 1570.0, 40) < 20);
+}
+
+#[test]
+fn fig7b_anchor_18_wavelengths() {
+    assert_eq!(dse::max_feasible_noncoherent(30), 18);
+    let pts = dse::noncoherent_sweep(30);
+    // Feasibility is monotone: once infeasible, stays infeasible.
+    let mut seen_infeasible = false;
+    for p in pts {
+        if !p.feasible {
+            seen_infeasible = true;
+        } else {
+            assert!(!seen_infeasible, "feasibility must be a prefix");
+        }
+    }
+}
+
+#[test]
+fn fig8_rows_complete() {
+    let rows = figures::fig8(GhostConfig::paper_optimal());
+    assert_eq!(rows.len(), 9);
+    for r in &rows {
+        assert_eq!(r.per_workload.len(), 16, "{}", r.label);
+        assert!(r.mean.is_finite() && r.mean > 0.0);
+    }
+}
+
+#[test]
+fn fig9_rows_complete() {
+    let rows = figures::fig9(GhostConfig::paper_optimal());
+    assert_eq!(rows.len(), 16);
+}
+
+#[test]
+fn comparison_covers_supported_workloads() {
+    let rows = figures::comparison_summary(GhostConfig::paper_optimal());
+    assert_eq!(rows.len(), 9);
+    let n: std::collections::HashMap<&str, usize> =
+        rows.iter().map(|r| (r.platform, r.n_workloads)).collect();
+    // Support matrix from §4.6: GRIP/HyGCN 12, EnG/ReGNN/ReGraphX 8,
+    // HW_ACC 8, commodity 16.
+    assert_eq!(n["GRIP"], 12);
+    assert_eq!(n["HyGCN"], 12);
+    assert_eq!(n["EnG"], 8);
+    assert_eq!(n["HW_ACC"], 8);
+    assert_eq!(n["ReGNN"], 8);
+    assert_eq!(n["ReGraphX"], 8);
+    assert_eq!(n["TPU"], 16);
+    assert_eq!(n["CPU"], 16);
+    assert_eq!(n["GPU"], 16);
+}

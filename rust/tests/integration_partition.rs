@@ -1,0 +1,74 @@
+//! Integration tests of the buffer-and-partition preprocessing over the
+//! full Table-2 dataset suite.
+
+use ghost::graph::datasets::{Dataset, ALL_DATASETS};
+use ghost::graph::partition::PartitionMatrix;
+
+#[test]
+fn every_dataset_partitions_cleanly() {
+    for spec in ALL_DATASETS {
+        let ds = Dataset::generate(spec);
+        for g in &ds.graphs {
+            let pm = PartitionMatrix::build(g, 20, 20);
+            assert_eq!(pm.total_edges(), g.n_edges() as u64, "{}", spec.name);
+            assert!(pm.nonzero_blocks() <= pm.total_block_slots());
+            assert!(pm.total_distinct_source_fetches() <= pm.total_edges());
+        }
+    }
+}
+
+#[test]
+fn sparse_datasets_skip_most_blocks() {
+    // The all-zero-block skip is the point of §3.4.1: on the sparse
+    // citation graphs most V×N slots must be empty.
+    for name in ["Cora", "PubMed", "Citeseer"] {
+        let ds = Dataset::by_name(name).unwrap();
+        let pm = PartitionMatrix::build(&ds.graphs[0], 20, 20);
+        assert!(pm.skip_ratio() > 0.5, "{name}: skip ratio {}", pm.skip_ratio());
+    }
+}
+
+#[test]
+fn denser_graph_skips_fewer_blocks() {
+    let cora = Dataset::by_name("Cora").unwrap();
+    let amazon = Dataset::by_name("Amazon").unwrap(); // 10× denser
+    let pm_c = PartitionMatrix::build(&cora.graphs[0], 20, 20);
+    let pm_a = PartitionMatrix::build(&amazon.graphs[0], 20, 20);
+    assert!(pm_a.skip_ratio() < pm_c.skip_ratio());
+}
+
+#[test]
+fn partition_parameters_change_block_granularity() {
+    let ds = Dataset::by_name("Citeseer").unwrap();
+    let g = &ds.graphs[0];
+    let fine = PartitionMatrix::build(g, 10, 10);
+    let coarse = PartitionMatrix::build(g, 40, 40);
+    assert!(fine.n_output_groups() > coarse.n_output_groups());
+    assert_eq!(fine.total_edges(), coarse.total_edges());
+    // Finer blocks skip a larger fraction of slots on a sparse graph.
+    assert!(fine.skip_ratio() > coarse.skip_ratio());
+}
+
+#[test]
+fn group_plans_cover_every_vertex_group() {
+    let ds = Dataset::by_name("Cora").unwrap();
+    let g = &ds.graphs[0];
+    let pm = PartitionMatrix::build(g, 20, 20);
+    assert_eq!(pm.n_output_groups(), g.n_vertices.div_ceil(20));
+    for (i, grp) in pm.groups.iter().enumerate() {
+        assert_eq!(grp.out_group as usize, i);
+        // Max lane degree bounds every block's worth of edges.
+        let block_edges: u32 = grp.blocks.iter().map(|b| b.n_edges).sum();
+        assert_eq!(block_edges, grp.total_edges);
+    }
+}
+
+#[test]
+fn multi_graph_dataset_partitions_are_small() {
+    let ds = Dataset::by_name("Mutag").unwrap();
+    for g in &ds.graphs {
+        let pm = PartitionMatrix::build(g, 20, 20);
+        // ~18-node graphs fit in one or two output groups.
+        assert!(pm.n_output_groups() <= 2, "groups: {}", pm.n_output_groups());
+    }
+}

@@ -1,0 +1,93 @@
+//! End-to-end functional-path tests: load the AOT artifacts produced by
+//! `make artifacts` and execute real GNN inference through PJRT, checking
+//! accuracy against the build-time (JAX) measurements.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built, so `cargo test` works before the Python build step; CI runs
+//! `make test` which builds artifacts first.
+
+use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
+use ghost::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join(".stamp").exists().then_some(dir)
+}
+
+fn skip() {
+    eprintln!("skipping: run `make artifacts` first");
+}
+
+#[test]
+fn gcn_cora_end_to_end_accuracy() {
+    let Some(dir) = artifacts_dir() else { return skip() };
+    let engine = Engine::load(&dir, "gcn_cora").expect("load artifact");
+    let outputs = engine.run().expect("execute");
+    let logits = outputs[0].as_f32().unwrap();
+    let shape = outputs[0].shape();
+    assert_eq!(shape, &[2708, 7]);
+    let labels = engine.extra("labels").unwrap();
+    let mask = engine.extra("test_mask").unwrap();
+    let pred = argmax_rows(logits, shape[0], shape[1]);
+    let acc = masked_accuracy(&pred, labels.as_i32().unwrap(), Some(mask.as_i32().unwrap()));
+    // Must match the python-side int8 accuracy recorded in the manifest.
+    let expected = engine
+        .manifest
+        .meta
+        .get("acc_int8")
+        .and_then(Json::as_f64)
+        .expect("manifest accuracy");
+    assert!(
+        (acc - expected).abs() < 0.02,
+        "PJRT accuracy {acc} vs build-time measurement {expected}"
+    );
+    // And be far above chance (1/7) — the artifact really learned.
+    assert!(acc > 0.5, "accuracy {acc}");
+}
+
+#[test]
+fn gin_proteins_graph_classification() {
+    let Some(dir) = artifacts_dir() else { return skip() };
+    let engine = Engine::load(&dir, "gin_proteins").expect("load artifact");
+    let outputs = engine.run().expect("execute");
+    let logits = outputs[0].as_f32().unwrap();
+    let shape = outputs[0].shape();
+    assert_eq!(shape, &[1113, 2]);
+    let labels = engine.extra("labels").unwrap();
+    let mask = engine.extra("test_mask").unwrap();
+    let pred = argmax_rows(logits, shape[0], shape[1]);
+    let acc = masked_accuracy(&pred, labels.as_i32().unwrap(), Some(mask.as_i32().unwrap()));
+    assert!(acc > 0.55, "graph-classification accuracy {acc} at chance level");
+}
+
+#[test]
+fn gat_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return skip() };
+    let engine = Engine::load(&dir, "gat_citeseer").expect("load artifact");
+    let outputs = engine.run().expect("execute");
+    assert_eq!(outputs[0].shape(), &[3327, 6]);
+}
+
+#[test]
+fn manifest_metadata_complete() {
+    let Some(dir) = artifacts_dir() else { return skip() };
+    for name in ["gcn_cora", "graphsage_pubmed", "gat_amazon", "gin_mutag"] {
+        let engine = Engine::load(&dir, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!engine.manifest.inputs.is_empty(), "{name}");
+        assert!(engine.manifest.extras.contains_key("labels"), "{name}");
+        assert_eq!(
+            engine.manifest.meta.get("quantized").and_then(Json::as_bool),
+            Some(true),
+            "{name}: artifacts must be the int8 deployment configuration"
+        );
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return skip() };
+    let engine = Engine::load(&dir, "gcn_citeseer").expect("load artifact");
+    let a = engine.run().expect("first run");
+    let b = engine.run().expect("second run");
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}

@@ -1,0 +1,160 @@
+//! Integration tests over the full simulator stack: device models →
+//! partition → arch blocks → pipeline schedule → metrics, checked against
+//! the paper's qualitative claims.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate, OptFlags};
+use ghost::energy::geomean;
+use ghost::figures;
+use ghost::gnn::models::ModelKind;
+
+fn ghost_cfg() -> GhostConfig {
+    GhostConfig::paper_optimal()
+}
+
+#[test]
+fn fig8_ghost_default_reduction_near_paper() {
+    // Paper §4.4: BP+PP+DAC sharing reduces energy ~4.94× vs baseline.
+    let rows = figures::fig8(ghost_cfg());
+    let default_row = rows.iter().find(|r| r.label == "BP+PP+DAC_Sharing").unwrap();
+    let reduction = 1.0 / default_row.mean;
+    assert!(
+        reduction > 3.0 && reduction < 10.0,
+        "BP+PP+DAC reduction {reduction} outside the paper's ~4.94x band"
+    );
+}
+
+#[test]
+fn fig8_wb_weaker_than_dac_sharing() {
+    // Paper §4.4: BP+PP+WB (2.92×) is weaker than BP+PP+DAC (4.94×).
+    let rows = figures::fig8(ghost_cfg());
+    let dac = rows.iter().find(|r| r.label == "BP+PP+DAC_Sharing").unwrap().mean;
+    let wb = rows.iter().find(|r| r.label == "BP+PP+WB").unwrap().mean;
+    assert!(dac < wb, "DAC-sharing combo must beat the WB combo (dac={dac}, wb={wb})");
+}
+
+#[test]
+fn fig8_every_optimization_helps() {
+    let rows = figures::fig8(ghost_cfg());
+    for r in &rows {
+        assert!(
+            r.mean <= 1.0 + 1e-9,
+            "{} must not exceed baseline energy (mean {})",
+            r.label,
+            r.mean
+        );
+    }
+    // The full-combo row is the global best.
+    let best = rows.iter().map(|r| r.mean).fold(f64::INFINITY, f64::min);
+    let dac = rows.iter().find(|r| r.label == "BP+PP+DAC_Sharing").unwrap().mean;
+    assert!((dac - best).abs() < 1e-12, "BP+PP+DAC must be the best combo");
+}
+
+#[test]
+fn fig9_breakdown_shapes() {
+    let rows = figures::fig9(ghost_cfg());
+    for r in &rows {
+        let total = r.aggregate + r.combine + r.update;
+        assert!((total - 1.0).abs() < 1e-9, "fractions must sum to 1, got {total}");
+        match r.model.as_str() {
+            // Paper §4.5: aggregate consumes more than half for GCN/GS.
+            "GCN" | "GraphSAGE" => {
+                assert!(r.aggregate > 0.5, "{}/{}: aggregate {}", r.model, r.dataset, r.aggregate)
+            }
+            // GIN bottleneck is the combine phase.
+            "GIN" => assert!(
+                r.combine > r.aggregate,
+                "{}/{}: combine {} vs aggregate {}",
+                r.model,
+                r.dataset,
+                r.combine,
+                r.aggregate
+            ),
+            // GAT latency is attributed mainly to combine + update.
+            "GAT" => assert!(
+                r.combine + r.update > 0.4,
+                "{}/{}: combine+update {}",
+                r.model,
+                r.dataset,
+                r.combine + r.update
+            ),
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn comparison_ratios_match_paper_shape() {
+    let rows = figures::comparison_summary(ghost_cfg());
+    let get = |name: &str| rows.iter().find(|r| r.platform == name).unwrap();
+    // Headline claim: ≥10.2× throughput vs the best competitor (HW_ACC)
+    // and ≥3.8× energy efficiency vs the best (EnGN).
+    for r in &rows {
+        assert!(r.gops_ratio > 5.0, "{}: GOPS ratio {}", r.platform, r.gops_ratio);
+        assert!(r.epb_ratio > 1.0, "{}: EPB ratio {}", r.platform, r.epb_ratio);
+    }
+    assert!(
+        get("HW_ACC").gops_ratio < get("GRIP").gops_ratio,
+        "HW_ACC must be the closest GNN accelerator in throughput"
+    );
+    assert!(
+        get("EnG").epb_ratio < get("GRIP").epb_ratio,
+        "EnGN must be the closest in energy efficiency"
+    );
+    // Commodity platforms (TPU/CPU/GPU) lose by orders of magnitude.
+    for name in ["TPU", "CPU", "GPU"] {
+        assert!(get(name).gops_ratio > 100.0, "{name}: {}", get(name).gops_ratio);
+        assert!(get(name).epb_ratio > 1000.0, "{name}: {}", get(name).epb_ratio);
+    }
+}
+
+#[test]
+fn gin_shows_largest_gops_gains() {
+    // Paper §4.6.1: the largest GOPS improvements are observed with the
+    // GIN datasets (per-graph overheads dominate the baselines).
+    let detail = figures::comparison_detail(ghost_cfg());
+    let mut gin_ratios = Vec::new();
+    let mut other_ratios = Vec::new();
+    for (kind, _, ghost_metrics, rows) in &detail {
+        for (_, m) in rows {
+            let ratio = ghost_metrics.gops() / m.gops();
+            if *kind == ModelKind::Gin {
+                gin_ratios.push(ratio);
+            } else {
+                other_ratios.push(ratio);
+            }
+        }
+    }
+    let gin = geomean(gin_ratios);
+    let other = geomean(other_ratios);
+    assert!(gin > other, "GIN geomean {gin} must exceed non-GIN {other}");
+}
+
+#[test]
+fn platform_power_is_about_18w() {
+    // §4.6.2 quotes GHOST's power as 18 W.
+    let r = simulate(ModelKind::Gcn, "Cora", ghost_cfg(), OptFlags::ghost_default()).unwrap();
+    assert!((r.platform_w - 18.0).abs() < 3.0, "platform power {}", r.platform_w);
+    assert!(r.metrics.power_w() < 40.0, "total power {}", r.metrics.power_w());
+}
+
+#[test]
+fn sweeping_v_trades_power_for_latency() {
+    let small = GhostConfig { v: 10, ..ghost_cfg() };
+    let big = GhostConfig { v: 30, ..ghost_cfg() };
+    let flags = OptFlags::ghost_default();
+    let rs = simulate(ModelKind::Gcn, "Citeseer", small, flags).unwrap();
+    let rb = simulate(ModelKind::Gcn, "Citeseer", big, flags).unwrap();
+    assert!(rb.metrics.latency_s < rs.metrics.latency_s, "more lanes must be faster");
+    assert!(rb.platform_w > rs.platform_w, "more lanes must draw more power");
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let flags = OptFlags::ghost_default();
+    let bad = GhostConfig { r_c: 25, ..ghost_cfg() }; // > 20 coherent MRs
+    assert!(simulate(ModelKind::Gcn, "Cora", bad, flags).is_err());
+    let bad_flags = OptFlags { workload_balancing: true, ..OptFlags::ghost_default() };
+    assert!(simulate(ModelKind::Gcn, "Cora", ghost_cfg(), bad_flags).is_err());
+    assert!(simulate(ModelKind::Gcn, "NoSuchDataset", ghost_cfg(), flags).is_err());
+}

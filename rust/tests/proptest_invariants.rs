@@ -1,0 +1,182 @@
+//! Randomized property tests over the coordinator invariants (routing,
+//! batching/partitioning, scheduling, quantization). proptest is not
+//! available offline, so properties are driven by the in-crate
+//! deterministic PCG generator with many sampled cases per property.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::gnn::quant;
+use ghost::graph::csr::CsrGraph;
+use ghost::graph::datasets::{generate_skewed_graph, Dataset, DatasetSpec, Task};
+use ghost::graph::partition::PartitionMatrix;
+use ghost::sim;
+use ghost::util::rng::Pcg64;
+
+const CASES: usize = 60;
+
+fn random_graph(rng: &mut Pcg64) -> CsrGraph {
+    let n = rng.gen_range(2, 400);
+    let e = rng.gen_range(1, 4 * n);
+    let cap = rng.gen_range(2, 64);
+    generate_skewed_graph(n, e, cap, rng)
+}
+
+#[test]
+fn prop_partition_conserves_edges_and_orders_blocks() {
+    let mut rng = Pcg64::seed_from_u64(101);
+    for _ in 0..CASES {
+        let g = random_graph(&mut rng);
+        let v = rng.gen_range(1, 50);
+        let n = rng.gen_range(1, 50);
+        let pm = PartitionMatrix::build(&g, v, n);
+        assert_eq!(pm.total_edges(), g.n_edges() as u64);
+        for grp in &pm.groups {
+            for w in grp.blocks.windows(2) {
+                assert!(w[0].input_group < w[1].input_group, "prefetch order violated");
+            }
+            let block_sum: u32 = grp.blocks.iter().map(|b| b.n_edges).sum();
+            assert_eq!(block_sum, grp.total_edges);
+            assert!(grp.distinct_sources <= grp.total_edges.max(1));
+        }
+        let skip = pm.skip_ratio();
+        assert!((0.0..=1.0).contains(&skip));
+    }
+}
+
+#[test]
+fn prop_partition_max_degree_matches_graph() {
+    let mut rng = Pcg64::seed_from_u64(202);
+    for _ in 0..CASES {
+        let g = random_graph(&mut rng);
+        let pm = PartitionMatrix::build(&g, rng.gen_range(1, 30), rng.gen_range(1, 30));
+        let plan_max = pm.groups.iter().map(|gr| gr.max_lane_degree).max().unwrap_or(0);
+        assert_eq!(plan_max as usize, g.max_degree());
+    }
+}
+
+#[test]
+fn prop_pipelined_never_slower_than_sequential_and_bounded() {
+    let mut rng = Pcg64::seed_from_u64(303);
+    for _ in 0..CASES {
+        let n_groups = rng.gen_range(1, 40);
+        let n_stages = rng.gen_range(1, 6);
+        let groups: Vec<Vec<f64>> = (0..n_groups)
+            .map(|_| (0..n_stages).map(|_| rng.next_f64() * 10.0).collect())
+            .collect();
+        let p = sim::pipelined(&groups);
+        let s = sim::sequential(&groups);
+        assert!(p.makespan_s <= s.makespan_s + 1e-9, "pipeline slower than sequential");
+        // Lower bound: the slowest single stage column.
+        let stage_totals = sim::stage_totals(&groups);
+        let bottleneck = stage_totals.iter().cloned().fold(0.0, f64::max);
+        assert!(p.makespan_s >= bottleneck - 1e-9, "pipeline beats its bottleneck");
+        // Conservation: total busy time is schedule-invariant.
+        assert!((p.total_stage_time_s - s.total_stage_time_s).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_quantization_round_trip_error_bounded() {
+    let mut rng = Pcg64::seed_from_u64(404);
+    for _ in 0..CASES {
+        let len = rng.gen_range(1, 300);
+        let scale_mag = 10f32.powf(rng.gen_range_f64(-3.0, 3.0) as f32);
+        let data: Vec<f32> =
+            (0..len).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale_mag).collect();
+        let s = quant::scale_for(&data);
+        for &x in &data {
+            let rt = quant::dequantize(quant::quantize(x, s), s);
+            assert!(
+                (rt - x).abs() <= quant::max_error(s) + 1e-6 * scale_mag,
+                "x={x}, rt={rt}, scale={s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_monotone_in_optimizations() {
+    // Any single optimization must not hurt (energy) on any random small
+    // dataset: BP ≤ baseline, BP+PP ≤ BP, default ≤ BP+PP.
+    let mut rng = Pcg64::seed_from_u64(505);
+    let cfg = GhostConfig::paper_optimal();
+    for case in 0..8 {
+        let spec = DatasetSpec {
+            name: "prop",
+            avg_nodes: rng.gen_range(50, 800),
+            avg_edges: rng.gen_range(100, 3000),
+            n_features: rng.gen_range(8, 256),
+            n_labels: rng.gen_range(2, 8),
+            n_graphs: 1,
+            task: Task::NodeClassification,
+            max_degree_cap: 64,
+            seed: 9000 + case as u64,
+        };
+        let ds = Dataset::generate(spec);
+        let run = |flags: OptFlags| {
+            simulate_workload(ModelKind::Gcn, &ds, cfg, flags).unwrap().metrics.energy_j
+        };
+        let base = run(OptFlags::baseline());
+        let bp = run(OptFlags { buffer_partition: true, ..OptFlags::baseline() });
+        let bp_pp = run(OptFlags {
+            buffer_partition: true,
+            pipelining: true,
+            ..OptFlags::baseline()
+        });
+        let full = run(OptFlags::ghost_default());
+        assert!(bp <= base * 1.001, "BP regressed: {bp} vs {base} (case {case})");
+        assert!(bp_pp <= bp * 1.001, "PP regressed: {bp_pp} vs {bp} (case {case})");
+        assert!(full <= bp_pp * 1.001, "DAC regressed: {full} vs {bp_pp} (case {case})");
+    }
+}
+
+#[test]
+fn prop_metrics_scale_with_workload() {
+    // A strictly larger graph (same shape) must not be faster or cheaper.
+    let mut rng = Pcg64::seed_from_u64(606);
+    let cfg = GhostConfig::paper_optimal();
+    for case in 0..6 {
+        let base_nodes = rng.gen_range(100, 500);
+        let mk = |scale: usize, seed: u64| {
+            Dataset::generate(DatasetSpec {
+                name: "scale",
+                avg_nodes: base_nodes * scale,
+                avg_edges: base_nodes * scale * 4,
+                n_features: 64,
+                n_labels: 4,
+                n_graphs: 1,
+                task: Task::NodeClassification,
+                max_degree_cap: 32,
+                seed,
+            })
+        };
+        let small = mk(1, 7000 + case);
+        let big = mk(3, 7000 + case);
+        let f = OptFlags::ghost_default();
+        let rs = simulate_workload(ModelKind::Gcn, &small, cfg, f).unwrap();
+        let rb = simulate_workload(ModelKind::Gcn, &big, cfg, f).unwrap();
+        assert!(rb.metrics.latency_s > rs.metrics.latency_s);
+        assert!(rb.metrics.energy_j > rs.metrics.energy_j);
+        assert!(rb.metrics.ops > rs.metrics.ops);
+    }
+}
+
+#[test]
+fn prop_generated_graphs_respect_spec() {
+    let mut rng = Pcg64::seed_from_u64(707);
+    for _ in 0..CASES {
+        let n = rng.gen_range(2, 500);
+        let e = rng.gen_range(1, 3 * n);
+        let cap = rng.gen_range(1, 40);
+        let g = generate_skewed_graph(n, e, cap, &mut rng);
+        assert_eq!(g.n_vertices, n);
+        // The generator clamps infeasible requests to the cap capacity.
+        assert_eq!(g.n_edges(), e.min(n * cap));
+        assert!(g.max_degree() <= cap);
+        // No self loops.
+        for v in 0..n {
+            assert!(!g.neighbors(v).contains(&(v as u32)), "self loop at {v}");
+        }
+    }
+}
