@@ -8,10 +8,9 @@
 
 use ghost::baselines::{platform_by_name, run_baseline, supports, PLATFORMS};
 use ghost::config::GhostConfig;
-use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::coordinator::{BatchEngine, OptFlags, SimRequest};
 use ghost::gnn::models::{Model, ModelKind};
 use ghost::gnn::workload::Workload;
-use ghost::graph::datasets::Dataset;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -20,6 +19,9 @@ fn main() {
 
     let cfg = GhostConfig::paper_optimal();
     let flags = OptFlags::ghost_default();
+    // One engine for the whole leaderboard: each dataset is generated and
+    // partitioned once even though several models share it.
+    let engine = BatchEngine::new();
 
     for kind in ModelKind::ALL {
         if model_filter.map(|m| m != kind).unwrap_or(false) {
@@ -33,9 +35,10 @@ fn main() {
             {
                 continue;
             }
-            let dataset = Dataset::by_name(ds_name).expect("dataset");
-            let ghost_report =
-                simulate_workload(kind, &dataset, cfg, flags).expect("simulation");
+            let dataset = engine.dataset(ds_name).expect("table-2 dataset");
+            let ghost_report = engine
+                .run(&SimRequest::new(kind, ds_name, cfg, flags))
+                .expect("simulation");
             let model = Model::for_dataset(kind, &dataset.spec);
             let w = Workload::characterize(&model, &dataset);
 

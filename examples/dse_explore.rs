@@ -8,6 +8,7 @@
 
 use ghost::config::GhostConfig;
 use ghost::coordinator::dse as arch_dse;
+use ghost::coordinator::BatchEngine;
 use ghost::photonics::devices::DeviceParams;
 use ghost::photonics::dse as device_dse;
 use ghost::photonics::snr::required_snr_db;
@@ -39,8 +40,10 @@ fn main() {
 
     println!("\n== architecture level (Fig. 7c, quick workload set) ==");
     let grid = arch_dse::default_grid();
-    let workloads = arch_dse::workload_set(true);
-    let points = arch_dse::explore(&grid, &workloads);
+    let workloads = arch_dse::workload_set(true).expect("table-2 workload set");
+    let engine = BatchEngine::new();
+    let report = arch_dse::explore_with_engine(&engine, &grid, &workloads);
+    let points = &report.points;
     println!("swept {} feasible configurations; top 5 by EPB/GOPS:", points.len());
     for (i, pt) in points.iter().take(5).enumerate() {
         println!(
@@ -59,6 +62,17 @@ fn main() {
     if let Some(rank) = points.iter().position(|pt| pt.cfg == paper) {
         println!("paper optimum [20,20,18,7,17] ranks #{} of {}", rank + 1, points.len());
     }
+    println!(
+        "partition sets built once per (dataset, V, N): {} (grid points: {})",
+        engine.partition_builds(),
+        grid.len()
+    );
+    if !report.failures.is_empty() {
+        println!("{} point(s) failed or were filtered:", report.failures.len());
+        for f in report.failures.iter().take(5) {
+            println!("  {:?}: {}", f.cfg, f.error);
+        }
+    }
 
     println!("\n== device limits enforced ==");
     let infeasible = GhostConfig { r_c: 25, ..paper };
@@ -66,4 +80,12 @@ fn main() {
         Err(e) => println!("R_c=25 rejected: {e}"),
         Ok(()) => unreachable!(),
     }
+    // An infeasible point inside a sweep degrades to a recorded failure,
+    // never a process abort.
+    let sweep = arch_dse::explore_with_engine(&engine, &[paper, infeasible], &workloads);
+    println!(
+        "sweep over [paper, infeasible]: {} point(s), {} recorded failure(s)",
+        sweep.points.len(),
+        sweep.failures.len()
+    );
 }

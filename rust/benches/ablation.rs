@@ -6,7 +6,7 @@
 //! * FPV mitigation: direct trimming vs channel remapping (conclusion §5).
 
 use ghost::config::{GhostConfig, N_LEVELS};
-use ghost::coordinator::{simulate, OptFlags};
+use ghost::coordinator::{BatchEngine, OptFlags, SimRequest};
 use ghost::gnn::models::ModelKind;
 use ghost::photonics::crosstalk::worst_case_heterodyne;
 use ghost::photonics::devices::{linear_to_db, DeviceParams};
@@ -52,10 +52,16 @@ fn main() {
     });
 
     println!("\n== ablation: execution lanes V vs latency/power (GCN/Cora) ==");
+    // One engine for the sweep: Cora is generated once and each (V, N)
+    // partition set is built once, so the loop times simulation, not
+    // preprocessing.
+    let engine = BatchEngine::new();
     time_once("ablation_lane_count", || {
         for v in [5usize, 10, 20, 30] {
             let cfg = GhostConfig { v, n: v, ..GhostConfig::paper_optimal() };
-            let r = simulate(ModelKind::Gcn, "Cora", cfg, OptFlags::ghost_default()).unwrap();
+            let r = engine
+                .run(&SimRequest::new(ModelKind::Gcn, "Cora", cfg, OptFlags::ghost_default()))
+                .expect("lane-count point simulates");
             println!(
                 "  V={v:>2}: {:>9.1} us, {:>6.2} W platform, {:>8.0} GOPS, EPB/GOPS {:.2e}",
                 r.metrics.latency_s * 1e6,

@@ -3,12 +3,13 @@
 //! artifacts are present. This is the §Perf profiling driver.
 
 use ghost::config::GhostConfig;
-use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::coordinator::{simulate_workload, BatchEngine, OptFlags, SimRequest};
 use ghost::gnn::models::ModelKind;
 use ghost::graph::datasets::Dataset;
 use ghost::graph::partition::PartitionMatrix;
 use ghost::photonics::crosstalk::worst_case_heterodyne;
 use ghost::photonics::mr::MicroringDesign;
+#[cfg(feature = "pjrt")]
 use ghost::runtime::Engine;
 use ghost::sim;
 use ghost::util::bench::{bench, black_box};
@@ -37,6 +38,17 @@ fn main() {
         black_box(simulate_workload(ModelKind::Gin, &proteins, cfg, flags).unwrap());
     });
 
+    // The batch engine's cache: identical request, cold vs warm partition
+    // cache (warm skips dataset generation and partitioning entirely).
+    let req = SimRequest::new(ModelKind::Gcn, "PubMed", cfg, flags);
+    bench("engine_run_pubmed_gcn_cold_cache", 0, 5, || {
+        black_box(BatchEngine::new().run(&req).expect("engine run"));
+    });
+    let engine = BatchEngine::new();
+    bench("engine_run_pubmed_gcn_warm_cache", 1, 15, || {
+        black_box(engine.run(&req).expect("engine run"));
+    });
+
     // Pipeline DP on a large synthetic schedule.
     let mut rng = Pcg64::seed_from_u64(42);
     let schedule: Vec<Vec<f64>> =
@@ -57,18 +69,24 @@ fn main() {
         black_box(Dataset::by_name("Amazon").unwrap());
     });
 
-    // PJRT execute path (functional datapath), artifacts permitting.
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("gcn_cora.json").exists() {
-        match Engine::load(&dir, "gcn_cora") {
-            Ok(engine) => {
-                bench("pjrt_execute_gcn_cora", 1, 5, || {
-                    black_box(engine.run().expect("execute"));
-                });
+    // PJRT execute path (functional datapath), feature and artifacts
+    // permitting.
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("gcn_cora.json").exists() {
+            match Engine::load(&dir, "gcn_cora") {
+                Ok(engine) => {
+                    bench("pjrt_execute_gcn_cora", 1, 5, || {
+                        black_box(engine.run().expect("execute"));
+                    });
+                }
+                Err(e) => println!("skipping pjrt bench: {e}"),
             }
-            Err(e) => println!("skipping pjrt bench: {e}"),
+        } else {
+            println!("skipping pjrt bench: run `make artifacts` first");
         }
-    } else {
-        println!("skipping pjrt bench: run `make artifacts` first");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("skipping pjrt bench: built without the `pjrt` feature");
 }

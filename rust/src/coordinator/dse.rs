@@ -4,13 +4,20 @@
 //! bounds (R_c ≤ 20 coherent MRs, R_r ≤ 18 wavelengths), evaluating the
 //! average EPB/GOPS across the evaluation workloads, and reports the
 //! frontier. The paper's optimum is `[20, 20, 18, 7, 17]`.
+//!
+//! The sweep runs through a [`BatchEngine`]: partition matrices are built
+//! once per distinct `(dataset, V, N)` and shared across the whole grid —
+//! the sweep's dominant cost otherwise. Failing points (unknown dataset,
+//! infeasible config, non-finite metric) degrade to recorded
+//! [`DseFailure`] entries instead of aborting the sweep.
 
 use crate::config::GhostConfig;
 use crate::energy::geomean;
 use crate::gnn::models::ModelKind;
 use crate::graph::datasets::Dataset;
-use crate::graph::partition::PartitionMatrix;
 
+use super::engine::BatchEngine;
+use super::error::SimError;
 use super::optimizations::OptFlags;
 use super::schedule::{simulate_with_partitions, simulate_workload};
 
@@ -24,6 +31,28 @@ pub struct ArchDsePoint {
     pub gops: f64,
     /// Geometric-mean EPB (J/bit).
     pub epb: f64,
+}
+
+/// One grid point that produced no frontier entry, and why.
+#[derive(Debug, Clone)]
+pub struct DseFailure {
+    pub cfg: GhostConfig,
+    pub error: SimError,
+}
+
+/// Outcome of a sweep: the frontier (sorted by EPB/GOPS ascending, best
+/// first) plus every point that failed or was filtered, with its reason.
+#[derive(Debug, Clone, Default)]
+pub struct DseReport {
+    pub points: Vec<ArchDsePoint>,
+    pub failures: Vec<DseFailure>,
+}
+
+impl DseReport {
+    /// The best (lowest EPB/GOPS) point, if any point survived.
+    pub fn best(&self) -> Option<&ArchDsePoint> {
+        self.points.first()
+    }
 }
 
 /// The sweep grid: a lattice over the five parameters within device
@@ -56,33 +85,54 @@ pub fn default_grid() -> Vec<GhostConfig> {
     grid
 }
 
-/// Workload set for the sweep. `quick = true` uses one representative
+/// Workload names for the sweep. `quick = true` uses one representative
 /// dataset per model (the Fig. 7(c) shape at ~4× less compute);
 /// `quick = false` uses all 16 model × dataset pairs as in the paper.
-pub fn workload_set(quick: bool) -> Vec<(ModelKind, Dataset)> {
+pub fn workload_names(quick: bool) -> Vec<(ModelKind, &'static str)> {
     let mut out = Vec::new();
     for kind in ModelKind::ALL {
-        let names: &[&str] = if quick { &kind.datasets()[..1] } else { &kind.datasets()[..] };
-        for name in names {
-            out.push((kind, Dataset::by_name(name).expect("table-2 dataset")));
+        let all = kind.datasets();
+        let take = if quick { 1 } else { all.len() };
+        for name in &all[..take] {
+            out.push((kind, *name));
         }
     }
     out
 }
 
-/// Evaluate one configuration over a workload set (geometric means).
-pub fn evaluate(cfg: GhostConfig, workloads: &[(ModelKind, Dataset)]) -> Option<ArchDsePoint> {
+/// Realizes the workload set. An unknown dataset name comes back as a
+/// recoverable [`SimError::UnknownDataset`], not a panic.
+pub fn workload_set(quick: bool) -> Result<Vec<(ModelKind, Dataset)>, SimError> {
+    workload_names(quick)
+        .into_iter()
+        .map(|(kind, name)| {
+            Dataset::by_name(name)
+                .map(|ds| (kind, ds))
+                .ok_or_else(|| SimError::UnknownDataset(name.to_string()))
+        })
+        .collect()
+}
+
+/// Evaluate one configuration over a workload set (geometric means),
+/// rebuilding partitions from scratch — the uncached reference the engine
+/// path is tested against. A failing workload is propagated with its
+/// `(model, dataset)` identity attached.
+pub fn evaluate(
+    cfg: GhostConfig,
+    workloads: &[(ModelKind, Dataset)],
+) -> Result<ArchDsePoint, SimError> {
     let flags = OptFlags::ghost_default();
     let mut epb_gops = Vec::with_capacity(workloads.len());
     let mut gops = Vec::with_capacity(workloads.len());
     let mut epb = Vec::with_capacity(workloads.len());
     for (kind, ds) in workloads {
-        let r = simulate_workload(*kind, ds, cfg, flags).ok()?;
+        let r = simulate_workload(*kind, ds, cfg, flags)
+            .map_err(|e| e.in_workload(*kind, ds.spec.name))?;
         epb_gops.push(r.metrics.epb_per_gops());
         gops.push(r.metrics.gops());
         epb.push(r.metrics.epb());
     }
-    Some(ArchDsePoint {
+    Ok(ArchDsePoint {
         cfg,
         epb_per_gops: geomean(epb_gops),
         gops: geomean(gops),
@@ -90,24 +140,27 @@ pub fn evaluate(cfg: GhostConfig, workloads: &[(ModelKind, Dataset)]) -> Option<
     })
 }
 
-/// Evaluate with partitions amortized per `(V, N)` (the configs sharing a
-/// partition shape reuse the same preprocessing).
-fn evaluate_with_partitions(
+/// Evaluate one configuration through the engine's partition cache: every
+/// config sharing a `(dataset, V, N)` key reuses the same preprocessing.
+pub fn evaluate_with_engine(
+    engine: &BatchEngine,
     cfg: GhostConfig,
     workloads: &[(ModelKind, Dataset)],
-    partitions: &[Vec<PartitionMatrix>],
-) -> Option<ArchDsePoint> {
+) -> Result<ArchDsePoint, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
     let flags = OptFlags::ghost_default();
     let mut epb_gops = Vec::with_capacity(workloads.len());
     let mut gops = Vec::with_capacity(workloads.len());
     let mut epb = Vec::with_capacity(workloads.len());
-    for ((kind, ds), pms) in workloads.iter().zip(partitions) {
-        let r = simulate_with_partitions(*kind, ds, pms, cfg, flags).ok()?;
+    for (kind, ds) in workloads {
+        let pms = engine.partitions_for(ds, cfg.v, cfg.n)?;
+        let r = simulate_with_partitions(*kind, ds, &pms, cfg, flags)
+            .map_err(|e| e.in_workload(*kind, ds.spec.name))?;
         epb_gops.push(r.metrics.epb_per_gops());
         gops.push(r.metrics.gops());
         epb.push(r.metrics.epb());
     }
-    Some(ArchDsePoint {
+    Ok(ArchDsePoint {
         cfg,
         epb_per_gops: geomean(epb_gops),
         gops: geomean(gops),
@@ -115,35 +168,69 @@ fn evaluate_with_partitions(
     })
 }
 
-/// Run the sweep (thread-pool parallel) and return points sorted by
-/// EPB/GOPS ascending (the best configuration first). Partition matrices
-/// are built once per distinct `(V, N)` pair and shared across the grid —
-/// the sweep's dominant cost otherwise.
-pub fn explore(grid: &[GhostConfig], workloads: &[(ModelKind, Dataset)]) -> Vec<ArchDsePoint> {
-    use std::collections::HashMap;
+/// Splits raw per-config results into the sorted frontier and the failure
+/// list. Non-finite EPB/GOPS points are filtered with a warning instead of
+/// poisoning the sort (which previously panicked via `partial_cmp`); the
+/// survivors sort with `f64::total_cmp`.
+fn sift_points(raw: Vec<(GhostConfig, Result<ArchDsePoint, SimError>)>) -> DseReport {
+    let mut points = Vec::new();
+    let mut failures = Vec::new();
+    for (cfg, res) in raw {
+        match res {
+            Ok(p) if p.epb_per_gops.is_finite() => points.push(p),
+            Ok(p) => {
+                eprintln!(
+                    "warning: dse point {cfg:?} produced non-finite EPB/GOPS ({}); \
+                     dropping it from the frontier",
+                    p.epb_per_gops
+                );
+                failures.push(DseFailure {
+                    cfg,
+                    error: SimError::NonFiniteMetric {
+                        metric: "epb_per_gops",
+                        value: p.epb_per_gops,
+                    },
+                });
+            }
+            Err(error) => failures.push(DseFailure { cfg, error }),
+        }
+    }
+    points.sort_by(|a, b| a.epb_per_gops.total_cmp(&b.epb_per_gops));
+    DseReport { points, failures }
+}
+
+/// Run the sweep (thread-pool parallel) through a sweep-local engine that
+/// is dropped when the sweep returns, so a one-shot `explore` retains no
+/// partition sets afterwards. Callers that want cross-sweep reuse pass
+/// their own (or the [`BatchEngine::global`]) engine to
+/// [`explore_with_engine`].
+pub fn explore(grid: &[GhostConfig], workloads: &[(ModelKind, Dataset)]) -> DseReport {
+    explore_with_engine(&BatchEngine::new(), grid, workloads)
+}
+
+/// Run the sweep through a specific engine. Partition matrices are built
+/// once per distinct `(dataset, V, N)` pair (pre-warmed in parallel, then
+/// shared across the grid); each grid point evaluates on the thread pool,
+/// and failures are reported per point instead of being silently dropped.
+pub fn explore_with_engine(
+    engine: &BatchEngine,
+    grid: &[GhostConfig],
+    workloads: &[(ModelKind, Dataset)],
+) -> DseReport {
+    // Pre-warm the partition cache: one parallel build per distinct shape.
     let mut shapes: Vec<(usize, usize)> = grid.iter().map(|c| (c.v, c.n)).collect();
     shapes.sort_unstable();
     shapes.dedup();
-    let partition_sets: HashMap<(usize, usize), Vec<Vec<PartitionMatrix>>> =
-        crate::util::parallel::par_map(&shapes, |&(v, n)| {
-            let per_workload: Vec<Vec<PartitionMatrix>> = workloads
-                .iter()
-                .map(|(_, ds)| {
-                    ds.graphs.iter().map(|g| PartitionMatrix::build(g, v, n)).collect()
-                })
-                .collect();
-            ((v, n), per_workload)
-        })
-        .into_iter()
-        .collect();
-    let mut points: Vec<ArchDsePoint> = crate::util::parallel::par_map(grid, |&cfg| {
-        evaluate_with_partitions(cfg, workloads, &partition_sets[&(cfg.v, cfg.n)])
-    })
-    .into_iter()
-    .flatten()
-    .collect();
-    points.sort_by(|a, b| a.epb_per_gops.partial_cmp(&b.epb_per_gops).unwrap());
-    points
+    crate::util::parallel::par_map(&shapes, |&(v, n)| {
+        for (_, ds) in workloads {
+            // Invalid shapes surface again per-point in the sweep below.
+            let _ = engine.partitions_for(ds, v, n);
+        }
+    });
+    let raw = crate::util::parallel::par_map(grid, |&cfg| {
+        (cfg, evaluate_with_engine(engine, cfg, workloads))
+    });
+    sift_points(raw)
 }
 
 #[cfg(test)]
@@ -164,7 +251,7 @@ mod tests {
     fn paper_point_is_near_optimal() {
         // Small sweep around the paper point: it must rank in the top
         // quartile of its neighborhood on EPB/GOPS.
-        let workloads = workload_set(true);
+        let workloads = workload_set(true).unwrap();
         let paper = GhostConfig::paper_optimal();
         let mut neighborhood = vec![paper];
         for (dn, dv) in [(-10i64, 0i64), (10, 0), (0, -10), (0, 10)] {
@@ -177,16 +264,76 @@ mod tests {
                 neighborhood.push(cfg);
             }
         }
-        let pts = explore(&neighborhood, &workloads);
+        let report = explore(&neighborhood, &workloads);
+        assert!(report.failures.is_empty(), "failures: {:?}", report.failures);
+        let pts = &report.points;
         let rank = pts.iter().position(|p| p.cfg == paper).unwrap();
         assert!(rank <= pts.len() / 2, "paper point ranked {rank} of {}", pts.len());
     }
 
     #[test]
     fn evaluate_produces_finite_metrics() {
-        let workloads = workload_set(true);
+        let workloads = workload_set(true).unwrap();
         let p = evaluate(GhostConfig::paper_optimal(), &workloads).unwrap();
         assert!(p.epb_per_gops.is_finite() && p.epb_per_gops > 0.0);
         assert!(p.gops.is_finite() && p.gops > 0.0);
+    }
+
+    #[test]
+    fn engine_evaluation_matches_uncached_reference() {
+        let workloads = workload_set(true).unwrap();
+        let cfg = GhostConfig::paper_optimal();
+        let engine = BatchEngine::new();
+        let cached = evaluate_with_engine(&engine, cfg, &workloads).unwrap();
+        let uncached = evaluate(cfg, &workloads).unwrap();
+        assert_eq!(cached.epb_per_gops, uncached.epb_per_gops);
+        assert_eq!(cached.gops, uncached.gops);
+        assert_eq!(cached.epb, uncached.epb);
+    }
+
+    #[test]
+    fn sift_filters_non_finite_points_and_sorts_with_total_cmp() {
+        let cfg = GhostConfig::paper_optimal();
+        let pt = |x: f64| ArchDsePoint { cfg, epb_per_gops: x, gops: 1.0, epb: 1.0 };
+        let raw = vec![
+            (cfg, Ok(pt(2.0))),
+            (cfg, Ok(pt(f64::NAN))),
+            (cfg, Ok(pt(1.0))),
+            (cfg, Ok(pt(f64::INFINITY))),
+            (cfg, Err(SimError::UnknownDataset("nope".into()))),
+        ];
+        let report = sift_points(raw);
+        assert_eq!(report.points.len(), 2);
+        assert_eq!(report.points[0].epb_per_gops, 1.0);
+        assert_eq!(report.points[1].epb_per_gops, 2.0);
+        assert_eq!(report.failures.len(), 3);
+        assert!(report
+            .failures
+            .iter()
+            .any(|f| matches!(f.error, SimError::NonFiniteMetric { .. })));
+        assert!(report
+            .failures
+            .iter()
+            .any(|f| matches!(f.error, SimError::UnknownDataset(_))));
+        assert_eq!(report.best().unwrap().epb_per_gops, 1.0);
+    }
+
+    #[test]
+    fn infeasible_grid_point_becomes_failure_not_abort() {
+        let workloads = workload_set(true).unwrap();
+        let good = GhostConfig::paper_optimal();
+        let bad = GhostConfig { r_c: 25, ..good }; // > 20 coherent MRs
+        let report = explore_with_engine(&BatchEngine::new(), &[good, bad], &workloads);
+        assert_eq!(report.points.len(), 1);
+        assert_eq!(report.failures.len(), 1);
+        assert_eq!(report.failures[0].cfg, bad);
+        assert!(matches!(report.failures[0].error, SimError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn workload_sets_cover_the_paper_matrix() {
+        assert_eq!(workload_names(true).len(), 4);
+        assert_eq!(workload_names(false).len(), 16);
+        assert_eq!(workload_set(false).unwrap().len(), 16);
     }
 }

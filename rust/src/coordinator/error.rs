@@ -1,0 +1,105 @@
+//! Structured simulation errors.
+//!
+//! Every fallible path of the simulation layer returns a [`SimError`]
+//! instead of a bare `String` or a panic, so batch sweeps can record *why*
+//! a point failed (and which workload inside it) without aborting the
+//! whole run.
+
+use std::fmt;
+
+use crate::gnn::models::ModelKind;
+
+/// Why a simulation (or one point of a sweep) could not produce a result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    /// The named dataset is not one of the Table-2 corpora.
+    UnknownDataset(String),
+    /// The architectural configuration violates the device-level
+    /// feasibility bounds (see [`crate::config::GhostConfig::validate`]).
+    InvalidConfig(String),
+    /// The optimization-flag combination is inconsistent (§4.4 rules).
+    InvalidFlags(String),
+    /// A pre-built partition slice does not cover the dataset's graphs.
+    PartitionCountMismatch { expected: usize, got: usize },
+    /// A pre-built partition was constructed for a different `(V, N)`
+    /// shape than the configuration being simulated.
+    PartitionShapeMismatch { expected: (usize, usize), got: (usize, usize) },
+    /// An aggregated metric came out NaN/infinite and the point was
+    /// dropped from the frontier instead of poisoning the sort.
+    NonFiniteMetric { metric: &'static str, value: f64 },
+    /// A specific workload inside a multi-workload evaluation failed;
+    /// carries which `(model, dataset)` pair so sweeps can report why a
+    /// configuration point vanished.
+    Workload { model: ModelKind, dataset: String, source: Box<SimError> },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::UnknownDataset(name) => {
+                write!(f, "unknown dataset {name} (not in Table 2)")
+            }
+            SimError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            SimError::InvalidFlags(msg) => write!(f, "invalid optimization flags: {msg}"),
+            SimError::PartitionCountMismatch { expected, got } => write!(
+                f,
+                "partition count mismatch: dataset has {expected} graph(s) but {got} partition matrix(es) were supplied"
+            ),
+            SimError::PartitionShapeMismatch { expected, got } => write!(
+                f,
+                "partition shape mismatch: config wants (V, N) = {expected:?} but a partition was built for {got:?}"
+            ),
+            SimError::NonFiniteMetric { metric, value } => {
+                write!(f, "non-finite {metric} = {value}")
+            }
+            SimError::Workload { model, dataset, source } => {
+                write!(f, "workload {}/{dataset}: {source}", model.name())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimError::Workload { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl SimError {
+    /// Wraps an error with the `(model, dataset)` workload it came from.
+    pub fn in_workload(self, model: ModelKind, dataset: impl Into<String>) -> Self {
+        SimError::Workload { model, dataset: dataset.into(), source: Box::new(self) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        let e = SimError::UnknownDataset("Nope".into());
+        assert!(e.to_string().contains("Nope"));
+        let wrapped = e.in_workload(ModelKind::Gcn, "Cora");
+        let msg = wrapped.to_string();
+        assert!(msg.contains("GCN") && msg.contains("Cora") && msg.contains("Nope"), "{msg}");
+    }
+
+    #[test]
+    fn workload_exposes_source() {
+        use std::error::Error;
+        let e = SimError::InvalidConfig("bad".into()).in_workload(ModelKind::Gat, "Citeseer");
+        assert!(e.source().is_some());
+        assert!(SimError::InvalidConfig("bad".into()).source().is_none());
+    }
+
+    #[test]
+    fn shape_mismatch_formats_both_shapes() {
+        let e = SimError::PartitionShapeMismatch { expected: (20, 20), got: (10, 10) };
+        let msg = e.to_string();
+        assert!(msg.contains("(20, 20)") && msg.contains("(10, 10)"), "{msg}");
+    }
+}

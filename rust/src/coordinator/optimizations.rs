@@ -118,7 +118,7 @@ mod tests {
     #[test]
     fn presets_are_valid() {
         for p in OptFlags::fig8_presets() {
-            p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.label()));
+            assert_eq!(p.validate(), Ok(()), "{}", p.label());
         }
     }
 

@@ -22,6 +22,7 @@ use crate::graph::datasets::Dataset;
 use crate::graph::partition::{OutputGroupPlan, PartitionMatrix};
 use crate::sim;
 
+use super::error::SimError;
 use super::optimizations::OptFlags;
 
 /// Fraction of MR banks whose per-layer retarget exceeds the EO range and
@@ -64,9 +65,9 @@ pub fn simulate(
     dataset_name: &str,
     cfg: GhostConfig,
     flags: OptFlags,
-) -> Result<SimReport, String> {
+) -> Result<SimReport, SimError> {
     let dataset = Dataset::by_name(dataset_name)
-        .ok_or_else(|| format!("unknown dataset {dataset_name}"))?;
+        .ok_or_else(|| SimError::UnknownDataset(dataset_name.to_string()))?;
     simulate_workload(kind, &dataset, cfg, flags)
 }
 
@@ -80,7 +81,10 @@ pub fn simulate_workload(
     dataset: &Dataset,
     cfg: GhostConfig,
     flags: OptFlags,
-) -> Result<SimReport, String> {
+) -> Result<SimReport, SimError> {
+    // Validate before partitioning: a zero-dimension config must come back
+    // as an error, not trip the partition builder's assert.
+    cfg.validate().map_err(SimError::InvalidConfig)?;
     let partitions: Vec<PartitionMatrix> =
         dataset.graphs.iter().map(|g| PartitionMatrix::build(g, cfg.v, cfg.n)).collect();
     simulate_with_partitions(kind, dataset, &partitions, cfg, flags)
@@ -95,11 +99,23 @@ pub fn simulate_with_partitions(
     partitions: &[PartitionMatrix],
     cfg: GhostConfig,
     flags: OptFlags,
-) -> Result<SimReport, String> {
-    cfg.validate()?;
-    flags.validate()?;
-    debug_assert_eq!(partitions.len(), dataset.graphs.len());
-    debug_assert!(partitions.iter().all(|p| p.v == cfg.v && p.n == cfg.n));
+) -> Result<SimReport, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
+    flags.validate().map_err(SimError::InvalidFlags)?;
+    // Real checks, not debug_asserts: a mismatched partition silently
+    // produces wrong metrics in --release otherwise.
+    if partitions.len() != dataset.graphs.len() {
+        return Err(SimError::PartitionCountMismatch {
+            expected: dataset.graphs.len(),
+            got: partitions.len(),
+        });
+    }
+    if let Some(pm) = partitions.iter().find(|p| p.v != cfg.v || p.n != cfg.n) {
+        return Err(SimError::PartitionShapeMismatch {
+            expected: (cfg.v, cfg.n),
+            got: (pm.v, pm.n),
+        });
+    }
     let ctx = ArchContext::paper(cfg);
     let model = Model::for_dataset(kind, &dataset.spec);
     let workload = Workload::characterize(&model, dataset);

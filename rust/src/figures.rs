@@ -5,11 +5,11 @@
 
 use crate::baselines::{run_baseline, supports, PLATFORMS};
 use crate::config::GhostConfig;
-use crate::coordinator::{simulate_workload, OptFlags, SimReport};
+use crate::coordinator::{BatchEngine, OptFlags, SimReport, SimRequest};
 use crate::energy::{geomean, Metrics};
 use crate::gnn::models::{Model, ModelKind};
 use crate::gnn::workload::Workload;
-use crate::graph::datasets::{Dataset, ALL_DATASETS};
+use crate::graph::datasets::ALL_DATASETS;
 use crate::photonics::devices::DeviceParams;
 
 /// All 16 evaluated `(model, dataset)` workloads, paper order.
@@ -23,14 +23,19 @@ pub fn all_pairs() -> Vec<(ModelKind, &'static str)> {
     v
 }
 
-/// Runs the GHOST simulator on every workload with the given flags.
+/// Runs the GHOST simulator on every workload with the given flags,
+/// fanned out in parallel through the process-wide [`BatchEngine`] (each
+/// dataset is generated and partitioned once per `(dataset, V, N)` for the
+/// whole process, however many figures ask for it).
 pub fn ghost_reports(cfg: GhostConfig, flags: OptFlags) -> Vec<SimReport> {
-    all_pairs()
+    let reqs: Vec<SimRequest> = all_pairs()
         .into_iter()
-        .map(|(kind, ds)| {
-            let dataset = Dataset::by_name(ds).expect("table-2 dataset");
-            simulate_workload(kind, &dataset, cfg, flags).expect("simulation")
-        })
+        .map(|(kind, ds)| SimRequest::new(kind, ds, cfg, flags))
+        .collect();
+    BatchEngine::global()
+        .run_batch(&reqs)
+        .into_iter()
+        .map(|r| r.expect("table-2 workload simulates"))
         .collect()
 }
 
@@ -73,10 +78,11 @@ pub struct Table2Row {
 }
 
 pub fn table2() -> Vec<Table2Row> {
+    let engine = BatchEngine::global();
     ALL_DATASETS
         .iter()
         .map(|spec| {
-            let d = Dataset::generate(*spec);
+            let d = engine.dataset(spec.name).expect("table-2 dataset");
             Table2Row {
                 name: spec.name,
                 avg_nodes: d.total_vertices() as f64 / d.graphs.len() as f64,
@@ -117,36 +123,14 @@ pub struct Fig8Row {
 }
 
 pub fn fig8(cfg: GhostConfig) -> Vec<Fig8Row> {
-    // Partition every workload once; the 9 preset evaluations reuse them
-    // (offline preprocessing is flag-independent).
-    let prepared: Vec<(ModelKind, Dataset, Vec<crate::graph::PartitionMatrix>)> = all_pairs()
-        .into_iter()
-        .map(|(kind, ds)| {
-            let dataset = Dataset::by_name(ds).expect("table-2 dataset");
-            let partitions = dataset
-                .graphs
-                .iter()
-                .map(|g| crate::graph::PartitionMatrix::build(g, cfg.v, cfg.n))
-                .collect();
-            (kind, dataset, partitions)
-        })
-        .collect();
-    let run = |flags: OptFlags| -> Vec<SimReport> {
-        prepared
-            .iter()
-            .map(|(kind, dataset, partitions)| {
-                crate::coordinator::simulate_with_partitions(
-                    *kind, dataset, partitions, cfg, flags,
-                )
-                .expect("simulation")
-            })
-            .collect()
-    };
-    let baseline: Vec<SimReport> = run(OptFlags::baseline());
+    // The engine's partition cache makes the 9 preset evaluations share
+    // one partitioning per workload (offline preprocessing is
+    // flag-independent, so every preset hits the same (dataset, V, N) key).
+    let baseline: Vec<SimReport> = ghost_reports(cfg, OptFlags::baseline());
     OptFlags::fig8_presets()
         .into_iter()
         .map(|flags| {
-            let reports = run(flags);
+            let reports = ghost_reports(cfg, flags);
             let per_workload: Vec<(String, String, f64)> = reports
                 .iter()
                 .zip(&baseline)
@@ -235,12 +219,14 @@ pub struct ComparisonRow {
 pub fn comparison_detail(
     cfg: GhostConfig,
 ) -> Vec<(ModelKind, &'static str, Metrics, Vec<(&'static str, Metrics)>)> {
+    let engine = BatchEngine::global();
     all_pairs()
         .into_iter()
         .map(|(kind, ds)| {
-            let dataset = Dataset::by_name(ds).expect("dataset");
-            let ghost = simulate_workload(kind, &dataset, cfg, OptFlags::ghost_default())
-                .expect("sim")
+            let dataset = engine.dataset(ds).expect("table-2 dataset");
+            let ghost = engine
+                .run(&SimRequest::new(kind, ds, cfg, OptFlags::ghost_default()))
+                .expect("table-2 workload simulates")
                 .metrics;
             let model = Model::for_dataset(kind, &dataset.spec);
             let w = Workload::characterize(&model, &dataset);

@@ -19,11 +19,14 @@
 //! * [`sim`] — the pipeline-stage latency/energy simulator.
 //! * [`coordinator`] — the L3 contribution: partition scheduling, two-level
 //!   pipelining (GCN-family and GAT orderings), weight-DAC sharing, and
-//!   workload balancing; plus the architectural DSE of Fig. 7(c).
+//!   workload balancing; the cached, parallel
+//!   [`coordinator::engine::BatchEngine`] every sweep runs through; plus
+//!   the architectural DSE of Fig. 7(c).
 //! * [`baselines`] — analytic roofline models of the nine comparison
 //!   platforms (GRIP, HyGCN, EnGN, HW_ACC, ReGNN, ReGraphX, TPU, CPU, GPU).
 //! * [`energy`] — EPB / GOPS / EPB-per-GOPS accounting shared by all models.
-//! * [`runtime`] — the PJRT functional datapath: loads `artifacts/*.hlo.txt`
+//! * [`runtime`] — the PJRT functional datapath (execution requires the
+//!   off-by-default `pjrt` cargo feature): loads `artifacts/*.hlo.txt`
 //!   lowered from the JAX/Pallas model (build-time Python) and executes real
 //!   GNN inference from Rust.
 //! * [`figures`] — regenerates every table and figure in the paper's

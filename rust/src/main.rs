@@ -11,11 +11,12 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use ghost::config::GhostConfig;
-use ghost::coordinator::{dse as arch_dse, simulate, OptFlags};
+use ghost::coordinator::{dse as arch_dse, BatchEngine, OptFlags, SimRequest};
 use ghost::figures;
 use ghost::gnn::models::ModelKind;
 use ghost::photonics::devices::DeviceParams;
 use ghost::photonics::dse as device_dse;
+#[cfg(feature = "pjrt")]
 use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
 use ghost::util::json::Json;
 
@@ -28,7 +29,7 @@ USAGE:
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
                 [--comparison] [--all]
-  ghost infer --artifact <name> [--dir artifacts] [--reps N]
+  ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 ";
 
@@ -107,8 +108,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         dac_sharing: !args.has("no-dac-sharing") && !wb,
         workload_balancing: wb,
     };
-    let r =
-        simulate(kind, dataset, GhostConfig::paper_optimal(), flags).map_err(|e| anyhow!(e))?;
+    let r = BatchEngine::global()
+        .run(&SimRequest::new(kind, dataset, GhostConfig::paper_optimal(), flags))?;
     println!("GHOST simulation: {} / {}", r.model.name(), r.dataset);
     println!("  flags        : {}", r.flags.label());
     println!("  latency      : {:.3} us", r.metrics.latency_s * 1e6);
@@ -155,9 +156,10 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
     if args.has("arch") || all {
         println!("Fig. 7(c): architectural DSE over [N,V,Rr,Rc,Tr] (EPB/GOPS, lower = better)");
         let grid = arch_dse::default_grid();
-        let workloads = arch_dse::workload_set(args.has("quick"));
-        let points = arch_dse::explore(&grid, &workloads);
-        for (i, p) in points.iter().take(10).enumerate() {
+        let workloads = arch_dse::workload_set(args.has("quick"))?;
+        let engine = BatchEngine::new();
+        let report = arch_dse::explore_with_engine(&engine, &grid, &workloads);
+        for (i, p) in report.points.iter().take(10).enumerate() {
             println!(
                 "  #{:<2} [{}, {}, {}, {}, {}]  EPB/GOPS {:.3e}  GOPS {:.0}  EPB {:.3e}",
                 i + 1,
@@ -171,9 +173,29 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
                 p.epb
             );
         }
-        if let Some(rank) = points.iter().position(|p| p.cfg == GhostConfig::paper_optimal()) {
-            println!("  paper point [20,20,18,7,17] ranks #{} of {}", rank + 1, points.len());
+        if let Some(rank) =
+            report.points.iter().position(|p| p.cfg == GhostConfig::paper_optimal())
+        {
+            println!(
+                "  paper point [20,20,18,7,17] ranks #{} of {}",
+                rank + 1,
+                report.points.len()
+            );
         }
+        if !report.failures.is_empty() {
+            println!("  {} configuration(s) failed or were filtered:", report.failures.len());
+            for f in report.failures.iter().take(5) {
+                let c = f.cfg;
+                println!(
+                    "    [{}, {}, {}, {}, {}]: {}",
+                    c.n, c.v, c.r_r, c.r_c, c.t_r, f.error
+                );
+            }
+        }
+        println!(
+            "  partition sets built once per (dataset, V, N): {}",
+            engine.partition_builds()
+        );
     }
     Ok(())
 }
@@ -217,6 +239,17 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_infer(_argv: &[String]) -> Result<()> {
+    bail!(
+        "`ghost infer` needs the PJRT datapath, which this binary was built \
+         without: add the `xla` crate (xla-rs, with a local xla_extension \
+         install) to rust/Cargo.toml, then rebuild with `--features pjrt`. \
+         See the Feature gating section of rust/src/runtime/mod.rs."
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_infer(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[])?;
     let artifact = args.require("artifact")?;

@@ -1,0 +1,135 @@
+//! Integration tests for the batched simulation engine and the structured
+//! error paths: partition-cache reuse across configurations sharing a
+//! `(dataset, V, N)` shape, release-mode rejection of mismatched
+//! partitions, per-point failure reporting in the DSE sweep, and engine
+//! results being bit-identical to the uncached serial simulator.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::dse;
+use ghost::coordinator::{
+    simulate_with_partitions, simulate_workload, BatchEngine, OptFlags, SimError, SimRequest,
+};
+use ghost::gnn::models::ModelKind;
+use ghost::graph::datasets::Dataset;
+use ghost::graph::partition::PartitionMatrix;
+
+#[test]
+fn partition_sets_built_once_per_distinct_shape() {
+    let engine = BatchEngine::new();
+    let flags = OptFlags::ghost_default();
+    let base = GhostConfig::paper_optimal();
+    // Three configs share (V, N) = (20, 20) — they differ only in array
+    // shapes, which partitioning never sees — plus one distinct shape.
+    let cfgs = [
+        base,
+        GhostConfig { t_r: 11, ..base },
+        GhostConfig { r_c: 14, ..base },
+        GhostConfig { v: 10, n: 10, ..base },
+    ];
+    let reqs: Vec<SimRequest> = cfgs
+        .iter()
+        .map(|&cfg| SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags))
+        .collect();
+    for r in engine.run_batch(&reqs) {
+        r.expect("every request simulates");
+    }
+    assert_eq!(engine.dataset_builds(), 1, "Cora generated once");
+    assert_eq!(engine.partition_builds(), 2, "one build per distinct (dataset, V, N)");
+    // Re-running the whole batch hits the caches only.
+    for r in engine.run_batch(&reqs) {
+        r.expect("every request simulates");
+    }
+    assert_eq!(engine.partition_builds(), 2);
+    assert_eq!(engine.dataset_builds(), 1);
+}
+
+#[test]
+fn engine_results_identical_to_serial_simulation() {
+    let engine = BatchEngine::new();
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let pairs =
+        [(ModelKind::Gcn, "Cora"), (ModelKind::Gat, "Citeseer"), (ModelKind::Gin, "Mutag")];
+    let reqs: Vec<SimRequest> =
+        pairs.iter().map(|&(kind, ds)| SimRequest::new(kind, ds, cfg, flags)).collect();
+    let batch = engine.run_batch(&reqs);
+    for (&(kind, name), via_engine) in pairs.iter().zip(batch) {
+        let via_engine = via_engine.expect("engine run");
+        let ds = Dataset::by_name(name).unwrap();
+        let serial = simulate_workload(kind, &ds, cfg, flags).unwrap();
+        assert_eq!(via_engine.metrics, serial.metrics, "{name}");
+        assert_eq!(via_engine.aggregate_s, serial.aggregate_s, "{name}");
+        assert_eq!(via_engine.combine_s, serial.combine_s, "{name}");
+        assert_eq!(via_engine.update_s, serial.update_s, "{name}");
+        assert_eq!(via_engine.platform_w, serial.platform_w, "{name}");
+    }
+}
+
+#[test]
+fn mismatched_partitions_rejected_even_in_release() {
+    // These used to be debug_asserts, i.e. wrong metrics in --release.
+    let ds = Dataset::by_name("Cora").unwrap();
+    let cfg = GhostConfig::paper_optimal(); // (V, N) = (20, 20)
+    let flags = OptFlags::ghost_default();
+
+    let wrong_shape: Vec<PartitionMatrix> =
+        ds.graphs.iter().map(|g| PartitionMatrix::build(g, 10, 10)).collect();
+    let err = simulate_with_partitions(ModelKind::Gcn, &ds, &wrong_shape, cfg, flags)
+        .expect_err("wrong (V, N) must be rejected");
+    assert_eq!(
+        err,
+        SimError::PartitionShapeMismatch { expected: (20, 20), got: (10, 10) }
+    );
+
+    let err = simulate_with_partitions(ModelKind::Gcn, &ds, &[], cfg, flags)
+        .expect_err("missing partitions must be rejected");
+    assert_eq!(err, SimError::PartitionCountMismatch { expected: 1, got: 0 });
+}
+
+#[test]
+fn unknown_dataset_degrades_to_error_value() {
+    let engine = BatchEngine::new();
+    let req = SimRequest::new(
+        ModelKind::Gcn,
+        "NoSuchDataset",
+        GhostConfig::paper_optimal(),
+        OptFlags::ghost_default(),
+    );
+    assert_eq!(
+        engine.run(&req).unwrap_err(),
+        SimError::UnknownDataset("NoSuchDataset".into())
+    );
+}
+
+#[test]
+fn sweep_reuses_partitions_and_reports_per_point_failures() {
+    let engine = BatchEngine::new();
+    let workloads = dse::workload_set(true).unwrap();
+    let base = GhostConfig::paper_optimal();
+    // Every grid point shares (V, N) = (20, 20); the quick workload set is
+    // {Cora × 3 models, Proteins}, i.e. two distinct datasets.
+    let grid = [
+        base,
+        GhostConfig { t_r: 11, ..base },
+        GhostConfig { r_r: 12, ..base },
+        GhostConfig { r_c: 25, ..base }, // infeasible: > 20 coherent MRs
+    ];
+    let report = dse::explore_with_engine(&engine, &grid, &workloads);
+    assert_eq!(report.points.len(), 3);
+    assert_eq!(report.failures.len(), 1);
+    assert_eq!(report.failures[0].cfg, grid[3]);
+    assert!(matches!(report.failures[0].error, SimError::InvalidConfig(_)));
+    assert_eq!(
+        engine.partition_builds(),
+        2,
+        "one partition set per distinct (dataset, V, N) across the whole sweep"
+    );
+    // Frontier sorted ascending by EPB/GOPS, best() is the head.
+    for w in report.points.windows(2) {
+        assert!(w[0].epb_per_gops <= w[1].epb_per_gops);
+    }
+    assert_eq!(
+        report.best().unwrap().epb_per_gops,
+        report.points[0].epb_per_gops
+    );
+}
