@@ -54,7 +54,7 @@ fn main() {
     let schedule: Vec<Vec<f64>> =
         (0..10_000).map(|_| (0..4).map(|_| rng.next_f64()).collect()).collect();
     bench("pipeline_dp_10k_groups", 3, 100, || {
-        black_box(sim::pipelined(&schedule));
+        black_box(sim::pipelined(&schedule).expect("uniform schedule"));
     });
 
     // Crosstalk noise model inner loop.

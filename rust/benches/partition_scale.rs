@@ -1,0 +1,77 @@
+//! Bench: offline preprocessing at million-edge scale.
+//!
+//! Measures the parallel flat-blocks [`PartitionMatrix::build`] against the
+//! single-threaded [`PartitionMatrix::build_serial`] reference on a ≥1M-edge
+//! R-MAT graph (asserting byte-identical plans first), plus large-tier
+//! dataset generation and engine-cached end-to-end simulation. Acceptance
+//! target: ≥2× build speedup on ≥4 cores.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{BatchEngine, OptFlags, SimRequest};
+use ghost::gnn::models::ModelKind;
+use ghost::graph::datasets::Dataset;
+use ghost::graph::partition::PartitionMatrix;
+use ghost::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("partition_scale: {cores} hardware threads");
+
+    // A ~1.3M-edge graph from the parameterized R-MAT tier.
+    let ds = time_once("generate_rmat_200k_v_1.3M_e", || {
+        Dataset::by_name("rmat-200000v-1300000e").expect("rmat spec parses")
+    });
+    let g = &ds.graphs[0];
+    println!("graph: {} vertices, {} edges", g.n_vertices, g.n_edges());
+    assert!(g.n_edges() >= 1_000_000, "bench graph must have >=1M edges");
+
+    // Byte-identical plans before timing anything.
+    let serial_pm = PartitionMatrix::build_serial(g, 20, 20);
+    let parallel_pm = PartitionMatrix::build(g, 20, 20);
+    assert_eq!(serial_pm, parallel_pm, "parallel build must equal the serial reference");
+    println!(
+        "plan: {} output groups, {} non-empty blocks, skip ratio {:.3}",
+        serial_pm.n_output_groups(),
+        serial_pm.nonzero_blocks(),
+        serial_pm.skip_ratio()
+    );
+    drop((serial_pm, parallel_pm));
+
+    let s = bench("partition_build_serial_1.3M_edges", 1, 7, || {
+        black_box(PartitionMatrix::build_serial(g, 20, 20));
+    });
+    let p = bench("partition_build_parallel_1.3M_edges", 1, 7, || {
+        black_box(PartitionMatrix::build(g, 20, 20));
+    });
+    let speedup = s.median.as_secs_f64() / p.median.as_secs_f64();
+    println!(
+        "parallel partition-build speedup: {speedup:.2}x on {cores} threads \
+         (acceptance: >=2x on >=4 cores)"
+    );
+
+    // The named large tier end-to-end through the engine: cold includes
+    // generation + partitioning, warm is pure simulation.
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let engine = BatchEngine::new();
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        let req = SimRequest::new(kind, "ogbn-arxiv-syn", cfg, flags);
+        let label_cold = format!("engine_ogbn_arxiv_syn_{}_cold", kind.name());
+        time_once(&label_cold, || {
+            black_box(engine.run(&req).expect("ogbn-arxiv-syn simulates"));
+        });
+        let label_warm = format!("engine_ogbn_arxiv_syn_{}_warm", kind.name());
+        bench(&label_warm, 1, 5, || {
+            black_box(engine.run(&req).expect("ogbn-arxiv-syn simulates"));
+        });
+    }
+    println!(
+        "partition sets built: {} (GCN and GAT share the (dataset, V, N) key)",
+        engine.partition_builds()
+    );
+
+    // Multi-graph generation fans per-graph derived seeds over the pool.
+    time_once("generate_proteins_1113_graphs", || {
+        black_box(Dataset::by_name("Proteins").expect("table-2 dataset"));
+    });
+}

@@ -27,12 +27,12 @@ pub fn gather_cost(
     let buf = &ctx.buffers.input_vertices;
     if bp {
         let bytes = group.distinct_sources as u64 * feat_bytes_per_vertex as u64
-            + group.blocks.len() as u64 * 8; // block descriptors
+            + group.n_blocks as u64 * 8; // block descriptors
         let latency = bytes as f64 / hbm.sustained_bw()
             + hbm.access_latency_s // first-block fill; rest is prefetched
             + buf.access_latency_s;
         let energy = hbm.transfer_energy_j(bytes)
-            + hbm.burst_overhead_j * group.blocks.len() as f64
+            + hbm.burst_overhead_j * group.n_blocks as f64
             + buf.stream_energy_j(bytes as usize) * 2.0; // write + read
         StageCost { latency_s: latency, energy_j: energy }
     } else {
@@ -108,12 +108,7 @@ mod tests {
     fn group(max_deg: u32, edges: u32, distinct: u32, blocks: usize) -> OutputGroupPlan {
         OutputGroupPlan {
             out_group: 0,
-            blocks: (0..blocks)
-                .map(|i| crate::graph::partition::BlockRef {
-                    input_group: i as u32,
-                    n_edges: edges / blocks.max(1) as u32,
-                })
-                .collect(),
+            n_blocks: blocks as u32,
             max_lane_degree: max_deg,
             total_edges: edges,
             distinct_sources: distinct,

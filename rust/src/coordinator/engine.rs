@@ -10,7 +10,9 @@
 //!
 //! [`BatchEngine`] amortizes that cost behind two concurrent caches:
 //!
-//! * a dataset cache keyed by canonical Table-2 name, and
+//! * a dataset cache keyed by canonical dataset name — a Table-2 name, a
+//!   large-tier name (`ogbn-arxiv-syn`, `reddit-syn`), or a parameterized
+//!   `rmat-<V>v-<E>e...` spec (see [`crate::graph::datasets`]) — and
 //! * a partition cache keyed by `(dataset, V, N)`.
 //!
 //! Each cache entry is an [`OnceLock`] cell, so concurrent requests for
@@ -116,8 +118,11 @@ impl BatchEngine {
         lock(&self.partitions).clear();
     }
 
-    /// The realized dataset for a Table-2 name, generated at most once per
-    /// engine (case-insensitive: `"cora"` and `"Cora"` share one entry).
+    /// The realized dataset for a name in any tier (Table-2, large-graph,
+    /// or parameterized `rmat-...`), generated at most once per engine.
+    /// Lookup is case-insensitive and parameterized specs canonicalize
+    /// (`"cora"`/`"Cora"` share one entry; so do `"rmat-1000v-5000e"` and
+    /// `"RMAT-1000v-5000e-128f"`).
     pub fn dataset(&self, name: &str) -> Result<Arc<Dataset>, SimError> {
         let spec =
             spec_by_name(name).ok_or_else(|| SimError::UnknownDataset(name.to_string()))?;
@@ -149,9 +154,7 @@ impl BatchEngine {
         let cell: PartitionCell = lock(&self.partitions).entry(key).or_default().clone();
         let pms = cell.get_or_init(|| {
             self.partition_builds.fetch_add(1, Ordering::Relaxed);
-            Arc::new(
-                dataset.graphs.iter().map(|g| PartitionMatrix::build(g, v, n)).collect(),
-            )
+            Arc::new(PartitionMatrix::build_all(&dataset.graphs, v, n))
         });
         // The cache is keyed by name and first-writer-wins; a caller may
         // hold a *modified* Dataset under a canonical name (the fields are
@@ -166,9 +169,7 @@ impl BatchEngine {
         // simulate_workload, which never touches the cache).
         if !partitions_match(pms, dataset) {
             self.partition_builds.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::new(
-                dataset.graphs.iter().map(|g| PartitionMatrix::build(g, v, n)).collect(),
-            ));
+            return Ok(Arc::new(PartitionMatrix::build_all(&dataset.graphs, v, n)));
         }
         Ok(pms.clone())
     }

@@ -12,7 +12,8 @@ use crate::gnn::models::ModelKind;
 /// Why a simulation (or one point of a sweep) could not produce a result.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SimError {
-    /// The named dataset is not one of the Table-2 corpora.
+    /// The named dataset is in no tier: not a Table-2 corpus, not a
+    /// large-graph name, and not a parseable `rmat-...` spec.
     UnknownDataset(String),
     /// The architectural configuration violates the device-level
     /// feasibility bounds (see [`crate::config::GhostConfig::validate`]).
@@ -24,6 +25,11 @@ pub enum SimError {
     /// A pre-built partition was constructed for a different `(V, N)`
     /// shape than the configuration being simulated.
     PartitionShapeMismatch { expected: (usize, usize), got: (usize, usize) },
+    /// A pipelined schedule was assembled with mismatched per-group stage
+    /// counts (see [`crate::sim::RaggedStages`]); previously a
+    /// `debug_assert`, i.e. a panic or silent under-accounting in
+    /// `--release`.
+    RaggedSchedule(crate::sim::RaggedStages),
     /// An aggregated metric came out NaN/infinite and the point was
     /// dropped from the frontier instead of poisoning the sort.
     NonFiniteMetric { metric: &'static str, value: f64 },
@@ -37,7 +43,11 @@ impl fmt::Display for SimError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SimError::UnknownDataset(name) => {
-                write!(f, "unknown dataset {name} (not in Table 2)")
+                write!(
+                    f,
+                    "unknown dataset {name} (not a Table-2 name, a large-tier name, or an \
+                     rmat-<V>v-<E>e spec)"
+                )
             }
             SimError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
             SimError::InvalidFlags(msg) => write!(f, "invalid optimization flags: {msg}"),
@@ -49,6 +59,7 @@ impl fmt::Display for SimError {
                 f,
                 "partition shape mismatch: config wants (V, N) = {expected:?} but a partition was built for {got:?}"
             ),
+            SimError::RaggedSchedule(e) => write!(f, "{e}"),
             SimError::NonFiniteMetric { metric, value } => {
                 write!(f, "non-finite {metric} = {value}")
             }
@@ -72,6 +83,12 @@ impl SimError {
     /// Wraps an error with the `(model, dataset)` workload it came from.
     pub fn in_workload(self, model: ModelKind, dataset: impl Into<String>) -> Self {
         SimError::Workload { model, dataset: dataset.into(), source: Box::new(self) }
+    }
+}
+
+impl From<crate::sim::RaggedStages> for SimError {
+    fn from(e: crate::sim::RaggedStages) -> Self {
+        SimError::RaggedSchedule(e)
     }
 }
 

@@ -9,7 +9,7 @@ use crate::coordinator::{BatchEngine, OptFlags, SimReport, SimRequest};
 use crate::energy::{geomean, Metrics};
 use crate::gnn::models::{Model, ModelKind};
 use crate::gnn::workload::Workload;
-use crate::graph::datasets::ALL_DATASETS;
+use crate::graph::datasets::{DatasetSpec, ALL_DATASETS, LARGE_DATASETS};
 use crate::photonics::devices::DeviceParams;
 
 /// All 16 evaluated `(model, dataset)` workloads, paper order.
@@ -107,6 +107,60 @@ pub fn print_table2() {
             r.name, r.avg_nodes, r.avg_edges, r.n_features, r.n_labels, r.n_graphs
         );
     }
+}
+
+// -------------------------------------------------------- dataset catalog
+
+/// One row of the dataset catalog: every *named* dataset the simulator
+/// serves, across both tiers. Spec values only — nothing is generated
+/// (reddit-syn takes seconds and hundreds of MB; it stays on demand).
+#[derive(Debug)]
+pub struct DatasetCatalogRow {
+    pub name: &'static str,
+    /// `"table-2"` or `"large"`.
+    pub tier: &'static str,
+    pub avg_nodes: usize,
+    pub avg_edges: usize,
+    pub n_features: usize,
+    pub n_labels: usize,
+    pub n_graphs: usize,
+}
+
+/// The named datasets of both tiers (parameterized `rmat-...` specs are
+/// open-ended and therefore not enumerated here).
+pub fn dataset_catalog() -> Vec<DatasetCatalogRow> {
+    let row = |spec: &DatasetSpec, tier: &'static str| DatasetCatalogRow {
+        name: spec.name,
+        tier,
+        avg_nodes: spec.avg_nodes,
+        avg_edges: spec.avg_edges,
+        n_features: spec.n_features,
+        n_labels: spec.n_labels,
+        n_graphs: spec.n_graphs,
+    };
+    ALL_DATASETS
+        .iter()
+        .map(|s| row(s, "table-2"))
+        .chain(LARGE_DATASETS.iter().map(|s| row(s, "large")))
+        .collect()
+}
+
+pub fn print_dataset_catalog() {
+    println!("Dataset catalog (both tiers; values are spec targets)");
+    println!(
+        "{:<16} {:<8} {:>10} {:>12} {:>8} {:>8} {:>8}",
+        "Dataset", "Tier", "#Nodes", "#Edges", "#Feat", "#Labels", "#Graphs"
+    );
+    for r in dataset_catalog() {
+        println!(
+            "{:<16} {:<8} {:>10} {:>12} {:>8} {:>8} {:>8}",
+            r.name, r.tier, r.avg_nodes, r.avg_edges, r.n_features, r.n_labels, r.n_graphs
+        );
+    }
+    println!(
+        "Arbitrary scales: rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s], \
+         e.g. rmat-200000v-1300000e"
+    );
 }
 
 // ----------------------------------------------------------------- Fig. 8
@@ -293,6 +347,16 @@ mod tests {
     #[test]
     fn table1_has_seven_devices() {
         assert_eq!(table1().len(), 7);
+    }
+
+    #[test]
+    fn dataset_catalog_spans_both_tiers() {
+        let rows = dataset_catalog();
+        assert_eq!(rows.len(), 10);
+        assert_eq!(rows.iter().filter(|r| r.tier == "table-2").count(), 8);
+        assert_eq!(rows.iter().filter(|r| r.tier == "large").count(), 2);
+        let arxiv = rows.iter().find(|r| r.name == "ogbn-arxiv-syn").unwrap();
+        assert!(arxiv.avg_edges > 1_000_000);
     }
 
     #[test]

@@ -132,8 +132,10 @@ impl Workload {
         }
         let readout_ops = if model.has_readout {
             // Sum-pool every vertex embedding + classifier handled in the
-            // final layer already; pooling adds one add per vertex per dim.
-            n_v * model.layers.last().map(|l| l.in_dim as u64).unwrap_or(0)
+            // final layer already; pooling adds one add per vertex per
+            // pooled dim — the *output* width of the last layer
+            // (out_dim × heads), matching the schedule's readout stage.
+            n_v * model.layers.last().map(|l| (l.out_dim * l.heads) as u64).unwrap_or(0)
         } else {
             0
         };

@@ -1,4 +1,4 @@
-//! Synthetic evaluation datasets matched to Table 2 of the paper.
+//! Synthetic evaluation datasets: the Table-2 tier plus a large-graph tier.
 //!
 //! We cannot ship Cora/PubMed/Citeseer/Amazon/Proteins/Mutag/BZR/IMDB-binary
 //! downloads, so each dataset is generated synthetically with the exact
@@ -6,12 +6,37 @@
 //! label count, graph count — and a skewed (Zipf-like) in-degree
 //! distribution matching the irregularity the paper's optimizations target.
 //! Every simulator result depends on the graphs only through these
-//! statistics. Generation is fully deterministic (PCG64, fixed per-dataset
-//! seeds); `python/compile/datasets.py` regenerates the *functional-path*
-//! datasets (features + labels + topology) with its own seeded generator
-//! and exports them to `artifacts/` for the PJRT datapath.
+//! statistics. Generation is fully deterministic: graph `i` of a dataset is
+//! seeded with [`mix_seed`]`(spec.seed, i)`, so multi-graph corpora generate
+//! in parallel ([`crate::util::parallel::par_map`]) with bit-identical
+//! output for any worker count. `python/compile/datasets.py` regenerates
+//! the *functional-path* datasets (features + labels + topology) with its
+//! own seeded generator and exports them to `artifacts/` for the PJRT
+//! datapath.
+//!
+//! ## The large-graph tier
+//!
+//! The paper's evaluation stops at Table-2 scale (≤238k edges); real GNN
+//! deployments are dominated by ogbn/Reddit-class graphs with millions of
+//! edges. [`LARGE_DATASETS`] adds named specs with those shapes
+//! (`ogbn-arxiv-syn`, `reddit-syn`), generated with an R-MAT recursive
+//! quadrant sampler ([`generate_rmat_graph`]) instead of the Zipf sampler.
+//! Any other scale can be requested by a **parameterized name**:
+//!
+//! ```text
+//! rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s]
+//! ```
+//!
+//! e.g. `rmat-200000v-1300000e` (defaults: 128 features, 16 labels, one
+//! graph, derived seed). [`spec_by_name`] parses these into interned
+//! [`DatasetSpec`]s whose canonical names make them cacheable by the
+//! [`crate::coordinator::engine::BatchEngine`] exactly like Table-2 names.
 
-use crate::util::rng::Pcg64;
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::parallel::par_map;
+use crate::util::rng::{mix_seed, Pcg64};
 
 use super::csr::CsrGraph;
 
@@ -24,7 +49,19 @@ pub enum Task {
     GraphClassification,
 }
 
-/// Static description of a dataset — the Table-2 row.
+/// Which synthetic topology generator realizes a spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphGen {
+    /// Zipf-skewed in-degree rejection sampler (the Table-2 tier).
+    Skewed,
+    /// R-MAT recursive quadrant descent (the large-graph tier): power-law
+    /// degrees *and* community block structure, the standard generator for
+    /// graph benchmarks at scale (Graph500).
+    RMat,
+}
+
+/// Static description of a dataset — the Table-2 row (or its large-tier
+/// analog).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DatasetSpec {
     pub name: &'static str,
@@ -45,24 +82,227 @@ pub struct DatasetSpec {
     pub max_degree_cap: usize,
     /// Seed for deterministic generation.
     pub seed: u64,
+    /// Topology generator realizing the spec.
+    pub generator: GraphGen,
 }
 
 /// The eight Table-2 datasets.
 pub const ALL_DATASETS: [DatasetSpec; 8] = [
-    DatasetSpec { name: "Cora", avg_nodes: 2708, avg_edges: 10_556, n_features: 1433, n_labels: 7, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 128, seed: 0xC08A },
-    DatasetSpec { name: "PubMed", avg_nodes: 19_717, avg_edges: 88_651, n_features: 500, n_labels: 3, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 128, seed: 0x9B3D },
-    DatasetSpec { name: "Citeseer", avg_nodes: 3327, avg_edges: 9104, n_features: 3703, n_labels: 6, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 96, seed: 0xC17E },
-    DatasetSpec { name: "Amazon", avg_nodes: 7650, avg_edges: 238_162, n_features: 745, n_labels: 8, n_graphs: 1, task: Task::NodeClassification, max_degree_cap: 256, seed: 0xA32 },
-    DatasetSpec { name: "Proteins", avg_nodes: 39, avg_edges: 73, n_features: 3, n_labels: 2, n_graphs: 1113, task: Task::GraphClassification, max_degree_cap: 16, seed: 0x980 },
-    DatasetSpec { name: "Mutag", avg_nodes: 18, avg_edges: 40, n_features: 143, n_labels: 2, n_graphs: 188, task: Task::GraphClassification, max_degree_cap: 8, seed: 0x3074 },
-    DatasetSpec { name: "BZR", avg_nodes: 34, avg_edges: 38, n_features: 189, n_labels: 2, n_graphs: 405, task: Task::GraphClassification, max_degree_cap: 8, seed: 0xB2 },
-    DatasetSpec { name: "IMDB-binary", avg_nodes: 20, avg_edges: 193, n_features: 136, n_labels: 2, n_graphs: 1000, task: Task::GraphClassification, max_degree_cap: 19, seed: 0x1DB },
+    DatasetSpec {
+        name: "Cora",
+        avg_nodes: 2708,
+        avg_edges: 10_556,
+        n_features: 1433,
+        n_labels: 7,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 128,
+        seed: 0xC08A,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "PubMed",
+        avg_nodes: 19_717,
+        avg_edges: 88_651,
+        n_features: 500,
+        n_labels: 3,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 128,
+        seed: 0x9B3D,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "Citeseer",
+        avg_nodes: 3327,
+        avg_edges: 9104,
+        n_features: 3703,
+        n_labels: 6,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 96,
+        seed: 0xC17E,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "Amazon",
+        avg_nodes: 7650,
+        avg_edges: 238_162,
+        n_features: 745,
+        n_labels: 8,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 256,
+        seed: 0xA32,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "Proteins",
+        avg_nodes: 39,
+        avg_edges: 73,
+        n_features: 3,
+        n_labels: 2,
+        n_graphs: 1113,
+        task: Task::GraphClassification,
+        max_degree_cap: 16,
+        seed: 0x980,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "Mutag",
+        avg_nodes: 18,
+        avg_edges: 40,
+        n_features: 143,
+        n_labels: 2,
+        n_graphs: 188,
+        task: Task::GraphClassification,
+        max_degree_cap: 8,
+        seed: 0x3074,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "BZR",
+        avg_nodes: 34,
+        avg_edges: 38,
+        n_features: 189,
+        n_labels: 2,
+        n_graphs: 405,
+        task: Task::GraphClassification,
+        max_degree_cap: 8,
+        seed: 0xB2,
+        generator: GraphGen::Skewed,
+    },
+    DatasetSpec {
+        name: "IMDB-binary",
+        avg_nodes: 20,
+        avg_edges: 193,
+        n_features: 136,
+        n_labels: 2,
+        n_graphs: 1000,
+        task: Task::GraphClassification,
+        max_degree_cap: 19,
+        seed: 0x1DB,
+        generator: GraphGen::Skewed,
+    },
 ];
 
-/// Look a dataset up by (case-insensitive) name.
+/// The named large-graph tier: shapes matched to the million-edge corpora
+/// that dominate deployed GNN serving (see the acceleration surveys cited
+/// in ROADMAP/PAPERS). `reddit-syn` follows the sparsified (GraphSAINT)
+/// Reddit variant; generating it takes seconds and ~200 MB — nothing in the
+/// test suite builds it implicitly.
+pub const LARGE_DATASETS: [DatasetSpec; 2] = [
+    DatasetSpec {
+        name: "ogbn-arxiv-syn",
+        avg_nodes: 169_343,
+        avg_edges: 1_166_243,
+        n_features: 128,
+        n_labels: 40,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 8192,
+        seed: 0x0A87,
+        generator: GraphGen::RMat,
+    },
+    DatasetSpec {
+        name: "reddit-syn",
+        avg_nodes: 232_965,
+        avg_edges: 11_606_919,
+        n_features: 602,
+        n_labels: 41,
+        n_graphs: 1,
+        task: Task::NodeClassification,
+        max_degree_cap: 16_384,
+        seed: 0x4EDD,
+        generator: GraphGen::RMat,
+    },
+];
+
+/// Look a dataset up by (case-insensitive) name: the Table-2 tier, the
+/// large-graph tier, or a parameterized `rmat-...` spec (see the module
+/// docs for the grammar).
 pub fn spec_by_name(name: &str) -> Option<DatasetSpec> {
     let lower = name.to_ascii_lowercase();
-    ALL_DATASETS.iter().copied().find(|d| d.name.to_ascii_lowercase() == lower)
+    ALL_DATASETS
+        .iter()
+        .chain(LARGE_DATASETS.iter())
+        .find(|d| d.name.to_ascii_lowercase() == lower)
+        .copied()
+        .or_else(|| parse_rmat_name(&lower))
+}
+
+/// Interns a dataset name so parameterized specs can carry `&'static str`
+/// names (one leak per *distinct* canonical name, however many times it is
+/// requested).
+fn intern_name(name: String) -> &'static str {
+    static INTERNED: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let mut set = INTERNED
+        .get_or_init(Default::default)
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    if let Some(&existing) = set.get(name.as_str()) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(name.into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+/// Parses a parameterized R-MAT dataset name (already lowercased):
+/// `rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s]`. Returns a spec whose
+/// `name` is the fully-expanded canonical form, so every spelling of the
+/// same parameters shares one cache identity.
+fn parse_rmat_name(lower: &str) -> Option<DatasetSpec> {
+    let rest = lower.strip_prefix("rmat-")?;
+    let mut nodes: Option<usize> = None;
+    let mut edges: Option<usize> = None;
+    let mut n_features = 128usize;
+    let mut n_labels = 16usize;
+    let mut n_graphs = 1usize;
+    let mut seed: Option<u64> = None;
+    for tok in rest.split('-') {
+        if tok.len() < 2 || !tok.is_ascii() {
+            return None;
+        }
+        let (num, suffix) = tok.split_at(tok.len() - 1);
+        let val: usize = num.parse().ok()?;
+        match suffix {
+            "v" => nodes = Some(val),
+            "e" => edges = Some(val),
+            "f" => n_features = val,
+            "l" => n_labels = val,
+            "g" => n_graphs = val,
+            "s" => seed = Some(val as u64),
+            _ => return None,
+        }
+    }
+    let avg_nodes = nodes?;
+    let avg_edges = edges?;
+    if avg_nodes < 2 || avg_edges == 0 || n_features == 0 || n_labels == 0 || n_graphs == 0 {
+        return None;
+    }
+    // Cap well above the average degree so the R-MAT skew shows, but
+    // bounded so worst-case lanes stay finite.
+    let avg_degree = avg_edges.div_ceil(avg_nodes);
+    let max_degree_cap = (avg_degree * 16).max(64);
+    let seed = seed.unwrap_or_else(|| {
+        mix_seed(0x524D_4154, mix_seed(avg_nodes as u64, avg_edges as u64))
+    });
+    let name = intern_name(format!(
+        "rmat-{avg_nodes}v-{avg_edges}e-{n_features}f-{n_labels}l-{n_graphs}g-{seed}s"
+    ));
+    Some(DatasetSpec {
+        name,
+        avg_nodes,
+        avg_edges,
+        n_features,
+        n_labels,
+        n_graphs,
+        task: Task::NodeClassification,
+        max_degree_cap,
+        seed,
+        generator: GraphGen::RMat,
+    })
 }
 
 /// A realized dataset: one or more generated graph topologies.
@@ -73,30 +313,36 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    /// Generates the dataset deterministically from its spec.
+    /// Generates the dataset deterministically from its spec. Graph `i` is
+    /// seeded with `mix_seed(spec.seed, i)` and the graphs generate in
+    /// parallel; the result is identical for any worker count.
     pub fn generate(spec: DatasetSpec) -> Self {
-        let mut rng = Pcg64::seed_from_u64(spec.seed);
-        let graphs = (0..spec.n_graphs)
-            .map(|_| {
-                // Multi-graph datasets vary ±30 % around the averages so
-                // the collection has the irregularity of the real corpora.
-                let (n, e) = if spec.n_graphs > 1 {
-                    let jitter = |avg: usize, rng: &mut Pcg64| {
-                        let lo = (avg as f64 * 0.7) as usize;
-                        let hi = (avg as f64 * 1.3) as usize + 1;
-                        rng.gen_range(lo.max(2), hi.max(3).max(lo.max(2) + 1))
-                    };
-                    (jitter(spec.avg_nodes, &mut rng), jitter(spec.avg_edges, &mut rng))
-                } else {
-                    (spec.avg_nodes, spec.avg_edges)
+        let indices: Vec<usize> = (0..spec.n_graphs).collect();
+        let graphs = par_map(&indices, |&i| {
+            let mut rng = Pcg64::seed_from_u64(mix_seed(spec.seed, i as u64));
+            // Multi-graph datasets vary ±30 % around the averages so the
+            // collection has the irregularity of the real corpora.
+            let (n, e) = if spec.n_graphs > 1 {
+                let jitter = |avg: usize, rng: &mut Pcg64| {
+                    let lo = (avg as f64 * 0.7) as usize;
+                    let hi = (avg as f64 * 1.3) as usize + 1;
+                    rng.gen_range(lo.max(2), hi.max(3).max(lo.max(2) + 1))
                 };
-                generate_skewed_graph(n, e, spec.max_degree_cap, &mut rng)
-            })
-            .collect();
+                (jitter(spec.avg_nodes, &mut rng), jitter(spec.avg_edges, &mut rng))
+            } else {
+                (spec.avg_nodes, spec.avg_edges)
+            };
+            match spec.generator {
+                GraphGen::Skewed => {
+                    generate_skewed_graph(n, e, spec.max_degree_cap, &mut rng)
+                }
+                GraphGen::RMat => generate_rmat_graph(n, e, spec.max_degree_cap, &mut rng),
+            }
+        });
         Self { spec, graphs }
     }
 
-    /// Generate a dataset by name.
+    /// Generate a dataset by name (any tier; see [`spec_by_name`]).
     pub fn by_name(name: &str) -> Option<Self> {
         spec_by_name(name).map(Self::generate)
     }
@@ -159,7 +405,75 @@ pub fn generate_skewed_graph(
         degree[dst] += 1;
         edges.push((src, dst as u32));
     }
-    // If the cap made the target unreachable, round-robin fill the slack.
+    fill_remaining_round_robin(n_vertices, n_edges, max_degree_cap, &mut degree, &mut edges, rng);
+    CsrGraph::from_edges(n_vertices, &edges)
+}
+
+/// R-MAT (recursive matrix) generator — Chakrabarti et al. 2004, the
+/// Graph500 standard for power-law graphs at scale. Each edge descends
+/// `ceil(log2 V)` levels of the adjacency matrix, picking a quadrant with
+/// probabilities `(a, b, c, d) = (0.57, 0.19, 0.19, 0.05)`; the result has
+/// heavy-tailed in-degrees *and* the block/community structure that makes
+/// partition matrices non-uniform. Self-loops, out-of-range endpoints
+/// (non-power-of-two `V`), and over-cap destinations are resampled;
+/// infeasible tails are filled round-robin so the edge count is exact.
+/// Deterministic given the RNG state.
+pub fn generate_rmat_graph(
+    n_vertices: usize,
+    n_edges: usize,
+    max_degree_cap: usize,
+    rng: &mut Pcg64,
+) -> CsrGraph {
+    assert!(n_vertices >= 2, "need at least 2 vertices");
+    let n_edges = n_edges.min(n_vertices * max_degree_cap);
+    let scale = usize::BITS - (n_vertices - 1).leading_zeros();
+    const A: f64 = 0.57;
+    const B: f64 = 0.19;
+    const C: f64 = 0.19;
+    let mut degree = vec![0usize; n_vertices];
+    let mut edges = Vec::with_capacity(n_edges);
+    let mut attempts = 0usize;
+    let max_attempts = n_edges.saturating_mul(40);
+    while edges.len() < n_edges && attempts < max_attempts {
+        attempts += 1;
+        let mut src = 0usize;
+        let mut dst = 0usize;
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (src_bit, dst_bit) = if r < A {
+                (0, 0)
+            } else if r < A + B {
+                (0, 1)
+            } else if r < A + B + C {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            src = (src << 1) | src_bit;
+            dst = (dst << 1) | dst_bit;
+        }
+        if src >= n_vertices || dst >= n_vertices || src == dst || degree[dst] >= max_degree_cap
+        {
+            continue;
+        }
+        degree[dst] += 1;
+        edges.push((src as u32, dst as u32));
+    }
+    fill_remaining_round_robin(n_vertices, n_edges, max_degree_cap, &mut degree, &mut edges, rng);
+    CsrGraph::from_edges(n_vertices, &edges)
+}
+
+/// If rejection sampling ran out of attempts (a tight degree cap makes the
+/// target unreachable by sampling alone), round-robin fill the slack so the
+/// generated edge count is exactly `n_edges.min(capacity)`.
+fn fill_remaining_round_robin(
+    n_vertices: usize,
+    n_edges: usize,
+    max_degree_cap: usize,
+    degree: &mut [usize],
+    edges: &mut Vec<(u32, u32)>,
+    rng: &mut Pcg64,
+) {
     let mut v = 0usize;
     while edges.len() < n_edges {
         if degree[v] < max_degree_cap {
@@ -171,7 +485,6 @@ pub fn generate_skewed_graph(
         }
         v = (v + 1) % n_vertices;
     }
-    CsrGraph::from_edges(n_vertices, &edges)
 }
 
 #[cfg(test)]
@@ -213,6 +526,11 @@ mod tests {
         let a = Dataset::by_name("Citeseer").unwrap();
         let b = Dataset::by_name("Citeseer").unwrap();
         assert_eq!(a.graphs[0], b.graphs[0]);
+        // Multi-graph generation is parallel; per-graph derived seeds keep
+        // it deterministic for any worker count.
+        let a = Dataset::by_name("Mutag").unwrap();
+        let b = Dataset::by_name("Mutag").unwrap();
+        assert_eq!(a.graphs, b.graphs);
     }
 
     #[test]
@@ -234,5 +552,85 @@ mod tests {
         assert!(Dataset::by_name("cora").is_some());
         assert!(Dataset::by_name("imdb-BINARY").is_some());
         assert!(Dataset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn large_tier_specs_resolve_by_name() {
+        let arxiv = spec_by_name("ogbn-arxiv-syn").unwrap();
+        assert_eq!(arxiv.avg_nodes, 169_343);
+        assert_eq!(arxiv.avg_edges, 1_166_243);
+        assert_eq!(arxiv.n_labels, 40);
+        assert_eq!(arxiv.generator, GraphGen::RMat);
+        let reddit = spec_by_name("Reddit-SYN").unwrap();
+        assert_eq!(reddit.avg_nodes, 232_965);
+        // Large names must not collide with the Table-2 tier.
+        assert_eq!(ALL_DATASETS.len() + LARGE_DATASETS.len(), 10);
+    }
+
+    #[test]
+    fn rmat_names_parse_with_defaults_and_canonicalize() {
+        let a = spec_by_name("rmat-1000v-5000e").unwrap();
+        assert_eq!(a.avg_nodes, 1000);
+        assert_eq!(a.avg_edges, 5000);
+        assert_eq!(a.n_features, 128);
+        assert_eq!(a.n_labels, 16);
+        assert_eq!(a.n_graphs, 1);
+        assert_eq!(a.generator, GraphGen::RMat);
+        // Different spellings of the same parameters share one canonical
+        // name (the engine's cache identity).
+        let b = spec_by_name("RMAT-1000v-5000e-128f").unwrap();
+        assert_eq!(a.name, b.name);
+        assert!(std::ptr::eq(a.name, b.name), "canonical names are interned");
+        // Canonical names round-trip through the parser.
+        let c = spec_by_name(a.name).unwrap();
+        assert_eq!(a, c);
+        // Overrides.
+        let d = spec_by_name("rmat-300v-900e-8f-4l-5g-99s").unwrap();
+        assert_eq!((d.n_features, d.n_labels, d.n_graphs, d.seed), (8, 4, 5, 99));
+        assert_ne!(d.name, a.name);
+    }
+
+    #[test]
+    fn rmat_names_reject_garbage() {
+        for bad in [
+            "rmat-",
+            "rmat-1000v",          // no edge count
+            "rmat-5000e",          // no node count
+            "rmat-1000v-5000x",    // unknown suffix
+            "rmat-v-5000e",        // empty number
+            "rmat-1v-5e",          // below minimum nodes
+            "rmat-1000v-0e",       // zero edges
+            "rmat-1000v-5000e-0f", // zero features
+            "rmatt-1000v-5000e",
+        ] {
+            assert!(spec_by_name(bad).is_none(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn rmat_generation_exact_deterministic_and_skewed() {
+        let a = Dataset::by_name("rmat-3000v-24000e").unwrap();
+        let b = Dataset::by_name("rmat-3000v-24000e").unwrap();
+        let g = &a.graphs[0];
+        assert_eq!(g.n_vertices, 3000);
+        assert_eq!(g.n_edges(), 24_000);
+        assert_eq!(g, &b.graphs[0]);
+        assert!(g.max_degree() <= a.spec.max_degree_cap);
+        // Heavy-tailed in-degrees: the hubs sit far above the mean.
+        assert!(g.max_degree() as f64 > 4.0 * g.avg_degree(), "max {}", g.max_degree());
+        // No self loops.
+        for v in 0..g.n_vertices {
+            assert!(!g.neighbors(v).contains(&(v as u32)), "self loop at {v}");
+        }
+    }
+
+    #[test]
+    fn rmat_multi_graph_datasets_generate_in_parallel() {
+        let d = Dataset::by_name("rmat-200v-600e-8f-2l-5g").unwrap();
+        assert_eq!(d.graphs.len(), 5);
+        // Jitter makes the graphs distinct; derived seeds keep them stable.
+        let again = Dataset::by_name("rmat-200v-600e-8f-2l-5g").unwrap();
+        assert_eq!(d.graphs, again.graphs);
+        assert!(d.graphs.windows(2).any(|w| w[0] != w[1]), "graphs should differ");
     }
 }

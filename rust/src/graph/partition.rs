@@ -7,9 +7,26 @@
 //! partition matrix, the per-group prefetch order, and the per-group
 //! worst-case neighbor counts are all computed once offline (graph
 //! preprocessing), exactly as in the paper.
-
+//!
+//! ## Layout and parallelism
+//!
+//! Block references live in **one flat CSR-style array** indexed by output
+//! group (`block_ptr[g]..block_ptr[g + 1]`), not in a per-group `Vec` —
+//! million-vertex graphs have hundreds of thousands of output groups, and
+//! one allocation per group dominated the build. [`PartitionMatrix::build`]
+//! fans contiguous output-group ranges out over
+//! [`crate::util::parallel::par_map`] with per-chunk scratch arrays and
+//! splices the chunk results; the output is identical to
+//! [`PartitionMatrix::build_serial`] (the single-threaded reference)
+//! regardless of worker count, because every group is computed
+//! independently and chunks are ordered.
 
 use super::csr::CsrGraph;
+use crate::util::parallel::{chunk_ranges, par_map};
+
+/// Graphs below this edge count build serially: the work is too small to
+/// amortize spawning the scoped worker threads.
+const PAR_EDGE_THRESHOLD: usize = 100_000;
 
 /// One non-empty `V×N` block of the partition matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,13 +38,15 @@ pub struct BlockRef {
 }
 
 /// Execution plan for one output-vertex group (one assignment of the `V`
-/// execution lanes).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// execution lanes). The group's non-empty blocks live in the matrix-level
+/// flat array ([`PartitionMatrix::group_blocks`]); the plan carries only
+/// their count, which keeps it `Copy` and allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OutputGroupPlan {
     /// Index of the output group.
     pub out_group: u32,
-    /// Non-empty input blocks, in ascending input-group (prefetch) order.
-    pub blocks: Vec<BlockRef>,
+    /// Number of non-empty input blocks feeding this group.
+    pub n_blocks: u32,
     /// Largest in-degree among the vertices of this group — the aggregate
     /// stage of the group finishes with its slowest lane (§3.3.1).
     pub max_lane_degree: u32,
@@ -50,65 +69,167 @@ pub struct PartitionMatrix {
     pub n_vertices: usize,
     /// Per-output-group plans, ascending group index.
     pub groups: Vec<OutputGroupPlan>,
+    /// All non-empty blocks, flat, grouped by output group in ascending
+    /// input-group (prefetch) order within each group.
+    blocks: Vec<BlockRef>,
+    /// CSR offsets into `blocks`, length `groups.len() + 1`.
+    block_ptr: Vec<u32>,
+}
+
+/// One chunk's worth of group plans: plans, flat blocks, and chunk-relative
+/// block offsets (`block_ptr[0] == 0`).
+struct ChunkPlan {
+    groups: Vec<OutputGroupPlan>,
+    blocks: Vec<BlockRef>,
+    block_ptr: Vec<u32>,
+}
+
+/// Builds the plans for output groups `range` of the graph. Scratch state
+/// (per-input-group edge counters, epoch stamps for distinct-source
+/// counting, the touched-block list) is local to the call, so ranges can be
+/// built concurrently.
+fn build_group_range(
+    graph: &CsrGraph,
+    v: usize,
+    n: usize,
+    range: std::ops::Range<usize>,
+) -> ChunkPlan {
+    let n_in_groups = graph.n_vertices.div_ceil(n).max(1);
+    // Scratch: edge counts per input group, reused across output groups.
+    let mut block_edges = vec![0u32; n_in_groups];
+    // Scratch: epoch stamps for distinct-source counting; a source is new
+    // in this group iff its stamp differs from the group epoch.
+    let mut seen_epoch = vec![u32::MAX; graph.n_vertices];
+    // Scratch: input groups touched by the current output group.
+    let mut touched: Vec<u32> = Vec::new();
+    let mut groups = Vec::with_capacity(range.len());
+    let mut blocks: Vec<BlockRef> = Vec::new();
+    let mut block_ptr = Vec::with_capacity(range.len() + 1);
+    block_ptr.push(0u32);
+    for og in range {
+        let lo = og * v;
+        let hi = ((og + 1) * v).min(graph.n_vertices);
+        let mut max_lane_degree = 0u32;
+        let mut total_edges = 0u32;
+        let mut distinct_sources = 0u32;
+        let epoch = og as u32;
+        for dst in lo..hi {
+            let deg = graph.degree(dst) as u32;
+            max_lane_degree = max_lane_degree.max(deg);
+            total_edges += deg;
+            for &src in graph.neighbors(dst) {
+                if seen_epoch[src as usize] != epoch {
+                    seen_epoch[src as usize] = epoch;
+                    distinct_sources += 1;
+                }
+                let ig = src as usize / n;
+                if block_edges[ig] == 0 {
+                    touched.push(ig as u32);
+                }
+                block_edges[ig] += 1;
+            }
+        }
+        touched.sort_unstable();
+        for &ig in &touched {
+            blocks.push(BlockRef { input_group: ig, n_edges: block_edges[ig as usize] });
+            block_edges[ig as usize] = 0; // reset scratch
+        }
+        groups.push(OutputGroupPlan {
+            out_group: og as u32,
+            n_blocks: touched.len() as u32,
+            max_lane_degree,
+            total_edges,
+            distinct_sources,
+        });
+        touched.clear();
+        block_ptr.push(blocks.len() as u32);
+    }
+    ChunkPlan { groups, blocks, block_ptr }
 }
 
 impl PartitionMatrix {
-    /// Builds the partition matrix from a destination-major CSR graph.
-    /// Runs in `O(E + groups)`: distinct-source counting uses an epoch-
-    /// stamped scratch array (no per-group sort), and block discovery
-    /// reuses a per-input-group counter array across output groups.
+    /// Builds the partition matrix from a destination-major CSR graph,
+    /// fanning output-group ranges across the scoped thread pool for large
+    /// graphs. Runs in `O(E + groups)` work: distinct-source counting uses
+    /// an epoch-stamped scratch array (no per-group sort), and block
+    /// discovery reuses a per-input-group counter array across output
+    /// groups. The result is identical to [`Self::build_serial`] for any
+    /// worker count.
     pub fn build(graph: &CsrGraph, v: usize, n: usize) -> Self {
         assert!(v > 0 && n > 0);
         let n_out_groups = graph.n_vertices.div_ceil(v).max(1);
-        let n_in_groups = graph.n_vertices.div_ceil(n).max(1);
-        let mut groups = Vec::with_capacity(n_out_groups);
-        // Scratch: edge counts per input group, reused across output groups.
-        let mut block_edges = vec![0u32; n_in_groups];
-        // Scratch: epoch stamps for distinct-source counting; a source is
-        // new in this group iff its stamp differs from the group epoch.
-        let mut seen_epoch = vec![u32::MAX; graph.n_vertices];
-        for og in 0..n_out_groups {
-            let lo = og * v;
-            let hi = ((og + 1) * v).min(graph.n_vertices);
-            let mut max_lane_degree = 0u32;
-            let mut total_edges = 0u32;
-            let mut distinct_sources = 0u32;
-            let mut touched: Vec<u32> = Vec::new();
-            let epoch = og as u32;
-            for dst in lo..hi {
-                let deg = graph.degree(dst) as u32;
-                max_lane_degree = max_lane_degree.max(deg);
-                total_edges += deg;
-                for &src in graph.neighbors(dst) {
-                    if seen_epoch[src as usize] != epoch {
-                        seen_epoch[src as usize] = epoch;
-                        distinct_sources += 1;
-                    }
-                    let ig = src as usize / n;
-                    if block_edges[ig] == 0 {
-                        touched.push(ig as u32);
-                    }
-                    block_edges[ig] += 1;
-                }
-            }
-            touched.sort_unstable();
-            let blocks: Vec<BlockRef> = touched
-                .iter()
-                .map(|&ig| {
-                    let e = block_edges[ig as usize];
-                    block_edges[ig as usize] = 0; // reset scratch
-                    BlockRef { input_group: ig, n_edges: e }
-                })
-                .collect();
-            groups.push(OutputGroupPlan {
-                out_group: og as u32,
-                blocks,
-                max_lane_degree,
-                total_edges,
-                distinct_sources,
-            });
+        let workers =
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        if workers <= 1 || n_out_groups < 2 || graph.n_edges() < PAR_EDGE_THRESHOLD {
+            return Self::build_serial(graph, v, n);
         }
-        Self { v, n, n_vertices: graph.n_vertices, groups }
+        // More chunks than workers lets the atomic work queue balance
+        // skewed graphs (hub-heavy ranges take longer); each chunk pays one
+        // O(V + E/N) scratch allocation, so the count stays small.
+        let n_chunks = (workers * 2).min(n_out_groups);
+        let ranges = chunk_ranges(n_out_groups, n_chunks);
+        let parts = par_map(&ranges, |r| build_group_range(graph, v, n, r.clone()));
+        let total_blocks: usize = parts.iter().map(|p| p.blocks.len()).sum();
+        let mut groups = Vec::with_capacity(n_out_groups);
+        let mut blocks = Vec::with_capacity(total_blocks);
+        let mut block_ptr = Vec::with_capacity(n_out_groups + 1);
+        block_ptr.push(0u32);
+        for mut part in parts {
+            let base = blocks.len() as u32;
+            groups.append(&mut part.groups);
+            block_ptr.extend(part.block_ptr.iter().skip(1).map(|&p| base + p));
+            blocks.append(&mut part.blocks);
+        }
+        Self { v, n, n_vertices: graph.n_vertices, groups, blocks, block_ptr }
+    }
+
+    /// Partitions every graph of a dataset, parallelizing at the widest
+    /// level only: a multi-graph dataset fans *graphs* over the pool (each
+    /// built serially — its graphs are small and nesting `par_map` inside
+    /// `par_map` would oversubscribe the cores), while a single-graph
+    /// dataset lets [`Self::build`] fan its output groups out instead.
+    /// Per-graph output is identical either way.
+    pub fn build_all(graphs: &[CsrGraph], v: usize, n: usize) -> Vec<Self> {
+        if graphs.len() > 1 {
+            par_map(graphs, |g| Self::build_serial(g, v, n))
+        } else {
+            graphs.iter().map(|g| Self::build(g, v, n)).collect()
+        }
+    }
+
+    /// Single-threaded reference build. `build` must produce byte-identical
+    /// output; `benches/partition_scale.rs` measures the speedup between
+    /// the two and the test suite asserts the equality.
+    pub fn build_serial(graph: &CsrGraph, v: usize, n: usize) -> Self {
+        assert!(v > 0 && n > 0);
+        let n_out_groups = graph.n_vertices.div_ceil(v).max(1);
+        let part = build_group_range(graph, v, n, 0..n_out_groups);
+        Self {
+            v,
+            n,
+            n_vertices: graph.n_vertices,
+            groups: part.groups,
+            blocks: part.blocks,
+            block_ptr: part.block_ptr,
+        }
+    }
+
+    /// The non-empty blocks of output group `g`, in ascending input-group
+    /// (prefetch) order.
+    pub fn group_blocks(&self, g: usize) -> &[BlockRef] {
+        &self.blocks[self.block_ptr[g] as usize..self.block_ptr[g + 1] as usize]
+    }
+
+    /// Iterates `(plan, blocks)` pairs over all output groups.
+    pub fn iter_groups(
+        &self,
+    ) -> impl Iterator<Item = (&OutputGroupPlan, &[BlockRef])> + '_ {
+        self.groups.iter().enumerate().map(move |(i, g)| (g, self.group_blocks(i)))
+    }
+
+    /// The whole flat block array (all groups concatenated).
+    pub fn flat_blocks(&self) -> &[BlockRef] {
+        &self.blocks
     }
 
     /// Number of output groups (lane assignments).
@@ -128,7 +249,7 @@ impl PartitionMatrix {
 
     /// Non-empty blocks actually fetched.
     pub fn nonzero_blocks(&self) -> usize {
-        self.groups.iter().map(|g| g.blocks.len()).sum()
+        self.blocks.len()
     }
 
     /// Fraction of block slots skipped by the all-zero-block optimization.
@@ -174,8 +295,8 @@ mod tests {
         let g = path_graph(100);
         let pm = PartitionMatrix::build(&g, 10, 10);
         // A path graph's edges live on the diagonal ± one block.
-        for grp in &pm.groups {
-            for b in &grp.blocks {
+        for (grp, blocks) in pm.iter_groups() {
+            for b in blocks {
                 let diff = (b.input_group as i64 - grp.out_group as i64).abs();
                 assert!(diff <= 1, "off-diagonal block {b:?} in group {}", grp.out_group);
             }
@@ -188,8 +309,8 @@ mod tests {
     fn blocks_in_prefetch_order() {
         let d = Dataset::by_name("Cora").unwrap();
         let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
-        for grp in &pm.groups {
-            for w in grp.blocks.windows(2) {
+        for g in 0..pm.n_output_groups() {
+            for w in pm.group_blocks(g).windows(2) {
                 assert!(w[0].input_group < w[1].input_group);
             }
         }
@@ -231,5 +352,58 @@ mod tests {
         let pm = PartitionMatrix::build(&g, 100, 100);
         assert_eq!(pm.n_output_groups(), 1);
         assert_eq!(pm.nonzero_blocks(), 1);
+    }
+
+    #[test]
+    fn flat_layout_is_consistent() {
+        let d = Dataset::by_name("Citeseer").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        let from_plans: usize = pm.groups.iter().map(|g| g.n_blocks as usize).sum();
+        assert_eq!(from_plans, pm.nonzero_blocks());
+        assert_eq!(pm.flat_blocks().len(), pm.nonzero_blocks());
+        for g in 0..pm.n_output_groups() {
+            assert_eq!(pm.group_blocks(g).len(), pm.groups[g].n_blocks as usize);
+            let block_edges: u32 = pm.group_blocks(g).iter().map(|b| b.n_edges).sum();
+            assert_eq!(block_edges, pm.groups[g].total_edges);
+        }
+    }
+
+    #[test]
+    fn parallel_build_equals_serial_reference() {
+        // Amazon (238k edges) crosses the parallel threshold; the smaller
+        // graphs take the serial path, which must be trivially identical.
+        for name in ["Cora", "Amazon"] {
+            let d = Dataset::by_name(name).unwrap();
+            for &(v, n) in &[(20usize, 20usize), (10, 30), (37, 11)] {
+                let par = PartitionMatrix::build(&d.graphs[0], v, n);
+                let ser = PartitionMatrix::build_serial(&d.graphs[0], v, n);
+                assert_eq!(par, ser, "{name} at ({v}, {n})");
+            }
+        }
+    }
+
+    #[test]
+    fn build_all_matches_per_graph_builds() {
+        // Multi-graph path (parallel over graphs, serial per graph).
+        let d = Dataset::by_name("Mutag").unwrap();
+        let all = PartitionMatrix::build_all(&d.graphs, 20, 20);
+        assert_eq!(all.len(), d.graphs.len());
+        for (pm, g) in all.iter().zip(&d.graphs) {
+            assert_eq!(pm, &PartitionMatrix::build_serial(g, 20, 20));
+        }
+        // Single-graph path delegates to the (possibly parallel) build.
+        let cora = Dataset::by_name("Cora").unwrap();
+        let one = PartitionMatrix::build_all(&cora.graphs, 20, 20);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], PartitionMatrix::build_serial(&cora.graphs[0], 20, 20));
+    }
+
+    #[test]
+    fn empty_graph_builds_one_empty_group() {
+        let g = CsrGraph::from_edges(0, &[]);
+        let pm = PartitionMatrix::build(&g, 20, 20);
+        assert_eq!(pm.n_output_groups(), 1);
+        assert_eq!(pm.nonzero_blocks(), 0);
+        assert_eq!(pm.total_edges(), 0);
     }
 }

@@ -9,8 +9,10 @@
 //!   SNR feasibility (paper eqs. 2–13), and the device-level design-space
 //!   exploration behind Figs. 7(a)/7(b).
 //! * [`memory`] — HBM2 main-memory and ECU SRAM-buffer models.
-//! * [`graph`] — CSR graphs, the V×N partition matrix ("buffer & partition"),
-//!   and the seeded synthetic dataset generators matched to Table 2.
+//! * [`graph`] — CSR graphs, the flat-blocks V×N partition matrix ("buffer
+//!   & partition", built in parallel), and the seeded synthetic dataset
+//!   generators: the Table-2 tier plus the million-edge large-graph tier
+//!   (`ogbn-arxiv-syn`, `reddit-syn`, parameterized `rmat-...` specs).
 //! * [`gnn`] — GNN model descriptors (GCN / GraphSAGE / GIN / GAT) and the
 //!   workload characterization (MACs / bytes / stage ops) that drives both
 //!   the GHOST simulator and the baseline roofline models.

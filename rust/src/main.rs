@@ -26,9 +26,13 @@ ghost — GHOST silicon-photonic GNN accelerator (paper reproduction)
 USAGE:
   ghost run --model <gcn|graphsage|gin|gat> --dataset <name>
             [--no-bp] [--no-pp] [--no-dac-sharing] [--wb]
+        <name>: a Table-2 dataset (Cora, PubMed, Citeseer, Amazon,
+        Proteins, Mutag, BZR, IMDB-binary), a large-tier dataset
+        (ogbn-arxiv-syn, reddit-syn), or a parameterized R-MAT spec
+        rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s]
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
-                [--comparison] [--all]
+                [--comparison] [--datasets] [--all]
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 ";
@@ -203,7 +207,7 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
 fn cmd_figures(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "all"],
+        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "datasets", "all"],
     )?;
     let all = args.has("all")
         || !(args.has("table1")
@@ -211,8 +215,13 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
             || args.has("table3")
             || args.has("fig8")
             || args.has("fig9")
-            || args.has("comparison"));
+            || args.has("comparison")
+            || args.has("datasets"));
     let cfg = GhostConfig::paper_optimal();
+    if args.has("datasets") {
+        figures::print_dataset_catalog();
+        println!();
+    }
     if args.has("table1") || all {
         figures::print_table1();
         println!();

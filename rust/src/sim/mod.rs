@@ -12,10 +12,37 @@
 //! With pipelining disabled (the Fig. 8 baseline) groups and stages run
 //! back-to-back and the makespan is the plain sum.
 
+use std::fmt;
 
 /// Per-stage latencies of one group, seconds. All groups in a schedule must
 /// have the same stage count.
 pub type GroupStages = Vec<f64>;
+
+/// A pipelined schedule was handed groups with mismatched stage counts.
+/// This used to be a `debug_assert` only: in `--release` a longer group
+/// panicked on the recurrence array and a shorter one silently
+/// under-accounted its missing stages. It is a real error now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RaggedStages {
+    /// Index of the first offending group.
+    pub group: usize,
+    /// Stage count of group 0 (the schedule's shape).
+    pub expected: usize,
+    /// Stage count of the offending group.
+    pub got: usize,
+}
+
+impl fmt::Display for RaggedStages {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ragged schedule: group {} has {} stage(s) but the schedule has {}",
+            self.group, self.got, self.expected
+        )
+    }
+}
+
+impl std::error::Error for RaggedStages {}
 
 /// Result of evaluating a schedule.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -29,16 +56,19 @@ pub struct ScheduleResult {
 
 /// Exact makespan of the two-level pipelined schedule (§3.4.2: stages
 /// overlap within a group via the early-start rules, and group `V_{i+1}`
-/// overlaps with `V_i`).
-pub fn pipelined(groups: &[GroupStages]) -> ScheduleResult {
+/// overlaps with `V_i`). Every group must carry the same stage count;
+/// ragged input is a [`RaggedStages`] error, in `--release` too.
+pub fn pipelined(groups: &[GroupStages]) -> Result<ScheduleResult, RaggedStages> {
     if groups.is_empty() {
-        return ScheduleResult { makespan_s: 0.0, total_stage_time_s: 0.0 };
+        return Ok(ScheduleResult { makespan_s: 0.0, total_stage_time_s: 0.0 });
     }
     let n_stages = groups[0].len();
-    debug_assert!(groups.iter().all(|g| g.len() == n_stages));
     let mut prev_end = vec![0.0f64; n_stages];
     let mut total = 0.0;
-    for g in groups {
+    for (gi, g) in groups.iter().enumerate() {
+        if g.len() != n_stages {
+            return Err(RaggedStages { group: gi, expected: n_stages, got: g.len() });
+        }
         let mut cur_end = vec![0.0f64; n_stages];
         let mut prev_stage_end = 0.0f64;
         for (s, &t) in g.iter().enumerate() {
@@ -49,7 +79,10 @@ pub fn pipelined(groups: &[GroupStages]) -> ScheduleResult {
         }
         prev_end = cur_end;
     }
-    ScheduleResult { makespan_s: *prev_end.last().unwrap(), total_stage_time_s: total }
+    Ok(ScheduleResult {
+        makespan_s: prev_end.last().copied().unwrap_or(0.0),
+        total_stage_time_s: total,
+    })
 }
 
 /// Makespan with no pipelining: every stage of every group runs
@@ -81,14 +114,14 @@ mod tests {
 
     #[test]
     fn empty_schedule() {
-        assert_eq!(pipelined(&[]).makespan_s, 0.0);
+        assert_eq!(pipelined(&[]).unwrap().makespan_s, 0.0);
         assert_eq!(sequential(&[]).makespan_s, 0.0);
     }
 
     #[test]
     fn single_group_equals_sum() {
         let g = vec![vec![1.0, 2.0, 3.0]];
-        assert_eq!(pipelined(&g).makespan_s, 6.0);
+        assert_eq!(pipelined(&g).unwrap().makespan_s, 6.0);
         assert_eq!(sequential(&g).makespan_s, 6.0);
     }
 
@@ -97,7 +130,7 @@ mod tests {
         // G groups of S stages, each of latency t:
         // makespan = (S + G − 1) · t.
         let g: Vec<GroupStages> = (0..10).map(|_| vec![1.0; 4]).collect();
-        let r = pipelined(&g);
+        let r = pipelined(&g).unwrap();
         assert!((r.makespan_s - 13.0).abs() < 1e-12);
         assert!((sequential(&g).makespan_s - 40.0).abs() < 1e-12);
     }
@@ -107,7 +140,7 @@ mod tests {
         // One slow stage of latency 5 in each of 8 groups → makespan ≈
         // fill + 8×5.
         let g: Vec<GroupStages> = (0..8).map(|_| vec![1.0, 5.0, 1.0]).collect();
-        let r = pipelined(&g);
+        let r = pipelined(&g).unwrap();
         assert!((r.makespan_s - (1.0 + 8.0 * 5.0 + 1.0)).abs() < 1e-12);
     }
 
@@ -115,7 +148,7 @@ mod tests {
     fn pipelined_never_slower_than_sequential() {
         let g: Vec<GroupStages> =
             (0..7).map(|i| vec![0.5 + i as f64, 2.0, 1.0 / (1 + i) as f64]).collect();
-        assert!(pipelined(&g).makespan_s <= sequential(&g).makespan_s + 1e-12);
+        assert!(pipelined(&g).unwrap().makespan_s <= sequential(&g).makespan_s + 1e-12);
     }
 
     #[test]
@@ -130,6 +163,33 @@ mod tests {
         let g = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
         // g0: s0 ends 2, s1 ends 3. g1: s0 starts max(0,2)=2 ends 3;
         // s1 starts max(3,3)=3 ends 6.
-        assert!((pipelined(&g).makespan_s - 6.0).abs() < 1e-12);
+        assert!((pipelined(&g).unwrap().makespan_s - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_longer_group_is_an_error_not_a_panic() {
+        // Pre-fix: index-out-of-bounds panic on `prev_end[s]` in --release.
+        let g = vec![vec![1.0, 2.0], vec![1.0, 2.0, 3.0]];
+        assert_eq!(
+            pipelined(&g).unwrap_err(),
+            RaggedStages { group: 1, expected: 2, got: 3 }
+        );
+    }
+
+    #[test]
+    fn ragged_shorter_group_is_an_error_not_underaccounting() {
+        // Pre-fix: silently evaluated as if the missing stages were free.
+        let g = vec![vec![1.0, 2.0, 3.0], vec![4.0], vec![1.0, 1.0, 1.0]];
+        assert_eq!(
+            pipelined(&g).unwrap_err(),
+            RaggedStages { group: 1, expected: 3, got: 1 }
+        );
+    }
+
+    #[test]
+    fn ragged_error_displays_context() {
+        let e = RaggedStages { group: 3, expected: 4, got: 2 };
+        let msg = e.to_string();
+        assert!(msg.contains('3') && msg.contains('4') && msg.contains('2'), "{msg}");
     }
 }

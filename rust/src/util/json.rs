@@ -189,13 +189,40 @@ impl<'a> Parser<'a> {
                     b'r' => out.push('\r'),
                     b't' => out.push('\t'),
                     b'u' => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump().ok_or("bad \\u escape")? as char;
-                            code = code * 16
-                                + c.to_digit(16).ok_or("bad hex digit in \\u escape")?;
+                        // RFC 8259 §7 encodes astral characters as a
+                        // \uD8xx\uDCxx surrogate pair. Unpaired halves
+                        // become U+FFFD (the same lenient stance as
+                        // unmappable code points); a failed candidate low
+                        // half is re-examined, since it may itself open a
+                        // new pair: \uD83D\uD83D\uDE00 is U+FFFD then
+                        // U+1F600, not three U+FFFD.
+                        let mut code = self.hex4()?;
+                        loop {
+                            if (0xD800..=0xDBFF).contains(&code) {
+                                if self.bytes[self.pos..].starts_with(b"\\u") {
+                                    self.pos += 2;
+                                    let next = self.hex4()?;
+                                    if (0xDC00..=0xDFFF).contains(&next) {
+                                        let c = 0x10000
+                                            + ((code - 0xD800) << 10)
+                                            + (next - 0xDC00);
+                                        out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                        break;
+                                    }
+                                    // Unpaired high half; reprocess `next`.
+                                    out.push('\u{FFFD}');
+                                    code = next;
+                                    continue;
+                                }
+                                out.push('\u{FFFD}');
+                            } else if (0xDC00..=0xDFFF).contains(&code) {
+                                // Unpaired low surrogate.
+                                out.push('\u{FFFD}');
+                            } else {
+                                out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            }
+                            break;
                         }
-                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                     }
                     other => return Err(format!("bad escape \\{}", other as char)),
                 },
@@ -215,6 +242,16 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or("bad \\u escape")? as char;
+            code = code * 16 + c.to_digit(16).ok_or("bad hex digit in \\u escape")?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -247,7 +284,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/±inf have no JSON representation; `{n}` would
+                    // emit invalid tokens ("NaN", "inf"). Serialize as
+                    // null, matching JavaScript's JSON.stringify.
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -356,5 +398,53 @@ mod tests {
     fn display_escapes() {
         let v = Json::Str("a\"b\nc".into());
         assert_eq!(v.to_string(), r#""a\"b\nc""#);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        // U+1F600 😀 = \ud83d\ude00. Used to decode to two U+FFFD.
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        // Round trip: the serializer emits raw UTF-8, the parser keeps it.
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+        // Mixed content around the pair, and raw UTF-8 passing through.
+        let v = Json::parse(r#""a\ud83d\ude00b 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a😀b 😀");
+    }
+
+    #[test]
+    fn unpaired_surrogates_become_replacement_chars() {
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str().unwrap(), "\u{FFFD}");
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str().unwrap(), "\u{FFFD}");
+        // High surrogate followed by a plain character.
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str().unwrap(), "\u{FFFD}x");
+        // High surrogate followed by a \u escape that is not a low half:
+        // replacement char, then the second escape decoded on its own.
+        assert_eq!(
+            Json::parse(r#""\ud83d\u0041""#).unwrap().as_str().unwrap(),
+            "\u{FFFD}A"
+        );
+        // A failed candidate low half that is itself a high surrogate must
+        // still open the pair that follows it.
+        assert_eq!(
+            Json::parse(r#""\ud83d\ud83d\ude00""#).unwrap().as_str().unwrap(),
+            "\u{FFFD}\u{1F600}"
+        );
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(bad).to_string();
+            assert_eq!(s, "null", "{bad} must not emit invalid JSON");
+            // Round trip: the emitted document parses (to null).
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+        // Nested: an array containing a NaN still round-trips as a
+        // document.
+        let doc = Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN)]).to_string();
+        assert_eq!(doc, "[1.5,null]");
+        assert!(Json::parse(&doc).is_ok());
     }
 }

@@ -1,5 +1,8 @@
 //! Scoped thread-pool `map` over a slice — the offline stand-in for rayon's
-//! `par_iter().map()`, used by the architectural DSE sweep.
+//! `par_iter().map()` — plus the index-range chunker used to fan contiguous
+//! index spaces (output groups, graph lists) out with per-chunk scratch
+//! state. Used by the architectural DSE sweep, the batch engine, partition
+//! construction, and dataset generation.
 
 /// Applies `f` to every element of `items`, fanning the index space across
 /// `std::thread::available_parallelism()` scoped workers. Preserves order.
@@ -46,6 +49,27 @@ where
 struct SendPtr<R>(*mut Option<R>);
 unsafe impl<R: Send> Sync for SendPtr<R> {}
 
+/// Splits `0..n` into at most `k` contiguous, near-equal ranges (the first
+/// `n % k` ranges carry one extra element). Feed the ranges to [`par_map`]
+/// when each worker needs private scratch state sized to the whole problem:
+/// one allocation per chunk instead of one per element.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +88,28 @@ mod tests {
         let empty: Vec<u32> = vec![];
         assert!(par_map(&empty, |&x| x).is_empty());
         assert_eq!(par_map(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_once() {
+        for (n, k) in [(10usize, 3usize), (7, 7), (5, 9), (100, 4), (1, 1)] {
+            let ranges = chunk_ranges(n, k);
+            assert!(ranges.len() <= k);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                assert!(!r.is_empty(), "no empty chunks");
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..{n}");
+            // Near-equal: sizes differ by at most one.
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced chunks {sizes:?}");
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
+        assert!(chunk_ranges(4, 0).is_empty());
     }
 
     #[test]

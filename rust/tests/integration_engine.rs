@@ -4,6 +4,8 @@
 //! partitions, per-point failure reporting in the DSE sweep, and engine
 //! results being bit-identical to the uncached serial simulator.
 
+use std::sync::Arc;
+
 use ghost::config::GhostConfig;
 use ghost::coordinator::dse;
 use ghost::coordinator::{
@@ -99,6 +101,50 @@ fn unknown_dataset_degrades_to_error_value() {
         engine.run(&req).unwrap_err(),
         SimError::UnknownDataset("NoSuchDataset".into())
     );
+}
+
+#[test]
+fn parameterized_rmat_datasets_cached_like_table2_names() {
+    // The large-graph tier must ride the same (dataset, V, N) cache as the
+    // Table-2 names: different spellings of one rmat spec share one
+    // canonical identity, and each distinct shape builds exactly once.
+    let engine = BatchEngine::new();
+    let a = engine.partitions("rmat-4000v-16000e", 20, 20).unwrap();
+    let b = engine.partitions("RMAT-4000v-16000e-128f", 20, 20).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "same spec must share one cache entry");
+    assert_eq!(engine.dataset_builds(), 1);
+    assert_eq!(engine.partition_builds(), 1);
+    let c = engine.partitions("rmat-4000v-16000e", 10, 10).unwrap();
+    assert!(!Arc::ptr_eq(&a, &c));
+    assert_eq!(engine.dataset_builds(), 1, "dataset shared across shapes");
+    assert_eq!(engine.partition_builds(), 2);
+    // A different seed is a different dataset.
+    let d = engine.partitions("rmat-4000v-16000e-77s", 20, 20).unwrap();
+    assert!(!Arc::ptr_eq(&a, &d));
+    assert_eq!(engine.dataset_builds(), 2);
+}
+
+#[test]
+fn large_graph_tier_simulates_gcn_and_gat_end_to_end() {
+    // Acceptance: a named million-edge dataset runs end-to-end through
+    // BatchEngine::run for both model families, sharing one generation and
+    // one (dataset, V, N) partition set.
+    let engine = BatchEngine::new();
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        let r = engine
+            .run(&SimRequest::new(kind, "ogbn-arxiv-syn", cfg, flags))
+            .expect("ogbn-arxiv-syn simulates end-to-end");
+        assert!(r.metrics.latency_s > 0.0, "{kind:?}");
+        assert!(r.metrics.energy_j > 0.0, "{kind:?}");
+        assert!(r.metrics.ops > 0, "{kind:?}");
+    }
+    assert_eq!(engine.dataset_builds(), 1, "one generation for both models");
+    assert_eq!(engine.partition_builds(), 1, "one partition set for both models");
+    let ds = engine.dataset("ogbn-arxiv-syn").unwrap();
+    assert_eq!(ds.graphs[0].n_vertices, 169_343);
+    assert_eq!(ds.graphs[0].n_edges(), 1_166_243);
 }
 
 #[test]

@@ -55,12 +55,41 @@ fn group_plans_cover_every_vertex_group() {
     let g = &ds.graphs[0];
     let pm = PartitionMatrix::build(g, 20, 20);
     assert_eq!(pm.n_output_groups(), g.n_vertices.div_ceil(20));
-    for (i, grp) in pm.groups.iter().enumerate() {
+    for (i, (grp, blocks)) in pm.iter_groups().enumerate() {
         assert_eq!(grp.out_group as usize, i);
+        assert_eq!(blocks.len(), grp.n_blocks as usize);
         // Max lane degree bounds every block's worth of edges.
-        let block_edges: u32 = grp.blocks.iter().map(|b| b.n_edges).sum();
+        let block_edges: u32 = blocks.iter().map(|b| b.n_edges).sum();
         assert_eq!(block_edges, grp.total_edges);
     }
+}
+
+#[test]
+fn flat_blocks_build_matches_serial_reference_on_all_table2_datasets() {
+    // The parallel flat-blocks builder must produce byte-identical
+    // partition plans to the single-threaded reference, on every graph of
+    // every Table-2 dataset (Amazon crosses the parallel threshold; the
+    // rest pin the serial path).
+    for spec in ALL_DATASETS {
+        let ds = Dataset::generate(spec);
+        for g in &ds.graphs {
+            let par = PartitionMatrix::build(g, 20, 20);
+            let ser = PartitionMatrix::build_serial(g, 20, 20);
+            assert_eq!(par, ser, "{}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn flat_blocks_build_matches_serial_on_a_million_edge_graph() {
+    // The scale the tentpole targets: >=1M edges, parallel path.
+    let ds = Dataset::by_name("rmat-120000v-1000000e").unwrap();
+    let g = &ds.graphs[0];
+    assert!(g.n_edges() >= 1_000_000);
+    let par = PartitionMatrix::build(g, 20, 20);
+    let ser = PartitionMatrix::build_serial(g, 20, 20);
+    assert_eq!(par, ser);
+    assert_eq!(par.total_edges(), g.n_edges() as u64);
 }
 
 #[test]

@@ -8,7 +8,9 @@ use ghost::coordinator::{simulate_workload, OptFlags};
 use ghost::gnn::models::ModelKind;
 use ghost::gnn::quant;
 use ghost::graph::csr::CsrGraph;
-use ghost::graph::datasets::{generate_skewed_graph, Dataset, DatasetSpec, Task};
+use ghost::graph::datasets::{
+    generate_rmat_graph, generate_skewed_graph, Dataset, DatasetSpec, GraphGen, Task,
+};
 use ghost::graph::partition::PartitionMatrix;
 use ghost::sim;
 use ghost::util::rng::Pcg64;
@@ -31,11 +33,11 @@ fn prop_partition_conserves_edges_and_orders_blocks() {
         let n = rng.gen_range(1, 50);
         let pm = PartitionMatrix::build(&g, v, n);
         assert_eq!(pm.total_edges(), g.n_edges() as u64);
-        for grp in &pm.groups {
-            for w in grp.blocks.windows(2) {
+        for (grp, blocks) in pm.iter_groups() {
+            for w in blocks.windows(2) {
                 assert!(w[0].input_group < w[1].input_group, "prefetch order violated");
             }
-            let block_sum: u32 = grp.blocks.iter().map(|b| b.n_edges).sum();
+            let block_sum: u32 = blocks.iter().map(|b| b.n_edges).sum();
             assert_eq!(block_sum, grp.total_edges);
             assert!(grp.distinct_sources <= grp.total_edges.max(1));
         }
@@ -64,7 +66,7 @@ fn prop_pipelined_never_slower_than_sequential_and_bounded() {
         let groups: Vec<Vec<f64>> = (0..n_groups)
             .map(|_| (0..n_stages).map(|_| rng.next_f64() * 10.0).collect())
             .collect();
-        let p = sim::pipelined(&groups);
+        let p = sim::pipelined(&groups).expect("uniform stage counts");
         let s = sim::sequential(&groups);
         assert!(p.makespan_s <= s.makespan_s + 1e-9, "pipeline slower than sequential");
         // Lower bound: the slowest single stage column.
@@ -112,6 +114,7 @@ fn prop_simulator_monotone_in_optimizations() {
             task: Task::NodeClassification,
             max_degree_cap: 64,
             seed: 9000 + case as u64,
+            generator: GraphGen::Skewed,
         };
         let ds = Dataset::generate(spec);
         let run = |flags: OptFlags| {
@@ -149,6 +152,7 @@ fn prop_metrics_scale_with_workload() {
                 task: Task::NodeClassification,
                 max_degree_cap: 32,
                 seed,
+                generator: GraphGen::Skewed,
             })
         };
         let small = mk(1, 7000 + case);
@@ -175,6 +179,25 @@ fn prop_generated_graphs_respect_spec() {
         assert_eq!(g.n_edges(), e.min(n * cap));
         assert!(g.max_degree() <= cap);
         // No self loops.
+        for v in 0..n {
+            assert!(!g.neighbors(v).contains(&(v as u32)), "self loop at {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_rmat_graphs_respect_spec() {
+    // Same contract as the skewed generator: exact clamped edge counts,
+    // cap respected, no self loops — for the large-graph tier's R-MAT.
+    let mut rng = Pcg64::seed_from_u64(808);
+    for _ in 0..CASES {
+        let n = rng.gen_range(2, 500);
+        let e = rng.gen_range(1, 3 * n);
+        let cap = rng.gen_range(1, 40);
+        let g = generate_rmat_graph(n, e, cap, &mut rng);
+        assert_eq!(g.n_vertices, n);
+        assert_eq!(g.n_edges(), e.min(n * cap));
+        assert!(g.max_degree() <= cap);
         for v in 0..n {
             assert!(!g.neighbors(v).contains(&(v as u32)), "self loop at {v}");
         }
