@@ -1,0 +1,83 @@
+//! Bench: the serving event queue at scale.
+//!
+//! Drives ≥100k simulated requests through the discrete-event fleet
+//! scheduler (tenant profiles pre-resolved, so the timing isolates the
+//! event loop: heap churn, routing, batching, metric recording), then
+//! faces the three routing policies off on the same stream.
+
+use ghost::coordinator::BatchEngine;
+use ghost::gnn::models::ModelKind;
+use ghost::serve::{
+    simulate_with_profiles, ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig, TenantMix,
+    TenantProfile, TrafficSpec,
+};
+use ghost::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let engine = BatchEngine::new();
+    let mix = TenantMix::new(vec![
+        TenantProfile::new(ModelKind::Gcn, "Cora", 3.0),
+        TenantProfile::new(ModelKind::Gat, "Citeseer", 1.0),
+        TenantProfile::new(ModelKind::GraphSage, "PubMed", 1.0),
+    ])
+    .expect("valid mix");
+
+    let mut cfg = ServeConfig::new(
+        mix,
+        TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 25_000.0 },
+    );
+    cfg.accelerators = 8;
+    cfg.duration_s = 5.0; // ~125k Poisson arrivals at 25k rps
+    cfg.batch = BatchPolicy::MaxBatchOrWait { max_batch: 8, max_wait_s: 2e-4 };
+    cfg.seed = 7;
+
+    // Resolve the three tenant profiles once — the engine caches them, and
+    // the event-loop bench below reuses the resolved slice directly.
+    let profiles = time_once("serve_resolve_3_tenant_profiles", || {
+        cfg.tenant_requests()
+            .iter()
+            .map(|req| engine.service_profile(req).expect("tenant simulates"))
+            .collect::<Vec<_>>()
+    });
+
+    let report = simulate_with_profiles(&cfg, &profiles).expect("serve simulates");
+    println!(
+        "stream: {} offered / {} completed, throughput {:.0} req/s, \
+         p50 {:.3} ms p99 {:.3} ms, fleet util {:.2}",
+        report.offered,
+        report.completed,
+        report.throughput_rps,
+        report.latency.p50_s * 1e3,
+        report.latency.p99_s * 1e3,
+        report.fleet_utilization()
+    );
+    assert!(
+        report.offered >= 100_000,
+        "bench must drive >=100k requests through the event queue, got {}",
+        report.offered
+    );
+    assert_eq!(report.offered, report.completed, "fleet must drain");
+
+    let s = bench("serve_event_loop_125k_requests", 1, 5, || {
+        black_box(simulate_with_profiles(&cfg, &profiles).expect("serve simulates"));
+    });
+    let req_per_s = report.offered as f64 / s.median.as_secs_f64();
+    println!("event-loop simulation rate: {req_per_s:.0} requests/s (wall clock)");
+
+    // Routing-policy faceoff on the identical request stream.
+    for route in
+        [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue, RoutePolicy::GraphAffinity]
+    {
+        let mut c = cfg.clone();
+        c.route = route;
+        let r = simulate_with_profiles(&c, &profiles).expect("serve simulates");
+        println!(
+            "  {:>14}: p50 {:.3} ms | p99 {:.3} ms | util {:.2} | {} weight programs",
+            route.name(),
+            r.latency.p50_s * 1e3,
+            r.latency.p99_s * 1e3,
+            r.fleet_utilization(),
+            r.total_weight_programs()
+        );
+    }
+}

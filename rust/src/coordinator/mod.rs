@@ -6,9 +6,10 @@
 //! * [`schedule`] — maps a `(model, dataset, config, flags)` tuple onto
 //!   per-group pipeline stages and evaluates latency/energy with the
 //!   [`crate::sim`] pipeline model: the full GHOST simulator.
-//! * [`engine`] — the batched simulation session: caches datasets and
-//!   `(dataset, V, N)` partition sets behind concurrent maps and fans
-//!   [`SimRequest`] batches out over the thread pool.
+//! * [`engine`] — the batched simulation session: caches datasets,
+//!   `(dataset, V, N)` partition sets, and per-request [`ServiceProfile`]s
+//!   behind concurrent maps and fans [`SimRequest`] batches out over the
+//!   thread pool.
 //! * [`error`] — the structured [`SimError`] every fallible path returns.
 //! * [`dse`] — the architectural design-space exploration of Fig. 7(c)
 //!   over `[N, V, R_r, R_c, T_r]`, run through the engine.
@@ -19,7 +20,7 @@ pub mod error;
 pub mod optimizations;
 pub mod schedule;
 
-pub use engine::{BatchEngine, SimRequest};
+pub use engine::{BatchEngine, ServiceProfile, SimRequest};
 pub use error::SimError;
 pub use optimizations::OptFlags;
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

@@ -27,6 +27,13 @@
 //! * [`baselines`] — analytic roofline models of the nine comparison
 //!   platforms (GRIP, HyGCN, EnGN, HW_ACC, ReGNN, ReGraphX, TPU, CPU, GPU).
 //! * [`energy`] — EPB / GOPS / EPB-per-GOPS accounting shared by all models.
+//! * [`serve`] — the online-serving subsystem: a deterministic
+//!   discrete-event simulator replaying open/closed-loop request streams
+//!   (Poisson, bursty, diurnal; multi-tenant mixes) against an
+//!   N-accelerator fleet with dynamic micro-batching and
+//!   routing policies, reporting exact tail-latency percentiles — the
+//!   "what p99 does a 4-chip fleet hold at 50k rps" axis the offline
+//!   figures cannot answer.
 //! * [`runtime`] — the PJRT functional datapath (execution requires the
 //!   off-by-default `pjrt` cargo feature): loads `artifacts/*.hlo.txt`
 //!   lowered from the JAX/Pallas model (build-time Python) and executes real
@@ -48,6 +55,7 @@ pub mod graph;
 pub mod memory;
 pub mod photonics;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

@@ -18,6 +18,10 @@ use ghost::photonics::devices::DeviceParams;
 use ghost::photonics::dse as device_dse;
 #[cfg(feature = "pjrt")]
 use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
+use ghost::serve::{
+    self, ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig, TenantMix, TenantProfile,
+    TrafficSpec,
+};
 use ghost::util::json::Json;
 
 const USAGE: &str = "\
@@ -33,11 +37,24 @@ USAGE:
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
                 [--comparison] [--datasets] [--all]
+  ghost serve --model <m> --dataset <d> | --mix <m:d[:w],...>
+              [--rps N] [--accelerators N] [--duration S] [--seed N]
+              [--policy rr|jsq|affinity] [--batch immediate|max:<n>:<ms>|slo[:<n>]]
+              [--arrival poisson|bursty|diurnal] [--slo-ms MS]
+              [--clients N --think-ms MS] [--json]
+        online-serving simulation: replay a request stream against an
+        N-accelerator fleet; report throughput, utilization, and exact
+        p50/p95/p99/p999 latency. --clients switches to closed loop.
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
+
+  Flags accept both '--key value' and '--key=value'; duplicates are errors.
 ";
 
-/// Tiny flag parser: `--key value` for options, `--key` for booleans.
+/// Tiny flag parser: `--key value` or `--key=value` for options, `--key`
+/// (or `--key=true`/`--key=false`) for booleans. Repeating a flag is an
+/// error — silently keeping the last occurrence hid typos like
+/// `--model gcn --model gat`.
 struct Args {
     flags: HashMap<String, String>,
 }
@@ -48,20 +65,38 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            let key = a
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("unexpected argument '{a}'"))?
-                .to_string();
-            if boolean_flags.contains(&key.as_str()) {
-                flags.insert(key, "true".into());
-                i += 1;
-            } else {
-                let val = argv
-                    .get(i + 1)
-                    .ok_or_else(|| anyhow!("flag --{key} expects a value"))?
-                    .clone();
-                flags.insert(key, val);
-                i += 2;
+            let body = a.strip_prefix("--").ok_or_else(|| anyhow!("unexpected argument '{a}'"))?;
+            let (key, inline) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            if key.is_empty() {
+                bail!("malformed flag '{a}'");
+            }
+            let is_boolean = boolean_flags.contains(&key.as_str());
+            let val = match inline {
+                Some(v) => {
+                    if is_boolean && v != "true" && v != "false" {
+                        bail!("boolean flag --{key} accepts only 'true' or 'false', got '{v}'");
+                    }
+                    i += 1;
+                    v
+                }
+                None if is_boolean => {
+                    i += 1;
+                    "true".into()
+                }
+                None => {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{key} expects a value"))?
+                        .clone();
+                    i += 2;
+                    v
+                }
+            };
+            if flags.insert(key.clone(), val).is_some() {
+                bail!("duplicate flag --{key}");
             }
         }
         Ok(Self { flags })
@@ -71,8 +106,9 @@ impl Args {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// True when a boolean flag is set (bare `--flag` or `--flag=true`).
     fn has(&self, key: &str) -> bool {
-        self.flags.contains_key(key)
+        self.get(key) == Some("true")
     }
 
     fn require(&self, key: &str) -> Result<&str> {
@@ -91,6 +127,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(rest),
         "dse" => cmd_dse(rest),
         "figures" => cmd_figures(rest),
+        "serve" => cmd_serve(rest),
         "infer" => cmd_infer(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -248,6 +285,205 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parses a `model:dataset[:weight]` comma-separated tenant mix.
+fn parse_mix(spec: &str) -> Result<TenantMix> {
+    let mut tenants = Vec::new();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 2 || fields.len() > 3 {
+            bail!("tenant '{part}' must be model:dataset[:weight]");
+        }
+        let model = ModelKind::by_name(fields[0])
+            .ok_or_else(|| anyhow!("unknown model '{}' in tenant '{part}'", fields[0]))?;
+        let weight: f64 = match fields.get(2) {
+            Some(w) => w
+                .parse()
+                .map_err(|_| anyhow!("bad weight '{w}' in tenant '{part}'"))?,
+            None => 1.0,
+        };
+        tenants.push(TenantProfile::new(model, fields[1], weight));
+    }
+    TenantMix::new(tenants).map_err(|e| anyhow!(e))
+}
+
+/// Parses a `--batch` spec: `immediate`, `max:<n>:<wait_ms>`, or
+/// `slo[:<n>]` (needs `--slo-ms`).
+fn parse_batch_policy(spec: &str, slo_s: Option<f64>) -> Result<BatchPolicy> {
+    let fields: Vec<&str> = spec.split(':').collect();
+    match fields[0] {
+        "immediate" => Ok(BatchPolicy::Immediate),
+        "max" => {
+            if fields.len() != 3 {
+                bail!("--batch max policy is max:<n>:<wait_ms>");
+            }
+            let max_batch: usize = fields[1].parse()?;
+            let wait_ms: f64 = fields[2].parse()?;
+            Ok(BatchPolicy::MaxBatchOrWait { max_batch, max_wait_s: wait_ms * 1e-3 })
+        }
+        "slo" => {
+            let slo_s =
+                slo_s.ok_or_else(|| anyhow!("--batch slo requires --slo-ms"))?;
+            let max_batch: usize =
+                if fields.len() > 1 { fields[1].parse()? } else { 16 };
+            Ok(BatchPolicy::SloAware { slo_s, max_batch })
+        }
+        other => {
+            bail!("unknown batch policy '{other}' (immediate | max:<n>:<wait_ms> | slo[:<n>])")
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["json"])?;
+    // Reject conflicting flag sets instead of silently ignoring one side
+    // (the same rationale as the duplicate-flag error).
+    if args.get("mix").is_some() && (args.get("model").is_some() || args.get("dataset").is_some())
+    {
+        bail!("--mix conflicts with --model/--dataset: pick one way to name tenants");
+    }
+    if args.get("clients").is_some() && (args.get("rps").is_some() || args.get("arrival").is_some())
+    {
+        bail!("--clients (closed loop) conflicts with --rps/--arrival (open loop)");
+    }
+    if args.get("think-ms").is_some() && args.get("clients").is_none() {
+        bail!("--think-ms only applies to closed-loop traffic; add --clients");
+    }
+    let mix = match args.get("mix") {
+        Some(spec) => parse_mix(spec)?,
+        None => {
+            let model = args.require("model")?;
+            let dataset = args.require("dataset")?;
+            let kind =
+                ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+            TenantMix::new(vec![TenantProfile::new(kind, dataset, 1.0)])
+                .map_err(|e| anyhow!(e))?
+        }
+    };
+    let duration_s: f64 = args.get("duration").unwrap_or("1").parse()?;
+    let slo_s = match args.get("slo-ms") {
+        Some(ms) => Some(ms.parse::<f64>()? * 1e-3),
+        None => None,
+    };
+    let process = match args.get("arrival").unwrap_or("poisson") {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => {
+            ArrivalProcess::Bursty { burst_factor: 4.0, mean_calm_s: 0.2, mean_burst_s: 0.05 }
+        }
+        "diurnal" => ArrivalProcess::Diurnal { period_s: duration_s, amplitude: 0.8 },
+        other => bail!("unknown arrival process '{other}' (poisson | bursty | diurnal)"),
+    };
+    let traffic = match args.get("clients") {
+        Some(c) => {
+            let think_ms: f64 = args.get("think-ms").unwrap_or("1").parse()?;
+            TrafficSpec::Closed { clients: c.parse()?, mean_think_s: think_ms * 1e-3 }
+        }
+        None => TrafficSpec::Open { process, rps: args.get("rps").unwrap_or("1000").parse()? },
+    };
+    let route = {
+        let name = args.get("policy").unwrap_or("jsq");
+        RoutePolicy::by_name(name)
+            .ok_or_else(|| anyhow!("unknown routing policy '{name}' (rr | jsq | affinity)"))?
+    };
+    let mut cfg = ServeConfig::new(mix, traffic);
+    cfg.accelerators = args.get("accelerators").unwrap_or("1").parse()?;
+    cfg.route = route;
+    cfg.batch = parse_batch_policy(args.get("batch").unwrap_or("immediate"), slo_s)?;
+    cfg.duration_s = duration_s;
+    cfg.seed = args.get("seed").unwrap_or("7").parse()?;
+    cfg.slo_s = slo_s;
+
+    let report = serve::simulate(BatchEngine::global(), &cfg)?;
+    if args.has("json") {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let tenant_list = cfg
+        .mix
+        .tenants()
+        .iter()
+        .map(|t| format!("{} (w {:.2})", t.label(), t.weight))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!(
+        "GHOST serving simulation: {} accelerator(s), route {}, batch {}",
+        cfg.accelerators,
+        cfg.route.name(),
+        cfg.batch.label()
+    );
+    println!("  tenants      : {tenant_list}");
+    match cfg.traffic {
+        TrafficSpec::Open { process, rps } => {
+            println!("  traffic      : open loop, {} @ {rps:.0} req/s", process.name())
+        }
+        TrafficSpec::Closed { clients, mean_think_s } => println!(
+            "  traffic      : closed loop, {clients} clients, think {:.3} ms",
+            mean_think_s * 1e3
+        ),
+    }
+    println!(
+        "  offered      : {} requests over {:.3} s (completed {})",
+        report.offered, report.duration_s, report.completed
+    );
+    println!(
+        "  throughput   : {:.1} req/s over {:.3} s makespan",
+        report.throughput_rps, report.makespan_s
+    );
+    let l = &report.latency;
+    println!(
+        "  latency      : p50 {:.3} ms | p95 {:.3} ms | p99 {:.3} ms | p999 {:.3} ms",
+        l.p50_s * 1e3,
+        l.p95_s * 1e3,
+        l.p99_s * 1e3,
+        l.p999_s * 1e3
+    );
+    println!(
+        "                 mean {:.3} ms | max {:.3} ms",
+        l.mean_s * 1e3,
+        l.max_s * 1e3
+    );
+    let utils = report
+        .accels
+        .iter()
+        .map(|a| format!("{:.2}", a.utilization))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!(
+        "  utilization  : fleet {:.2} (per-accel {utils})",
+        report.fleet_utilization()
+    );
+    println!(
+        "  batches      : {} (mean size {:.2}), {} weight programs",
+        report.total_batches(),
+        if report.total_batches() > 0 {
+            report.completed as f64 / report.total_batches() as f64
+        } else {
+            0.0
+        },
+        report.total_weight_programs()
+    );
+    println!(
+        "  queue depth  : mean {:.1}, peak {:.0} waiting",
+        report.queue_depth.mean(),
+        report.queue_depth.max()
+    );
+    println!("  energy       : {:.3} J photonic inference", report.energy_j);
+    if let (Some(slo), Some(att)) = (cfg.slo_s, report.slo_attainment) {
+        println!("  SLO {:.2} ms  : {:.2}% attainment", slo * 1e3, att * 100.0);
+    }
+    if report.tenants.len() > 1 {
+        for t in &report.tenants {
+            println!(
+                "    {:<20} {:>8} done | p50 {:.3} ms | p99 {:.3} ms",
+                t.label,
+                t.completed,
+                t.latency.p50_s * 1e3,
+                t.latency.p99_s * 1e3
+            );
+        }
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_infer(_argv: &[String]) -> Result<()> {
     bail!(
@@ -317,4 +553,82 @@ fn print_table3() -> Result<()> {
         Err(_) => println!("Table 3: run `make artifacts` first ({path} not found)"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_accepts_space_and_equals_forms() {
+        let a = Args::parse(&argv(&["--model", "gcn", "--dataset=Cora"]), &[]).unwrap();
+        assert_eq!(a.get("model"), Some("gcn"));
+        assert_eq!(a.get("dataset"), Some("Cora"));
+        // Values containing '=' split only on the first one.
+        let a = Args::parse(&argv(&["--expr=a=b"]), &[]).unwrap();
+        assert_eq!(a.get("expr"), Some("a=b"));
+    }
+
+    #[test]
+    fn parse_boolean_flags_bare_and_inline() {
+        let a = Args::parse(&argv(&["--wb", "--no-pp=false"]), &["wb", "no-pp"]).unwrap();
+        assert!(a.has("wb"));
+        assert!(!a.has("no-pp"), "--no-pp=false must read as unset");
+        let e = Args::parse(&argv(&["--wb=yes"]), &["wb"]).unwrap_err();
+        assert!(e.to_string().contains("true"), "{e}");
+    }
+
+    #[test]
+    fn parse_rejects_duplicates_instead_of_keeping_last() {
+        let e = Args::parse(&argv(&["--model", "gcn", "--model", "gat"]), &[]).unwrap_err();
+        assert!(e.to_string().contains("duplicate flag --model"), "{e}");
+        let e = Args::parse(&argv(&["--model=gcn", "--model", "gat"]), &[]).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+        let e = Args::parse(&argv(&["--wb", "--wb"]), &["wb"]).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn parse_still_rejects_malformed_input() {
+        assert!(Args::parse(&argv(&["stray"]), &[]).is_err());
+        assert!(Args::parse(&argv(&["--model"]), &[]).is_err());
+        assert!(Args::parse(&argv(&["--=x"]), &[]).is_err());
+        assert!(Args::parse(&argv(&["--"]), &[]).is_err());
+    }
+
+    #[test]
+    fn mix_spec_round_trips() {
+        let mix = parse_mix("gcn:Cora:3,gat:Citeseer").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix.tenants()[0].weight, 3.0);
+        assert_eq!(mix.tenants()[1].weight, 1.0);
+        assert!(parse_mix("gcn").is_err());
+        assert!(parse_mix("nope:Cora").is_err());
+        assert!(parse_mix("gcn:Cora:zero").is_err());
+        assert!(parse_mix("gcn:Cora:0").is_err());
+    }
+
+    #[test]
+    fn batch_policy_specs_parse() {
+        assert_eq!(parse_batch_policy("immediate", None).unwrap(), BatchPolicy::Immediate);
+        assert_eq!(
+            parse_batch_policy("max:8:0.5", None).unwrap(),
+            BatchPolicy::MaxBatchOrWait { max_batch: 8, max_wait_s: 0.5e-3 }
+        );
+        assert_eq!(
+            parse_batch_policy("slo:4", Some(2e-3)).unwrap(),
+            BatchPolicy::SloAware { slo_s: 2e-3, max_batch: 4 }
+        );
+        assert_eq!(
+            parse_batch_policy("slo", Some(2e-3)).unwrap(),
+            BatchPolicy::SloAware { slo_s: 2e-3, max_batch: 16 }
+        );
+        assert!(parse_batch_policy("slo", None).is_err());
+        assert!(parse_batch_policy("max:8", None).is_err());
+        assert!(parse_batch_policy("nope", None).is_err());
+    }
 }

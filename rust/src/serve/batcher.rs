@@ -1,0 +1,168 @@
+//! Dynamic micro-batching policies.
+//!
+//! GHOST programs a model's weights onto the MR banks once and then
+//! streams requests through them, so a batch of same-tenant requests pays
+//! the weight-programming latency ([`ServiceProfile::weight_stage_s`]) at
+//! most once. The batcher decides how long a queue may hold requests to
+//! grow that batch: not at all ([`BatchPolicy::Immediate`]), up to a fixed
+//! size/wait bound ([`BatchPolicy::MaxBatchOrWait`]), or up to whatever
+//! slack the oldest request's latency SLO still allows
+//! ([`BatchPolicy::SloAware`]).
+//!
+//! A policy is a pure function of `(oldest arrival, queue length, tenant
+//! profile)` — it owns no state and makes no RNG draws — which keeps the
+//! fleet simulator's event loop deterministic.
+
+use crate::coordinator::ServiceProfile;
+
+/// When a per-tenant queue becomes dispatchable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Dispatch every request alone as soon as an accelerator frees up.
+    /// Minimum queueing delay, zero amortization.
+    Immediate,
+    /// Close a batch when `max_batch` requests are queued or when the
+    /// oldest has waited `max_wait_s`, whichever comes first.
+    MaxBatchOrWait { max_batch: usize, max_wait_s: f64 },
+    /// Grow the batch as long as the oldest request can still meet
+    /// `slo_s`: the wait budget is the SLO minus the worst-case (cold,
+    /// full-batch) service time. Falls back to immediate dispatch when the
+    /// service time alone exhausts the SLO.
+    SloAware { slo_s: f64, max_batch: usize },
+}
+
+impl BatchPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            BatchPolicy::Immediate => Ok(()),
+            BatchPolicy::MaxBatchOrWait { max_batch, max_wait_s } => {
+                if max_batch == 0 {
+                    return Err("max_batch must be >= 1".into());
+                }
+                if !max_wait_s.is_finite() || max_wait_s < 0.0 {
+                    return Err(format!("max_wait_s {max_wait_s} must be finite and >= 0"));
+                }
+                Ok(())
+            }
+            BatchPolicy::SloAware { slo_s, max_batch } => {
+                if max_batch == 0 {
+                    return Err("max_batch must be >= 1".into());
+                }
+                if !slo_s.is_finite() || slo_s <= 0.0 {
+                    return Err(format!("slo_s {slo_s} must be finite and > 0"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Most requests the policy closes into one batch.
+    pub fn max_batch(&self) -> usize {
+        match *self {
+            BatchPolicy::Immediate => 1,
+            BatchPolicy::MaxBatchOrWait { max_batch, .. }
+            | BatchPolicy::SloAware { max_batch, .. } => max_batch,
+        }
+    }
+
+    /// The earliest instant a non-empty queue may dispatch, given the
+    /// arrival time of its oldest request and its current length. A value
+    /// `<= now` means "ready"; otherwise the fleet schedules a wake-up at
+    /// the returned deadline (re-evaluated if more requests land first).
+    pub fn ready_at(
+        &self,
+        oldest_arrival_s: f64,
+        queued: usize,
+        profile: &ServiceProfile,
+    ) -> f64 {
+        match *self {
+            BatchPolicy::Immediate => oldest_arrival_s,
+            BatchPolicy::MaxBatchOrWait { max_batch, max_wait_s } => {
+                if queued >= max_batch {
+                    oldest_arrival_s
+                } else {
+                    oldest_arrival_s + max_wait_s
+                }
+            }
+            BatchPolicy::SloAware { slo_s, max_batch } => {
+                if queued >= max_batch {
+                    return oldest_arrival_s;
+                }
+                let budget = (slo_s - profile.batch_service_s(max_batch, false)).max(0.0);
+                oldest_arrival_s + budget
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            BatchPolicy::Immediate => "immediate".into(),
+            BatchPolicy::MaxBatchOrWait { max_batch, max_wait_s } => {
+                format!("max:{max_batch}:{:.3}ms", max_wait_s * 1e3)
+            }
+            BatchPolicy::SloAware { slo_s, max_batch } => {
+                format!("slo:{max_batch}@{:.3}ms", slo_s * 1e3)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> ServiceProfile {
+        ServiceProfile {
+            latency_s: 1.0e-3,
+            weight_stage_s: 4.0e-4,
+            energy_j: 1.0e-6,
+            weight_stage_energy_j: 4.0e-7,
+        }
+    }
+
+    #[test]
+    fn immediate_is_always_ready_with_singleton_batches() {
+        let p = BatchPolicy::Immediate;
+        assert_eq!(p.max_batch(), 1);
+        assert_eq!(p.ready_at(3.5, 10, &profile()), 3.5);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn max_batch_or_wait_holds_until_deadline_or_fill() {
+        let p = BatchPolicy::MaxBatchOrWait { max_batch: 4, max_wait_s: 0.01 };
+        // Short queue: dispatchable only after the wait deadline.
+        assert_eq!(p.ready_at(2.0, 1, &profile()), 2.01);
+        assert_eq!(p.ready_at(2.0, 3, &profile()), 2.01);
+        // Full batch: ready the moment the oldest arrived.
+        assert_eq!(p.ready_at(2.0, 4, &profile()), 2.0);
+        assert_eq!(p.ready_at(2.0, 9, &profile()), 2.0);
+        assert_eq!(p.max_batch(), 4);
+    }
+
+    #[test]
+    fn slo_aware_budget_shrinks_with_service_time() {
+        let pr = profile(); // full cold batch of 8: 4e-4 + 8·6e-4 = 5.2 ms
+        let tight = BatchPolicy::SloAware { slo_s: 6.0e-3, max_batch: 8 };
+        let ready = tight.ready_at(0.0, 1, &pr);
+        assert!((ready - 8.0e-4).abs() < 1e-12, "budget = {ready}");
+        // An SLO the service time already exceeds leaves no wait budget.
+        let hopeless = BatchPolicy::SloAware { slo_s: 1.0e-3, max_batch: 8 };
+        assert_eq!(hopeless.ready_at(5.0, 1, &pr), 5.0);
+        // A full batch dispatches immediately regardless of budget.
+        assert_eq!(tight.ready_at(5.0, 8, &pr), 5.0);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_policies() {
+        assert!(BatchPolicy::MaxBatchOrWait { max_batch: 0, max_wait_s: 0.1 }
+            .validate()
+            .is_err());
+        assert!(BatchPolicy::MaxBatchOrWait { max_batch: 4, max_wait_s: f64::NAN }
+            .validate()
+            .is_err());
+        assert!(BatchPolicy::SloAware { slo_s: 0.0, max_batch: 4 }.validate().is_err());
+        assert!(BatchPolicy::SloAware { slo_s: 1.0, max_batch: 0 }.validate().is_err());
+        assert!(!BatchPolicy::Immediate.label().is_empty());
+    }
+}

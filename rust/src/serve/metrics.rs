@@ -1,0 +1,363 @@
+//! Serving metrics: exact latency percentiles, SLO attainment, per-tenant
+//! and per-accelerator breakdowns, and queue/utilization time series —
+//! serialized through [`crate::util::json`].
+//!
+//! The latency recorder keeps every sample (8 bytes each — a million
+//! requests is 8 MB) and sorts once at summary time, so the reported
+//! p50/p95/p99/p999 are *exact* nearest-rank percentiles over the full
+//! run, not sketch approximations. The percentile math is
+//! [`crate::util::bench::percentile_index`], shared with the bench
+//! harness so "p99" means the same thing in both.
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::percentile_sorted;
+use crate::util::json::Json;
+
+/// Collects individual request latencies.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    sum: f64,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+        self.sum += seconds;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Fraction of recorded latencies within `slo_s` (1.0 when nothing was
+    /// recorded — an empty stream vacuously meets any SLO).
+    pub fn attainment(&self, slo_s: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        let ok = self.samples.iter().filter(|&&s| s <= slo_s).count();
+        ok as f64 / self.samples.len() as f64
+    }
+
+    /// Sorts a copy of the samples and reduces them to exact percentiles.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        LatencySummary {
+            count: sorted.len() as u64,
+            mean_s: self.sum / sorted.len() as f64,
+            min_s: sorted[0],
+            max_s: sorted[sorted.len() - 1],
+            p50_s: percentile_sorted(&sorted, 0.50),
+            p95_s: percentile_sorted(&sorted, 0.95),
+            p99_s: percentile_sorted(&sorted, 0.99),
+            p999_s: percentile_sorted(&sorted, 0.999),
+        }
+    }
+}
+
+/// Exact latency distribution of one request population.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+}
+
+impl LatencySummary {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("mean_s".into(), Json::Num(self.mean_s));
+        o.insert("min_s".into(), Json::Num(self.min_s));
+        o.insert("max_s".into(), Json::Num(self.max_s));
+        o.insert("p50_s".into(), Json::Num(self.p50_s));
+        o.insert("p95_s".into(), Json::Num(self.p95_s));
+        o.insert("p99_s".into(), Json::Num(self.p99_s));
+        o.insert("p999_s".into(), Json::Num(self.p999_s));
+        Json::Obj(o)
+    }
+}
+
+/// A sampled `(time, value)` series (queue depth, busy fraction).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeSeries {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t_s: f64, value: f64) {
+        self.points.push((t_s, value));
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|&(_, v)| v).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|&(t, v)| Json::Arr(vec![Json::Num(t), Json::Num(v)]))
+                .collect(),
+        )
+    }
+}
+
+/// Per-tenant serving outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    /// `model/dataset` tag.
+    pub label: String,
+    pub offered: u64,
+    pub completed: u64,
+    pub latency: LatencySummary,
+    /// Fraction of this tenant's requests within the SLO (when one is set).
+    pub slo_attainment: Option<f64>,
+}
+
+/// Per-accelerator serving outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccelStats {
+    /// Busy time divided by the fleet makespan; in `[0, 1]` by
+    /// construction (an accelerator serves one batch at a time).
+    pub utilization: f64,
+    pub busy_s: f64,
+    pub completed: u64,
+    pub batches: u64,
+    /// Weight-programming events: batches whose tenant differed from the
+    /// previously programmed one.
+    pub weight_programs: u64,
+}
+
+impl AccelStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches as f64
+    }
+}
+
+/// Full result of one serving simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Configured traffic horizon, seconds: arrivals stop here.
+    pub duration_s: f64,
+    /// Horizon through the last completion (equals `duration_s` when the
+    /// fleet drains in time; larger when it was overloaded).
+    pub makespan_s: f64,
+    pub offered: u64,
+    pub completed: u64,
+    /// `completed / makespan_s`.
+    pub throughput_rps: f64,
+    pub latency: LatencySummary,
+    /// Overall SLO attainment (when an SLO is set).
+    pub slo_attainment: Option<f64>,
+    /// Photonic inference energy of all completed requests, joules.
+    pub energy_j: f64,
+    pub tenants: Vec<TenantStats>,
+    pub accels: Vec<AccelStats>,
+    /// Waiting (not yet dispatched) requests across the fleet, sampled at
+    /// fixed intervals over `duration_s`.
+    pub queue_depth: TimeSeries,
+    /// Fraction of accelerators busy at each sample instant.
+    pub busy_frac: TimeSeries,
+}
+
+impl ServeReport {
+    /// Mean utilization across the fleet.
+    pub fn fleet_utilization(&self) -> f64 {
+        if self.accels.is_empty() {
+            return 0.0;
+        }
+        self.accels.iter().map(|a| a.utilization).sum::<f64>() / self.accels.len() as f64
+    }
+
+    pub fn total_weight_programs(&self) -> u64 {
+        self.accels.iter().map(|a| a.weight_programs).sum()
+    }
+
+    pub fn total_batches(&self) -> u64 {
+        self.accels.iter().map(|a| a.batches).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("duration_s".into(), Json::Num(self.duration_s));
+        o.insert("makespan_s".into(), Json::Num(self.makespan_s));
+        o.insert("offered".into(), Json::Num(self.offered as f64));
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        o.insert("latency".into(), self.latency.to_json());
+        if let Some(a) = self.slo_attainment {
+            o.insert("slo_attainment".into(), Json::Num(a));
+        }
+        o.insert("energy_j".into(), Json::Num(self.energy_j));
+        o.insert("fleet_utilization".into(), Json::Num(self.fleet_utilization()));
+        o.insert(
+            "tenants".into(),
+            Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut to = BTreeMap::new();
+                        to.insert("tenant".into(), Json::Str(t.label.clone()));
+                        to.insert("offered".into(), Json::Num(t.offered as f64));
+                        to.insert("completed".into(), Json::Num(t.completed as f64));
+                        to.insert("latency".into(), t.latency.to_json());
+                        if let Some(a) = t.slo_attainment {
+                            to.insert("slo_attainment".into(), Json::Num(a));
+                        }
+                        Json::Obj(to)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "accelerators".into(),
+            Json::Arr(
+                self.accels
+                    .iter()
+                    .map(|a| {
+                        let mut ao = BTreeMap::new();
+                        ao.insert("utilization".into(), Json::Num(a.utilization));
+                        ao.insert("busy_s".into(), Json::Num(a.busy_s));
+                        ao.insert("completed".into(), Json::Num(a.completed as f64));
+                        ao.insert("batches".into(), Json::Num(a.batches as f64));
+                        ao.insert("mean_batch".into(), Json::Num(a.mean_batch()));
+                        ao.insert(
+                            "weight_programs".into(),
+                            Json::Num(a.weight_programs as f64),
+                        );
+                        Json::Obj(ao)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("queue_depth".into(), self.queue_depth.to_json());
+        o.insert("busy_frac".into(), self.busy_frac.to_json());
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_percentiles_exact_on_known_distribution() {
+        let mut r = LatencyRecorder::new();
+        // 1..=1000 ms, shuffled order must not matter.
+        for i in (1..=1000u32).rev() {
+            r.record(i as f64 * 1e-3);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.min_s, 1e-3);
+        assert_eq!(s.max_s, 1.0);
+        assert!((s.p50_s - 0.5).abs() < 1e-12, "p50 {}", s.p50_s);
+        assert!((s.p95_s - 0.95).abs() < 1e-12, "p95 {}", s.p95_s);
+        assert!((s.p99_s - 0.99).abs() < 1e-12, "p99 {}", s.p99_s);
+        assert!((s.p999_s - 0.999).abs() < 1e-12, "p999 {}", s.p999_s);
+        assert!((s.mean_s - 0.5005).abs() < 1e-9);
+        assert!((r.attainment(0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(r.attainment(2.0), 1.0);
+    }
+
+    #[test]
+    fn empty_recorder_is_well_defined() {
+        let r = LatencyRecorder::new();
+        let s = r.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99_s, 0.0);
+        assert_eq!(r.attainment(1.0), 1.0);
+    }
+
+    #[test]
+    fn summary_percentiles_are_monotone() {
+        let mut r = LatencyRecorder::new();
+        let mut x = 1.0f64;
+        for _ in 0..500 {
+            x = (x * 1.13) % 7.3; // deterministic scatter
+            r.record(x);
+        }
+        let s = r.summary();
+        assert!(s.min_s <= s.p50_s);
+        assert!(s.p50_s <= s.p95_s);
+        assert!(s.p95_s <= s.p99_s);
+        assert!(s.p99_s <= s.p999_s);
+        assert!(s.p999_s <= s.max_s);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let mut rec = LatencyRecorder::new();
+        rec.record(1e-3);
+        rec.record(2e-3);
+        let report = ServeReport {
+            duration_s: 1.0,
+            makespan_s: 1.5,
+            offered: 2,
+            completed: 2,
+            throughput_rps: 2.0 / 1.5,
+            latency: rec.summary(),
+            slo_attainment: Some(1.0),
+            energy_j: 3e-6,
+            tenants: vec![TenantStats {
+                label: "GCN/Cora".into(),
+                offered: 2,
+                completed: 2,
+                latency: rec.summary(),
+                slo_attainment: Some(1.0),
+            }],
+            accels: vec![AccelStats {
+                utilization: 0.5,
+                busy_s: 0.75,
+                completed: 2,
+                batches: 2,
+                weight_programs: 1,
+            }],
+            queue_depth: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
+            busy_frac: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
+        };
+        let text = report.to_json().to_string();
+        let parsed = Json::parse(&text).expect("report JSON parses");
+        assert_eq!(parsed.get("offered").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            parsed
+                .get("latency")
+                .and_then(|l| l.get("count"))
+                .and_then(Json::as_u64),
+            Some(2)
+        );
+        assert_eq!(
+            parsed.get("tenants").and_then(Json::as_array).map(|a| a.len()),
+            Some(1)
+        );
+        assert!((report.fleet_utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(report.total_weight_programs(), 1);
+        assert_eq!(report.accels[0].mean_batch(), 1.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! `ghost::serve` — online-serving simulation over the batch engine.
+//!
+//! The paper's evaluation (§4, Figs. 7–9) is *offline*: one inference at a
+//! time, latency and energy per run. A deployed GNN accelerator instead
+//! sees an endless request stream — arrivals queue, batches form, and the
+//! question becomes "what p99 latency does a 4-chip fleet hold at 50k
+//! requests/sec", which no per-inference number answers (the
+//! serving-vs-offline gap the GNN-acceleration surveys call out). This
+//! module closes that gap with a deterministic discrete-event simulator:
+//!
+//! * [`traffic`] — seeded open-loop arrival processes (Poisson,
+//!   bursty/MMPP, diurnal ramp) and closed-loop client populations,
+//!   mixing weighted `(model, dataset)` tenants in one stream;
+//! * [`batcher`] — dynamic micro-batching policies (immediate,
+//!   max-batch/max-wait, SLO-aware) that amortize weight programming over
+//!   same-tenant batches;
+//! * [`fleet`] — the N-accelerator event loop: round-robin /
+//!   join-shortest-queue / graph-affinity routing over a binary-heap
+//!   event queue;
+//! * [`metrics`] — exact p50/p95/p99/p999 latency percentiles, SLO
+//!   attainment, queue-depth and busy-fraction time series, per-tenant
+//!   and per-accelerator breakdowns, serialized through
+//!   [`crate::util::json`].
+//!
+//! Service times come from the same simulator that reproduces the paper:
+//! each tenant resolves to a cached
+//! [`ServiceProfile`](crate::coordinator::ServiceProfile) through
+//! [`BatchEngine::service_profile`], so the serving layer shares the
+//! engine's dataset/partition caches and a fleet sweep never re-simulates
+//! a tenant.
+//!
+//! ## Determinism guarantee
+//!
+//! A [`ServeConfig`] (which includes the seed) maps to **one** report,
+//! bit-identical across runs, platforms, and worker counts: the event
+//! loop is single-threaded with total `(time, sequence)` event ordering,
+//! all randomness flows from per-purpose PCG streams derived via
+//! [`crate::util::rng::mix_seed`], and the parallel service-profile
+//! resolution is worker-count-invariant by the engine's guarantees
+//! (`tests/integration_serve.rs` pins this with 1 vs 4 workers).
+
+pub mod batcher;
+pub mod fleet;
+pub mod metrics;
+pub mod traffic;
+
+pub use batcher::BatchPolicy;
+pub use fleet::RoutePolicy;
+pub use metrics::{
+    AccelStats, LatencyRecorder, LatencySummary, ServeReport, TenantStats, TimeSeries,
+};
+pub use traffic::{ArrivalProcess, OpenLoopArrivals, TenantMix, TenantProfile, TrafficSpec};
+
+use crate::config::GhostConfig;
+use crate::coordinator::{BatchEngine, OptFlags, ServiceProfile, SimError, SimRequest};
+use crate::util::parallel::{par_map, par_map_workers};
+
+use fleet::simulate_fleet;
+
+/// Everything one serving run needs. Construct with [`ServeConfig::new`]
+/// and override fields as needed; [`simulate`] validates before running.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub mix: TenantMix,
+    pub traffic: TrafficSpec,
+    /// Fleet size (≥ 1). Every accelerator is one GHOST instance with the
+    /// same architectural configuration.
+    pub accelerators: usize,
+    pub route: RoutePolicy,
+    pub batch: BatchPolicy,
+    /// Traffic horizon, seconds: arrivals stop here and the fleet drains.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Latency SLO for attainment reporting (and the SLO-aware batcher).
+    pub slo_s: Option<f64>,
+    /// Architectural configuration of each accelerator.
+    pub accel_cfg: GhostConfig,
+    pub flags: OptFlags,
+    /// Queue-depth / busy-fraction samples taken over `duration_s` (≥ 1).
+    pub samples: usize,
+}
+
+impl ServeConfig {
+    pub fn new(mix: TenantMix, traffic: TrafficSpec) -> Self {
+        Self {
+            mix,
+            traffic,
+            accelerators: 1,
+            route: RoutePolicy::JoinShortestQueue,
+            batch: BatchPolicy::Immediate,
+            duration_s: 1.0,
+            seed: 7,
+            slo_s: None,
+            accel_cfg: GhostConfig::paper_optimal(),
+            flags: OptFlags::ghost_default(),
+            samples: 100,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mix.is_empty() {
+            return Err("tenant mix must not be empty".into());
+        }
+        if self.accelerators == 0 {
+            return Err("fleet needs at least one accelerator".into());
+        }
+        if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
+            return Err(format!("duration {} must be finite and > 0", self.duration_s));
+        }
+        if self.samples == 0 {
+            return Err("samples must be >= 1".into());
+        }
+        if let Some(slo) = self.slo_s {
+            if !slo.is_finite() || slo <= 0.0 {
+                return Err(format!("SLO {slo} must be finite and > 0"));
+            }
+        }
+        self.traffic.validate()?;
+        self.batch.validate()?;
+        self.accel_cfg.validate()?;
+        self.flags.validate()
+    }
+
+    /// The engine requests resolving each tenant's service profile.
+    pub fn tenant_requests(&self) -> Vec<SimRequest> {
+        self.mix
+            .tenants()
+            .iter()
+            .map(|t| SimRequest::new(t.model, t.dataset.clone(), self.accel_cfg, self.flags))
+            .collect()
+    }
+}
+
+/// Tags each tenant's resolution failure with its `(model, dataset)` pair
+/// and unwraps the successes in mix order.
+fn collect_profiles(
+    cfg: &ServeConfig,
+    resolved: Vec<Result<ServiceProfile, SimError>>,
+) -> Result<Vec<ServiceProfile>, SimError> {
+    let mut profiles = Vec::with_capacity(resolved.len());
+    for (result, t) in resolved.into_iter().zip(cfg.mix.tenants()) {
+        profiles.push(result.map_err(|e| e.in_workload(t.model, t.dataset.clone()))?);
+    }
+    Ok(profiles)
+}
+
+/// Resolves every tenant's [`ServiceProfile`] through the engine over an
+/// explicit worker count — the profiles, and therefore the report, are
+/// identical for any count (the determinism tests pin 1 vs 4) — and runs
+/// the fleet simulation.
+pub fn simulate_with_workers(
+    engine: &BatchEngine,
+    cfg: &ServeConfig,
+    workers: usize,
+) -> Result<ServeReport, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
+    let reqs = cfg.tenant_requests();
+    let resolved = par_map_workers(&reqs, workers, |req| engine.service_profile(req));
+    let profiles = collect_profiles(cfg, resolved)?;
+    simulate_fleet(cfg, &profiles)
+}
+
+/// [`simulate_with_workers`] at the pool's default parallelism
+/// ([`par_map`]) — the entry point the CLI and benches use.
+pub fn simulate(engine: &BatchEngine, cfg: &ServeConfig) -> Result<ServeReport, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
+    let reqs = cfg.tenant_requests();
+    let resolved = par_map(&reqs, |req| engine.service_profile(req));
+    let profiles = collect_profiles(cfg, resolved)?;
+    simulate_fleet(cfg, &profiles)
+}
+
+/// Runs the fleet against already-resolved profiles (`profiles[i]` pairs
+/// with `cfg.mix.tenants()[i]`) — lets benches time the event loop alone.
+pub fn simulate_with_profiles(
+    cfg: &ServeConfig,
+    profiles: &[ServiceProfile],
+) -> Result<ServeReport, SimError> {
+    simulate_fleet(cfg, profiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::models::ModelKind;
+
+    fn single_tenant() -> TenantMix {
+        TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn config_validation_catches_each_field() {
+        let base = ServeConfig::new(
+            single_tenant(),
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 100.0 },
+        );
+        base.validate().unwrap();
+        let mut c = base.clone();
+        c.accelerators = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.duration_s = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.samples = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.slo_s = Some(-1.0);
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.batch = BatchPolicy::MaxBatchOrWait { max_batch: 0, max_wait_s: 0.0 };
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.traffic = TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: -5.0 };
+        assert!(c.validate().is_err());
+        let mut c = base;
+        c.accel_cfg.r_c = 25;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_tenant_dataset_surfaces_as_workload_error() {
+        let mix =
+            TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "NoSuchDataset", 1.0)])
+                .unwrap();
+        let cfg = ServeConfig::new(
+            mix,
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 100.0 },
+        );
+        let engine = BatchEngine::new();
+        match simulate_with_workers(&engine, &cfg, 1) {
+            Err(SimError::Workload { model, dataset, source }) => {
+                assert_eq!(model, ModelKind::Gcn);
+                assert_eq!(dataset, "NoSuchDataset");
+                assert!(matches!(*source, SimError::UnknownDataset(_)));
+            }
+            other => panic!("expected workload error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn profile_count_mismatch_rejected() {
+        let cfg = ServeConfig::new(
+            single_tenant(),
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 100.0 },
+        );
+        assert!(matches!(
+            simulate_with_profiles(&cfg, &[]),
+            Err(SimError::InvalidConfig(_))
+        ));
+    }
+}

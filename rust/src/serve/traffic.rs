@@ -1,0 +1,398 @@
+//! Request-stream generation for the serving simulator: seeded open-loop
+//! arrival processes (Poisson, bursty/MMPP, diurnal ramp), closed-loop
+//! client populations, and weighted multi-tenant mixes.
+//!
+//! Everything here is driven by the in-crate PCG generator
+//! ([`crate::util::rng::Pcg64`]) seeded from the serve seed via
+//! [`crate::util::rng::mix_seed`], so a `(spec, seed)` pair produces one
+//! arrival stream, bit-identical on every run and platform.
+
+use crate::gnn::models::ModelKind;
+use crate::util::rng::Pcg64;
+
+/// One tenant of the serving fleet: a `(model, dataset)` pair plus its
+/// relative share of the request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantProfile {
+    pub model: ModelKind,
+    /// Dataset name in any tier (resolved/canonicalized by the engine).
+    pub dataset: String,
+    /// Relative mixing weight (> 0); normalized across the mix.
+    pub weight: f64,
+}
+
+impl TenantProfile {
+    pub fn new(model: ModelKind, dataset: impl Into<String>, weight: f64) -> Self {
+        Self { model, dataset: dataset.into(), weight }
+    }
+
+    /// Human-readable `model/dataset` tag used in reports.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.model.name(), self.dataset)
+    }
+}
+
+/// A weighted set of tenants sharing one request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    tenants: Vec<TenantProfile>,
+    /// Normalized cumulative weights; last entry is exactly 1.0.
+    cum: Vec<f64>,
+}
+
+impl TenantMix {
+    /// Builds a mix, validating that every weight is finite and positive.
+    pub fn new(tenants: Vec<TenantProfile>) -> Result<Self, String> {
+        if tenants.is_empty() {
+            return Err("tenant mix must contain at least one tenant".into());
+        }
+        let mut total = 0.0f64;
+        for t in &tenants {
+            if !t.weight.is_finite() || t.weight <= 0.0 {
+                return Err(format!(
+                    "tenant {} has weight {}; weights must be finite and > 0",
+                    t.label(),
+                    t.weight
+                ));
+            }
+            total += t.weight;
+        }
+        let mut cum = Vec::with_capacity(tenants.len());
+        let mut acc = 0.0f64;
+        for t in &tenants {
+            acc += t.weight / total;
+            cum.push(acc);
+        }
+        // Guard against accumulated rounding leaving the last bucket short.
+        if let Some(last) = cum.last_mut() {
+            *last = 1.0;
+        }
+        Ok(Self { tenants, cum })
+    }
+
+    pub fn tenants(&self) -> &[TenantProfile] {
+        &self.tenants
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Samples a tenant index with probability proportional to its weight.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        self.cum.iter().position(|&c| u < c).unwrap_or(self.cum.len() - 1)
+    }
+}
+
+/// Open-loop arrival process shape. All variants are calibrated so the
+/// *long-run average* rate equals the configured requests/sec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate.
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: calm periods at a base
+    /// rate and bursts at `burst_factor ×` that rate, with exponentially
+    /// distributed dwell times. The base rate is derived so the
+    /// time-weighted average stays at the configured rps.
+    Bursty {
+        /// Burst-state rate multiplier (≥ 1).
+        burst_factor: f64,
+        /// Mean dwell time in the calm state, seconds (> 0).
+        mean_calm_s: f64,
+        /// Mean dwell time in the burst state, seconds (> 0).
+        mean_burst_s: f64,
+    },
+    /// Sinusoidal rate ramp `rps · (1 + amplitude · sin(2πt / period))`
+    /// (a compressed diurnal cycle), realized by thinning against the peak
+    /// rate.
+    Diurnal {
+        /// Cycle length, seconds (> 0).
+        period_s: f64,
+        /// Relative swing in `[0, 1)`; the instantaneous rate stays > 0.
+        amplitude: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ArrivalProcess::Poisson => Ok(()),
+            ArrivalProcess::Bursty { burst_factor, mean_calm_s, mean_burst_s } => {
+                if !burst_factor.is_finite() || burst_factor < 1.0 {
+                    return Err(format!("burst_factor {burst_factor} must be >= 1"));
+                }
+                if !mean_calm_s.is_finite()
+                    || mean_calm_s <= 0.0
+                    || !mean_burst_s.is_finite()
+                    || mean_burst_s <= 0.0
+                {
+                    return Err(format!(
+                        "bursty dwell times ({mean_calm_s}, {mean_burst_s}) must be > 0"
+                    ));
+                }
+                Ok(())
+            }
+            ArrivalProcess::Diurnal { period_s, amplitude } => {
+                if !period_s.is_finite() || period_s <= 0.0 {
+                    return Err(format!("diurnal period {period_s} must be > 0"));
+                }
+                if !(0.0..1.0).contains(&amplitude) {
+                    return Err(format!("diurnal amplitude {amplitude} must be in [0, 1)"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// How requests are offered to the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficSpec {
+    /// Open loop: arrivals at `rps` regardless of completions (the load
+    /// does not back off when the fleet saturates — the regime that
+    /// exposes tail latency).
+    Open { process: ArrivalProcess, rps: f64 },
+    /// Closed loop: `clients` clients, each holding at most one request in
+    /// flight and thinking for an exponential `mean_think_s` between its
+    /// response and its next request. Throughput self-limits to fleet
+    /// capacity.
+    Closed { clients: usize, mean_think_s: f64 },
+}
+
+impl TrafficSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            TrafficSpec::Open { process, rps } => {
+                process.validate()?;
+                if !rps.is_finite() || rps <= 0.0 {
+                    return Err(format!("rps {rps} must be finite and > 0"));
+                }
+                Ok(())
+            }
+            TrafficSpec::Closed { clients, mean_think_s } => {
+                if clients == 0 {
+                    return Err("closed-loop traffic needs at least one client".into());
+                }
+                if !mean_think_s.is_finite() || mean_think_s < 0.0 {
+                    return Err(format!("mean think time {mean_think_s} must be >= 0"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Exponential sample with the given rate (inverse-CDF over the PCG
+/// stream). `u ∈ [0, 1)` keeps `1 - u ∈ (0, 1]`, so the log never blows
+/// up.
+pub(crate) fn exp_sample(rng: &mut Pcg64, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Lazy open-loop arrival generator: yields strictly increasing absolute
+/// arrival times, one per call, so million-request streams never
+/// materialize in memory.
+#[derive(Debug, Clone)]
+pub struct OpenLoopArrivals {
+    process: ArrivalProcess,
+    rps: f64,
+    /// Bursty only: the calm-state rate that keeps the long-run average at
+    /// `rps` given the dwell-time split.
+    calm_rps: f64,
+    rng: Pcg64,
+    t: f64,
+    in_burst: bool,
+    next_switch: f64,
+}
+
+impl OpenLoopArrivals {
+    pub fn new(process: ArrivalProcess, rps: f64, seed: u64) -> Result<Self, String> {
+        TrafficSpec::Open { process, rps }.validate()?;
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let (calm_rps, next_switch) = match process {
+            ArrivalProcess::Bursty { burst_factor, mean_calm_s, mean_burst_s } => {
+                // Solve rps = (calm·mc + calm·bf·mb) / (mc + mb) for calm.
+                let weighted = mean_calm_s + burst_factor * mean_burst_s;
+                let calm = rps * (mean_calm_s + mean_burst_s) / weighted;
+                let first_switch = exp_sample(&mut rng, 1.0 / mean_calm_s);
+                (calm, first_switch)
+            }
+            _ => (rps, f64::INFINITY),
+        };
+        Ok(Self { process, rps, calm_rps, rng, t: 0.0, in_burst: false, next_switch })
+    }
+
+    /// Absolute time of the next arrival.
+    pub fn next_arrival(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson => {
+                self.t += exp_sample(&mut self.rng, self.rps);
+                self.t
+            }
+            ArrivalProcess::Bursty { burst_factor, mean_calm_s, mean_burst_s } => loop {
+                let rate =
+                    if self.in_burst { self.calm_rps * burst_factor } else { self.calm_rps };
+                let gap = exp_sample(&mut self.rng, rate);
+                if self.t + gap <= self.next_switch {
+                    self.t += gap;
+                    return self.t;
+                }
+                // Competing exponentials: the state switch preempts the
+                // candidate arrival; the memoryless property lets us
+                // resample from the switch instant.
+                self.t = self.next_switch;
+                self.in_burst = !self.in_burst;
+                let dwell = if self.in_burst { mean_burst_s } else { mean_calm_s };
+                self.next_switch = self.t + exp_sample(&mut self.rng, 1.0 / dwell);
+            },
+            ArrivalProcess::Diurnal { period_s, amplitude } => {
+                // Thinning (Lewis–Shedler): propose at the peak rate,
+                // accept with probability rate(t) / peak.
+                let peak = self.rps * (1.0 + amplitude);
+                loop {
+                    self.t += exp_sample(&mut self.rng, peak);
+                    let phase = 2.0 * std::f64::consts::PI * self.t / period_s;
+                    let rate = self.rps * (1.0 + amplitude * phase.sin());
+                    if self.rng.next_f64() * peak < rate {
+                        return self.t;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(src: &mut OpenLoopArrivals, horizon_s: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = src.next_arrival();
+            if t > horizon_s {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+
+    #[test]
+    fn poisson_hits_the_configured_rate() {
+        let mut g = OpenLoopArrivals::new(ArrivalProcess::Poisson, 1000.0, 42).unwrap();
+        let arrivals = drain(&mut g, 20.0);
+        let rate = arrivals.len() as f64 / 20.0;
+        assert!((rate - 1000.0).abs() < 50.0, "measured rate {rate}");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_and_bursts_exist() {
+        let p = ArrivalProcess::Bursty {
+            burst_factor: 5.0,
+            mean_calm_s: 0.5,
+            mean_burst_s: 0.1,
+        };
+        let mut g = OpenLoopArrivals::new(p, 1000.0, 7).unwrap();
+        let arrivals = drain(&mut g, 60.0);
+        let rate = arrivals.len() as f64 / 60.0;
+        assert!((rate - 1000.0).abs() < 150.0, "measured rate {rate}");
+        // Burstiness: the arrival-count variance across 100 ms windows must
+        // exceed a Poisson stream's (index of dispersion >> 1).
+        let mut counts = vec![0u32; 600];
+        for &t in &arrivals {
+            let w = ((t / 0.1) as usize).min(599);
+            counts[w] += 1;
+        }
+        let n = counts.len() as f64;
+        let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / n;
+        let var =
+            counts.iter().map(|&c| (c as f64 - mean) * (c as f64 - mean)).sum::<f64>() / n;
+        assert!(var / mean > 2.0, "dispersion {} not bursty", var / mean);
+    }
+
+    #[test]
+    fn diurnal_rate_ramps_with_phase() {
+        let p = ArrivalProcess::Diurnal { period_s: 10.0, amplitude: 0.9 };
+        let mut g = OpenLoopArrivals::new(p, 2000.0, 11).unwrap();
+        let arrivals = drain(&mut g, 10.0);
+        let rate = arrivals.len() as f64 / 10.0;
+        assert!((rate - 2000.0).abs() < 200.0, "measured rate {rate}");
+        // First half-period (sin > 0) must carry more than the second.
+        let first = arrivals.iter().filter(|&&t| t < 5.0).count();
+        let second = arrivals.len() - first;
+        assert!(
+            first as f64 > second as f64 * 1.5,
+            "ramp missing: {first} vs {second}"
+        );
+    }
+
+    #[test]
+    fn arrivals_strictly_ordered_and_deterministic() {
+        for p in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Bursty { burst_factor: 3.0, mean_calm_s: 0.2, mean_burst_s: 0.05 },
+            ArrivalProcess::Diurnal { period_s: 1.0, amplitude: 0.5 },
+        ] {
+            let mut a = OpenLoopArrivals::new(p, 500.0, 99).unwrap();
+            let mut b = OpenLoopArrivals::new(p, 500.0, 99).unwrap();
+            let mut prev = 0.0;
+            for _ in 0..2000 {
+                let ta = a.next_arrival();
+                assert_eq!(ta, b.next_arrival(), "{p:?} not deterministic");
+                assert!(ta >= prev, "{p:?} went backwards");
+                prev = ta;
+            }
+        }
+    }
+
+    #[test]
+    fn mix_sampling_tracks_weights() {
+        let mix = TenantMix::new(vec![
+            TenantProfile::new(ModelKind::Gcn, "Cora", 3.0),
+            TenantProfile::new(ModelKind::Gat, "Citeseer", 1.0),
+        ])
+        .unwrap();
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut counts = [0usize; 2];
+        for _ in 0..10_000 {
+            counts[mix.sample(&mut rng)] += 1;
+        }
+        let share = counts[0] as f64 / 10_000.0;
+        assert!((share - 0.75).abs() < 0.02, "share {share}");
+        assert_eq!(mix.len(), 2);
+        assert!(!mix.is_empty());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(TenantMix::new(vec![]).is_err());
+        assert!(TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 0.0)]).is_err());
+        assert!(
+            TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", f64::NAN)]).is_err()
+        );
+        assert!(OpenLoopArrivals::new(ArrivalProcess::Poisson, 0.0, 1).is_err());
+        assert!(ArrivalProcess::Bursty {
+            burst_factor: 0.5,
+            mean_calm_s: 1.0,
+            mean_burst_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Diurnal { period_s: 1.0, amplitude: 1.0 }.validate().is_err());
+        assert!(TrafficSpec::Closed { clients: 0, mean_think_s: 0.1 }.validate().is_err());
+        assert!(TrafficSpec::Closed { clients: 4, mean_think_s: -1.0 }.validate().is_err());
+    }
+}

@@ -1,7 +1,12 @@
 //! Micro-benchmark harness used by `rust/benches/` (criterion is not
 //! available in the offline build). Provides warmup, timed repetitions,
-//! and median/mean/min reporting, plus a black-box to defeat
+//! and median/mean/min/percentile reporting, plus a black-box to defeat
 //! const-propagation.
+//!
+//! The percentile math ([`percentile_index`], nearest-rank) is shared with
+//! the serving simulator's latency recorder
+//! ([`crate::serve::metrics`]), so a bench line and a serving report mean
+//! the same thing by "p99".
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
@@ -9,6 +14,27 @@ use std::time::{Duration, Instant};
 /// Re-export of `std::hint::black_box`.
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
+}
+
+/// Nearest-rank percentile: the index into a *sorted* sample set of length
+/// `n` holding the `q`-quantile (`q` in `[0, 1]`). With nearest-rank
+/// semantics the result is always an actually-observed sample:
+/// `ceil(q · n)` clamped to `1..=n`, minus one for zero-based indexing.
+/// `n == 0` returns 0 (callers guard the empty case).
+pub fn percentile_index(n: usize, q: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let rank = (q * n as f64).ceil() as usize;
+    rank.clamp(1, n) - 1
+}
+
+/// Nearest-rank percentile of a sorted `f64` slice; 0.0 when empty.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[percentile_index(sorted.len(), q)]
 }
 
 /// Timing statistics of one benchmark.
@@ -19,6 +45,11 @@ pub struct BenchStats {
     pub median: Duration,
     pub min: Duration,
     pub max: Duration,
+    /// Nearest-rank 50th percentile (may differ from `median`, which keeps
+    /// its historical `samples[n / 2]` definition for compatibility).
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
 }
 
 impl BenchStats {
@@ -32,6 +63,9 @@ impl BenchStats {
             median: samples[n / 2],
             min: samples[0],
             max: samples[n - 1],
+            p50: samples[percentile_index(n, 0.50)],
+            p95: samples[percentile_index(n, 0.95)],
+            p99: samples[percentile_index(n, 0.99)],
         }
     }
 }
@@ -51,8 +85,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
         .collect();
     let stats = BenchStats::from_samples(samples);
     println!(
-        "bench {name:<40} median {:>12?} mean {:>12?} min {:>12?} (n={})",
-        stats.median, stats.mean, stats.min, stats.iters
+        "bench {name:<40} median {:>12?} mean {:>12?} min {:>12?} p95 {:>12?} p99 {:>12?} (n={})",
+        stats.median, stats.mean, stats.min, stats.p95, stats.p99, stats.iters
     );
     stats
 }
@@ -75,6 +109,7 @@ mod tests {
             black_box(1 + 1);
         });
         assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(s.iters, 5);
     }
 
@@ -82,5 +117,28 @@ mod tests {
     fn time_once_returns_value() {
         let v = time_once("ret", || 42);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn percentile_index_nearest_rank() {
+        // n = 10: p50 is the 5th sample (index 4), p95 the 10th (index 9),
+        // p99 also the 10th — nearest-rank never interpolates.
+        assert_eq!(percentile_index(10, 0.50), 4);
+        assert_eq!(percentile_index(10, 0.95), 9);
+        assert_eq!(percentile_index(10, 0.99), 9);
+        // Extremes clamp into range.
+        assert_eq!(percentile_index(10, 0.0), 0);
+        assert_eq!(percentile_index(10, 1.0), 9);
+        assert_eq!(percentile_index(1, 0.999), 0);
+        assert_eq!(percentile_index(0, 0.5), 0);
+    }
+
+    #[test]
+    fn percentile_sorted_picks_observed_samples() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.50), 5.0);
+        assert_eq!(percentile_sorted(&v, 0.90), 9.0);
+        assert_eq!(percentile_sorted(&v, 0.999), 10.0);
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
     }
 }

@@ -12,11 +12,25 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    par_map_workers(items, workers, f)
+}
+
+/// [`par_map`] with an explicit worker count (clamped to `1..=items.len()`).
+/// Callers whose output must be provably worker-count-invariant (the serve
+/// determinism tests, the partition property tests) pin different counts
+/// and assert identical results.
+pub fn par_map_workers<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(n);
+    let workers = workers.max(1).min(n);
     if workers <= 1 {
         return items.iter().map(&f).collect();
     }
@@ -110,6 +124,16 @@ mod tests {
         }
         assert!(chunk_ranges(0, 4).is_empty());
         assert!(chunk_ranges(4, 0).is_empty());
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let items: Vec<u64> = (0..257).collect();
+        let reference = par_map_workers(&items, 1, |&x| x.wrapping_mul(x) ^ 0xABCD);
+        for workers in [2, 3, 8, 64, 1024] {
+            let out = par_map_workers(&items, workers, |&x| x.wrapping_mul(x) ^ 0xABCD);
+            assert_eq!(out, reference);
+        }
     }
 
     #[test]

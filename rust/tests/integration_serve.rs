@@ -1,0 +1,302 @@
+//! Integration tests for the online-serving subsystem: the determinism
+//! guarantee (same seed ⇒ bit-identical metrics, regardless of engine
+//! worker count), the serving sanity laws (utilization ≤ 1, ordered
+//! percentiles, closed-loop throughput ≤ fleet capacity), conservation
+//! (every offered request completes), and the policy semantics
+//! (graph-affinity routing reprograms weights less than round-robin).
+
+use ghost::coordinator::{BatchEngine, SimError, SimRequest};
+use ghost::gnn::models::ModelKind;
+use ghost::serve::{
+    self, simulate_with_profiles, ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig,
+    TenantMix, TenantProfile, TrafficSpec,
+};
+
+fn two_tenant_mix() -> TenantMix {
+    TenantMix::new(vec![
+        TenantProfile::new(ModelKind::Gcn, "Cora", 3.0),
+        TenantProfile::new(ModelKind::Gat, "Citeseer", 1.0),
+    ])
+    .unwrap()
+}
+
+fn open(rps: f64) -> TrafficSpec {
+    TrafficSpec::Open { process: ArrivalProcess::Poisson, rps }
+}
+
+#[test]
+fn same_seed_identical_metrics_across_worker_counts() {
+    // The acceptance pin: one ServeConfig, two fresh engines, profile
+    // resolution fanned over 1 vs 4 workers — every metric (compared via
+    // the full serialized report) must be bit-identical.
+    let mut cfg = ServeConfig::new(two_tenant_mix(), open(3000.0));
+    cfg.accelerators = 3;
+    cfg.route = RoutePolicy::GraphAffinity;
+    cfg.batch = BatchPolicy::MaxBatchOrWait { max_batch: 4, max_wait_s: 5e-4 };
+    cfg.duration_s = 0.5;
+    cfg.seed = 7;
+    cfg.slo_s = Some(5e-3);
+    let e1 = BatchEngine::new();
+    let r1 = serve::simulate_with_workers(&e1, &cfg, 1).expect("serial resolve");
+    let e4 = BatchEngine::new();
+    let r4 = serve::simulate_with_workers(&e4, &cfg, 4).expect("parallel resolve");
+    assert_eq!(
+        r1.to_json().to_string(),
+        r4.to_json().to_string(),
+        "worker count changed the serving metrics"
+    );
+    // And a third run on a *shared* (already warm) engine agrees too.
+    let r_again = serve::simulate_with_workers(&e4, &cfg, 2).expect("warm resolve");
+    assert_eq!(r1.to_json().to_string(), r_again.to_json().to_string());
+}
+
+#[test]
+fn different_seeds_give_different_streams() {
+    let mut cfg = ServeConfig::new(two_tenant_mix(), open(2000.0));
+    cfg.duration_s = 0.3;
+    cfg.accelerators = 2;
+    let engine = BatchEngine::new();
+    let a = serve::simulate(&engine, &cfg).unwrap();
+    cfg.seed = 8;
+    let b = serve::simulate(&engine, &cfg).unwrap();
+    assert_ne!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "seed must steer the arrival stream"
+    );
+}
+
+#[test]
+fn sanity_laws_hold_under_open_loop_load() {
+    // The acceptance workload shape: 4 accelerators at high rps.
+    let mix = TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+    let mut cfg = ServeConfig::new(mix, open(20_000.0));
+    cfg.accelerators = 4;
+    cfg.duration_s = 1.0;
+    cfg.seed = 7;
+    let engine = BatchEngine::new();
+    let r = serve::simulate(&engine, &cfg).unwrap();
+    // Conservation: the fleet drains everything that arrived.
+    assert!(r.offered > 10_000, "offered only {}", r.offered);
+    assert_eq!(r.offered, r.completed);
+    // Utilization is a busy-time fraction of the makespan.
+    for a in &r.accels {
+        assert!((0.0..=1.0).contains(&a.utilization), "utilization {}", a.utilization);
+    }
+    assert!(r.fleet_utilization() > 0.0);
+    // Percentiles are ordered and positive.
+    let l = r.latency;
+    assert!(l.min_s > 0.0);
+    assert!(l.min_s <= l.p50_s && l.p50_s <= l.p95_s);
+    assert!(l.p95_s <= l.p99_s && l.p99_s <= l.p999_s && l.p999_s <= l.max_s);
+    // Latency can never undercut the bare service time.
+    let profile = engine
+        .service_profile(&SimRequest::new(
+            ModelKind::Gcn,
+            "Cora",
+            cfg.accel_cfg,
+            cfg.flags,
+        ))
+        .unwrap();
+    assert!(l.min_s >= profile.per_request_s() - 1e-15);
+    // Throughput is bounded by what the fleet can physically serve.
+    let capacity = cfg.accelerators as f64 / profile.per_request_s();
+    assert!(
+        r.throughput_rps <= capacity * (1.0 + 1e-9),
+        "throughput {} exceeds capacity {capacity}",
+        r.throughput_rps
+    );
+    assert!(r.makespan_s >= r.duration_s);
+    assert!(r.energy_j > 0.0);
+}
+
+#[test]
+fn closed_loop_throughput_bounded_by_fleet_capacity() {
+    // Zero think time saturates the fleet: with more clients than
+    // accelerators, throughput pins at fleet capacity and must never
+    // exceed it.
+    let mix = TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+    let mut cfg =
+        ServeConfig::new(mix, TrafficSpec::Closed { clients: 8, mean_think_s: 0.0 });
+    cfg.accelerators = 2;
+    cfg.duration_s = 0.05;
+    let engine = BatchEngine::new();
+    let r = serve::simulate(&engine, &cfg).unwrap();
+    let profile = engine
+        .service_profile(&SimRequest::new(
+            ModelKind::Gcn,
+            "Cora",
+            cfg.accel_cfg,
+            cfg.flags,
+        ))
+        .unwrap();
+    let capacity = cfg.accelerators as f64 / profile.per_request_s();
+    assert!(r.completed > 0);
+    assert!(
+        r.throughput_rps <= capacity * (1.0 + 1e-9),
+        "closed-loop throughput {} exceeds fleet capacity {capacity}",
+        r.throughput_rps
+    );
+    // Saturated: the fleet should be near fully busy.
+    assert!(r.fleet_utilization() > 0.5, "utilization {}", r.fleet_utilization());
+}
+
+#[test]
+fn affinity_routing_reprograms_less_than_round_robin() {
+    // Two tenants on two accelerators: affinity pins each tenant to the
+    // accelerator holding its partitions (2 programs total); round-robin
+    // interleaves tenants everywhere and keeps reprogramming.
+    let mut cfg = ServeConfig::new(two_tenant_mix(), open(4000.0));
+    cfg.accelerators = 2;
+    cfg.duration_s = 0.25;
+    let engine = BatchEngine::new();
+    cfg.route = RoutePolicy::GraphAffinity;
+    let affinity = serve::simulate(&engine, &cfg).unwrap();
+    cfg.route = RoutePolicy::RoundRobin;
+    let rr = serve::simulate(&engine, &cfg).unwrap();
+    assert!(
+        affinity.total_weight_programs() < rr.total_weight_programs(),
+        "affinity {} vs round-robin {} weight programs",
+        affinity.total_weight_programs(),
+        rr.total_weight_programs()
+    );
+    assert_eq!(affinity.offered, affinity.completed);
+    assert_eq!(rr.offered, rr.completed);
+}
+
+#[test]
+fn batching_amortizes_weight_programs_in_multi_tenant_interleaving() {
+    // On a single accelerator, tenant interleaving forces a reprogram on
+    // every tenant switch; batching coalesces same-tenant runs, so larger
+    // batches mean fewer programs per served request.
+    let mut cfg = ServeConfig::new(two_tenant_mix(), open(4000.0));
+    cfg.accelerators = 1;
+    cfg.duration_s = 0.2;
+    let engine = BatchEngine::new();
+    cfg.batch = BatchPolicy::Immediate;
+    let immediate = serve::simulate(&engine, &cfg).unwrap();
+    cfg.batch = BatchPolicy::MaxBatchOrWait { max_batch: 16, max_wait_s: 2e-3 };
+    let batched = serve::simulate(&engine, &cfg).unwrap();
+    let imm_rate =
+        immediate.total_weight_programs() as f64 / immediate.completed.max(1) as f64;
+    let bat_rate = batched.total_weight_programs() as f64 / batched.completed.max(1) as f64;
+    assert!(
+        bat_rate < imm_rate,
+        "batching must cut reprograms/request: immediate {imm_rate}, batched {bat_rate}"
+    );
+    // Batches actually formed.
+    assert!(batched.total_batches() < batched.completed);
+    // The energy bill reflects the skipped weight programs: same request
+    // stream (same seed), fewer stagings, strictly less energy.
+    assert_eq!(immediate.offered, batched.offered, "same stream");
+    assert!(
+        batched.energy_j < immediate.energy_j,
+        "amortized weight programming must cut energy: immediate {} J, batched {} J",
+        immediate.energy_j,
+        batched.energy_j
+    );
+}
+
+#[test]
+fn degenerate_hand_built_profiles_rejected() {
+    use ghost::coordinator::ServiceProfile;
+    let mix = TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+    let cfg = ServeConfig::new(mix, TrafficSpec::Closed { clients: 1, mean_think_s: 0.0 });
+    // per_request_s() == 0 would stall simulated time forever.
+    let stalled = ServiceProfile {
+        latency_s: 1e-3,
+        weight_stage_s: 1e-3,
+        energy_j: 1e-6,
+        weight_stage_energy_j: 0.0,
+    };
+    assert!(matches!(
+        simulate_with_profiles(&cfg, &[stalled]),
+        Err(SimError::InvalidConfig(_))
+    ));
+    // NaN anywhere poisons every event time and metric.
+    let nan = ServiceProfile {
+        latency_s: f64::NAN,
+        weight_stage_s: 0.0,
+        energy_j: 1e-6,
+        weight_stage_energy_j: 0.0,
+    };
+    assert!(matches!(
+        simulate_with_profiles(&cfg, &[nan]),
+        Err(SimError::InvalidConfig(_))
+    ));
+}
+
+#[test]
+fn slo_attainment_reported_and_bounded() {
+    let mix = TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+    let mut cfg = ServeConfig::new(mix, open(2000.0));
+    cfg.accelerators = 2;
+    cfg.duration_s = 0.2;
+    cfg.slo_s = Some(10e-3);
+    cfg.batch = BatchPolicy::SloAware { slo_s: 10e-3, max_batch: 8 };
+    let engine = BatchEngine::new();
+    let r = serve::simulate(&engine, &cfg).unwrap();
+    let att = r.slo_attainment.expect("SLO set, attainment reported");
+    assert!((0.0..=1.0).contains(&att));
+    for t in &r.tenants {
+        let ta = t.slo_attainment.expect("per-tenant attainment");
+        assert!((0.0..=1.0).contains(&ta));
+    }
+}
+
+#[test]
+fn bursty_and_diurnal_streams_serve_end_to_end() {
+    let mix = TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+    for process in [
+        ArrivalProcess::Bursty { burst_factor: 4.0, mean_calm_s: 0.05, mean_burst_s: 0.02 },
+        ArrivalProcess::Diurnal { period_s: 0.2, amplitude: 0.8 },
+    ] {
+        let mut cfg = ServeConfig::new(
+            mix.clone(),
+            TrafficSpec::Open { process, rps: 3000.0 },
+        );
+        cfg.accelerators = 2;
+        cfg.duration_s = 0.2;
+        let engine = BatchEngine::new();
+        let r = serve::simulate(&engine, &cfg).unwrap();
+        assert!(r.offered > 100, "{process:?}: offered {}", r.offered);
+        assert_eq!(r.offered, r.completed, "{process:?}");
+        assert!(r.latency.p50_s <= r.latency.p99_s, "{process:?}");
+    }
+}
+
+#[test]
+fn serving_shares_the_engine_caches_across_sweeps() {
+    // A fleet-size sweep over one mix must resolve each tenant profile
+    // once and build each (dataset, V, N) partition set once.
+    let engine = BatchEngine::new();
+    let mut total = 0u64;
+    for accels in [1, 2, 4] {
+        let mut cfg = ServeConfig::new(two_tenant_mix(), open(1000.0));
+        cfg.accelerators = accels;
+        cfg.duration_s = 0.1;
+        let r = serve::simulate(&engine, &cfg).unwrap();
+        total += r.completed;
+    }
+    assert!(total > 0);
+    assert_eq!(engine.profile_builds(), 2, "one simulation per tenant for the whole sweep");
+    assert_eq!(engine.dataset_builds(), 2);
+    assert_eq!(engine.partition_builds(), 2);
+}
+
+#[test]
+fn invalid_serve_configs_are_structured_errors() {
+    let mut cfg = ServeConfig::new(two_tenant_mix(), open(1000.0));
+    cfg.accelerators = 0;
+    let engine = BatchEngine::new();
+    assert!(matches!(
+        serve::simulate(&engine, &cfg),
+        Err(SimError::InvalidConfig(_))
+    ));
+    // Profile slice length must match the mix.
+    let good = ServeConfig::new(two_tenant_mix(), open(1000.0));
+    assert!(matches!(
+        simulate_with_profiles(&good, &[]),
+        Err(SimError::InvalidConfig(_))
+    ));
+}

@@ -79,6 +79,50 @@ fn prop_pipelined_never_slower_than_sequential_and_bounded() {
 }
 
 #[test]
+fn prop_pipelined_critical_path_bounds() {
+    // The pipelined makespan is sandwiched between its critical-path lower
+    // bounds and the sequential upper bound:
+    //
+    //   max(max_s Σ_g t[g][s],  max_g Σ_s t[g][s])  ≤  makespan  ≤  Σ t
+    //
+    // The first bound is the bottleneck *stage column* — a stage is one
+    // physical block, so every group serializes through it; the second is
+    // the slowest single *group* — its stages are chained by the
+    // same-group dependency. Skewed magnitudes (spanning ~4 orders) stress
+    // the DP harder than the uniform samples of the older property.
+    let mut rng = Pcg64::seed_from_u64(909);
+    for _ in 0..CASES {
+        let n_groups = rng.gen_range(1, 60);
+        let n_stages = rng.gen_range(1, 8);
+        let groups: Vec<Vec<f64>> = (0..n_groups)
+            .map(|_| {
+                (0..n_stages)
+                    .map(|_| rng.next_f64() * 10f64.powi(rng.gen_range(0, 5) as i32 - 2))
+                    .collect()
+            })
+            .collect();
+        let p = sim::pipelined(&groups).expect("uniform stage counts");
+        let seq = sim::sequential(&groups);
+        let column_bound = sim::stage_totals(&groups).iter().cloned().fold(0.0, f64::max);
+        let group_bound =
+            groups.iter().map(|g| g.iter().sum::<f64>()).fold(0.0, f64::max);
+        let lower = column_bound.max(group_bound);
+        let tol = 1e-12 * seq.makespan_s.max(1.0);
+        assert!(
+            p.makespan_s >= lower - tol,
+            "makespan {} beats critical path {lower} (column {column_bound}, group {group_bound})",
+            p.makespan_s
+        );
+        assert!(
+            p.makespan_s <= seq.makespan_s + tol,
+            "makespan {} exceeds sequential sum {}",
+            p.makespan_s,
+            seq.makespan_s
+        );
+    }
+}
+
+#[test]
 fn prop_quantization_round_trip_error_bounded() {
     let mut rng = Pcg64::seed_from_u64(404);
     for _ in 0..CASES {
