@@ -1,12 +1,16 @@
 //! Bench: regenerates Fig. 7(c) — the architectural [N,V,Rr,Rc,Tr] sweep —
 //! printing the EPB/GOPS frontier and the rank of the paper's optimum, and
-//! times the full parallel sweep through the BatchEngine plus warm- and
-//! cold-cache single-configuration evaluations.
+//! times the full parallel sweep through the BatchEngine, the
+//! serial-vs-parallel grid speedup (same warm engine, worker count
+//! pinned), plus warm- and cold-cache single-configuration evaluations.
+
+use std::time::Instant;
 
 use ghost::config::GhostConfig;
 use ghost::coordinator::dse;
 use ghost::coordinator::BatchEngine;
 use ghost::util::bench::{bench, black_box, time_once};
+use ghost::util::parallel::default_workers;
 
 fn main() {
     let workloads = dse::workload_set(true).expect("table-2 workload set"); // one dataset per model
@@ -41,6 +45,27 @@ fn main() {
     println!(
         "partition sets built: {} (once per distinct (dataset, V, N) across the sweep)",
         engine.partition_builds()
+    );
+
+    // Serial vs parallel grid evaluation on the warm engine (partitions
+    // all cached by the sweep above), so the speedup isolates the
+    // simulation fan-out itself rather than preprocessing.
+    let workers = default_workers();
+    let t0 = Instant::now();
+    black_box(dse::explore_with_engine_workers(&engine, &grid, &workloads, 1));
+    let serial = t0.elapsed();
+    let t0 = Instant::now();
+    black_box(dse::explore_with_engine_workers(&engine, &grid, &workloads, workers));
+    let parallel = t0.elapsed();
+    println!(
+        "bench fig7c_grid_serial_1worker            single run {serial:>12?}"
+    );
+    println!(
+        "bench fig7c_grid_parallel_{workers}workers          single run {parallel:>12?}"
+    );
+    println!(
+        "parallel sweep speedup: {:.2}x over serial on {workers} workers",
+        serial.as_secs_f64() / parallel.as_secs_f64().max(1e-12)
     );
 
     // Warm cache: every (dataset, V, N) the paper point needs already sits

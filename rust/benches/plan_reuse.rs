@@ -1,0 +1,127 @@
+//! Bench: what the engine's StagePlan cache buys.
+//!
+//! Runs the Fig. 8 ablation sweep (9 optimization presets) over a
+//! three-workload mix three ways:
+//!
+//! * **cold full** — `simulate_workload` per point: rebuilds partitions
+//!   *and* the plan for every point, the cost a sweep without the engine
+//!   pays;
+//! * **cold plans** — `simulate_with_partitions` with shared partitions:
+//!   plan construction + evaluation per point (what the engine pays on a
+//!   cache miss);
+//! * **cached plans** — `BatchEngine::run` on a warm engine: pure plan
+//!   evaluation per point.
+//!
+//! Acceptance (asserted): the cached-plan sweep is ≥ 2× faster than cold
+//! per-point simulation.
+
+use std::time::Instant;
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{
+    simulate_with_partitions, simulate_workload, BatchEngine, OptFlags, SimRequest,
+};
+use ghost::gnn::models::ModelKind;
+use ghost::util::bench::black_box;
+
+const WORKLOADS: [(ModelKind, &str); 3] =
+    [(ModelKind::Gcn, "PubMed"), (ModelKind::Gat, "Cora"), (ModelKind::Gin, "Mutag")];
+const REPS: usize = 5;
+
+fn main() {
+    let cfg = GhostConfig::paper_optimal();
+    let presets = OptFlags::fig8_presets();
+    let engine = BatchEngine::new();
+
+    // Warm every cache tier: datasets, partitions, and one plan per
+    // (model, dataset, flags) point of the ablation sweep.
+    let reqs: Vec<SimRequest> = WORKLOADS
+        .iter()
+        .flat_map(|&(kind, ds)| {
+            presets.iter().map(move |&flags| SimRequest::new(kind, ds, cfg, flags))
+        })
+        .collect();
+    for r in &reqs {
+        engine.run(r).expect("ablation point simulates");
+    }
+    println!(
+        "ablation sweep: {} points ({} workloads x {} presets); plans built: {}",
+        reqs.len(),
+        WORKLOADS.len(),
+        presets.len(),
+        engine.plan_builds()
+    );
+
+    // Cached plans: every run() is a plan evaluation, zero construction.
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        for r in &reqs {
+            black_box(engine.run(r).expect("cached point simulates"));
+        }
+    }
+    let cached = t0.elapsed();
+    assert_eq!(engine.plan_builds(), reqs.len(), "no rebuilds on the warm sweep");
+
+    // Cold plans: shared partitions, but construction + evaluation per
+    // point (the engine's cache-miss cost).
+    let prepared: Vec<_> = WORKLOADS
+        .iter()
+        .map(|&(kind, name)| {
+            let ds = engine.dataset(name).expect("dataset");
+            let pms = engine.partitions_for(&ds, cfg.v, cfg.n).expect("partitions");
+            (kind, ds, pms)
+        })
+        .collect();
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        for (kind, ds, pms) in &prepared {
+            for &flags in &presets {
+                black_box(
+                    simulate_with_partitions(*kind, ds, pms, cfg, flags)
+                        .expect("cold-plan point simulates"),
+                );
+            }
+        }
+    }
+    let cold_plans = t0.elapsed();
+
+    // Cold full: partitions rebuilt per point too — the uncached sweep.
+    let datasets: Vec<_> = prepared.iter().map(|(k, ds, _)| (*k, ds.clone())).collect();
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        for (kind, ds) in &datasets {
+            for &flags in &presets {
+                black_box(
+                    simulate_workload(*kind, ds, cfg, flags)
+                        .expect("cold-full point simulates"),
+                );
+            }
+        }
+    }
+    let cold_full = t0.elapsed();
+
+    let per = |d: std::time::Duration| d.as_secs_f64() / (REPS * reqs.len()) as f64 * 1e6;
+    println!(
+        "bench plan_reuse_sweep_cached_plans          total {cached:>12?} ({:.1} us/point)",
+        per(cached)
+    );
+    println!(
+        "bench plan_reuse_sweep_cold_plans            total {cold_plans:>12?} ({:.1} us/point)",
+        per(cold_plans)
+    );
+    println!(
+        "bench plan_reuse_sweep_cold_full             total {cold_full:>12?} ({:.1} us/point)",
+        per(cold_full)
+    );
+    let vs_plans = cold_plans.as_secs_f64() / cached.as_secs_f64().max(1e-12);
+    let vs_full = cold_full.as_secs_f64() / cached.as_secs_f64().max(1e-12);
+    println!(
+        "cached-plan sweep speedup: {vs_plans:.2}x vs plan rebuilds, \
+         {vs_full:.2}x vs cold per-point simulation"
+    );
+    assert!(
+        vs_full >= 2.0,
+        "cached-plan ablation sweep must be >= 2x faster than cold per-point \
+         simulation (got {vs_full:.2}x)"
+    );
+}

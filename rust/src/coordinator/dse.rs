@@ -208,26 +208,54 @@ pub fn explore(grid: &[GhostConfig], workloads: &[(ModelKind, Dataset)]) -> DseR
     explore_with_engine(&BatchEngine::new(), grid, workloads)
 }
 
-/// Run the sweep through a specific engine. Partition matrices are built
-/// once per distinct `(dataset, V, N)` pair (pre-warmed in parallel, then
-/// shared across the grid); each grid point evaluates on the thread pool,
-/// and failures are reported per point instead of being silently dropped.
+/// Run the sweep through a specific engine with the default worker tier
+/// ([`crate::util::parallel::default_workers`]). See
+/// [`explore_with_engine_workers`] for the contract.
 pub fn explore_with_engine(
     engine: &BatchEngine,
     grid: &[GhostConfig],
     workloads: &[(ModelKind, Dataset)],
 ) -> DseReport {
+    explore_with_engine_workers(
+        engine,
+        grid,
+        workloads,
+        crate::util::parallel::default_workers(),
+    )
+}
+
+/// Run the sweep through a specific engine with a pinned worker count.
+/// Partition matrices are built once per distinct `(dataset, V, N)` pair
+/// (pre-warmed in parallel, then shared across the grid); each grid point
+/// evaluates on the thread pool, and failures are reported per point
+/// instead of being silently dropped.
+///
+/// The report is **deterministic in the worker count**: grid points are
+/// pure functions of `(cfg, workloads)`, results come back in grid order
+/// regardless of scheduling ([`par_map_workers`] preserves order), and the
+/// frontier sort is stable on a total order — so any two worker counts
+/// produce the identical `DseReport` (pinned by a test). Benches exploit
+/// the same knob to measure the parallel speedup
+/// (`benches/dse_arch.rs`).
+///
+/// [`par_map_workers`]: crate::util::parallel::par_map_workers
+pub fn explore_with_engine_workers(
+    engine: &BatchEngine,
+    grid: &[GhostConfig],
+    workloads: &[(ModelKind, Dataset)],
+    workers: usize,
+) -> DseReport {
     // Pre-warm the partition cache: one parallel build per distinct shape.
     let mut shapes: Vec<(usize, usize)> = grid.iter().map(|c| (c.v, c.n)).collect();
     shapes.sort_unstable();
     shapes.dedup();
-    crate::util::parallel::par_map(&shapes, |&(v, n)| {
+    crate::util::parallel::par_map_workers(&shapes, workers, |&(v, n)| {
         for (_, ds) in workloads {
             // Invalid shapes surface again per-point in the sweep below.
             let _ = engine.partitions_for(ds, v, n);
         }
     });
-    let raw = crate::util::parallel::par_map(grid, |&cfg| {
+    let raw = crate::util::parallel::par_map_workers(grid, workers, |&cfg| {
         (cfg, evaluate_with_engine(engine, cfg, workloads))
     });
     sift_points(raw)
@@ -328,6 +356,43 @@ mod tests {
         assert_eq!(report.failures.len(), 1);
         assert_eq!(report.failures[0].cfg, bad);
         assert!(matches!(report.failures[0].error, SimError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn explore_report_invariant_under_worker_count() {
+        // The sweep fans out over util::parallel::par_map_workers; the
+        // resulting DseReport (points, order, exact metric values, and
+        // failures) must be identical for any worker count.
+        let workloads = workload_set(true).unwrap();
+        let paper = GhostConfig::paper_optimal();
+        let grid = vec![
+            paper,
+            GhostConfig { n: 10, ..paper },
+            GhostConfig { v: 10, ..paper },
+            GhostConfig { t_r: 11, ..paper },
+            GhostConfig { r_c: 25, ..paper }, // infeasible → failure entry
+        ];
+        let reference =
+            explore_with_engine_workers(&BatchEngine::new(), &grid, &workloads, 1);
+        assert_eq!(reference.points.len(), 4);
+        assert_eq!(reference.failures.len(), 1);
+        for workers in [2usize, 4, 16] {
+            let report =
+                explore_with_engine_workers(&BatchEngine::new(), &grid, &workloads, workers);
+            assert_eq!(report.points.len(), reference.points.len(), "workers={workers}");
+            for (a, b) in report.points.iter().zip(&reference.points) {
+                assert_eq!(a.cfg, b.cfg, "workers={workers}");
+                // Bit-identical, not approximately equal: the evaluation
+                // per point is single-threaded and pure.
+                assert_eq!(a.epb_per_gops, b.epb_per_gops, "workers={workers}");
+                assert_eq!(a.gops, b.gops, "workers={workers}");
+                assert_eq!(a.epb, b.epb, "workers={workers}");
+            }
+            assert_eq!(report.failures.len(), reference.failures.len());
+            for (a, b) in report.failures.iter().zip(&reference.failures) {
+                assert_eq!(a.cfg, b.cfg, "workers={workers}");
+            }
+        }
     }
 
     #[test]

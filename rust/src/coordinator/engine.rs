@@ -8,20 +8,27 @@
 //! flags — so a sweep that rebuilds them per simulation does the same work
 //! hundreds of times over.
 //!
-//! [`BatchEngine`] amortizes that cost behind two concurrent caches:
+//! [`BatchEngine`] amortizes that cost behind three concurrent caches:
 //!
 //! * a dataset cache keyed by canonical dataset name — a Table-2 name, a
 //!   large-tier name (`ogbn-arxiv-syn`, `reddit-syn`), or a parameterized
-//!   `rmat-<V>v-<E>e...` spec (see [`crate::graph::datasets`]) — and
-//! * a partition cache keyed by `(dataset, V, N)`.
+//!   `rmat-<V>v-<E>e...` spec (see [`crate::graph::datasets`]) —
+//! * a partition cache keyed by `(dataset, V, N)`, and
+//! * a [`StagePlan`] cache keyed by the full `(model, dataset, config,
+//!   flags)` tuple: plan *construction* (all the architecture-block cost
+//!   modelling) happens once per key, and every [`BatchEngine::run`] after
+//!   the first only *evaluates* the cached plan — which is what makes
+//!   figure re-runs, ablation re-sweeps, and serving-profile resolution
+//!   cheap (see `benches/plan_reuse.rs`).
 //!
 //! Each cache entry is an [`OnceLock`] cell, so concurrent requests for
 //! the same key build **at most once** (losers block on the winner instead
-//! of duplicating the build); [`BatchEngine::partition_builds`] counts the
-//! actual builds so tests can verify the guarantee. Batches of
-//! [`SimRequest`]s fan out over [`crate::util::parallel::par_map`] and
-//! every failure comes back as a structured [`SimError`] value — a bad
-//! point degrades to a reported error, never a process abort.
+//! of duplicating the build); [`BatchEngine::partition_builds`] and
+//! [`BatchEngine::plan_builds`] count the actual builds so tests can
+//! verify the guarantee. Batches of [`SimRequest`]s fan out over
+//! [`crate::util::parallel::par_map`] and every failure comes back as a
+//! structured [`SimError`] value — a bad point degrades to a reported
+//! error, never a process abort.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -35,7 +42,8 @@ use crate::util::parallel::par_map;
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
-use super::schedule::{simulate_with_partitions, SimReport};
+use super::plan::{self, StagePlan};
+use super::schedule::SimReport;
 
 /// One simulation to run: the full `(model, dataset, config, flags)` tuple.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,6 +70,14 @@ type DatasetCell = Arc<OnceLock<Arc<Dataset>>>;
 type PartitionCell = Arc<OnceLock<Arc<Vec<PartitionMatrix>>>>;
 type PartitionKey = (String, usize, usize);
 type ProfileKey = (ModelKind, String, GhostConfig, OptFlags);
+/// Plans and profiles key on the identical request tuple — one alias, so
+/// the two caches cannot silently diverge if the key ever gains a field.
+type PlanKey = ProfileKey;
+/// Plan cells cache the whole build `Result`: a failure is as
+/// deterministic as a success for a given key (the build is pure), so
+/// caching it keeps the at-most-once guarantee without a poisoned or
+/// placeholder state.
+type PlanCell = Arc<OnceLock<Result<Arc<StagePlan>, SimError>>>;
 
 /// The service-time decomposition of one `(model, dataset, config, flags)`
 /// request, derived from a full [`SimReport`] and cached by the engine for
@@ -128,9 +144,11 @@ impl ServiceProfile {
 pub struct BatchEngine {
     datasets: Mutex<HashMap<String, DatasetCell>>,
     partitions: Mutex<HashMap<PartitionKey, PartitionCell>>,
+    plans: Mutex<HashMap<PlanKey, PlanCell>>,
     profiles: Mutex<HashMap<ProfileKey, ServiceProfile>>,
     dataset_builds: AtomicUsize,
     partition_builds: AtomicUsize,
+    plan_builds: AtomicUsize,
     profile_builds: AtomicUsize,
 }
 
@@ -178,6 +196,7 @@ impl BatchEngine {
     pub fn clear(&self) {
         lock(&self.datasets).clear();
         lock(&self.partitions).clear();
+        lock(&self.plans).clear();
         lock(&self.profiles).clear();
     }
 
@@ -261,13 +280,50 @@ impl BatchEngine {
         self.partition_builds.load(Ordering::Relaxed)
     }
 
-    /// Runs one simulation through the caches.
-    pub fn run(&self, req: &SimRequest) -> Result<SimReport, SimError> {
+    /// The cached [`StagePlan`] of a request, constructed at most once per
+    /// distinct `(model, canonical dataset, config, flags)` key for this
+    /// engine's lifetime (`"cora"`/`"Cora"` and aliasing `rmat-...`
+    /// spellings share one entry). Construction resolves the dataset and
+    /// partition caches first, so a plan build implies at most one dataset
+    /// generation and one partition build underneath — and a cached plan
+    /// implies none at all.
+    pub fn plan(&self, req: &SimRequest) -> Result<Arc<StagePlan>, SimError> {
+        // Validate before touching any cache, so a rejected request leaves
+        // no entries (and no build-counter increments) behind.
         req.cfg.validate().map_err(SimError::InvalidConfig)?;
         req.flags.validate().map_err(SimError::InvalidFlags)?;
+        let spec = spec_by_name(&req.dataset)
+            .ok_or_else(|| SimError::UnknownDataset(req.dataset.clone()))?;
         let dataset = self.dataset(&req.dataset)?;
         let partitions = self.partitions_for(&dataset, req.cfg.v, req.cfg.n)?;
-        simulate_with_partitions(req.model, &dataset, &partitions, req.cfg, req.flags)
+        let key: PlanKey = (req.model, spec.name.to_string(), req.cfg, req.flags);
+        let cell: PlanCell = lock(&self.plans).entry(key).or_default().clone();
+        // Built outside the map lock; concurrent losers block on the cell.
+        // A build failure (unreachable in practice: config and flags were
+        // validated above and the partitions come from the same dataset
+        // and shape) is cached like a success — it is just as
+        // deterministic.
+        cell.get_or_init(|| {
+            self.plan_builds.fetch_add(1, Ordering::Relaxed);
+            plan::build(req.model, &dataset, &partitions, req.cfg, req.flags).map(Arc::new)
+        })
+        .clone()
+    }
+
+    /// How many [`StagePlan`]s this engine has actually constructed: one
+    /// per distinct `(model, dataset, config, flags)` key ever requested,
+    /// however many evaluations shared it.
+    pub fn plan_builds(&self) -> usize {
+        self.plan_builds.load(Ordering::Relaxed)
+    }
+
+    /// Runs one simulation through the caches: dataset, partitions, and
+    /// the typed [`StagePlan`] are all reused when present, so a repeated
+    /// request costs one plan *evaluation* (a single walk over the cached
+    /// stages) instead of a full re-simulation.
+    pub fn run(&self, req: &SimRequest) -> Result<SimReport, SimError> {
+        let plan = self.plan(req)?;
+        plan::evaluate(&plan)
     }
 
     /// The cached [`ServiceProfile`] of a request: one full simulation the
@@ -480,6 +536,100 @@ mod tests {
             Err(SimError::UnknownDataset(_))
         ));
         assert_eq!(engine.profile_builds(), 0);
+    }
+
+    #[test]
+    fn plan_cache_builds_once_per_canonical_request() {
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let a = engine.plan(&SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags)).unwrap();
+        // Case-insensitive aliasing shares the entry.
+        let b = engine.plan(&SimRequest::new(ModelKind::Gcn, "cora", cfg, flags)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(engine.plan_builds(), 1);
+        // run() goes through the same cache: no new construction.
+        engine.run(&SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags)).unwrap();
+        assert_eq!(engine.plan_builds(), 1);
+        // A different model, config, or flag set is a different plan.
+        engine.plan(&SimRequest::new(ModelKind::Gat, "Cora", cfg, flags)).unwrap();
+        engine
+            .plan(&SimRequest::new(ModelKind::Gcn, "Cora", cfg, OptFlags::baseline()))
+            .unwrap();
+        assert_eq!(engine.plan_builds(), 3);
+        // Underneath, Cora was generated and partitioned exactly once.
+        assert_eq!(engine.dataset_builds(), 1);
+        assert_eq!(engine.partition_builds(), 1);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_share_one_plan_build() {
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let reqs: Vec<SimRequest> =
+            (0..16).map(|_| SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags)).collect();
+        for r in engine.run_batch(&reqs) {
+            r.expect("every request simulates");
+        }
+        // The OnceLock cell serializes the build: 16 concurrent identical
+        // requests construct the plan exactly once.
+        assert_eq!(engine.plan_builds(), 1);
+    }
+
+    #[test]
+    fn plan_cache_clear_evicts_and_counter_persists() {
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let req = SimRequest::new(ModelKind::Gcn, "Cora", cfg, OptFlags::ghost_default());
+        engine.run(&req).unwrap();
+        assert_eq!(engine.plan_builds(), 1);
+        engine.clear();
+        engine.run(&req).unwrap();
+        assert_eq!(engine.plan_builds(), 2);
+    }
+
+    #[test]
+    fn cached_plan_evaluation_matches_uncached_simulation() {
+        use crate::coordinator::schedule::simulate_workload;
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        for (kind, name) in [(ModelKind::Gcn, "PubMed"), (ModelKind::Gin, "Mutag")] {
+            let req = SimRequest::new(kind, name, cfg, flags);
+            // Evaluate twice through the cache; both must be bit-identical
+            // to the uncached one-shot simulation.
+            let first = engine.run(&req).unwrap();
+            let second = engine.run(&req).unwrap();
+            let ds = Dataset::by_name(name).unwrap();
+            let uncached = simulate_workload(kind, &ds, cfg, flags).unwrap();
+            for r in [&first, &second] {
+                assert_eq!(r.metrics.latency_s, uncached.metrics.latency_s, "{name}");
+                assert_eq!(r.metrics.energy_j, uncached.metrics.energy_j, "{name}");
+                assert_eq!(r.aggregate_s, uncached.aggregate_s, "{name}");
+                assert_eq!(r.weight_stage_s, uncached.weight_stage_s, "{name}");
+                assert_eq!(r.kinds, uncached.kinds, "{name}");
+            }
+        }
+        assert_eq!(engine.plan_builds(), 2);
+    }
+
+    #[test]
+    fn plan_rejects_invalid_requests_without_caching() {
+        let engine = BatchEngine::new();
+        let bad_cfg = GhostConfig { r_c: 25, ..GhostConfig::paper_optimal() };
+        let req =
+            SimRequest::new(ModelKind::Gcn, "Cora", bad_cfg, OptFlags::ghost_default());
+        assert!(matches!(engine.plan(&req), Err(SimError::InvalidConfig(_))));
+        let req = SimRequest::new(
+            ModelKind::Gcn,
+            "NoSuchDataset",
+            GhostConfig::paper_optimal(),
+            OptFlags::ghost_default(),
+        );
+        assert!(matches!(engine.plan(&req), Err(SimError::UnknownDataset(_))));
+        assert_eq!(engine.plan_builds(), 0);
+        assert_eq!(engine.partition_builds(), 0);
     }
 
     #[test]

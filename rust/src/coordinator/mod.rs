@@ -3,24 +3,32 @@
 //! * [`optimizations`] — the four orchestration/scheduling optimizations of
 //!   §3.4 as toggleable flags (buffer & partition, pipelining, weight-DAC
 //!   sharing, workload balancing) with the preset combinations of Fig. 8.
-//! * [`schedule`] — maps a `(model, dataset, config, flags)` tuple onto
-//!   per-group pipeline stages and evaluates latency/energy with the
-//!   [`crate::sim`] pipeline model: the full GHOST simulator.
+//! * [`plan`] — the typed schedule IR: [`StagePlan`] construction (arch
+//!   block costs → kind-tagged [`StageCost`] stages) and evaluation (the
+//!   pipelined recurrence → makespan, energy, and exact per-kind busy
+//!   totals in one pass).
+//! * [`schedule`] — the simulator entry points: map a `(model, dataset,
+//!   config, flags)` tuple onto a plan and evaluate it into a
+//!   [`SimReport`].
 //! * [`engine`] — the batched simulation session: caches datasets,
-//!   `(dataset, V, N)` partition sets, and per-request [`ServiceProfile`]s
-//!   behind concurrent maps and fans [`SimRequest`] batches out over the
-//!   thread pool.
+//!   `(dataset, V, N)` partition sets, [`StagePlan`]s, and per-request
+//!   [`ServiceProfile`]s behind concurrent maps and fans [`SimRequest`]
+//!   batches out over the thread pool.
 //! * [`error`] — the structured [`SimError`] every fallible path returns.
 //! * [`dse`] — the architectural design-space exploration of Fig. 7(c)
 //!   over `[N, V, R_r, R_c, T_r]`, run through the engine.
+//!
+//! [`StageCost`]: crate::arch::StageCost
 
 pub mod dse;
 pub mod engine;
 pub mod error;
 pub mod optimizations;
+pub mod plan;
 pub mod schedule;
 
 pub use engine::{BatchEngine, ServiceProfile, SimRequest};
 pub use error::SimError;
 pub use optimizations::OptFlags;
+pub use plan::{KindTotals, PipelineSegment, PlanItem, StageKind, StagePlan};
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

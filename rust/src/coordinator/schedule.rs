@@ -1,6 +1,9 @@
-//! The GHOST simulator: maps a `(model, dataset, config, optimization
-//! flags)` tuple onto per-group pipeline stages, evaluates the schedule
-//! with the [`crate::sim`] pipeline model, and accounts energy.
+//! The GHOST simulator entry points: map a `(model, dataset, config,
+//! optimization flags)` tuple onto a typed [`StagePlan`]
+//! ([`crate::coordinator::plan::build`]) and evaluate it
+//! ([`crate::coordinator::plan::evaluate`]).
+//!
+//! [`StagePlan`]: crate::coordinator::plan::StagePlan
 //!
 //! Execution orderings (§3.4.2 / Fig. 6):
 //! * GCN / GraphSAGE / GIN — gather → reduce → transform → update per
@@ -11,25 +14,30 @@
 //! Multi-graph datasets are scheduled layer-major (all graphs through layer
 //! `l`, then layer `l+1`) so each weight matrix is staged and the banks
 //! TO-retargeted once per layer per dataset, not once per graph.
+//!
+//! The pre-IR single-pass simulator is retained as a test-only reference
+//! (`mod legacy` below); a property test pins the plan-based pipeline
+//! bit-identical to it across every Table-2 dataset × model × flag
+//! combination.
 
-
-use crate::arch::{aggregate, combine, ecu, update, ArchContext, StageCost};
-use crate::config::{ceil_div, GhostConfig};
+use crate::config::GhostConfig;
 use crate::energy::Metrics;
-use crate::gnn::models::{Activation, ExecOrdering, LayerSpec, Model, ModelKind};
-use crate::gnn::workload::Workload;
+use crate::gnn::models::ModelKind;
 use crate::graph::datasets::Dataset;
-use crate::graph::partition::{OutputGroupPlan, PartitionMatrix};
-use crate::sim;
+use crate::graph::partition::PartitionMatrix;
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
+use super::plan::{self, KindTotals};
 
-/// Fraction of MR banks whose per-layer retarget exceeds the EO range and
-/// needs the TO heater (with TED decoupling).
-pub const TO_RETUNE_FRACTION: f64 = 0.05;
+pub use super::plan::TO_RETUNE_FRACTION;
 
-/// Full simulation result for one `(model, dataset)` workload.
+/// Full simulation result for one `(model, dataset)` workload. Every field
+/// is a query over the evaluated [`StagePlan`]
+/// ([`crate::coordinator::plan::evaluate`]), not a hand-threaded
+/// accumulator.
+///
+/// [`StagePlan`]: crate::coordinator::plan::StagePlan
 #[derive(Debug, Clone)]
 pub struct SimReport {
     pub model: ModelKind,
@@ -68,6 +76,10 @@ pub struct SimReport {
     pub spilled_layer_gathers: usize,
     /// Always-on platform power for this configuration, watts.
     pub platform_w: f64,
+    /// Exact per-[`crate::coordinator::plan::StageKind`] busy-time and
+    /// dynamic-energy totals — readout and weight staging as first-class
+    /// entries instead of being folded into the block split above.
+    pub kinds: KindTotals,
 }
 
 impl SimReport {
@@ -114,7 +126,12 @@ pub fn simulate_workload(
 
 /// Simulate with pre-built partition matrices (offline preprocessing per
 /// the paper; `partitions[i]` must be the `(cfg.v, cfg.n)` partition of
-/// `dataset.graphs[i]`).
+/// `dataset.graphs[i]`). Builds a one-shot [`StagePlan`] and evaluates it;
+/// callers that revisit the same `(model, dataset, config, flags)` tuple
+/// should go through [`crate::coordinator::engine::BatchEngine`], whose
+/// plan cache skips construction on every hit.
+///
+/// [`StagePlan`]: crate::coordinator::plan::StagePlan
 pub fn simulate_with_partitions(
     kind: ModelKind,
     dataset: &Dataset,
@@ -122,312 +139,353 @@ pub fn simulate_with_partitions(
     cfg: GhostConfig,
     flags: OptFlags,
 ) -> Result<SimReport, SimError> {
-    cfg.validate().map_err(SimError::InvalidConfig)?;
-    flags.validate().map_err(SimError::InvalidFlags)?;
-    // Real checks, not debug_asserts: a mismatched partition silently
-    // produces wrong metrics in --release otherwise.
-    if partitions.len() != dataset.graphs.len() {
-        return Err(SimError::PartitionCountMismatch {
-            expected: dataset.graphs.len(),
-            got: partitions.len(),
-        });
+    let p = plan::build(kind, dataset, partitions, cfg, flags)?;
+    plan::evaluate(&p)
+}
+
+/// The pre-IR reference simulator, kept **temporarily, test-only** as the
+/// bit-identity oracle for the plan-based pipeline. This is the literal
+/// single-pass implementation that `simulate_with_partitions` used to be
+/// (hand-threaded accumulators, anonymous latency rows); the property test
+/// below pins `plan::build` + `plan::evaluate` to reproduce its every
+/// output field bit-for-bit. Delete once the IR has soaked.
+#[cfg(test)]
+mod legacy {
+    use crate::arch::{aggregate, combine, ecu, update, ArchContext, StageCost};
+    use crate::config::{ceil_div, GhostConfig};
+    use crate::gnn::models::{Activation, ExecOrdering, LayerSpec, Model, ModelKind};
+    use crate::graph::datasets::Dataset;
+    use crate::graph::partition::{OutputGroupPlan, PartitionMatrix};
+    use crate::sim;
+
+    use super::super::error::SimError;
+    use super::super::optimizations::OptFlags;
+    use super::TO_RETUNE_FRACTION;
+
+    /// The fields the pre-IR simulator produced (a `SimReport` without the
+    /// per-kind totals, which did not exist yet).
+    #[derive(Debug, Clone)]
+    pub struct LegacyReport {
+        pub latency_s: f64,
+        pub energy_j: f64,
+        pub aggregate_s: f64,
+        pub combine_s: f64,
+        pub update_s: f64,
+        pub readout_s: f64,
+        pub weight_stage_s: f64,
+        pub weight_stage_energy_j: f64,
+        pub spilled_layer_gathers: usize,
+        pub platform_w: f64,
     }
-    if let Some(pm) = partitions.iter().find(|p| p.v != cfg.v || p.n != cfg.n) {
-        return Err(SimError::PartitionShapeMismatch {
-            expected: (cfg.v, cfg.n),
-            got: (pm.v, pm.n),
-        });
-    }
-    let ctx = ArchContext::paper(cfg);
-    let model = Model::for_dataset(kind, &dataset.spec);
-    let workload = Workload::characterize(&model, dataset);
 
-    let mut latency = 0.0f64;
-    let mut dynamic_energy = 0.0f64;
-    let mut aggregate_s = 0.0f64;
-    let mut combine_s = 0.0f64;
-    let mut update_s = 0.0f64;
-    let mut readout_s = 0.0f64;
-    let mut weight_stage_s = 0.0f64;
-    let mut weight_stage_energy_j = 0.0f64;
-    let mut spilled_layer_gathers = 0usize;
-
-    // Edge/partition descriptors stream in once per graph.
-    for g in &dataset.graphs {
-        let ec = ecu::edge_stage_cost(&ctx, g.n_edges() as u64 * 8);
-        latency += ec.latency_s;
-        dynamic_energy += ec.energy_j;
-    }
-
-    for (li, layer) in model.layers.iter().enumerate() {
-        // Stage the layer's weights + TO-retarget the banks (once per layer
-        // per dataset; graphs are scheduled layer-major).
-        let wc = ecu::weight_stage_cost(
-            &ctx,
-            (layer.in_dim * layer.out_dim * layer.heads) as u64,
-        );
-        let stage_s = wc.latency_s.max(ctx.dev.to_tuning.latency_s);
-        let stage_energy = wc.energy_j + to_retune_energy(&ctx);
-        latency += stage_s;
-        weight_stage_s += stage_s;
-        weight_stage_energy_j += stage_energy;
-        dynamic_energy += stage_energy;
-
-        for pm in partitions {
-            // Does this layer's input feature map live on-chip? Residency
-            // is per *graph*: the schedule is layer-major across graphs
-            // (weights staged once per layer), but the ECU buffers one
-            // graph at a time within the layer, and a graph whose feature
-            // map fits the input-vertex buffer has it staged by the BP
-            // prefetcher overlapped with the previous graph's tail
-            // (§3.4.1), so its gathers hit the buffer. The spill test
-            // therefore compares this graph's footprint against the
-            // buffer — not the dataset-wide vertex sum, which wrongly
-            // spilled every multi-graph workload's post-layer-0 gathers
-            // to per-edge DRAM reads.
-            let feat_bytes = pm.n_vertices * layer.in_dim;
-            let from_dram =
-                li == 0 || feat_bytes > ctx.buffers.input_vertices.size_bytes;
-            if li > 0 && from_dram && layer.reduction.is_some() {
-                spilled_layer_gathers += 1;
-            }
-            let mut group_stages: Vec<sim::GroupStages> = Vec::with_capacity(pm.groups.len());
-            for grp in &pm.groups {
-                let (stages, block_split) =
-                    layer_group_stages(&ctx, &model, layer, grp, flags, from_dram);
-                dynamic_energy += stages.iter().map(|s| s.energy_j).sum::<f64>();
-                aggregate_s += block_split.0;
-                combine_s += block_split.1;
-                update_s += block_split.2;
-                group_stages.push(stages.iter().map(|s| s.latency_s).collect());
-            }
-            let sched = if flags.pipelining {
-                sim::pipelined(&group_stages)?
-            } else {
-                sim::sequential(&group_stages)
-            };
-            latency += sched.makespan_s;
+    pub fn simulate_with_partitions(
+        kind: ModelKind,
+        dataset: &Dataset,
+        partitions: &[PartitionMatrix],
+        cfg: GhostConfig,
+        flags: OptFlags,
+    ) -> Result<LegacyReport, SimError> {
+        cfg.validate().map_err(SimError::InvalidConfig)?;
+        flags.validate().map_err(SimError::InvalidFlags)?;
+        if partitions.len() != dataset.graphs.len() {
+            return Err(SimError::PartitionCountMismatch {
+                expected: dataset.graphs.len(),
+                got: partitions.len(),
+            });
         }
-    }
+        if let Some(pm) = partitions.iter().find(|p| p.v != cfg.v || p.n != cfg.n) {
+            return Err(SimError::PartitionShapeMismatch {
+                expected: (cfg.v, cfg.n),
+                got: (pm.v, pm.n),
+            });
+        }
+        let ctx = ArchContext::paper(cfg);
+        let model = Model::for_dataset(kind, &dataset.spec);
 
-    // Graph-classification readout: sum-pool each graph's vertex embeddings
-    // on the reduce arrays. The pooled embedding is the *output* of the
-    // last layer — `out_dim × heads` wide — not the last layer's input
-    // width, which overcounted both the sum-pool passes and the DAC energy.
-    if model.has_readout {
-        let width = model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
+        let mut latency = 0.0f64;
+        let mut dynamic_energy = 0.0f64;
+        let mut aggregate_s = 0.0f64;
+        let mut combine_s = 0.0f64;
+        let mut update_s = 0.0f64;
+        let mut readout_s = 0.0f64;
+        let mut weight_stage_s = 0.0f64;
+        let mut weight_stage_energy_j = 0.0f64;
+        let mut spilled_layer_gathers = 0usize;
+
+        // Edge/partition descriptors stream in once per graph.
         for g in &dataset.graphs {
-            let passes = ceil_div(g.n_vertices, cfg.v * cfg.r_c) * ceil_div(width, cfg.r_r);
-            let cost = StageCost {
-                latency_s: passes as f64 * ctx.symbol_s(),
-                energy_j: (g.n_vertices * width) as f64 * ctx.dev.dac.energy_j(),
-            };
-            latency += cost.latency_s;
-            dynamic_energy += cost.energy_j;
-            aggregate_s += cost.latency_s;
-            readout_s += cost.latency_s;
+            let ec = ecu::edge_stage_cost(&ctx, g.n_edges() as u64 * 8);
+            latency += ec.latency_s;
+            dynamic_energy += ec.energy_j;
         }
-    }
 
-    let platform_w = crate::arch::platform_power_w(&ctx, flags.dac_sharing);
-    let energy = dynamic_energy + platform_w * latency;
-    Ok(SimReport {
-        model: kind,
-        dataset: dataset.spec.name.to_string(),
-        config: cfg,
-        flags,
-        metrics: Metrics {
+        for (li, layer) in model.layers.iter().enumerate() {
+            // Stage the layer's weights + TO-retarget the banks (once per
+            // layer per dataset; graphs are scheduled layer-major).
+            let wc = ecu::weight_stage_cost(
+                &ctx,
+                (layer.in_dim * layer.out_dim * layer.heads) as u64,
+            );
+            let stage_s = wc.latency_s.max(ctx.dev.to_tuning.latency_s);
+            let stage_energy = wc.energy_j + to_retune_energy(&ctx);
+            latency += stage_s;
+            weight_stage_s += stage_s;
+            weight_stage_energy_j += stage_energy;
+            dynamic_energy += stage_energy;
+
+            for pm in partitions {
+                let feat_bytes = pm.n_vertices * layer.in_dim;
+                let from_dram =
+                    li == 0 || feat_bytes > ctx.buffers.input_vertices.size_bytes;
+                if li > 0 && from_dram && layer.reduction.is_some() {
+                    spilled_layer_gathers += 1;
+                }
+                let mut group_stages: Vec<sim::GroupStages> =
+                    Vec::with_capacity(pm.groups.len());
+                for grp in &pm.groups {
+                    let (stages, block_split) =
+                        layer_group_stages(&ctx, &model, layer, grp, flags, from_dram);
+                    dynamic_energy += stages.iter().map(|s| s.energy_j).sum::<f64>();
+                    aggregate_s += block_split.0;
+                    combine_s += block_split.1;
+                    update_s += block_split.2;
+                    group_stages.push(stages.iter().map(|s| s.latency_s).collect());
+                }
+                let sched = if flags.pipelining {
+                    sim::pipelined(&group_stages)?
+                } else {
+                    sim::sequential(&group_stages)
+                };
+                latency += sched.makespan_s;
+            }
+        }
+
+        // Graph-classification readout (final embedding width).
+        if model.has_readout {
+            let width = model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
+            for g in &dataset.graphs {
+                let passes =
+                    ceil_div(g.n_vertices, cfg.v * cfg.r_c) * ceil_div(width, cfg.r_r);
+                let cost = StageCost {
+                    latency_s: passes as f64 * ctx.symbol_s(),
+                    energy_j: (g.n_vertices * width) as f64 * ctx.dev.dac.energy_j(),
+                };
+                latency += cost.latency_s;
+                dynamic_energy += cost.energy_j;
+                aggregate_s += cost.latency_s;
+                readout_s += cost.latency_s;
+            }
+        }
+
+        let platform_w = crate::arch::platform_power_w(&ctx, flags.dac_sharing);
+        let energy = dynamic_energy + platform_w * latency;
+        Ok(LegacyReport {
             latency_s: latency,
             energy_j: energy,
-            ops: workload.total_ops(),
-            bits: workload.total_bits(),
-        },
-        aggregate_s,
-        combine_s,
-        update_s,
-        readout_s,
-        weight_stage_s,
-        weight_stage_energy_j,
-        spilled_layer_gathers,
-        platform_w,
-    })
-}
-
-/// Energy of one per-layer TO retarget event across the banks that need it,
-/// with TED keeping heaters decoupled (so each pays only its own shift).
-fn to_retune_energy(ctx: &ArchContext) -> f64 {
-    let cfg = &ctx.cfg;
-    let n_mrs = cfg.aggregate_mrs() + cfg.combine_mrs();
-    n_mrs as f64
-        * TO_RETUNE_FRACTION
-        * ctx.dev.to_tuning.power_w
-        * 0.25 // quarter-FSR average shift
-        * ctx.dev.to_tuning.latency_s
-}
-
-/// Builds the pipeline stages of one output-vertex group for one layer.
-/// Returns the stage costs plus the `(aggregate, combine, update)` busy-time
-/// split for the Fig. 9 breakdown.
-fn layer_group_stages(
-    ctx: &ArchContext,
-    model: &Model,
-    layer: &LayerSpec,
-    grp: &OutputGroupPlan,
-    flags: OptFlags,
-    from_dram: bool,
-) -> (Vec<StageCost>, (f64, f64, f64)) {
-    let out_width = layer.out_dim * layer.heads;
-    // GraphSAGE-style neighbor sampling caps the effective group shape.
-    let grp_eff = effective_group(grp, layer.neighbor_sample, ctx.cfg.v);
-
-    match (layer.reduction, model.ordering) {
-        (None, _) => {
-            // Pure MLP layer (GIN inner layers): features already on-chip,
-            // transform + update only.
-            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
-            let u = update::update_cost(ctx, layer.activation, out_width, 0)
-                .then(update::writeback_cost(ctx, out_width));
-            let split = (0.0, t.latency_s, u.latency_s);
-            (vec![StageCost::ZERO, StageCost::ZERO, t, u], split)
-        }
-        (Some(red), ExecOrdering::AggregateFirst) => {
-            let g = gather_stage(ctx, &grp_eff, layer.in_dim, flags.buffer_partition, from_dram);
-            let r = aggregate::reduce_cost(ctx, &grp_eff, layer.in_dim, red, flags.workload_balancing);
-            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, true);
-            let u = update::update_cost(ctx, layer.activation, out_width, 0)
-                .then(update::writeback_cost(ctx, out_width));
-            let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
-            (vec![g, r, t, u], split)
-        }
-        (Some(red), ExecOrdering::TransformFirst) => {
-            // GAT: each lane fetches *its own* vertex once (transforms are
-            // independent, §3.4.2), W-transforms it and computes attention
-            // logits; LeakyReLU + neighborhood softmax run in the update
-            // block; the final reduce aggregates the *transformed*
-            // (out_width-dim) neighbor features from the intermediate
-            // buffer.
-            let g = own_vertex_gather(ctx, layer.in_dim, flags.buffer_partition, from_dram);
-            let mut t =
-                combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
-            t = t.then(attention_cost(ctx, layer, &grp_eff));
-            let softmax_elems = grp_eff.total_edges as usize * layer.heads;
-            let u = update::update_cost(ctx, Activation::Softmax, out_width, softmax_elems)
-                .then(update::writeback_cost(ctx, out_width));
-            // Neighbor fetch of transformed features (on-chip intermediate
-            // buffer) + the coherent summation itself.
-            let nbr_bytes = grp_eff.distinct_sources as usize * out_width;
-            let fetch = StageCost {
-                latency_s: ctx.buffers.input_vertices.stream_latency_s(nbr_bytes),
-                energy_j: ctx.buffers.input_vertices.stream_energy_j(nbr_bytes),
-            };
-            let r = fetch
-                .then(aggregate::reduce_cost(ctx, &grp_eff, out_width, red, flags.workload_balancing));
-            let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
-            (vec![g, t, u, r], split)
-        }
+            aggregate_s,
+            combine_s,
+            update_s,
+            readout_s,
+            weight_stage_s,
+            weight_stage_energy_j,
+            spilled_layer_gathers,
+            platform_w,
+        })
     }
-}
 
-/// Applies a neighbor-sample cap to a group's shape (GraphSAGE §2.1).
-fn effective_group(
-    grp: &OutputGroupPlan,
-    sample: Option<usize>,
-    v: usize,
-) -> OutputGroupPlan {
-    match sample {
-        None => *grp,
-        Some(s) => {
-            let max_deg = grp.max_lane_degree.min(s as u32);
-            let total = grp.total_edges.min((v * s) as u32);
-            OutputGroupPlan {
-                out_group: grp.out_group,
-                n_blocks: grp.n_blocks,
-                max_lane_degree: max_deg,
-                total_edges: total,
-                distinct_sources: grp.distinct_sources.min(total),
+    fn to_retune_energy(ctx: &ArchContext) -> f64 {
+        let cfg = &ctx.cfg;
+        let n_mrs = cfg.aggregate_mrs() + cfg.combine_mrs();
+        n_mrs as f64
+            * TO_RETUNE_FRACTION
+            * ctx.dev.to_tuning.power_w
+            * 0.25 // quarter-FSR average shift
+            * ctx.dev.to_tuning.latency_s
+    }
+
+    fn layer_group_stages(
+        ctx: &ArchContext,
+        model: &Model,
+        layer: &LayerSpec,
+        grp: &OutputGroupPlan,
+        flags: OptFlags,
+        from_dram: bool,
+    ) -> (Vec<StageCost>, (f64, f64, f64)) {
+        let out_width = layer.out_dim * layer.heads;
+        let grp_eff = effective_group(grp, layer.neighbor_sample, ctx.cfg.v);
+
+        match (layer.reduction, model.ordering) {
+            (None, _) => {
+                let t = combine::transform_cost(
+                    ctx,
+                    layer.in_dim,
+                    out_width,
+                    flags.dac_sharing,
+                    false,
+                );
+                let u = update::update_cost(ctx, layer.activation, out_width, 0)
+                    .then(update::writeback_cost(ctx, out_width));
+                let split = (0.0, t.latency_s, u.latency_s);
+                (vec![StageCost::ZERO, StageCost::ZERO, t, u], split)
+            }
+            (Some(red), ExecOrdering::AggregateFirst) => {
+                let g = gather_stage(
+                    ctx,
+                    &grp_eff,
+                    layer.in_dim,
+                    flags.buffer_partition,
+                    from_dram,
+                );
+                let r = aggregate::reduce_cost(
+                    ctx,
+                    &grp_eff,
+                    layer.in_dim,
+                    red,
+                    flags.workload_balancing,
+                );
+                let t = combine::transform_cost(
+                    ctx,
+                    layer.in_dim,
+                    out_width,
+                    flags.dac_sharing,
+                    true,
+                );
+                let u = update::update_cost(ctx, layer.activation, out_width, 0)
+                    .then(update::writeback_cost(ctx, out_width));
+                let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
+                (vec![g, r, t, u], split)
+            }
+            (Some(red), ExecOrdering::TransformFirst) => {
+                let g =
+                    own_vertex_gather(ctx, layer.in_dim, flags.buffer_partition, from_dram);
+                let mut t = combine::transform_cost(
+                    ctx,
+                    layer.in_dim,
+                    out_width,
+                    flags.dac_sharing,
+                    false,
+                );
+                t = t.then(attention_cost(ctx, layer, &grp_eff));
+                let softmax_elems = grp_eff.total_edges as usize * layer.heads;
+                let u = update::update_cost(ctx, Activation::Softmax, out_width, softmax_elems)
+                    .then(update::writeback_cost(ctx, out_width));
+                let nbr_bytes = grp_eff.distinct_sources as usize * out_width;
+                let fetch = StageCost {
+                    latency_s: ctx.buffers.input_vertices.stream_latency_s(nbr_bytes),
+                    energy_j: ctx.buffers.input_vertices.stream_energy_j(nbr_bytes),
+                };
+                let r = fetch.then(aggregate::reduce_cost(
+                    ctx,
+                    &grp_eff,
+                    out_width,
+                    red,
+                    flags.workload_balancing,
+                ));
+                let split = (g.latency_s + r.latency_s, t.latency_s, u.latency_s);
+                (vec![g, t, u, r], split)
             }
         }
     }
-}
 
-/// Gather stage: DRAM-backed for layer-0 / spilled feature maps, on-chip
-/// intermediate-buffer reads otherwise.
-fn gather_stage(
-    ctx: &ArchContext,
-    grp: &OutputGroupPlan,
-    in_dim: usize,
-    bp: bool,
-    from_dram: bool,
-) -> StageCost {
-    if from_dram {
-        aggregate::gather_cost(ctx, grp, in_dim, bp)
-    } else {
-        // Intermediate vertex buffer: streamed (BP) or per-neighbor (no BP).
-        let buf = &ctx.buffers.input_vertices;
-        if bp {
-            let bytes = grp.distinct_sources as usize * in_dim;
-            StageCost {
-                latency_s: buf.stream_latency_s(bytes),
-                energy_j: buf.stream_energy_j(bytes),
+    fn effective_group(
+        grp: &OutputGroupPlan,
+        sample: Option<usize>,
+        v: usize,
+    ) -> OutputGroupPlan {
+        match sample {
+            None => *grp,
+            Some(s) => {
+                let max_deg = grp.max_lane_degree.min(s as u32);
+                let total = grp.total_edges.min((v * s) as u32);
+                OutputGroupPlan {
+                    out_group: grp.out_group,
+                    n_blocks: grp.n_blocks,
+                    max_lane_degree: max_deg,
+                    total_edges: total,
+                    distinct_sources: grp.distinct_sources.min(total),
+                }
+            }
+        }
+    }
+
+    fn gather_stage(
+        ctx: &ArchContext,
+        grp: &OutputGroupPlan,
+        in_dim: usize,
+        bp: bool,
+        from_dram: bool,
+    ) -> StageCost {
+        if from_dram {
+            aggregate::gather_cost(ctx, grp, in_dim, bp)
+        } else {
+            let buf = &ctx.buffers.input_vertices;
+            if bp {
+                let bytes = grp.distinct_sources as usize * in_dim;
+                StageCost {
+                    latency_s: buf.stream_latency_s(bytes),
+                    energy_j: buf.stream_energy_j(bytes),
+                }
+            } else {
+                let per = buf.access_latency_s * ceil_div(in_dim, 64).max(1) as f64;
+                let bytes = grp.total_edges as usize * in_dim;
+                StageCost {
+                    latency_s: grp.max_lane_degree as f64 * per,
+                    energy_j: buf.stream_energy_j(bytes),
+                }
+            }
+        }
+    }
+
+    fn own_vertex_gather(
+        ctx: &ArchContext,
+        in_dim: usize,
+        bp: bool,
+        from_dram: bool,
+    ) -> StageCost {
+        let bytes = ctx.cfg.v * in_dim;
+        if from_dram {
+            let hbm = &ctx.hbm;
+            if bp {
+                StageCost {
+                    latency_s: hbm.access_latency_s + bytes as f64 / hbm.sustained_bw(),
+                    energy_j: hbm.transfer_energy_j(bytes as u64)
+                        + ctx.buffers.input_vertices.stream_energy_j(bytes),
+                }
+            } else {
+                StageCost {
+                    latency_s: hbm.access_latency_s
+                        + in_dim as f64 / (hbm.peak_bw_bytes_per_s * hbm.random_efficiency),
+                    energy_j: hbm.transfer_energy_j(bytes as u64)
+                        + hbm.burst_overhead_j * ctx.cfg.v as f64
+                        + ctx.buffers.input_vertices.stream_energy_j(bytes),
+                }
             }
         } else {
-            let per = buf.access_latency_s * ceil_div(in_dim, 64).max(1) as f64;
-            let bytes = grp.total_edges as usize * in_dim;
             StageCost {
-                latency_s: grp.max_lane_degree as f64 * per,
-                energy_j: buf.stream_energy_j(bytes),
+                latency_s: ctx.buffers.input_vertices.stream_latency_s(bytes),
+                energy_j: ctx.buffers.input_vertices.stream_energy_j(bytes),
             }
         }
     }
-}
 
-/// Transform-first own-vertex fetch: each of the `V` lanes streams the
-/// feature vector of the single vertex it will transform. With BP the
-/// fetches are one prefetched stream; without, each lane issues an
-/// on-demand access.
-fn own_vertex_gather(ctx: &ArchContext, in_dim: usize, bp: bool, from_dram: bool) -> StageCost {
-    let bytes = ctx.cfg.v * in_dim;
-    if from_dram {
-        let hbm = &ctx.hbm;
-        if bp {
-            StageCost {
-                latency_s: hbm.access_latency_s + bytes as f64 / hbm.sustained_bw(),
-                energy_j: hbm.transfer_energy_j(bytes as u64)
-                    + ctx.buffers.input_vertices.stream_energy_j(bytes),
-            }
-        } else {
-            StageCost {
-                latency_s: hbm.access_latency_s
-                    + in_dim as f64 / (hbm.peak_bw_bytes_per_s * hbm.random_efficiency),
-                energy_j: hbm.transfer_energy_j(bytes as u64)
-                    + hbm.burst_overhead_j * ctx.cfg.v as f64
-                    + ctx.buffers.input_vertices.stream_energy_j(bytes),
-            }
-        }
-    } else {
+    fn attention_cost(ctx: &ArchContext, layer: &LayerSpec, grp: &OutputGroupPlan) -> StageCost {
+        let cfg = &ctx.cfg;
+        let per_lane_logits = grp.max_lane_degree as usize * layer.heads;
+        let passes =
+            ceil_div(per_lane_logits.max(1), cfg.t_r) * ceil_div(2 * layer.out_dim, cfg.r_r);
+        let values = grp.total_edges as f64 * (2 * layer.out_dim * layer.heads) as f64;
         StageCost {
-            latency_s: ctx.buffers.input_vertices.stream_latency_s(bytes),
-            energy_j: ctx.buffers.input_vertices.stream_energy_j(bytes),
+            latency_s: passes as f64 * ctx.symbol_s(),
+            energy_j: values * ctx.dev.dac.energy_j(),
         }
-    }
-}
-
-/// GAT attention-logit cost: `aᵀ[Wh_i ‖ Wh_j]` per edge per head on the
-/// transform arrays (2·out_dim-long dot products).
-fn attention_cost(ctx: &ArchContext, layer: &LayerSpec, grp: &OutputGroupPlan) -> StageCost {
-    let cfg = &ctx.cfg;
-    let per_lane_logits = grp.max_lane_degree as usize * layer.heads;
-    let passes = ceil_div(per_lane_logits.max(1), cfg.t_r) * ceil_div(2 * layer.out_dim, cfg.r_r);
-    let values = grp.total_edges as f64 * (2 * layer.out_dim * layer.heads) as f64;
-    StageCost {
-        latency_s: passes as f64 * ctx.symbol_s(),
-        energy_j: values * ctx.dev.dac.energy_j(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ceil_div;
+    use crate::graph::datasets::ALL_DATASETS;
 
     fn sim(kind: ModelKind, ds: &str, flags: OptFlags) -> SimReport {
         simulate(kind, ds, GhostConfig::paper_optimal(), flags).unwrap()
@@ -579,6 +637,46 @@ mod tests {
                 assert!(r.metrics.latency_s > 0.0, "{:?}/{ds}", kind);
                 assert!(r.metrics.energy_j > 0.0);
                 assert!(r.metrics.ops > 0);
+            }
+        }
+    }
+
+    /// The refactor-safety pin: the plan-based pipeline must reproduce the
+    /// retained pre-IR reference **bit-identically** — every report field,
+    /// not approximately — across all 8 Table-2 datasets × all 4 models ×
+    /// every Fig. 8 optimization-flag combination. Partitions are built
+    /// once per dataset and shared by both paths.
+    #[test]
+    fn plan_pipeline_bit_identical_to_legacy_reference() {
+        let cfg = GhostConfig::paper_optimal();
+        let presets = OptFlags::fig8_presets();
+        for spec in ALL_DATASETS.iter() {
+            let ds = Dataset::by_name(spec.name).unwrap();
+            let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+            for kind in ModelKind::ALL {
+                for &flags in &presets {
+                    let ctx = format!("{}/{}/{}", kind.name(), spec.name, flags.label());
+                    let p = simulate_with_partitions(kind, &ds, &pms, cfg, flags)
+                        .unwrap_or_else(|e| panic!("plan path failed for {ctx}: {e}"));
+                    let l = legacy::simulate_with_partitions(kind, &ds, &pms, cfg, flags)
+                        .unwrap_or_else(|e| panic!("legacy path failed for {ctx}: {e}"));
+                    assert_eq!(p.metrics.latency_s, l.latency_s, "latency {ctx}");
+                    assert_eq!(p.metrics.energy_j, l.energy_j, "energy {ctx}");
+                    assert_eq!(p.aggregate_s, l.aggregate_s, "aggregate {ctx}");
+                    assert_eq!(p.combine_s, l.combine_s, "combine {ctx}");
+                    assert_eq!(p.update_s, l.update_s, "update {ctx}");
+                    assert_eq!(p.readout_s, l.readout_s, "readout {ctx}");
+                    assert_eq!(p.weight_stage_s, l.weight_stage_s, "weight stage {ctx}");
+                    assert_eq!(
+                        p.weight_stage_energy_j, l.weight_stage_energy_j,
+                        "weight-stage energy {ctx}"
+                    );
+                    assert_eq!(
+                        p.spilled_layer_gathers, l.spilled_layer_gathers,
+                        "spills {ctx}"
+                    );
+                    assert_eq!(p.platform_w, l.platform_w, "platform power {ctx}");
+                }
             }
         }
     }

@@ -5,12 +5,13 @@
 
 use crate::baselines::{run_baseline, supports, PLATFORMS};
 use crate::config::GhostConfig;
-use crate::coordinator::{BatchEngine, OptFlags, SimReport, SimRequest};
+use crate::coordinator::{BatchEngine, KindTotals, OptFlags, SimReport, SimRequest};
 use crate::energy::{geomean, Metrics};
 use crate::gnn::models::{Model, ModelKind};
 use crate::gnn::workload::Workload;
 use crate::graph::datasets::{DatasetSpec, ALL_DATASETS, LARGE_DATASETS};
 use crate::photonics::devices::DeviceParams;
+use crate::util::json::{obj, Json};
 
 /// All 16 evaluated `(model, dataset)` workloads, paper order.
 pub fn all_pairs() -> Vec<(ModelKind, &'static str)> {
@@ -211,14 +212,26 @@ pub fn print_fig8(cfg: GhostConfig) {
 
 // ----------------------------------------------------------------- Fig. 9
 
-/// One Fig. 9 bar: per-block latency fractions.
+/// One Fig. 9 bar: the paper's per-block latency fractions plus the exact
+/// per-[`crate::coordinator::StageKind`] totals from the evaluated plan —
+/// readout and weight staging as first-class entries instead of being
+/// folded into the aggregate bar.
 #[derive(Debug)]
 pub struct Fig9Row {
     pub model: String,
     pub dataset: String,
+    /// Fractional block split (aggregate includes gather, reduce, and
+    /// readout — the paper's three-bar presentation).
     pub aggregate: f64,
     pub combine: f64,
     pub update: f64,
+    /// Exact per-kind busy-time and energy totals.
+    pub kinds: KindTotals,
+    /// Total busy time summed from the report's block accumulators
+    /// (aggregate + combine + update + weight staging + edge streams),
+    /// seconds. The per-kind totals in `kinds` must sum to this — the CI
+    /// smoke asserts it on the JSON output.
+    pub total_busy_s: f64,
 }
 
 pub fn fig9(cfg: GhostConfig) -> Vec<Fig9Row> {
@@ -226,21 +239,29 @@ pub fn fig9(cfg: GhostConfig) -> Vec<Fig9Row> {
         .into_iter()
         .map(|r| {
             let (a, c, u) = r.breakdown();
+            let total_busy_s = r.aggregate_s
+                + r.combine_s
+                + r.update_s
+                + r.weight_stage_s
+                + r.kinds.edge_stream.latency_s;
             Fig9Row {
                 model: r.model.name().to_string(),
                 dataset: r.dataset,
                 aggregate: a,
                 combine: c,
                 update: u,
+                kinds: r.kinds,
+                total_busy_s,
             }
         })
         .collect()
 }
 
 pub fn print_fig9(cfg: GhostConfig) {
+    let rows = fig9(cfg);
     println!("Fig. 9: latency breakdown per block");
     println!("{:<10} {:<12} {:>10} {:>10} {:>10}", "Model", "Dataset", "Aggregate", "Combine", "Update");
-    for r in fig9(cfg) {
+    for r in &rows {
         println!(
             "{:<10} {:<12} {:>9.1}% {:>9.1}% {:>9.1}%",
             r.model,
@@ -248,6 +269,27 @@ pub fn print_fig9(cfg: GhostConfig) {
             r.aggregate * 100.0,
             r.combine * 100.0,
             r.update * 100.0
+        );
+    }
+    println!();
+    println!("Fig. 9 (exact per-kind busy time, us; readout & weight staging unfolded)");
+    println!(
+        "{:<10} {:<12} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "Model", "Dataset", "Gather", "Reduce", "Transfrm", "Update", "Readout", "WeightSt", "EdgeStrm"
+    );
+    for r in &rows {
+        let k = &r.kinds;
+        println!(
+            "{:<10} {:<12} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            r.model,
+            r.dataset,
+            k.gather.latency_s * 1e6,
+            k.reduce.latency_s * 1e6,
+            k.transform.latency_s * 1e6,
+            k.update.latency_s * 1e6,
+            k.readout.latency_s * 1e6,
+            k.weight_stage.latency_s * 1e6,
+            k.edge_stream.latency_s * 1e6,
         );
     }
 }
@@ -333,6 +375,150 @@ pub fn print_comparison(cfg: GhostConfig) {
             r.platform, r.gops_ratio, r.epb_ratio, r.epb_gops_ratio, r.n_workloads
         );
     }
+}
+
+// ------------------------------------------------------- JSON serializers
+
+/// `{busy_s, energy_j}` object per kind, in schedule order.
+pub fn kind_totals_json(kinds: &KindTotals) -> Json {
+    obj(kinds
+        .rows()
+        .iter()
+        .map(|(name, c)| {
+            (
+                *name,
+                obj(vec![
+                    ("busy_s", Json::Num(c.latency_s)),
+                    ("energy_j", Json::Num(c.energy_j)),
+                ]),
+            )
+        })
+        .collect())
+}
+
+/// Table 1 rows as JSON.
+pub fn table1_json() -> Json {
+    Json::Arr(
+        table1()
+            .into_iter()
+            .map(|(device, latency_s, power_w)| {
+                obj(vec![
+                    ("device", Json::Str(device)),
+                    ("latency_s", Json::Num(latency_s)),
+                    ("power_w", Json::Num(power_w)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Table 2 rows as JSON.
+pub fn table2_json() -> Json {
+    Json::Arr(
+        table2()
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("dataset", Json::Str(r.name.to_string())),
+                    ("avg_nodes", Json::Num(r.avg_nodes)),
+                    ("avg_edges", Json::Num(r.avg_edges)),
+                    ("n_features", Json::Num(r.n_features as f64)),
+                    ("n_labels", Json::Num(r.n_labels as f64)),
+                    ("n_graphs", Json::Num(r.n_graphs as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Dataset catalog rows (both tiers) as JSON.
+pub fn dataset_catalog_json() -> Json {
+    Json::Arr(
+        dataset_catalog()
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("dataset", Json::Str(r.name.to_string())),
+                    ("tier", Json::Str(r.tier.to_string())),
+                    ("avg_nodes", Json::Num(r.avg_nodes as f64)),
+                    ("avg_edges", Json::Num(r.avg_edges as f64)),
+                    ("n_features", Json::Num(r.n_features as f64)),
+                    ("n_labels", Json::Num(r.n_labels as f64)),
+                    ("n_graphs", Json::Num(r.n_graphs as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 8 rows as JSON (per-workload normalized energies + geomean).
+pub fn fig8_json(cfg: GhostConfig) -> Json {
+    Json::Arr(
+        fig8(cfg)
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("label", Json::Str(r.label)),
+                    ("mean_normalized_energy", Json::Num(r.mean)),
+                    (
+                        "per_workload",
+                        Json::Arr(
+                            r.per_workload
+                                .into_iter()
+                                .map(|(model, dataset, e)| {
+                                    obj(vec![
+                                        ("model", Json::Str(model)),
+                                        ("dataset", Json::Str(dataset)),
+                                        ("normalized_energy", Json::Num(e)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 9 rows as JSON: block fractions, total busy time, and the exact
+/// per-kind breakdown (`kinds.<kind>.busy_s` sums to `total_busy_s` — the
+/// CI smoke pins the invariant).
+pub fn fig9_json(cfg: GhostConfig) -> Json {
+    Json::Arr(
+        fig9(cfg)
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("model", Json::Str(r.model)),
+                    ("dataset", Json::Str(r.dataset)),
+                    ("aggregate_frac", Json::Num(r.aggregate)),
+                    ("combine_frac", Json::Num(r.combine)),
+                    ("update_frac", Json::Num(r.update)),
+                    ("total_busy_s", Json::Num(r.total_busy_s)),
+                    ("kinds", kind_totals_json(&r.kinds)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Figs. 10–12 summary rows as JSON.
+pub fn comparison_json(cfg: GhostConfig) -> Json {
+    Json::Arr(
+        comparison_summary(cfg)
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("platform", Json::Str(r.platform.to_string())),
+                    ("gops_ratio", Json::Num(r.gops_ratio)),
+                    ("epb_ratio", Json::Num(r.epb_ratio)),
+                    ("epb_gops_ratio", Json::Num(r.epb_gops_ratio)),
+                    ("n_workloads", Json::Num(r.n_workloads as f64)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 #[cfg(test)]

@@ -36,7 +36,9 @@ USAGE:
         rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s]
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
-                [--comparison] [--datasets] [--all]
+                [--comparison] [--datasets] [--all] [--json]
+        --json emits the selected sections as one JSON object; the fig9
+        section carries the exact per-stage-kind busy/energy breakdown.
   ghost serve --model <m> --dataset <d> | --mix <m:d[:w],...>
               [--rps N] [--accelerators N] [--duration S] [--seed N]
               [--policy rr|jsq|affinity] [--batch immediate|max:<n>:<ms>|slo[:<n>]]
@@ -244,7 +246,7 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
 fn cmd_figures(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "datasets", "all"],
+        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "datasets", "all", "json"],
     )?;
     let all = args.has("all")
         || !(args.has("table1")
@@ -255,6 +257,35 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
             || args.has("comparison")
             || args.has("datasets"));
     let cfg = GhostConfig::paper_optimal();
+    if args.has("json") {
+        // One JSON object holding every selected section, machine-readable
+        // (the CI smoke checks the fig9 per-kind breakdown sums against
+        // total_busy_s from this output).
+        let mut sections: Vec<(&str, Json)> = Vec::new();
+        if args.has("datasets") {
+            sections.push(("datasets", figures::dataset_catalog_json()));
+        }
+        if args.has("table1") || all {
+            sections.push(("table1", figures::table1_json()));
+        }
+        if args.has("table2") || all {
+            sections.push(("table2", figures::table2_json()));
+        }
+        if args.has("table3") || all {
+            sections.push(("table3", table3_json()));
+        }
+        if args.has("fig8") || all {
+            sections.push(("fig8", figures::fig8_json(cfg)));
+        }
+        if args.has("fig9") || all {
+            sections.push(("fig9", figures::fig9_json(cfg)));
+        }
+        if args.has("comparison") || all {
+            sections.push(("comparison", figures::comparison_json(cfg)));
+        }
+        println!("{}", ghost::util::json::obj(sections));
+        return Ok(());
+    }
     if args.has("datasets") {
         figures::print_dataset_catalog();
         println!();
@@ -527,6 +558,15 @@ fn cmd_infer(argv: &[String]) -> Result<()> {
     let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("PJRT execute latency: best {:.3} ms over {} reps", best * 1e3, times.len());
     Ok(())
+}
+
+/// Table 3 as JSON: the measured accuracy rows from `make artifacts`
+/// verbatim, or `null` when the artifact file is absent or unparseable.
+fn table3_json() -> Json {
+    std::fs::read_to_string("artifacts/accuracy.json")
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or(Json::Null)
 }
 
 /// Table 3: model accuracies at fp32 vs int8, measured by

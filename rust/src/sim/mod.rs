@@ -11,8 +11,19 @@
 //!
 //! With pipelining disabled (the Fig. 8 baseline) groups and stages run
 //! back-to-back and the makespan is the plain sum.
+//!
+//! Two evaluation families share the recurrence:
+//!
+//! * [`pipelined`] / [`sequential`] — latency-only rows (`Vec<f64>`), the
+//!   original interface;
+//! * [`pipelined_costs`] / [`sequential_costs`] — full [`StageCost`]
+//!   schedules, returning makespan, total dynamic energy, and exact
+//!   per-stage-position busy/energy totals in one pass. This is what the
+//!   typed schedule IR ([`crate::coordinator::plan`]) evaluates.
 
 use std::fmt;
+
+use crate::arch::StageCost;
 
 /// Per-stage latencies of one group, seconds. All groups in a schedule must
 /// have the same stage count.
@@ -93,19 +104,123 @@ pub fn sequential(groups: &[GroupStages]) -> ScheduleResult {
 }
 
 /// Per-stage busy time across all groups — drives the Fig. 9 latency
-/// breakdown.
-pub fn stage_totals(groups: &[GroupStages]) -> Vec<f64> {
+/// breakdown. Ragged input is a [`RaggedStages`] error, exactly like
+/// [`pipelined`]: a group longer than group 0 used to panic on the totals
+/// index in `--release`, and a shorter one silently under-reported its
+/// missing stages.
+pub fn stage_totals(groups: &[GroupStages]) -> Result<Vec<f64>, RaggedStages> {
     if groups.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let n_stages = groups[0].len();
     let mut totals = vec![0.0; n_stages];
-    for g in groups {
+    for (gi, g) in groups.iter().enumerate() {
+        if g.len() != n_stages {
+            return Err(RaggedStages { group: gi, expected: n_stages, got: g.len() });
+        }
         for (s, &t) in g.iter().enumerate() {
             totals[s] += t;
         }
     }
-    totals
+    Ok(totals)
+}
+
+/// Result of evaluating a schedule whose stages carry full [`StageCost`]s:
+/// the makespan plus the energy and per-stage-position busy totals, all
+/// computed in the same single pass over the groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostScheduleResult {
+    /// End-to-end makespan, seconds (identical to the latency-only
+    /// evaluation of the same schedule).
+    pub makespan_s: f64,
+    /// Sum of all stage latencies.
+    pub total_stage_time_s: f64,
+    /// Total dynamic energy of every stage of every group, joules.
+    pub energy_j: f64,
+    /// Busy time per stage *position* across all groups, seconds
+    /// (`stage_busy_s[s]` sums column `s`). Empty for an empty schedule.
+    pub stage_busy_s: Vec<f64>,
+    /// Dynamic energy per stage position across all groups, joules.
+    pub stage_energy_j: Vec<f64>,
+}
+
+impl CostScheduleResult {
+    fn empty() -> Self {
+        CostScheduleResult {
+            makespan_s: 0.0,
+            total_stage_time_s: 0.0,
+            energy_j: 0.0,
+            stage_busy_s: Vec::new(),
+            stage_energy_j: Vec::new(),
+        }
+    }
+}
+
+/// Exact makespan of the two-level pipelined schedule over full stage
+/// costs — the same recurrence as [`pipelined`], evaluated on
+/// `latency_s`, while energy and per-position busy totals accumulate in
+/// the same pass. Every group must carry the same stage count.
+pub fn pipelined_costs(groups: &[&[StageCost]]) -> Result<CostScheduleResult, RaggedStages> {
+    if groups.is_empty() {
+        return Ok(CostScheduleResult::empty());
+    }
+    let n_stages = groups[0].len();
+    let mut prev_end = vec![0.0f64; n_stages];
+    let mut total = 0.0;
+    let mut energy = 0.0;
+    let mut stage_busy_s = vec![0.0f64; n_stages];
+    let mut stage_energy_j = vec![0.0f64; n_stages];
+    for (gi, g) in groups.iter().enumerate() {
+        if g.len() != n_stages {
+            return Err(RaggedStages { group: gi, expected: n_stages, got: g.len() });
+        }
+        let mut cur_end = vec![0.0f64; n_stages];
+        let mut prev_stage_end = 0.0f64;
+        let mut group_energy = 0.0f64;
+        for (s, c) in g.iter().enumerate() {
+            let start = prev_stage_end.max(prev_end[s]);
+            cur_end[s] = start + c.latency_s;
+            prev_stage_end = cur_end[s];
+            total += c.latency_s;
+            stage_busy_s[s] += c.latency_s;
+            stage_energy_j[s] += c.energy_j;
+            group_energy += c.energy_j;
+        }
+        energy += group_energy;
+        prev_end = cur_end;
+    }
+    Ok(CostScheduleResult {
+        makespan_s: prev_end.last().copied().unwrap_or(0.0),
+        total_stage_time_s: total,
+        energy_j: energy,
+        stage_busy_s,
+        stage_energy_j,
+    })
+}
+
+/// Cost-schedule evaluation with no pipelining: every stage of every group
+/// runs sequentially (the makespan is the flat latency sum). Ragged groups
+/// are tolerated, mirroring [`sequential`]; per-position totals are sized
+/// to the longest group.
+pub fn sequential_costs(groups: &[&[StageCost]]) -> CostScheduleResult {
+    let n_stages = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+    let mut out = CostScheduleResult {
+        stage_busy_s: vec![0.0; n_stages],
+        stage_energy_j: vec![0.0; n_stages],
+        ..CostScheduleResult::empty()
+    };
+    for g in groups {
+        let mut group_energy = 0.0f64;
+        for (s, c) in g.iter().enumerate() {
+            out.makespan_s += c.latency_s;
+            out.total_stage_time_s += c.latency_s;
+            out.stage_busy_s[s] += c.latency_s;
+            out.stage_energy_j[s] += c.energy_j;
+            group_energy += c.energy_j;
+        }
+        out.energy_j += group_energy;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -154,7 +269,85 @@ mod tests {
     #[test]
     fn stage_totals_sum() {
         let g = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
-        assert_eq!(stage_totals(&g), vec![4.0, 6.0]);
+        assert_eq!(stage_totals(&g).unwrap(), vec![4.0, 6.0]);
+        assert!(stage_totals(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn stage_totals_ragged_longer_group_is_an_error_not_a_panic() {
+        // Pre-fix: `totals[s]` indexed out of bounds on the third stage.
+        let g = vec![vec![1.0, 2.0], vec![1.0, 2.0, 3.0]];
+        assert_eq!(
+            stage_totals(&g).unwrap_err(),
+            RaggedStages { group: 1, expected: 2, got: 3 }
+        );
+    }
+
+    #[test]
+    fn stage_totals_ragged_shorter_group_is_an_error_not_underreporting() {
+        // Pre-fix: the short group's missing stages silently counted as 0.
+        let g = vec![vec![1.0, 2.0, 3.0], vec![4.0], vec![1.0, 1.0, 1.0]];
+        assert_eq!(
+            stage_totals(&g).unwrap_err(),
+            RaggedStages { group: 1, expected: 3, got: 1 }
+        );
+    }
+
+    fn costs(rows: &[&[(f64, f64)]]) -> Vec<Vec<StageCost>> {
+        rows.iter()
+            .map(|r| {
+                r.iter()
+                    .map(|&(latency_s, energy_j)| StageCost { latency_s, energy_j })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn views(groups: &[Vec<StageCost>]) -> Vec<&[StageCost]> {
+        groups.iter().map(|g| g.as_slice()).collect()
+    }
+
+    #[test]
+    fn cost_schedule_matches_latency_schedule() {
+        let g = costs(&[
+            &[(2.0, 1.0), (1.0, 0.5)],
+            &[(1.0, 2.0), (3.0, 0.25)],
+            &[(0.5, 4.0), (0.5, 8.0)],
+        ]);
+        let lat: Vec<GroupStages> =
+            g.iter().map(|r| r.iter().map(|c| c.latency_s).collect()).collect();
+        let c = pipelined_costs(&views(&g)).unwrap();
+        let l = pipelined(&lat).unwrap();
+        assert_eq!(c.makespan_s, l.makespan_s);
+        assert_eq!(c.total_stage_time_s, l.total_stage_time_s);
+        assert_eq!(c.stage_busy_s, stage_totals(&lat).unwrap());
+        assert_eq!(c.energy_j, 1.0 + 0.5 + 2.0 + 0.25 + 4.0 + 8.0);
+        assert_eq!(c.stage_energy_j, vec![1.0 + 2.0 + 4.0, 0.5 + 0.25 + 8.0]);
+    }
+
+    #[test]
+    fn cost_schedule_sequential_is_flat_sum() {
+        let g = costs(&[&[(1.0, 1.0), (2.0, 2.0)], &[(3.0, 4.0), (4.0, 8.0)]]);
+        let c = sequential_costs(&views(&g));
+        assert_eq!(c.makespan_s, 10.0);
+        assert_eq!(c.total_stage_time_s, 10.0);
+        assert_eq!(c.energy_j, 15.0);
+        assert_eq!(c.stage_busy_s, vec![4.0, 6.0]);
+        assert_eq!(c.stage_energy_j, vec![5.0, 10.0]);
+    }
+
+    #[test]
+    fn cost_schedule_handles_empty_and_ragged() {
+        let empty: Vec<&[StageCost]> = Vec::new();
+        let c = pipelined_costs(&empty).unwrap();
+        assert_eq!(c.makespan_s, 0.0);
+        assert!(c.stage_busy_s.is_empty());
+        assert_eq!(sequential_costs(&empty).makespan_s, 0.0);
+        let g = costs(&[&[(1.0, 0.0)], &[(1.0, 0.0), (2.0, 0.0)]]);
+        assert_eq!(
+            pipelined_costs(&views(&g)).unwrap_err(),
+            RaggedStages { group: 1, expected: 1, got: 2 }
+        );
     }
 
     #[test]

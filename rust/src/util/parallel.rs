@@ -4,16 +4,24 @@
 //! state. Used by the architectural DSE sweep, the batch engine, partition
 //! construction, and dataset generation.
 
+/// The worker count [`par_map`] fans out to:
+/// `std::thread::available_parallelism()`, falling back to 4 when the
+/// platform cannot report it. Exposed so callers pinning explicit worker
+/// counts (worker-invariance tests, serial-vs-parallel benches) can name
+/// the default tier.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
 /// Applies `f` to every element of `items`, fanning the index space across
-/// `std::thread::available_parallelism()` scoped workers. Preserves order.
+/// [`default_workers`] scoped workers. Preserves order.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    par_map_workers(items, workers, f)
+    par_map_workers(items, default_workers(), f)
 }
 
 /// [`par_map`] with an explicit worker count (clamped to `1..=items.len()`).

@@ -64,6 +64,60 @@ fn fig9_rows_complete() {
 }
 
 #[test]
+fn fig9_kind_breakdown_sums_to_total_busy_time() {
+    // The exact per-StageKind totals must conserve the report's block
+    // accumulators: summing the seven kinds recovers total busy time.
+    // (This is the same invariant the CI `ghost figures --fig9 --json`
+    // smoke asserts on the serialized output.)
+    let rows = figures::fig9(GhostConfig::paper_optimal());
+    for r in &rows {
+        let sum: f64 = r.kinds.rows().iter().map(|(_, c)| c.latency_s).sum();
+        assert!(
+            (sum - r.total_busy_s).abs() <= 1e-9 * r.total_busy_s.max(1e-30),
+            "{}/{}: per-kind sum {sum} vs total busy {}",
+            r.model,
+            r.dataset,
+            r.total_busy_s
+        );
+        // Readout and weight staging are first-class entries, not folded
+        // into the aggregate bar.
+        assert!(r.kinds.weight_stage.latency_s > 0.0, "{}/{}", r.model, r.dataset);
+        if r.model == "GIN" {
+            assert!(r.kinds.readout.latency_s > 0.0, "{}", r.dataset);
+        } else {
+            assert_eq!(r.kinds.readout.latency_s, 0.0, "{}/{}", r.model, r.dataset);
+        }
+        assert!(r.kinds.energy_j() > 0.0);
+    }
+}
+
+#[test]
+fn fig9_json_carries_per_kind_breakdown() {
+    let json = figures::fig9_json(GhostConfig::paper_optimal());
+    let rows = json.as_array().unwrap();
+    assert_eq!(rows.len(), 16);
+    for r in rows {
+        let total = r.get("total_busy_s").unwrap().as_f64().unwrap();
+        let kinds = r.get("kinds").unwrap().as_object().unwrap();
+        assert_eq!(kinds.len(), 7, "seven stage kinds serialized");
+        let sum: f64 = kinds
+            .values()
+            .map(|k| k.get("busy_s").unwrap().as_f64().unwrap())
+            .sum();
+        assert!(
+            (sum - total).abs() <= 1e-9 * total.max(1e-30),
+            "serialized kinds sum {sum} vs total_busy_s {total}"
+        );
+        let expected_kinds = [
+            "gather", "reduce", "transform", "update", "readout", "weight_stage", "edge_stream",
+        ];
+        for key in expected_kinds {
+            assert!(kinds.contains_key(key), "missing kind {key}");
+        }
+    }
+}
+
+#[test]
 fn comparison_covers_supported_workloads() {
     let rows = figures::comparison_summary(GhostConfig::paper_optimal());
     assert_eq!(rows.len(), 9);

@@ -70,7 +70,7 @@ fn prop_pipelined_never_slower_than_sequential_and_bounded() {
         let s = sim::sequential(&groups);
         assert!(p.makespan_s <= s.makespan_s + 1e-9, "pipeline slower than sequential");
         // Lower bound: the slowest single stage column.
-        let stage_totals = sim::stage_totals(&groups);
+        let stage_totals = sim::stage_totals(&groups).expect("uniform stage counts");
         let bottleneck = stage_totals.iter().cloned().fold(0.0, f64::max);
         assert!(p.makespan_s >= bottleneck - 1e-9, "pipeline beats its bottleneck");
         // Conservation: total busy time is schedule-invariant.
@@ -103,7 +103,11 @@ fn prop_pipelined_critical_path_bounds() {
             .collect();
         let p = sim::pipelined(&groups).expect("uniform stage counts");
         let seq = sim::sequential(&groups);
-        let column_bound = sim::stage_totals(&groups).iter().cloned().fold(0.0, f64::max);
+        let column_bound = sim::stage_totals(&groups)
+            .expect("uniform stage counts")
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
         let group_bound =
             groups.iter().map(|g| g.iter().sum::<f64>()).fold(0.0, f64::max);
         let lower = column_bound.max(group_bound);
@@ -119,6 +123,51 @@ fn prop_pipelined_critical_path_bounds() {
             p.makespan_s,
             seq.makespan_s
         );
+    }
+}
+
+#[test]
+fn prop_cost_schedule_consistent_with_latency_schedule() {
+    // The generalized StageCost evaluation (what the typed schedule IR
+    // runs) must agree with the latency-only recurrence on every random
+    // schedule: identical makespan, per-position busy totals equal to
+    // stage_totals, and total energy equal to the flat stage-energy sum.
+    use ghost::arch::StageCost;
+    let mut rng = Pcg64::seed_from_u64(1010);
+    for _ in 0..CASES {
+        let n_groups = rng.gen_range(1, 40);
+        let n_stages = rng.gen_range(1, 6);
+        let groups: Vec<Vec<StageCost>> = (0..n_groups)
+            .map(|_| {
+                (0..n_stages)
+                    .map(|_| StageCost {
+                        latency_s: rng.next_f64() * 10.0,
+                        energy_j: rng.next_f64() * 3.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        let views: Vec<&[StageCost]> = groups.iter().map(|g| g.as_slice()).collect();
+        let latencies: Vec<Vec<f64>> =
+            groups.iter().map(|g| g.iter().map(|c| c.latency_s).collect()).collect();
+
+        let c = sim::pipelined_costs(&views).expect("uniform stage counts");
+        let l = sim::pipelined(&latencies).expect("uniform stage counts");
+        assert_eq!(c.makespan_s, l.makespan_s, "cost/latency makespan diverged");
+        assert_eq!(c.total_stage_time_s, l.total_stage_time_s);
+        assert_eq!(c.stage_busy_s, sim::stage_totals(&latencies).unwrap());
+
+        let cs = sim::sequential_costs(&views);
+        let ls = sim::sequential(&latencies);
+        assert_eq!(cs.makespan_s, ls.makespan_s);
+
+        // Energy conservation: schedule-invariant, equal to the flat sum
+        // of every stage's energy (tolerance for re-association only).
+        let flat: f64 = groups.iter().flat_map(|g| g.iter()).map(|s| s.energy_j).sum();
+        assert!((c.energy_j - flat).abs() <= 1e-9 * flat.max(1e-30));
+        assert!((cs.energy_j - c.energy_j).abs() <= 1e-9 * flat.max(1e-30));
+        let pos_sum: f64 = c.stage_energy_j.iter().sum();
+        assert!((pos_sum - flat).abs() <= 1e-9 * flat.max(1e-30));
     }
 }
 
