@@ -51,6 +51,43 @@ impl StageCost {
     }
 }
 
+/// Inter-chip photonic link parameters for sharded multi-chip execution.
+///
+/// GHOST's datapath is already photonic, so chip-to-chip traffic rides the
+/// same silicon-photonics substrate: a WDM fiber/waveguide link between
+/// HBM-adjacent serializers. The defaults are conservative published
+/// figures for co-packaged optical I/O — 256 GB/s per direction, 250 ns
+/// end-to-end (serialize + time-of-flight + deserialize), 1 pJ/bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// Sustained per-direction bandwidth, bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Fixed per-transfer latency, seconds.
+    pub latency_s: f64,
+    /// Transfer energy, joules per bit.
+    pub energy_per_bit_j: f64,
+}
+
+impl LinkParams {
+    pub fn paper() -> Self {
+        Self { bandwidth_bytes_per_s: 256.0e9, latency_s: 250.0e-9, energy_per_bit_j: 1.0e-12 }
+    }
+
+    /// Cost of moving `bytes` across the link as one transfer.
+    pub fn transfer_cost(&self, bytes: u64) -> StageCost {
+        StageCost {
+            latency_s: self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s,
+            energy_j: bytes as f64 * 8.0 * self.energy_per_bit_j,
+        }
+    }
+}
+
+impl Default for LinkParams {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
 /// Everything the block cost models need, bundled.
 #[derive(Debug, Clone, Copy)]
 pub struct ArchContext {
@@ -58,6 +95,8 @@ pub struct ArchContext {
     pub dev: DeviceParams,
     pub buffers: EcuBuffers,
     pub hbm: Hbm2,
+    /// Inter-chip link used by sharded (multi-chip) plans.
+    pub link: LinkParams,
 }
 
 impl ArchContext {
@@ -67,6 +106,7 @@ impl ArchContext {
             dev: DeviceParams::paper(),
             buffers: EcuBuffers::paper(),
             hbm: Hbm2::paper(),
+            link: LinkParams::paper(),
         }
     }
 
@@ -98,6 +138,19 @@ mod tests {
         let par = a.alongside(b);
         assert_eq!(par.latency_s, 3.0);
         assert_eq!(par.energy_j, 6.0);
+    }
+
+    #[test]
+    fn link_transfer_cost_scales_with_volume() {
+        let link = LinkParams::paper();
+        let small = link.transfer_cost(1 << 10);
+        let big = link.transfer_cost(1 << 20);
+        assert!(big.latency_s > small.latency_s);
+        assert!(small.latency_s >= link.latency_s);
+        assert_eq!(big.energy_j, (1u64 << 20) as f64 * 8.0 * link.energy_per_bit_j);
+        // A zero-byte transfer still pays the fixed link latency.
+        assert_eq!(link.transfer_cost(0).latency_s, link.latency_s);
+        assert_eq!(link.transfer_cost(0).energy_j, 0.0);
     }
 
     #[test]

@@ -41,12 +41,22 @@ pub struct GhostConfig {
     pub r_c: usize,
     /// `T_r`: rows (output features per pass) per transform unit.
     pub t_r: usize,
+    /// Per-chip memory budget, bytes: the graph state one accelerator can
+    /// hold resident (features + edge descriptors + partition metadata).
+    /// Defaults to the HBM2 capacity of the paper platform (8 GiB). A
+    /// graph whose [`footprint`](crate::graph::partition::PartitionMatrix::footprint_bytes)
+    /// exceeds this budget must be sharded across multiple chips.
+    pub chip_mem_bytes: u64,
 }
+
+/// Default per-chip memory budget: the 8 GiB HBM2 stack of the paper
+/// platform (`Hbm2::paper().capacity_bytes`).
+pub const DEFAULT_CHIP_MEM_BYTES: u64 = 8 << 30;
 
 impl GhostConfig {
     /// The paper's DSE-optimal configuration `[20, 20, 18, 7, 17]`.
     pub fn paper_optimal() -> Self {
-        Self { n: 20, v: 20, r_r: 18, r_c: 7, t_r: 17 }
+        Self { n: 20, v: 20, r_r: 18, r_c: 7, t_r: 17, chip_mem_bytes: DEFAULT_CHIP_MEM_BYTES }
     }
 
     /// Validates the configuration against the device-level feasibility
@@ -59,6 +69,9 @@ impl GhostConfig {
         use crate::photonics::dse::{MAX_COHERENT_MRS, MAX_NONCOHERENT_WAVELENGTHS};
         if self.n == 0 || self.v == 0 || self.r_r == 0 || self.r_c == 0 || self.t_r == 0 {
             return Err("all GhostConfig dimensions must be non-zero".into());
+        }
+        if self.chip_mem_bytes == 0 {
+            return Err("chip_mem_bytes must be non-zero".into());
         }
         if self.r_c > MAX_COHERENT_MRS {
             return Err(format!(
@@ -130,6 +143,19 @@ mod tests {
         let mut c = GhostConfig::paper_optimal();
         c.v = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_chip_memory() {
+        let mut c = GhostConfig::paper_optimal();
+        c.chip_mem_bytes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn default_chip_memory_matches_paper_hbm() {
+        let c = GhostConfig::paper_optimal();
+        assert_eq!(c.chip_mem_bytes, crate::memory::hbm::Hbm2::paper().capacity_bytes);
     }
 
     #[test]

@@ -69,7 +69,8 @@ pub fn default_grid() -> Vec<GhostConfig> {
             for &r_r in &rrs {
                 for &r_c in &rcs {
                     for &t_r in &trs {
-                        let cfg = GhostConfig { n, v, r_r, r_c, t_r };
+                        let cfg =
+                            GhostConfig { n, v, r_r, r_c, t_r, ..GhostConfig::paper_optimal() };
                         if cfg.validate().is_ok() {
                             grid.push(cfg);
                         }

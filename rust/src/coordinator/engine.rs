@@ -42,7 +42,7 @@ use crate::util::parallel::par_map;
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
-use super::plan::{self, StagePlan};
+use super::plan::{self, ShardedStagePlan, StagePlan};
 use super::schedule::SimReport;
 
 /// One simulation to run: the full `(model, dataset, config, flags)` tuple.
@@ -78,6 +78,10 @@ type PlanKey = ProfileKey;
 /// caching it keeps the at-most-once guarantee without a poisoned or
 /// placeholder state.
 type PlanCell = Arc<OnceLock<Result<Arc<StagePlan>, SimError>>>;
+/// Sharded plans key on the request tuple *plus* the shard count — the
+/// same workload sharded 2-way and 4-way are different schedules.
+type ShardedPlanKey = (PlanKey, usize);
+type ShardedPlanCell = Arc<OnceLock<Result<Arc<ShardedStagePlan>, SimError>>>;
 
 /// The service-time decomposition of one `(model, dataset, config, flags)`
 /// request, derived from a full [`SimReport`] and cached by the engine for
@@ -145,10 +149,12 @@ pub struct BatchEngine {
     datasets: Mutex<HashMap<String, DatasetCell>>,
     partitions: Mutex<HashMap<PartitionKey, PartitionCell>>,
     plans: Mutex<HashMap<PlanKey, PlanCell>>,
+    sharded_plans: Mutex<HashMap<ShardedPlanKey, ShardedPlanCell>>,
     profiles: Mutex<HashMap<ProfileKey, ServiceProfile>>,
     dataset_builds: AtomicUsize,
     partition_builds: AtomicUsize,
     plan_builds: AtomicUsize,
+    sharded_plan_builds: AtomicUsize,
     profile_builds: AtomicUsize,
 }
 
@@ -197,6 +203,7 @@ impl BatchEngine {
         lock(&self.datasets).clear();
         lock(&self.partitions).clear();
         lock(&self.plans).clear();
+        lock(&self.sharded_plans).clear();
         lock(&self.profiles).clear();
     }
 
@@ -324,6 +331,77 @@ impl BatchEngine {
     pub fn run(&self, req: &SimRequest) -> Result<SimReport, SimError> {
         let plan = self.plan(req)?;
         plan::evaluate(&plan)
+    }
+
+    /// The cached [`ShardedStagePlan`] of a request sharded across
+    /// `shards` chips, constructed at most once per distinct
+    /// `((model, dataset, config, flags), shards)` key. The single-chip
+    /// plan cache is untouched: shard counts are a separate key dimension.
+    pub fn sharded_plan(
+        &self,
+        req: &SimRequest,
+        shards: usize,
+    ) -> Result<Arc<ShardedStagePlan>, SimError> {
+        req.cfg.validate().map_err(SimError::InvalidConfig)?;
+        req.flags.validate().map_err(SimError::InvalidFlags)?;
+        if shards == 0 {
+            return Err(SimError::InvalidConfig("shard count must be >= 1".into()));
+        }
+        let spec = spec_by_name(&req.dataset)
+            .ok_or_else(|| SimError::UnknownDataset(req.dataset.clone()))?;
+        let dataset = self.dataset(&req.dataset)?;
+        let partitions = self.partitions_for(&dataset, req.cfg.v, req.cfg.n)?;
+        let key: ShardedPlanKey =
+            ((req.model, spec.name.to_string(), req.cfg, req.flags), shards);
+        let cell: ShardedPlanCell =
+            lock(&self.sharded_plans).entry(key).or_default().clone();
+        // Built outside the map lock; failures (e.g. a slice over the
+        // per-chip memory budget) are deterministic and cached like
+        // successes.
+        cell.get_or_init(|| {
+            self.sharded_plan_builds.fetch_add(1, Ordering::Relaxed);
+            plan::build_sharded(req.model, &dataset, &partitions, req.cfg, req.flags, shards)
+                .map(Arc::new)
+        })
+        .clone()
+    }
+
+    /// How many [`ShardedStagePlan`]s this engine has actually constructed.
+    pub fn sharded_plan_builds(&self) -> usize {
+        self.sharded_plan_builds.load(Ordering::Relaxed)
+    }
+
+    /// Runs one simulation sharded across `shards` chips through the
+    /// caches. A workload whose resident footprint exceeds
+    /// `cfg.chip_mem_bytes` per chip fails with
+    /// [`SimError::ExceedsChipMemory`] naming the minimum shard count —
+    /// never a silent spill.
+    pub fn run_sharded(
+        &self,
+        req: &SimRequest,
+        shards: usize,
+    ) -> Result<SimReport, SimError> {
+        let plan = self.sharded_plan(req, shards)?;
+        plan::evaluate_sharded(&plan)
+    }
+
+    /// The [`ServiceProfile`] of a request served by a `shards`-chip group
+    /// — same decomposition as [`Self::service_profile`], derived from the
+    /// sharded report (uncached beyond the sharded-plan cache: the serve
+    /// resolver calls this once per tenant).
+    pub fn sharded_service_profile(
+        &self,
+        req: &SimRequest,
+        shards: usize,
+    ) -> Result<ServiceProfile, SimError> {
+        let report = self.run_sharded(req, shards)?;
+        Ok(ServiceProfile {
+            latency_s: report.metrics.latency_s,
+            weight_stage_s: report.weight_stage_s,
+            energy_j: report.metrics.energy_j,
+            weight_stage_energy_j: report.weight_stage_energy_j
+                + report.platform_w * report.weight_stage_s,
+        })
     }
 
     /// The cached [`ServiceProfile`] of a request: one full simulation the
@@ -630,6 +708,74 @@ mod tests {
         assert!(matches!(engine.plan(&req), Err(SimError::UnknownDataset(_))));
         assert_eq!(engine.plan_builds(), 0);
         assert_eq!(engine.partition_builds(), 0);
+    }
+
+    #[test]
+    fn sharded_plan_cache_builds_once_per_shard_count() {
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let req = SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags);
+        let a = engine.sharded_plan(&req, 2).unwrap();
+        let b = engine.sharded_plan(&req, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(engine.sharded_plan_builds(), 1);
+        // A different shard count is a different schedule.
+        engine.sharded_plan(&req, 4).unwrap();
+        assert_eq!(engine.sharded_plan_builds(), 2);
+        // The single-chip plan cache is a separate dimension.
+        assert_eq!(engine.plan_builds(), 0);
+        // shards == 0 is rejected before touching any cache.
+        assert!(matches!(
+            engine.run_sharded(&req, 0),
+            Err(SimError::InvalidConfig(_))
+        ));
+        assert_eq!(engine.sharded_plan_builds(), 2);
+        engine.clear();
+        engine.sharded_plan(&req, 2).unwrap();
+        assert_eq!(engine.sharded_plan_builds(), 3);
+    }
+
+    #[test]
+    fn one_shard_engine_run_matches_single_chip() {
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let req = SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags);
+        let single = engine.run(&req).unwrap();
+        let sharded = engine.run_sharded(&req, 1).unwrap();
+        assert_eq!(single, sharded);
+        let p = engine.service_profile(&req).unwrap();
+        let sp = engine.sharded_service_profile(&req, 1).unwrap();
+        assert_eq!(p, sp);
+    }
+
+    #[test]
+    fn over_budget_graph_errors_single_chip_and_runs_sharded() {
+        let engine = BatchEngine::new();
+        // ~30000 vertices × 128-byte features + 200k edge descriptors
+        // ≈ 5.6 MB resident — over a 3 MiB per-chip budget.
+        let cfg =
+            GhostConfig { chip_mem_bytes: 3 << 20, ..GhostConfig::paper_optimal() };
+        let flags = OptFlags::ghost_default();
+        let req = SimRequest::new(ModelKind::Gcn, "rmat-30000v-200000e", cfg, flags);
+        let err = engine.run(&req).unwrap_err();
+        match err {
+            SimError::ExceedsChipMemory { footprint_bytes, budget_bytes, min_shards } => {
+                assert_eq!(budget_bytes, 3 << 20);
+                assert!(footprint_bytes > budget_bytes);
+                assert!(min_shards >= 2, "min_shards = {min_shards}");
+            }
+            other => panic!("expected ExceedsChipMemory, got {other:?}"),
+        }
+        // The same workload runs end-to-end across 4 simulated chips, with
+        // real inter-chip communication in the breakdown.
+        let r = engine.run_sharded(&req, 4).unwrap();
+        assert!(r.metrics.latency_s > 0.0);
+        assert!(r.kinds.remote_gather.latency_s > 0.0);
+        assert!(r.kinds.remote_gather.energy_j > 0.0);
+        let plan = engine.sharded_plan(&req, 4).unwrap();
+        assert!(plan.shard_plan.fits_budget(cfg.chip_mem_bytes));
     }
 
     #[test]

@@ -33,6 +33,16 @@ pub enum SimError {
     /// An aggregated metric came out NaN/infinite and the point was
     /// dropped from the frontier instead of poisoning the sort.
     NonFiniteMetric { metric: &'static str, value: f64 },
+    /// The workload's resident state (features + edge descriptors +
+    /// partition metadata) exceeds one chip's memory budget
+    /// (`GhostConfig::chip_mem_bytes`); `min_shards` is the smallest chip
+    /// count whose even split could hold it. Raised instead of silently
+    /// spilling — run the workload sharded.
+    ExceedsChipMemory { footprint_bytes: u64, budget_bytes: u64, min_shards: usize },
+    /// Plan assembly produced the wrong number of pipeline segments for a
+    /// graph — a construction-path invariant violation (one segment per
+    /// layer per graph), previously a panic.
+    SegmentShapeMismatch { graph: usize, expected: usize, got: usize },
     /// A specific workload inside a multi-workload evaluation failed;
     /// carries which `(model, dataset)` pair so sweeps can report why a
     /// configuration point vanished.
@@ -63,6 +73,17 @@ impl fmt::Display for SimError {
             SimError::NonFiniteMetric { metric, value } => {
                 write!(f, "non-finite {metric} = {value}")
             }
+            SimError::ExceedsChipMemory { footprint_bytes, budget_bytes, min_shards } => write!(
+                f,
+                "graph footprint of {footprint_bytes} bytes exceeds the per-chip memory \
+                 budget of {budget_bytes} bytes; shard across at least {min_shards} chips \
+                 (run_sharded / --shards {min_shards})"
+            ),
+            SimError::SegmentShapeMismatch { graph, expected, got } => write!(
+                f,
+                "plan assembly for graph {graph} expected {expected} pipeline segment(s) \
+                 (one per layer) but produced {got}"
+            ),
             SimError::Workload { model, dataset, source } => {
                 write!(f, "workload {}/{dataset}: {source}", model.name())
             }
@@ -111,6 +132,24 @@ mod tests {
         let e = SimError::InvalidConfig("bad".into()).in_workload(ModelKind::Gat, "Citeseer");
         assert!(e.source().is_some());
         assert!(SimError::InvalidConfig("bad".into()).source().is_none());
+    }
+
+    #[test]
+    fn exceeds_chip_memory_names_min_shards() {
+        let e = SimError::ExceedsChipMemory {
+            footprint_bytes: 10 << 30,
+            budget_bytes: 4 << 30,
+            min_shards: 3,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("at least 3 chips"), "{msg}");
+    }
+
+    #[test]
+    fn segment_shape_mismatch_names_graph_and_counts() {
+        let e = SimError::SegmentShapeMismatch { graph: 7, expected: 3, got: 2 };
+        let msg = e.to_string();
+        assert!(msg.contains("graph 7") && msg.contains('3') && msg.contains('2'), "{msg}");
     }
 
     #[test]

@@ -30,5 +30,8 @@ pub mod schedule;
 pub use engine::{BatchEngine, ServiceProfile, SimRequest};
 pub use error::SimError;
 pub use optimizations::OptFlags;
-pub use plan::{KindTotals, PipelineSegment, PlanItem, StageKind, StagePlan};
+pub use plan::{
+    build_sharded, evaluate_sharded, ChipPlan, KindTotals, PipelineSegment, PlanItem,
+    ShardedStagePlan, StageKind, StagePlan,
+};
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

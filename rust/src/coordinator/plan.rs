@@ -38,7 +38,7 @@ use crate::energy::Metrics;
 use crate::gnn::models::{Activation, ExecOrdering, LayerSpec, Model, ModelKind};
 use crate::gnn::workload::Workload;
 use crate::graph::datasets::Dataset;
-use crate::graph::partition::{OutputGroupPlan, PartitionMatrix};
+use crate::graph::partition::{OutputGroupPlan, PartitionMatrix, ShardPlan};
 use crate::sim;
 use crate::util::parallel::par_map;
 
@@ -73,6 +73,12 @@ pub enum StageKind {
     /// once per layer per dataset — the layer-major schedule amortizes it
     /// across graphs and, online, across same-tenant batches).
     WeightStage,
+    /// Sharded execution only: receiving the halo (ghost-vertex) features
+    /// this chip's gathers need from chip `src_chip` over the inter-chip
+    /// link ([`crate::arch::LinkParams`]), before a layer's segments can
+    /// run. Serial against the chip's local work; a barrier precedes any
+    /// layer that has one.
+    RemoteGather { src_chip: u32 },
     /// Neighbor-feature gather feeding the aggregate block. `from_dram`
     /// records whether the layer's input feature map spilled past the
     /// input-vertex buffer (layer 0 always streams from DRAM).
@@ -104,6 +110,7 @@ impl StageKind {
         match self {
             StageKind::EdgeStream => "edge_stream",
             StageKind::WeightStage => "weight_stage",
+            StageKind::RemoteGather { .. } => "remote_gather",
             StageKind::Gather { .. } => "gather",
             StageKind::Reduce => "reduce",
             StageKind::Transform => "transform",
@@ -122,7 +129,9 @@ impl StageKind {
             }
             StageKind::Transform => Some(Block::Combine),
             StageKind::Update => Some(Block::Update),
-            StageKind::EdgeStream | StageKind::WeightStage => None,
+            StageKind::EdgeStream
+            | StageKind::WeightStage
+            | StageKind::RemoteGather { .. } => None,
         }
     }
 }
@@ -134,6 +143,9 @@ impl StageKind {
 pub struct KindTotals {
     pub edge_stream: StageCost,
     pub weight_stage: StageCost,
+    /// Inter-chip halo transfers; zero for every single-chip (unsharded)
+    /// plan.
+    pub remote_gather: StageCost,
     pub gather: StageCost,
     pub reduce: StageCost,
     pub transform: StageCost,
@@ -146,6 +158,7 @@ impl KindTotals {
         let slot = match kind {
             StageKind::EdgeStream => &mut self.edge_stream,
             StageKind::WeightStage => &mut self.weight_stage,
+            StageKind::RemoteGather { .. } => &mut self.remote_gather,
             StageKind::Gather { .. } => &mut self.gather,
             StageKind::Reduce => &mut self.reduce,
             StageKind::Transform => &mut self.transform,
@@ -157,10 +170,11 @@ impl KindTotals {
     }
 
     /// `(kind name, totals)` rows in schedule order.
-    pub fn rows(&self) -> [(&'static str, StageCost); 7] {
+    pub fn rows(&self) -> [(&'static str, StageCost); 8] {
         [
             ("edge_stream", self.edge_stream),
             ("weight_stage", self.weight_stage),
+            ("remote_gather", self.remote_gather),
             ("gather", self.gather),
             ("reduce", self.reduce),
             ("transform", self.transform),
@@ -289,6 +303,7 @@ pub fn build(
     }
     let ctx = ArchContext::paper(cfg);
     let model = Model::for_dataset(kind, &dataset.spec);
+    check_chip_memory(&model, partitions, cfg)?;
     let workload = Workload::characterize(&model, dataset);
 
     let n_graphs = dataset.graphs.len();
@@ -325,7 +340,7 @@ pub fn build(
             if li > 0 && from_dram && layer.reduction.is_some() {
                 spills += 1;
             }
-            segs.push(build_segment(&ctx, &model, li, layer, gi, pm, flags, from_dram));
+            segs.push(build_segment(&ctx, &model, li, layer, gi, &pm.groups, flags, from_dram));
         }
         (segs, spills)
     };
@@ -342,25 +357,11 @@ pub fn build(
     // Assemble layer-major (all graphs through layer `l`, then `l+1`), so
     // each weight matrix is staged and the banks TO-retargeted once per
     // layer per dataset, not once per graph.
-    let mut graph_segments: Vec<std::vec::IntoIter<PipelineSegment>> =
-        per_graph.into_iter().map(|(segs, _)| segs.into_iter()).collect();
-    for layer in &model.layers {
-        let wc = ecu::weight_stage_cost(
-            &ctx,
-            (layer.in_dim * layer.out_dim * layer.heads) as u64,
-        );
-        items.push(PlanItem::Serial {
-            kind: StageKind::WeightStage,
-            cost: StageCost {
-                latency_s: wc.latency_s.max(ctx.dev.to_tuning.latency_s),
-                energy_j: wc.energy_j + to_retune_energy(&ctx),
-            },
-        });
-        for segs in &mut graph_segments {
-            let seg = segs.next().expect("one segment per layer per graph");
-            items.push(PlanItem::Pipeline(seg));
-        }
-    }
+    let weight_stages: Vec<StageCost> =
+        model.layers.iter().map(|layer| weight_stage_item(&ctx, layer)).collect();
+    let per_graph_segments: Vec<Vec<PipelineSegment>> =
+        per_graph.into_iter().map(|(segs, _)| segs).collect();
+    interleave_layer_major(per_graph_segments, &weight_stages, &mut items)?;
 
     // Graph-classification readout: sum-pool each graph's vertex
     // embeddings — the *output* of the last layer, `out_dim × heads` wide —
@@ -368,14 +369,9 @@ pub fn build(
     if model.has_readout {
         let width = model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
         for g in &dataset.graphs {
-            let passes =
-                ceil_div(g.n_vertices, cfg.v * cfg.r_c) * ceil_div(width, cfg.r_r);
             items.push(PlanItem::Serial {
                 kind: StageKind::Readout,
-                cost: StageCost {
-                    latency_s: passes as f64 * ctx.symbol_s(),
-                    energy_j: (g.n_vertices * width) as f64 * ctx.dev.dac.energy_j(),
-                },
+                cost: readout_item(&ctx, g.n_vertices, width),
             });
         }
     }
@@ -393,35 +389,394 @@ pub fn build(
     })
 }
 
-/// Evaluates a plan: one walk over the items running the pipelined
-/// recurrence per segment and deriving every [`SimReport`] field — the
-/// report's accumulators are queries over the typed stages, no longer
-/// hand-threaded through construction.
-pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
-    let mut latency = 0.0f64;
-    let mut dynamic_energy = 0.0f64;
-    let mut aggregate_s = 0.0f64;
-    let mut combine_s = 0.0f64;
-    let mut update_s = 0.0f64;
-    let mut readout_s = 0.0f64;
-    let mut weight_stage_s = 0.0f64;
-    let mut weight_stage_energy_j = 0.0f64;
-    let mut kinds = KindTotals::default();
+/// The widest per-vertex feature state (bytes at 8-bit quantization) any
+/// layer keeps resident: the max over layer input widths and the final
+/// output width — what the footprint / shard-balancing model charges per
+/// vertex.
+fn resident_feat_bytes(model: &Model) -> usize {
+    let mut w = 0;
+    for l in &model.layers {
+        w = w.max(l.in_dim);
+    }
+    if let Some(l) = model.layers.last() {
+        w = w.max(l.out_dim * l.heads);
+    }
+    w
+}
 
-    for item in &plan.items {
+/// Rejects workloads whose single-chip resident footprint exceeds the
+/// configured per-chip memory budget, naming the smallest shard count
+/// whose even split could hold it.
+fn check_chip_memory(
+    model: &Model,
+    partitions: &[PartitionMatrix],
+    cfg: GhostConfig,
+) -> Result<(), SimError> {
+    let feat = resident_feat_bytes(model);
+    let footprint =
+        partitions.iter().map(|pm| pm.footprint_bytes(feat)).max().unwrap_or(0);
+    if footprint > cfg.chip_mem_bytes {
+        return Err(SimError::ExceedsChipMemory {
+            footprint_bytes: footprint,
+            budget_bytes: cfg.chip_mem_bytes,
+            min_shards: footprint.div_ceil(cfg.chip_mem_bytes) as usize,
+        });
+    }
+    Ok(())
+}
+
+/// Cost of staging one layer's weight matrix into the MR banks: the HBM
+/// stream overlapped with (bounded below by) the TO retarget latency, plus
+/// the retune energy.
+fn weight_stage_item(ctx: &ArchContext, layer: &LayerSpec) -> StageCost {
+    let wc =
+        ecu::weight_stage_cost(ctx, (layer.in_dim * layer.out_dim * layer.heads) as u64);
+    StageCost {
+        latency_s: wc.latency_s.max(ctx.dev.to_tuning.latency_s),
+        energy_j: wc.energy_j + to_retune_energy(ctx),
+    }
+}
+
+/// Cost of the sum-pool readout over `n_vertices` embeddings of `width`
+/// elements on the reduce arrays.
+fn readout_item(ctx: &ArchContext, n_vertices: usize, width: usize) -> StageCost {
+    let cfg = &ctx.cfg;
+    let passes = ceil_div(n_vertices, cfg.v * cfg.r_c) * ceil_div(width, cfg.r_r);
+    StageCost {
+        latency_s: passes as f64 * ctx.symbol_s(),
+        energy_j: (n_vertices * width) as f64 * ctx.dev.dac.energy_j(),
+    }
+}
+
+/// Assembles per-graph segment lists into the layer-major item order (the
+/// weight stage of layer `l`, then every graph's layer-`l` segment),
+/// returning a structured error — not a panic — if any graph's segment
+/// list does not have exactly one segment per layer.
+pub(crate) fn interleave_layer_major(
+    per_graph_segments: Vec<Vec<PipelineSegment>>,
+    weight_stages: &[StageCost],
+    items: &mut Vec<PlanItem>,
+) -> Result<(), SimError> {
+    let n_layers = weight_stages.len();
+    for (gi, segs) in per_graph_segments.iter().enumerate() {
+        if segs.len() != n_layers {
+            return Err(SimError::SegmentShapeMismatch {
+                graph: gi,
+                expected: n_layers,
+                got: segs.len(),
+            });
+        }
+    }
+    let mut iters: Vec<std::vec::IntoIter<PipelineSegment>> =
+        per_graph_segments.into_iter().map(|s| s.into_iter()).collect();
+    for wc in weight_stages {
+        items.push(PlanItem::Serial { kind: StageKind::WeightStage, cost: *wc });
+        for segs in iters.iter_mut() {
+            // The per-graph lengths were checked above, so each iterator
+            // yields exactly one segment per layer here.
+            if let Some(seg) = segs.next() {
+                items.push(PlanItem::Pipeline(seg));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One chip's slice of a sharded plan: its items grouped into *phases*
+/// separated by inter-chip barriers. Phase `p` of every chip must complete
+/// before phase `p + 1` starts anywhere (a barrier precedes each layer
+/// that begins with remote gathers).
+#[derive(Debug, Clone)]
+pub struct ChipPlan {
+    pub phases: Vec<Vec<PlanItem>>,
+}
+
+/// The complete typed schedule of one `(model, dataset, config, flags)`
+/// tuple sharded across `shards` chips — the multi-chip counterpart of
+/// [`StagePlan`], built by [`build_sharded`] and evaluated by
+/// [`evaluate_sharded`].
+#[derive(Debug, Clone)]
+pub struct ShardedStagePlan {
+    pub model: ModelKind,
+    pub dataset: String,
+    pub cfg: GhostConfig,
+    pub flags: OptFlags,
+    /// Chip count (≥ 1). Every chip has the same number of phases.
+    pub shards: usize,
+    /// Per-chip phased item lists, indexed by chip.
+    pub chips: Vec<ChipPlan>,
+    /// The group→chip assignment and exchange volumes the plan was built
+    /// from.
+    pub shard_plan: ShardPlan,
+    /// Number of layers that required a halo exchange (and therefore a
+    /// barrier) before their gathers.
+    pub exchange_layers: usize,
+    /// Total edges whose source features crossed the inter-chip link,
+    /// summed over every `(chip, layer, graph)` remote gather — equals
+    /// `exchange_layers × shard_plan.total_cross_shard_edges()`.
+    pub remote_gather_edges: u64,
+    /// Post-layer-0 gathers whose input feature map spilled to DRAM,
+    /// summed across chips (per-chip residency: a shard's slice may fit
+    /// where the whole graph would spill).
+    pub spilled_layer_gathers: usize,
+    /// Always-on platform power of **one** chip, watts (evaluation burns
+    /// it on every chip for the whole makespan).
+    pub platform_w: f64,
+    pub ops: u64,
+    pub bits: u64,
+}
+
+impl ShardedStagePlan {
+    /// Number of barrier-separated phases (identical on every chip).
+    pub fn n_phases(&self) -> usize {
+        self.chips.first().map(|c| c.phases.len()).unwrap_or(0)
+    }
+
+    /// Total remote-gather items across all chips and phases.
+    pub fn n_remote_gathers(&self) -> usize {
+        self.chips
+            .iter()
+            .flat_map(|c| c.phases.iter())
+            .flatten()
+            .filter(|i| {
+                matches!(
+                    i,
+                    PlanItem::Serial { kind: StageKind::RemoteGather { .. }, .. }
+                )
+            })
+            .count()
+    }
+}
+
+/// Builds the sharded plan: assigns output groups to `shards` chips via
+/// [`ShardPlan::build`], checks every chip's slice against the per-chip
+/// memory budget, and emits each chip's phased schedule. Layers whose
+/// gathers need remote source features start with
+/// [`StageKind::RemoteGather`] items (one per sending chip with non-zero
+/// volume) behind a barrier.
+///
+/// With `shards == 1` the single chip's items are constructed by the same
+/// helpers in the same order as [`build`], so evaluation is bit-identical
+/// to the single-chip path.
+pub fn build_sharded(
+    kind: ModelKind,
+    dataset: &Dataset,
+    partitions: &[PartitionMatrix],
+    cfg: GhostConfig,
+    flags: OptFlags,
+    shards: usize,
+) -> Result<ShardedStagePlan, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
+    flags.validate().map_err(SimError::InvalidFlags)?;
+    if shards == 0 {
+        return Err(SimError::InvalidConfig("shard count must be >= 1".into()));
+    }
+    if partitions.len() != dataset.graphs.len() {
+        return Err(SimError::PartitionCountMismatch {
+            expected: dataset.graphs.len(),
+            got: partitions.len(),
+        });
+    }
+    if let Some(pm) = partitions.iter().find(|p| p.v != cfg.v || p.n != cfg.n) {
+        return Err(SimError::PartitionShapeMismatch {
+            expected: (cfg.v, cfg.n),
+            got: (pm.v, pm.n),
+        });
+    }
+    let ctx = ArchContext::paper(cfg);
+    let model = Model::for_dataset(kind, &dataset.spec);
+    let feat = resident_feat_bytes(&model);
+    let shard_plan = ShardPlan::build(partitions, shards, feat);
+    if !shard_plan.fits_budget(cfg.chip_mem_bytes) {
+        // Contiguous-range balancing may need more than the even-split
+        // lower bound; always suggest progress over the attempted count.
+        let whole =
+            partitions.iter().map(|pm| pm.footprint_bytes(feat)).max().unwrap_or(0);
+        return Err(SimError::ExceedsChipMemory {
+            footprint_bytes: shard_plan.max_chip_footprint_bytes(),
+            budget_bytes: cfg.chip_mem_bytes,
+            min_shards: (whole.div_ceil(cfg.chip_mem_bytes) as usize).max(shards + 1),
+        });
+    }
+    let workload = Workload::characterize(&model, dataset);
+
+    // Which layers need a halo exchange before their gathers can run.
+    // Aggregate-first models gather *input* features — layer 0's raw
+    // features are replicated to every chip up front (halo replication),
+    // so only later layers (whose inputs are produced remotely) exchange.
+    // Transform-first (GAT) reduces over remotely *transformed* features,
+    // so every reduction layer exchanges, including layer 0.
+    let total_exchange = shard_plan.total_cross_shard_edges();
+    let needs_exchange: Vec<bool> = model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            total_exchange > 0
+                && layer.reduction.is_some()
+                && match model.ordering {
+                    ExecOrdering::AggregateFirst => li > 0,
+                    ExecOrdering::TransformFirst => true,
+                }
+        })
+        .collect();
+    let exchange_layers = needs_exchange.iter().filter(|&&x| x).count();
+
+    let weight_stages: Vec<StageCost> =
+        model.layers.iter().map(|layer| weight_stage_item(&ctx, layer)).collect();
+
+    let mut chips = Vec::with_capacity(shards);
+    let mut spilled_layer_gathers = 0usize;
+    let mut remote_gather_edges = 0u64;
+    for c in 0..shards {
+        let mut phases: Vec<Vec<PlanItem>> = Vec::new();
+        let mut cur: Vec<PlanItem> = Vec::new();
+        // Each chip streams the edge/partition descriptors of its own
+        // group range (all of them for a 1-shard plan — the per-group edge
+        // counts partition the graph's edges exactly).
+        for gi in 0..dataset.graphs.len() {
+            let pm = &partitions[gi];
+            let range = shard_plan.group_range(gi, c);
+            let edges: u64 =
+                pm.groups[range].iter().map(|grp| grp.total_edges as u64).sum();
+            cur.push(PlanItem::Serial {
+                kind: StageKind::EdgeStream,
+                cost: ecu::edge_stage_cost(&ctx, edges * 8),
+            });
+        }
+        for (li, layer) in model.layers.iter().enumerate() {
+            if needs_exchange[li] {
+                // This layer's gathers depend on remote shards: everything
+                // before it (on every chip) must complete first.
+                phases.push(std::mem::take(&mut cur));
+            }
+            cur.push(PlanItem::Serial {
+                kind: StageKind::WeightStage,
+                cost: weight_stages[li],
+            });
+            // Width of one exchanged feature vector, bytes at 8-bit
+            // quantization: raw/hidden inputs for aggregate-first,
+            // transformed outputs for transform-first.
+            let width = match model.ordering {
+                ExecOrdering::AggregateFirst => layer.in_dim,
+                ExecOrdering::TransformFirst => layer.out_dim * layer.heads,
+            };
+            for gi in 0..dataset.graphs.len() {
+                let pm = &partitions[gi];
+                let range = shard_plan.group_range(gi, c);
+                if needs_exchange[li] {
+                    for src in 0..shards {
+                        if src == c {
+                            continue;
+                        }
+                        let xch = shard_plan.exchange_edges(gi, c, src);
+                        if xch == 0 {
+                            continue;
+                        }
+                        remote_gather_edges += xch;
+                        cur.push(PlanItem::Serial {
+                            kind: StageKind::RemoteGather { src_chip: src as u32 },
+                            cost: ctx.link.transfer_cost(xch * width as u64),
+                        });
+                    }
+                }
+                let chip_vertices = pm.group_range_vertices(range.clone());
+                let feat_bytes = chip_vertices * layer.in_dim;
+                let from_dram =
+                    li == 0 || feat_bytes > ctx.buffers.input_vertices.size_bytes;
+                if li > 0 && from_dram && layer.reduction.is_some() {
+                    spilled_layer_gathers += 1;
+                }
+                cur.push(PlanItem::Pipeline(build_segment(
+                    &ctx,
+                    &model,
+                    li,
+                    layer,
+                    gi,
+                    &pm.groups[range],
+                    flags,
+                    from_dram,
+                )));
+            }
+        }
+        if model.has_readout {
+            let width = model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
+            for gi in 0..dataset.graphs.len() {
+                let pm = &partitions[gi];
+                let range = shard_plan.group_range(gi, c);
+                let chip_vertices = pm.group_range_vertices(range);
+                cur.push(PlanItem::Serial {
+                    kind: StageKind::Readout,
+                    cost: readout_item(&ctx, chip_vertices, width),
+                });
+            }
+        }
+        phases.push(cur);
+        chips.push(ChipPlan { phases });
+    }
+
+    Ok(ShardedStagePlan {
+        model: kind,
+        dataset: dataset.spec.name.to_string(),
+        cfg,
+        flags,
+        shards,
+        chips,
+        shard_plan,
+        exchange_layers,
+        remote_gather_edges,
+        spilled_layer_gathers,
+        platform_w: crate::arch::platform_power_w(&ctx, flags.dac_sharing),
+        ops: workload.total_ops(),
+        bits: workload.total_bits(),
+    })
+}
+
+/// Per-item accumulator state shared by [`evaluate`] and
+/// [`evaluate_sharded`] — one code path for both, so a 1-shard sharded
+/// plan reproduces the single-chip evaluation bit-identically (every
+/// floating-point add happens in the same order at the same granularity).
+#[derive(Default)]
+struct EvalAccum {
+    dynamic_energy: f64,
+    aggregate_s: f64,
+    combine_s: f64,
+    update_s: f64,
+    readout_s: f64,
+    weight_stage_s: f64,
+    weight_stage_energy_j: f64,
+    kinds: KindTotals,
+}
+
+impl EvalAccum {
+    /// Folds one plan item in. Serial stages add their latency to
+    /// `latency` (the caller's running local time — the whole plan for the
+    /// single-chip walk, one chip's phase under sharding); pipelined
+    /// segments add their recurrence makespan. `count_weight_stage` gates
+    /// the critical-path weight-staging split (chip 0 only under sharding:
+    /// every chip stages the same weights concurrently, so one chip's
+    /// staging time is the schedule's share — the per-kind totals still
+    /// count every chip's busy time).
+    fn add_item(
+        &mut self,
+        item: &PlanItem,
+        pipelining: bool,
+        count_weight_stage: bool,
+        latency: &mut f64,
+    ) -> Result<(), SimError> {
         match item {
             PlanItem::Serial { kind, cost } => {
-                latency += cost.latency_s;
-                dynamic_energy += cost.energy_j;
-                kinds.add(*kind, cost.latency_s, cost.energy_j);
+                *latency += cost.latency_s;
+                self.dynamic_energy += cost.energy_j;
+                self.kinds.add(*kind, cost.latency_s, cost.energy_j);
                 match kind {
-                    StageKind::WeightStage => {
-                        weight_stage_s += cost.latency_s;
-                        weight_stage_energy_j += cost.energy_j;
+                    StageKind::WeightStage if count_weight_stage => {
+                        self.weight_stage_s += cost.latency_s;
+                        self.weight_stage_energy_j += cost.energy_j;
                     }
                     StageKind::Readout => {
-                        aggregate_s += cost.latency_s;
-                        readout_s += cost.latency_s;
+                        self.aggregate_s += cost.latency_s;
+                        self.readout_s += cost.latency_s;
                     }
                     _ => {}
                 }
@@ -444,50 +799,124 @@ pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
                             None => {}
                         }
                     }
-                    dynamic_energy += group_energy;
-                    aggregate_s += agg;
-                    combine_s += comb;
-                    update_s += upd;
+                    self.dynamic_energy += group_energy;
+                    self.aggregate_s += agg;
+                    self.combine_s += comb;
+                    self.update_s += upd;
                 }
                 let views: Vec<&[StageCost]> = seg.groups().collect();
-                let sched = if plan.flags.pipelining {
+                let sched = if pipelining {
                     sim::pipelined_costs(&views).map_err(SimError::RaggedSchedule)?
                 } else {
                     sim::sequential_costs(&views)
                 };
-                latency += sched.makespan_s;
+                *latency += sched.makespan_s;
                 for (s, kind) in
                     seg.kinds.iter().enumerate().take(sched.stage_busy_s.len())
                 {
-                    kinds.add(*kind, sched.stage_busy_s[s], sched.stage_energy_j[s]);
+                    self.kinds.add(*kind, sched.stage_busy_s[s], sched.stage_energy_j[s]);
                 }
             }
         }
+        Ok(())
     }
 
+    /// Finalizes the accumulated state into a [`SimReport`].
+    #[allow(clippy::too_many_arguments)]
+    fn into_report(
+        self,
+        model: ModelKind,
+        dataset: String,
+        cfg: GhostConfig,
+        flags: OptFlags,
+        latency_s: f64,
+        energy_j: f64,
+        ops: u64,
+        bits: u64,
+        spilled_layer_gathers: usize,
+        platform_w: f64,
+    ) -> SimReport {
+        SimReport {
+            model,
+            dataset,
+            config: cfg,
+            flags,
+            metrics: Metrics { latency_s, energy_j, ops, bits },
+            aggregate_s: self.aggregate_s,
+            combine_s: self.combine_s,
+            update_s: self.update_s,
+            readout_s: self.readout_s,
+            weight_stage_s: self.weight_stage_s,
+            weight_stage_energy_j: self.weight_stage_energy_j,
+            spilled_layer_gathers,
+            platform_w,
+            kinds: self.kinds,
+        }
+    }
+}
+
+/// Evaluates a plan: one walk over the items running the pipelined
+/// recurrence per segment and deriving every [`SimReport`] field — the
+/// report's accumulators are queries over the typed stages, no longer
+/// hand-threaded through construction.
+pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
+    let mut acc = EvalAccum::default();
+    let mut latency = 0.0f64;
+    for item in &plan.items {
+        acc.add_item(item, plan.flags.pipelining, true, &mut latency)?;
+    }
     let platform_w = plan.platform_w;
-    let energy = dynamic_energy + platform_w * latency;
-    Ok(SimReport {
-        model: plan.model,
-        dataset: plan.dataset.clone(),
-        config: plan.cfg,
-        flags: plan.flags,
-        metrics: Metrics {
-            latency_s: latency,
-            energy_j: energy,
-            ops: plan.ops,
-            bits: plan.bits,
-        },
-        aggregate_s,
-        combine_s,
-        update_s,
-        readout_s,
-        weight_stage_s,
-        weight_stage_energy_j,
-        spilled_layer_gathers: plan.spilled_layer_gathers,
+    let energy = acc.dynamic_energy + platform_w * latency;
+    Ok(acc.into_report(
+        plan.model,
+        plan.dataset.clone(),
+        plan.cfg,
+        plan.flags,
+        latency,
+        energy,
+        plan.ops,
+        plan.bits,
+        plan.spilled_layer_gathers,
         platform_w,
-        kinds,
-    })
+    ))
+}
+
+/// Evaluates a sharded plan: each chip's phases accumulate locally with
+/// the same per-item walk as [`evaluate`]; the makespan is the barriered
+/// recurrence over chips ([`sim::barriered_makespan`] — phases advance
+/// together, each gated by its slowest chip), and platform power burns on
+/// every chip for the whole makespan. With 1 shard the result is
+/// bit-identical to [`evaluate`] of the single-chip plan (one chip, one
+/// phase, identical items).
+pub fn evaluate_sharded(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
+    let mut acc = EvalAccum::default();
+    let mut chip_phase_times: Vec<Vec<f64>> = Vec::with_capacity(plan.chips.len());
+    for (ci, chip) in plan.chips.iter().enumerate() {
+        let mut phase_times = Vec::with_capacity(chip.phases.len());
+        for phase in &chip.phases {
+            let mut local = 0.0f64;
+            for item in phase {
+                acc.add_item(item, plan.flags.pipelining, ci == 0, &mut local)?;
+            }
+            phase_times.push(local);
+        }
+        chip_phase_times.push(phase_times);
+    }
+    let latency = sim::barriered_makespan(&chip_phase_times).map_err(SimError::RaggedSchedule)?;
+    let platform_w = plan.platform_w;
+    let energy = acc.dynamic_energy + platform_w * latency * plan.shards as f64;
+    Ok(acc.into_report(
+        plan.model,
+        plan.dataset.clone(),
+        plan.cfg,
+        plan.flags,
+        latency,
+        energy,
+        plan.ops,
+        plan.bits,
+        plan.spilled_layer_gathers,
+        platform_w,
+    ))
 }
 
 /// Energy of one per-layer TO retarget event across the banks that need it,
@@ -534,7 +963,9 @@ fn segment_kinds(
 }
 
 /// Builds one `(layer, graph)` segment: per-group stage costs in pipeline
-/// order, tagged by the segment's kinds.
+/// order, tagged by the segment's kinds. `groups` is the output-group
+/// plans the segment covers — the whole graph for a single-chip plan, one
+/// chip's contiguous shard range for a sharded one.
 #[allow(clippy::too_many_arguments)]
 fn build_segment(
     ctx: &ArchContext,
@@ -542,13 +973,13 @@ fn build_segment(
     li: usize,
     layer: &LayerSpec,
     gi: usize,
-    pm: &PartitionMatrix,
+    groups: &[OutputGroupPlan],
     flags: OptFlags,
     from_dram: bool,
 ) -> PipelineSegment {
     let kinds = segment_kinds(layer, model.ordering, from_dram);
-    let mut costs = Vec::with_capacity(pm.groups.len() * PIPELINE_STAGES);
-    for grp in &pm.groups {
+    let mut costs = Vec::with_capacity(groups.len() * PIPELINE_STAGES);
+    for grp in groups {
         costs.extend_from_slice(&group_stage_costs(ctx, model, layer, grp, flags, from_dram));
     }
     PipelineSegment { layer: li as u32, graph: gi as u32, kinds, costs }
@@ -851,6 +1282,152 @@ mod tests {
             // makespan never exceeds total busy (pipelining overlaps).
             assert!(r.metrics.latency_s <= k.busy_s() + 1e-12);
         }
+    }
+
+    fn sharded_plan_for(
+        kind: ModelKind,
+        name: &str,
+        flags: OptFlags,
+        shards: usize,
+    ) -> ShardedStagePlan {
+        let cfg = GhostConfig::paper_optimal();
+        let ds = Dataset::by_name(name).unwrap();
+        let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+        build_sharded(kind, &ds, &pms, cfg, flags, shards).unwrap()
+    }
+
+    #[test]
+    fn interleave_rejects_malformed_segment_shapes() {
+        // A graph with too few segments (the shape the old
+        // `.expect("one segment per layer per graph")` panicked on) now
+        // returns a structured error naming the graph and both counts.
+        let p = plan_for(ModelKind::Gcn, "Cora", OptFlags::ghost_default());
+        let segs: Vec<PipelineSegment> = p
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                PlanItem::Pipeline(seg) => Some(seg.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(segs.len(), 2);
+        let weight_stages = [StageCost::ZERO, StageCost::ZERO];
+        // Graph 0 ok, graph 1 short by one segment.
+        let mut items = Vec::new();
+        let err = interleave_layer_major(
+            vec![segs.clone(), segs[..1].to_vec()],
+            &weight_stages,
+            &mut items,
+        )
+        .unwrap_err();
+        assert_eq!(err, SimError::SegmentShapeMismatch { graph: 1, expected: 2, got: 1 });
+        // Leftover segments are just as malformed.
+        let mut items = Vec::new();
+        let err = interleave_layer_major(
+            vec![vec![segs[0].clone(), segs[0].clone(), segs[1].clone()]],
+            &weight_stages,
+            &mut items,
+        )
+        .unwrap_err();
+        assert_eq!(err, SimError::SegmentShapeMismatch { graph: 0, expected: 2, got: 3 });
+        // Well-formed shapes still assemble.
+        let mut items = Vec::new();
+        interleave_layer_major(vec![segs], &weight_stages, &mut items).unwrap();
+        assert_eq!(items.len(), 2 + 2);
+    }
+
+    #[test]
+    fn one_shard_plan_is_bit_identical_to_single_chip() {
+        for (kind, ds) in [
+            (ModelKind::Gcn, "Cora"),
+            (ModelKind::Gat, "Citeseer"),
+            (ModelKind::Gin, "Mutag"),
+        ] {
+            let flags = OptFlags::ghost_default();
+            let single = evaluate(&plan_for(kind, ds, flags)).unwrap();
+            let sharded = sharded_plan_for(kind, ds, flags, 1);
+            assert_eq!(sharded.n_phases(), 1);
+            assert_eq!(sharded.n_remote_gathers(), 0);
+            assert_eq!(sharded.remote_gather_edges, 0);
+            let r = evaluate_sharded(&sharded).unwrap();
+            assert_eq!(single, r, "{ds}: 1-shard report diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_plan_has_barriers_and_remote_gathers() {
+        // GCN: aggregate-first, 2 layers → layer 1 exchanges (1 barrier →
+        // 2 phases). GAT: transform-first → both layers exchange (3
+        // phases).
+        let gcn = sharded_plan_for(ModelKind::Gcn, "Cora", OptFlags::ghost_default(), 4);
+        assert_eq!(gcn.shards, 4);
+        assert_eq!(gcn.exchange_layers, 1);
+        assert_eq!(gcn.n_phases(), 2);
+        assert!(gcn.n_remote_gathers() > 0);
+        assert_eq!(
+            gcn.remote_gather_edges,
+            gcn.exchange_layers as u64 * gcn.shard_plan.total_cross_shard_edges()
+        );
+        for chip in &gcn.chips {
+            assert_eq!(chip.phases.len(), gcn.n_phases());
+        }
+        let gat = sharded_plan_for(ModelKind::Gat, "Cora", OptFlags::ghost_default(), 4);
+        assert_eq!(gat.exchange_layers, 2);
+        assert_eq!(gat.n_phases(), 3);
+        assert_eq!(
+            gat.remote_gather_edges,
+            gat.exchange_layers as u64 * gat.shard_plan.total_cross_shard_edges()
+        );
+        // The sharded evaluation accounts remote gathers as their own kind
+        // and the per-kind busy total stays conservative.
+        let r = evaluate_sharded(&gcn).unwrap();
+        assert!(r.kinds.remote_gather.latency_s > 0.0);
+        assert!(r.kinds.remote_gather.energy_j > 0.0);
+    }
+
+    #[test]
+    fn build_rejects_over_budget_graphs_with_min_shards() {
+        let mut cfg = GhostConfig::paper_optimal();
+        // Cora at 2708 vertices × 1433-byte features ≈ 3.9 MB resident.
+        cfg.chip_mem_bytes = 1 << 20;
+        let ds = Dataset::by_name("Cora").unwrap();
+        let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+        let err =
+            build(ModelKind::Gcn, &ds, &pms, cfg, OptFlags::ghost_default()).unwrap_err();
+        match err {
+            SimError::ExceedsChipMemory { footprint_bytes, budget_bytes, min_shards } => {
+                assert_eq!(budget_bytes, 1 << 20);
+                assert!(footprint_bytes > budget_bytes);
+                assert_eq!(
+                    min_shards,
+                    footprint_bytes.div_ceil(budget_bytes) as usize
+                );
+                assert!(min_shards >= 2);
+            }
+            other => panic!("expected ExceedsChipMemory, got {other:?}"),
+        }
+        // A sharded build over the min count succeeds (contiguous ranges
+        // may need a little slack over the even split).
+        let sharded =
+            build_sharded(ModelKind::Gcn, &ds, &pms, cfg, OptFlags::ghost_default(), 8)
+                .unwrap();
+        assert!(sharded.shard_plan.fits_budget(cfg.chip_mem_bytes));
+        evaluate_sharded(&sharded).unwrap();
+    }
+
+    #[test]
+    fn sharded_build_validates_inputs() {
+        let cfg = GhostConfig::paper_optimal();
+        let ds = Dataset::by_name("Cora").unwrap();
+        let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+        assert!(matches!(
+            build_sharded(ModelKind::Gcn, &ds, &pms, cfg, OptFlags::ghost_default(), 0),
+            Err(SimError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            build_sharded(ModelKind::Gcn, &ds, &[], cfg, OptFlags::ghost_default(), 2),
+            Err(SimError::PartitionCountMismatch { .. })
+        ));
     }
 
     #[test]

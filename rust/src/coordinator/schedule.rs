@@ -38,7 +38,7 @@ pub use super::plan::TO_RETUNE_FRACTION;
 /// accumulator.
 ///
 /// [`StagePlan`]: crate::coordinator::plan::StagePlan
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     pub model: ModelKind,
     pub dataset: String,
@@ -676,6 +676,34 @@ mod tests {
                         "spills {ctx}"
                     );
                     assert_eq!(p.platform_w, l.platform_w, "platform power {ctx}");
+                }
+            }
+        }
+    }
+
+    /// The sharding-refactor pin: a 1-shard sharded plan must reproduce
+    /// the single-chip plan **bit-identically** — every [`SimReport`]
+    /// field — across all 8 Table-2 datasets × all 4 models × every
+    /// Fig. 8 optimization-flag combination. One chip, one phase,
+    /// identical items, shared evaluation code path.
+    #[test]
+    fn one_shard_plan_bit_identical_to_single_chip() {
+        let cfg = GhostConfig::paper_optimal();
+        let presets = OptFlags::fig8_presets();
+        for spec in ALL_DATASETS.iter() {
+            let ds = Dataset::by_name(spec.name).unwrap();
+            let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+            for kind in ModelKind::ALL {
+                for &flags in &presets {
+                    let ctx = format!("{}/{}/{}", kind.name(), spec.name, flags.label());
+                    let single = simulate_with_partitions(kind, &ds, &pms, cfg, flags)
+                        .unwrap_or_else(|e| panic!("single-chip path failed for {ctx}: {e}"));
+                    let sp = plan::build_sharded(kind, &ds, &pms, cfg, flags, 1)
+                        .unwrap_or_else(|e| panic!("sharded build failed for {ctx}: {e}"));
+                    assert_eq!(sp.remote_gather_edges, 0, "{ctx}");
+                    let sharded = plan::evaluate_sharded(&sp)
+                        .unwrap_or_else(|e| panic!("sharded eval failed for {ctx}: {e}"));
+                    assert_eq!(single, sharded, "1-shard report diverged for {ctx}");
                 }
             }
         }

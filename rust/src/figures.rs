@@ -5,7 +5,7 @@
 
 use crate::baselines::{run_baseline, supports, PLATFORMS};
 use crate::config::GhostConfig;
-use crate::coordinator::{BatchEngine, KindTotals, OptFlags, SimReport, SimRequest};
+use crate::coordinator::{BatchEngine, KindTotals, OptFlags, SimError, SimReport, SimRequest};
 use crate::energy::{geomean, Metrics};
 use crate::gnn::models::{Model, ModelKind};
 use crate::gnn::workload::Workload;
@@ -274,13 +274,13 @@ pub fn print_fig9(cfg: GhostConfig) {
     println!();
     println!("Fig. 9 (exact per-kind busy time, us; readout & weight staging unfolded)");
     println!(
-        "{:<10} {:<12} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
-        "Model", "Dataset", "Gather", "Reduce", "Transfrm", "Update", "Readout", "WeightSt", "EdgeStrm"
+        "{:<10} {:<12} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "Model", "Dataset", "Gather", "Reduce", "Transfrm", "Update", "Readout", "WeightSt", "EdgeStrm", "RemoteGt"
     );
     for r in &rows {
         let k = &r.kinds;
         println!(
-            "{:<10} {:<12} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            "{:<10} {:<12} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
             r.model,
             r.dataset,
             k.gather.latency_s * 1e6,
@@ -290,8 +290,94 @@ pub fn print_fig9(cfg: GhostConfig) {
             k.readout.latency_s * 1e6,
             k.weight_stage.latency_s * 1e6,
             k.edge_stream.latency_s * 1e6,
+            k.remote_gather.latency_s * 1e6,
         );
     }
+}
+
+// ----------------------------------------------------- sharded execution
+
+/// One row of the communication-vs-compute sharding breakdown: one
+/// workload executed across `shards` chips.
+#[derive(Debug)]
+pub struct ShardingRow {
+    pub model: String,
+    pub dataset: String,
+    pub shards: usize,
+    /// End-to-end barriered makespan, seconds.
+    pub makespan_s: f64,
+    /// Total busy time across every stage kind and chip, seconds. The
+    /// per-kind totals in `kinds` (including `remote_gather`) sum to this
+    /// — the CI smoke asserts it on the JSON output.
+    pub total_busy_s: f64,
+    /// Inter-chip communication busy time (remote gathers), seconds.
+    pub comm_s: f64,
+    /// `comm_s / total_busy_s`; 0 for a 1-shard run.
+    pub comm_frac: f64,
+    pub kinds: KindTotals,
+}
+
+/// Runs one workload at each shard count through the global engine's
+/// sharded-plan cache and derives the communication-vs-compute split.
+pub fn sharding(
+    cfg: GhostConfig,
+    model: ModelKind,
+    dataset: &str,
+    shard_counts: &[usize],
+) -> Result<Vec<ShardingRow>, SimError> {
+    let engine = BatchEngine::global();
+    let req = SimRequest::new(model, dataset, cfg, OptFlags::ghost_default());
+    shard_counts
+        .iter()
+        .map(|&shards| {
+            let r = engine.run_sharded(&req, shards)?;
+            // Kind-level weight staging counts every chip's busy time
+            // (r.weight_stage_s is the chip-0 critical-path share), so the
+            // per-kind rows sum to this total exactly.
+            let total_busy_s = r.aggregate_s
+                + r.combine_s
+                + r.update_s
+                + r.kinds.weight_stage.latency_s
+                + r.kinds.edge_stream.latency_s
+                + r.kinds.remote_gather.latency_s;
+            let comm_s = r.kinds.remote_gather.latency_s;
+            Ok(ShardingRow {
+                model: r.model.name().to_string(),
+                dataset: r.dataset,
+                shards,
+                makespan_s: r.metrics.latency_s,
+                total_busy_s,
+                comm_s,
+                comm_frac: if total_busy_s > 0.0 { comm_s / total_busy_s } else { 0.0 },
+                kinds: r.kinds,
+            })
+        })
+        .collect()
+}
+
+pub fn print_sharding(
+    cfg: GhostConfig,
+    model: ModelKind,
+    dataset: &str,
+    shard_counts: &[usize],
+) -> Result<(), SimError> {
+    let rows = sharding(cfg, model, dataset, shard_counts)?;
+    println!("Sharded execution: communication vs compute ({}/{dataset})", model.name());
+    println!(
+        "{:>7} {:>13} {:>13} {:>13} {:>8}",
+        "Shards", "Makespan us", "Busy us", "Comm us", "Comm %"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>13.3} {:>13.3} {:>13.3} {:>7.2}%",
+            r.shards,
+            r.makespan_s * 1e6,
+            r.total_busy_s * 1e6,
+            r.comm_s * 1e6,
+            r.comm_frac * 100.0
+        );
+    }
+    Ok(())
 }
 
 // ----------------------------------------------------- Figs. 10 / 11 / 12
@@ -503,6 +589,34 @@ pub fn fig9_json(cfg: GhostConfig) -> Json {
     )
 }
 
+/// Sharding breakdown rows as JSON: makespan, total busy time, and the
+/// communication-vs-compute split. `kinds.<kind>.busy_s` (including
+/// `remote_gather`) sums to `total_busy_s` — the CI smoke pins it.
+pub fn sharding_json(
+    cfg: GhostConfig,
+    model: ModelKind,
+    dataset: &str,
+    shard_counts: &[usize],
+) -> Result<Json, SimError> {
+    Ok(Json::Arr(
+        sharding(cfg, model, dataset, shard_counts)?
+            .into_iter()
+            .map(|r| {
+                obj(vec![
+                    ("model", Json::Str(r.model)),
+                    ("dataset", Json::Str(r.dataset)),
+                    ("shards", Json::Num(r.shards as f64)),
+                    ("makespan_s", Json::Num(r.makespan_s)),
+                    ("total_busy_s", Json::Num(r.total_busy_s)),
+                    ("comm_s", Json::Num(r.comm_s)),
+                    ("comm_frac", Json::Num(r.comm_frac)),
+                    ("kinds", kind_totals_json(&r.kinds)),
+                ])
+            })
+            .collect(),
+    ))
+}
+
 /// Figs. 10–12 summary rows as JSON.
 pub fn comparison_json(cfg: GhostConfig) -> Json {
     Json::Arr(
@@ -557,6 +671,34 @@ mod tests {
             } else {
                 assert!((r.avg_nodes - spec.avg_nodes as f64).abs() / (spec.avg_nodes as f64) < 0.3);
             }
+        }
+    }
+
+    #[test]
+    fn sharding_rows_conserve_busy_time() {
+        let rows =
+            sharding(GhostConfig::paper_optimal(), ModelKind::Gcn, "Cora", &[1, 2]).unwrap();
+        assert_eq!(rows.len(), 2);
+
+        let one = &rows[0];
+        assert_eq!(one.shards, 1);
+        assert_eq!(one.comm_s, 0.0);
+        assert_eq!(one.comm_frac, 0.0);
+
+        let two = &rows[1];
+        assert_eq!(two.shards, 2);
+        assert!(two.comm_s > 0.0, "2-shard Cora must pay remote gathers");
+        assert!(two.comm_frac > 0.0 && two.comm_frac < 1.0);
+
+        // Per-kind busy totals (incl. remote_gather) sum to total_busy_s —
+        // the same invariant the CI JSON smoke checks.
+        for r in &rows {
+            let kind_sum: f64 = r.kinds.rows().iter().map(|(_, c)| c.latency_s).sum();
+            assert!(
+                (kind_sum - r.total_busy_s).abs() <= 1e-12 * r.total_busy_s.max(1e-30),
+                "kind busy sum {kind_sum} != total {total}",
+                total = r.total_busy_s
+            );
         }
     }
 }

@@ -15,4 +15,4 @@ pub mod partition;
 
 pub use csr::CsrGraph;
 pub use datasets::{Dataset, DatasetSpec};
-pub use partition::PartitionMatrix;
+pub use partition::{PartitionMatrix, ShardPlan};

@@ -270,6 +270,192 @@ impl PartitionMatrix {
     pub fn total_distinct_source_fetches(&self) -> u64 {
         self.groups.iter().map(|g| g.distinct_sources as u64).sum()
     }
+
+    /// Resident bytes for the contiguous output-group range `range`:
+    /// feature state for the vertices those groups own, edge descriptors
+    /// ([`EDGE_DESC_BYTES`]) for their in-edges, and partition metadata
+    /// (one [`BlockRef`] per non-empty block). Ranges partition exactly —
+    /// footprints over a partition of the group space sum to
+    /// [`Self::footprint_bytes`], because vertices, edges, and blocks each
+    /// belong to exactly one output group.
+    pub fn group_range_footprint_bytes(
+        &self,
+        range: std::ops::Range<usize>,
+        feat_bytes_per_vertex: usize,
+    ) -> u64 {
+        let lo_v = (range.start * self.v).min(self.n_vertices) as u64;
+        let hi_v = (range.end * self.v).min(self.n_vertices) as u64;
+        let edges: u64 =
+            self.groups[range.clone()].iter().map(|g| g.total_edges as u64).sum();
+        let blocks = (self.block_ptr[range.end] - self.block_ptr[range.start]) as u64;
+        (hi_v - lo_v) * feat_bytes_per_vertex as u64
+            + edges * EDGE_DESC_BYTES
+            + blocks * std::mem::size_of::<BlockRef>() as u64
+    }
+
+    /// Whole-graph resident footprint at `feat_bytes_per_vertex` bytes of
+    /// feature state per vertex — what one chip must hold to run this
+    /// graph unsharded.
+    pub fn footprint_bytes(&self, feat_bytes_per_vertex: usize) -> u64 {
+        self.group_range_footprint_bytes(0..self.n_output_groups(), feat_bytes_per_vertex)
+    }
+
+    /// Number of vertices owned by output groups `range`.
+    pub fn group_range_vertices(&self, range: std::ops::Range<usize>) -> usize {
+        (range.end * self.v).min(self.n_vertices) - (range.start * self.v).min(self.n_vertices)
+    }
+}
+
+/// Bytes per edge descriptor resident in HBM and streamed by the ECU —
+/// matches the 8 B/edge the edge-stream cost model charges.
+pub const EDGE_DESC_BYTES: u64 = 8;
+
+/// Assignment of every graph's output groups to `shards` chips, plus the
+/// halo-exchange volumes the assignment implies.
+///
+/// Each chip owns a **contiguous** range of output groups per graph
+/// (destination-vertex sharding), chosen by balancing the prefix of
+/// per-group resident footprints. Input (source) vertex features live with
+/// the shard that owns them as *destinations*: input group `ig` is owned
+/// by the shard owning output group `ig·N/V` (the group of its first
+/// vertex — a group-granularity approximation of vertex ownership). Every
+/// non-empty block whose input group lives on another shard contributes
+/// its edge count to that shard pair's exchange volume: before the layer's
+/// gathers can run, the owner must ship those source features over the
+/// inter-chip link.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Number of chips the dataset is sharded across (≥ 1).
+    pub shards: usize,
+    /// Feature bytes per vertex used for footprint balancing.
+    pub feat_bytes_per_vertex: usize,
+    /// Per graph: shard boundaries in output-group space, length
+    /// `shards + 1`, non-decreasing, first 0, last `n_output_groups`.
+    group_starts: Vec<Vec<u32>>,
+    /// Per graph: flattened `shards × shards` matrix, entry
+    /// `dst_shard * shards + src_shard` = edges whose destination group is
+    /// on `dst_shard` but whose source (input) group is owned by
+    /// `src_shard`. The diagonal is zero (intra-shard edges move no data).
+    exchange: Vec<Vec<u64>>,
+    /// Per chip: the bytes it must hold resident — max over graphs of its
+    /// range footprint (graphs are processed one at a time, like the
+    /// single-chip path).
+    chip_footprint_bytes: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Builds the shard assignment for a partitioned dataset. `shards`
+    /// must be ≥ 1; a 1-shard plan assigns everything to chip 0 and has
+    /// zero exchange volume.
+    pub fn build(
+        parts: &[PartitionMatrix],
+        shards: usize,
+        feat_bytes_per_vertex: usize,
+    ) -> Self {
+        assert!(shards >= 1, "shard count must be >= 1");
+        let mut group_starts = Vec::with_capacity(parts.len());
+        let mut exchange = Vec::with_capacity(parts.len());
+        let mut chip_footprint_bytes = vec![0u64; shards];
+        for pm in parts {
+            let n_groups = pm.n_output_groups();
+            // Prefix footprints over output groups; boundaries aim at
+            // equal footprint per shard.
+            let mut pref = Vec::with_capacity(n_groups + 1);
+            pref.push(0u64);
+            for g in 0..n_groups {
+                pref.push(pref[g] + pm.group_range_footprint_bytes(g..g + 1, feat_bytes_per_vertex));
+            }
+            let total = pref[n_groups];
+            let mut starts = vec![0u32; shards + 1];
+            for s in 1..shards {
+                let target = (total as u128 * s as u128 / shards as u128) as u64;
+                let lower = (starts[s - 1] as usize + 1).min(n_groups);
+                let upper = n_groups.saturating_sub(shards - s).max(lower);
+                let b = pref.partition_point(|&p| p < target).clamp(lower, upper);
+                starts[s] = b as u32;
+            }
+            starts[shards] = n_groups as u32;
+            // Ownership of an input group: the shard of its first vertex's
+            // output group.
+            let owner = |ig: usize| -> usize {
+                let og = (ig * pm.n / pm.v).min(n_groups.saturating_sub(1)) as u32;
+                starts[1..].partition_point(|&b| b <= og)
+            };
+            let mut xch = vec![0u64; shards * shards];
+            for s in 0..shards {
+                let range = starts[s] as usize..starts[s + 1] as usize;
+                for g in range.clone() {
+                    for b in pm.group_blocks(g) {
+                        let t = owner(b.input_group as usize);
+                        if t != s {
+                            xch[s * shards + t] += b.n_edges as u64;
+                        }
+                    }
+                }
+                let fp = pm.group_range_footprint_bytes(range, feat_bytes_per_vertex);
+                chip_footprint_bytes[s] = chip_footprint_bytes[s].max(fp);
+            }
+            group_starts.push(starts);
+            exchange.push(xch);
+        }
+        Self { shards, feat_bytes_per_vertex, group_starts, exchange, chip_footprint_bytes }
+    }
+
+    /// The contiguous output-group range chip `shard` owns of graph
+    /// `graph`.
+    pub fn group_range(&self, graph: usize, shard: usize) -> std::ops::Range<usize> {
+        let starts = &self.group_starts[graph];
+        starts[shard] as usize..starts[shard + 1] as usize
+    }
+
+    /// The shard owning output group `og` of graph `graph`.
+    pub fn shard_of_group(&self, graph: usize, og: usize) -> usize {
+        self.group_starts[graph][1..].partition_point(|&b| b as usize <= og)
+    }
+
+    /// The shard owning input group `ig` of graph `graph` (the shard of
+    /// its first vertex's output group).
+    pub fn owner_of_input_group(
+        &self,
+        graph: usize,
+        pm: &PartitionMatrix,
+        ig: usize,
+    ) -> usize {
+        let og = (ig * pm.n / pm.v).min(pm.n_output_groups().saturating_sub(1));
+        self.shard_of_group(graph, og)
+    }
+
+    /// Edges of graph `graph` whose destination lives on `dst_shard` but
+    /// whose source features are owned by `src_shard`.
+    pub fn exchange_edges(&self, graph: usize, dst_shard: usize, src_shard: usize) -> u64 {
+        self.exchange[graph][dst_shard * self.shards + src_shard]
+    }
+
+    /// Total cross-shard edges of one graph (sum of the exchange matrix).
+    pub fn cross_shard_edges(&self, graph: usize) -> u64 {
+        self.exchange[graph].iter().sum()
+    }
+
+    /// Total cross-shard edges across all graphs.
+    pub fn total_cross_shard_edges(&self) -> u64 {
+        (0..self.exchange.len()).map(|g| self.cross_shard_edges(g)).sum()
+    }
+
+    /// Per-chip resident footprints, bytes (max over graphs).
+    pub fn chip_footprints(&self) -> &[u64] {
+        &self.chip_footprint_bytes
+    }
+
+    /// The largest per-chip footprint — what each chip's memory budget
+    /// must cover.
+    pub fn max_chip_footprint_bytes(&self) -> u64 {
+        self.chip_footprint_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Whether every chip's resident state fits `budget_bytes`.
+    pub fn fits_budget(&self, budget_bytes: u64) -> bool {
+        self.max_chip_footprint_bytes() <= budget_bytes
+    }
 }
 
 #[cfg(test)]
@@ -405,5 +591,113 @@ mod tests {
         assert_eq!(pm.n_output_groups(), 1);
         assert_eq!(pm.nonzero_blocks(), 0);
         assert_eq!(pm.total_edges(), 0);
+    }
+
+    #[test]
+    fn footprint_counts_vertices_edges_and_blocks() {
+        let d = Dataset::by_name("Cora").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        let feat = 4 * 1433; // f32 features
+        let expect = pm.n_vertices as u64 * feat as u64
+            + pm.total_edges() * EDGE_DESC_BYTES
+            + pm.nonzero_blocks() as u64 * std::mem::size_of::<BlockRef>() as u64;
+        assert_eq!(pm.footprint_bytes(feat), expect);
+    }
+
+    #[test]
+    fn group_range_footprints_are_additive() {
+        let d = Dataset::by_name("Citeseer").unwrap();
+        let pm = PartitionMatrix::build(&d.graphs[0], 20, 20);
+        let n = pm.n_output_groups();
+        for &cut in &[0, 1, n / 3, n / 2, n - 1, n] {
+            let sum = pm.group_range_footprint_bytes(0..cut, 64)
+                + pm.group_range_footprint_bytes(cut..n, 64);
+            assert_eq!(sum, pm.footprint_bytes(64), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn one_shard_plan_owns_everything_with_zero_exchange() {
+        let d = Dataset::by_name("Cora").unwrap();
+        let parts = vec![PartitionMatrix::build(&d.graphs[0], 20, 20)];
+        let sp = ShardPlan::build(&parts, 1, 64);
+        assert_eq!(sp.group_range(0, 0), 0..parts[0].n_output_groups());
+        assert_eq!(sp.total_cross_shard_edges(), 0);
+        assert_eq!(sp.chip_footprints(), &[parts[0].footprint_bytes(64)]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_groups_and_balance_footprint() {
+        let d = Dataset::by_name("Amazon").unwrap();
+        let parts = vec![PartitionMatrix::build(&d.graphs[0], 20, 20)];
+        let pm = &parts[0];
+        for shards in [2usize, 4, 8] {
+            let sp = ShardPlan::build(&parts, shards, 64);
+            let mut covered = 0;
+            for s in 0..shards {
+                let r = sp.group_range(0, s);
+                assert_eq!(r.start, covered, "contiguous at shard {s}");
+                covered = r.end;
+                for g in r {
+                    assert_eq!(sp.shard_of_group(0, g), s);
+                }
+            }
+            assert_eq!(covered, pm.n_output_groups());
+            // Shard footprints partition the whole graph's footprint.
+            let sum: u64 = (0..shards)
+                .map(|s| pm.group_range_footprint_bytes(sp.group_range(0, s), 64))
+                .sum();
+            assert_eq!(sum, pm.footprint_bytes(64));
+            // Balanced: no chip holds more than ~2x the fair share.
+            assert!(
+                sp.max_chip_footprint_bytes() <= 2 * pm.footprint_bytes(64) / shards as u64,
+                "{shards} shards: max {} vs total {}",
+                sp.max_chip_footprint_bytes(),
+                pm.footprint_bytes(64)
+            );
+        }
+    }
+
+    #[test]
+    fn exchange_matrix_matches_block_ownership() {
+        let d = Dataset::by_name("Citeseer").unwrap();
+        let parts = vec![PartitionMatrix::build(&d.graphs[0], 20, 20)];
+        let pm = &parts[0];
+        let sp = ShardPlan::build(&parts, 4, 64);
+        // Recount from scratch: every block's edges land either intra-shard
+        // or in exactly one exchange cell.
+        let mut intra = 0u64;
+        let mut cross = vec![0u64; 16];
+        for (grp, blocks) in pm.iter_groups() {
+            let s = sp.shard_of_group(0, grp.out_group as usize);
+            for b in blocks {
+                let t = sp.owner_of_input_group(0, pm, b.input_group as usize);
+                if s == t {
+                    intra += b.n_edges as u64;
+                } else {
+                    cross[s * 4 + t] += b.n_edges as u64;
+                }
+            }
+        }
+        for s in 0..4 {
+            for t in 0..4 {
+                assert_eq!(sp.exchange_edges(0, s, t), cross[s * 4 + t], "pair ({s}, {t})");
+            }
+            assert_eq!(sp.exchange_edges(0, s, s), 0, "diagonal at {s}");
+        }
+        assert_eq!(intra + sp.cross_shard_edges(0), pm.total_edges());
+        assert!(sp.cross_shard_edges(0) > 0, "4-way Citeseer must cross shards");
+    }
+
+    #[test]
+    fn more_shards_than_groups_leaves_trailing_shards_empty() {
+        let g = path_graph(15);
+        let parts = vec![PartitionMatrix::build(&g, 20, 20)]; // 1 output group
+        let sp = ShardPlan::build(&parts, 4, 16);
+        assert_eq!(sp.group_range(0, 0), 0..1);
+        for s in 1..4 {
+            assert!(sp.group_range(0, s).is_empty());
+        }
+        assert_eq!(sp.total_cross_shard_edges(), 0);
     }
 }

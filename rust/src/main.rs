@@ -29,24 +29,35 @@ ghost — GHOST silicon-photonic GNN accelerator (paper reproduction)
 
 USAGE:
   ghost run --model <gcn|graphsage|gin|gat> --dataset <name>
-            [--no-bp] [--no-pp] [--no-dac-sharing] [--wb]
+            [--no-bp] [--no-pp] [--no-dac-sharing] [--wb] [--shards N]
         <name>: a Table-2 dataset (Cora, PubMed, Citeseer, Amazon,
         Proteins, Mutag, BZR, IMDB-binary), a large-tier dataset
         (ogbn-arxiv-syn, reddit-syn), or a parameterized R-MAT spec
         rmat-<V>v-<E>e[-<F>f][-<L>l][-<G>g][-<S>s]
+        --shards N executes the sharded multi-chip plan: the partition is
+        split over N chips and cross-shard gathers become RemoteGather
+        stages over the inter-chip link. Graphs whose per-chip footprint
+        exceeds the chip memory budget error with the minimum shard count.
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
-                [--comparison] [--datasets] [--all] [--json]
+                [--comparison] [--datasets] [--sharding] [--all] [--json]
+                [--shards <n,n,...>] [--shard-model <m>] [--shard-dataset <d>]
         --json emits the selected sections as one JSON object; the fig9
-        section carries the exact per-stage-kind busy/energy breakdown.
+        and sharding sections carry the exact per-stage-kind busy/energy
+        breakdown (incl. remote_gather). --sharding sweeps one workload
+        over shard counts (default gcn / rmat-20000v-120000e / 1,2,4) and
+        reports the communication-vs-compute split; it is explicit-only
+        (not part of --all).
   ghost serve --model <m> --dataset <d> | --mix <m:d[:w],...>
               [--rps N] [--accelerators N] [--duration S] [--seed N]
               [--policy rr|jsq|affinity] [--batch immediate|max:<n>:<ms>|slo[:<n>]]
               [--arrival poisson|bursty|diurnal] [--slo-ms MS]
-              [--clients N --think-ms MS] [--json]
+              [--clients N --think-ms MS] [--shards N] [--json]
         online-serving simulation: replay a request stream against an
         N-accelerator fleet; report throughput, utilization, and exact
         p50/p95/p99/p999 latency. --clients switches to closed loop.
+        --shards N gangs the fleet into groups of N chips; every request
+        occupies its tenant's whole shard group (accelerators % N == 0).
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 
@@ -151,10 +162,21 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         dac_sharing: !args.has("no-dac-sharing") && !wb,
         workload_balancing: wb,
     };
-    let r = BatchEngine::global()
-        .run(&SimRequest::new(kind, dataset, GhostConfig::paper_optimal(), flags))?;
+    let shards: usize = args.get("shards").unwrap_or("1").parse()?;
+    let req = SimRequest::new(kind, dataset, GhostConfig::paper_optimal(), flags);
+    let engine = BatchEngine::global();
+    let r = if shards > 1 { engine.run_sharded(&req, shards)? } else { engine.run(&req)? };
     println!("GHOST simulation: {} / {}", r.model.name(), r.dataset);
     println!("  flags        : {}", r.flags.label());
+    if shards > 1 {
+        let comm = &r.kinds.remote_gather;
+        println!("  shards       : {shards} chips");
+        println!(
+            "  remote gather: {:.3} us busy, {:.3} mJ over the inter-chip link",
+            comm.latency_s * 1e6,
+            comm.energy_j * 1e3
+        );
+    }
     println!("  latency      : {:.3} us", r.metrics.latency_s * 1e6);
     println!("  energy       : {:.3} mJ", r.metrics.energy_j * 1e3);
     println!("  power        : {:.2} W (platform {:.2} W)", r.metrics.power_w(), r.platform_w);
@@ -243,11 +265,32 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parses the `--sharding` sweep flags: `--shards` csv (default 1,2,4),
+/// `--shard-model` (default gcn), `--shard-dataset` (default a mid-size
+/// R-MAT graph large enough for cross-shard traffic to matter).
+fn parse_sharding_args(args: &Args) -> Result<(ModelKind, String, Vec<usize>)> {
+    let model = args.get("shard-model").unwrap_or("gcn");
+    let kind = ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let dataset = args.get("shard-dataset").unwrap_or("rmat-20000v-120000e").to_string();
+    let mut shard_counts = Vec::new();
+    for part in args.get("shards").unwrap_or("1,2,4").split(',') {
+        let n: usize =
+            part.trim().parse().map_err(|_| anyhow!("bad shard count '{part}' in --shards"))?;
+        shard_counts.push(n);
+    }
+    Ok((kind, dataset, shard_counts))
+}
+
 fn cmd_figures(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["table1", "table2", "table3", "fig8", "fig9", "comparison", "datasets", "all", "json"],
+        &[
+            "table1", "table2", "table3", "fig8", "fig9", "comparison", "datasets", "sharding",
+            "all", "json",
+        ],
     )?;
+    // `--sharding` is explicit-only: a bare `ghost figures` (or `--all`)
+    // regenerates the paper's sections, not the sharding sweep.
     let all = args.has("all")
         || !(args.has("table1")
             || args.has("table2")
@@ -255,7 +298,8 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
             || args.has("fig8")
             || args.has("fig9")
             || args.has("comparison")
-            || args.has("datasets"));
+            || args.has("datasets")
+            || args.has("sharding"));
     let cfg = GhostConfig::paper_optimal();
     if args.has("json") {
         // One JSON object holding every selected section, machine-readable
@@ -282,6 +326,13 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
         }
         if args.has("comparison") || all {
             sections.push(("comparison", figures::comparison_json(cfg)));
+        }
+        if args.has("sharding") {
+            let (kind, dataset, shard_counts) = parse_sharding_args(&args)?;
+            sections.push((
+                "sharding",
+                figures::sharding_json(cfg, kind, &dataset, &shard_counts)?,
+            ));
         }
         println!("{}", ghost::util::json::obj(sections));
         return Ok(());
@@ -312,6 +363,11 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
     }
     if args.has("comparison") || all {
         figures::print_comparison(cfg);
+        println!();
+    }
+    if args.has("sharding") {
+        let (kind, dataset, shard_counts) = parse_sharding_args(&args)?;
+        figures::print_sharding(cfg, kind, &dataset, &shard_counts)?;
     }
     Ok(())
 }
@@ -417,6 +473,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let mut cfg = ServeConfig::new(mix, traffic);
     cfg.accelerators = args.get("accelerators").unwrap_or("1").parse()?;
+    cfg.shards = args.get("shards").unwrap_or("1").parse()?;
     cfg.route = route;
     cfg.batch = parse_batch_policy(args.get("batch").unwrap_or("immediate"), slo_s)?;
     cfg.duration_s = duration_s;
@@ -441,6 +498,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         cfg.route.name(),
         cfg.batch.label()
     );
+    if cfg.shards > 1 {
+        println!(
+            "  sharding     : {} chips per group, {} schedulable group(s)",
+            cfg.shards,
+            cfg.shard_groups()
+        );
+    }
     println!("  tenants      : {tenant_list}");
     match cfg.traffic {
         TrafficSpec::Open { process, rps } => {
@@ -650,6 +714,23 @@ mod tests {
         assert!(parse_mix("nope:Cora").is_err());
         assert!(parse_mix("gcn:Cora:zero").is_err());
         assert!(parse_mix("gcn:Cora:0").is_err());
+    }
+
+    #[test]
+    fn sharding_sweep_args_parse() {
+        let a = Args::parse(&argv(&["--shards", "1,2, 8", "--shard-model=gat"]), &[]).unwrap();
+        let (kind, dataset, counts) = parse_sharding_args(&a).unwrap();
+        assert_eq!(kind, ModelKind::Gat);
+        assert_eq!(dataset, "rmat-20000v-120000e");
+        assert_eq!(counts, vec![1, 2, 8]);
+
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        let (kind, _, counts) = parse_sharding_args(&a).unwrap();
+        assert_eq!(kind, ModelKind::Gcn);
+        assert_eq!(counts, vec![1, 2, 4]);
+
+        let a = Args::parse(&argv(&["--shards", "1,x"]), &[]).unwrap();
+        assert!(parse_sharding_args(&a).is_err());
     }
 
     #[test]

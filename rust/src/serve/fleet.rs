@@ -390,6 +390,12 @@ pub fn simulate_fleet(
         }
     }
     let n_tenants = cfg.mix.len();
+    // Sharded serving: the schedulable unit is a *shard group* of
+    // `cfg.shards` chips executing one sharded plan in lockstep — the
+    // event loop runs over groups (all of the fleet at shards == 1, so
+    // that path is structurally unchanged) and the per-chip stats are
+    // expanded from the group stats at the end.
+    let slots = cfg.shard_groups();
     // Dense dataset ids: tenants sharing a dataset share residency.
     let mut dataset_names: Vec<&str> = Vec::new();
     let mut tenant_dataset = Vec::with_capacity(n_tenants);
@@ -409,7 +415,7 @@ pub fn simulate_fleet(
         cfg,
         profiles,
         tenant_dataset,
-        accels: (0..cfg.accelerators).map(|_| Accel::new(n_tenants, n_datasets)).collect(),
+        accels: (0..slots).map(|_| Accel::new(n_tenants, n_datasets)).collect(),
         heap: BinaryHeap::new(),
         seq: 0,
         rr_next: 0,
@@ -504,17 +510,23 @@ pub fn simulate_fleet(
             slo_attainment: cfg.slo_s.map(|slo| sim.tenant_latency[i].attainment(slo)),
         })
         .collect();
-    let accels = sim
-        .accels
-        .iter()
-        .map(|a| AccelStats {
+    // Expand group stats to member chips: every chip of a shard group is
+    // busy exactly when its group is, so busy time and utilization are the
+    // chip's own; the request/batch/program counts are the group's work,
+    // replicated per chip (each chip participates in every batch).
+    let mut accels = Vec::with_capacity(slots * cfg.shards);
+    for a in &sim.accels {
+        let stats = AccelStats {
             utilization: a.busy_s / makespan_s,
             busy_s: a.busy_s,
             completed: a.completed,
             batches: a.batches,
             weight_programs: a.weight_programs,
-        })
-        .collect();
+        };
+        for _ in 0..cfg.shards {
+            accels.push(stats);
+        }
+    }
     Ok(ServeReport {
         duration_s: cfg.duration_s,
         makespan_s,

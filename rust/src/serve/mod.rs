@@ -66,6 +66,13 @@ pub struct ServeConfig {
     /// Fleet size (≥ 1). Every accelerator is one GHOST instance with the
     /// same architectural configuration.
     pub accelerators: usize,
+    /// Chips per shard group (≥ 1, must divide `accelerators`). At 1 every
+    /// accelerator serves whole requests independently; above 1 the fleet
+    /// is partitioned into `accelerators / shards` groups, each group's
+    /// chips execute one sharded plan in lockstep, and a request occupies
+    /// its tenant's whole group for the sharded service time. Routing
+    /// policies operate over groups.
+    pub shards: usize,
     pub route: RoutePolicy,
     pub batch: BatchPolicy,
     /// Traffic horizon, seconds: arrivals stop here and the fleet drains.
@@ -86,6 +93,7 @@ impl ServeConfig {
             mix,
             traffic,
             accelerators: 1,
+            shards: 1,
             route: RoutePolicy::JoinShortestQueue,
             batch: BatchPolicy::Immediate,
             duration_s: 1.0,
@@ -104,6 +112,15 @@ impl ServeConfig {
         if self.accelerators == 0 {
             return Err("fleet needs at least one accelerator".into());
         }
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if self.accelerators % self.shards != 0 {
+            return Err(format!(
+                "shards ({}) must divide the fleet size ({}) into whole shard groups",
+                self.shards, self.accelerators
+            ));
+        }
         if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
             return Err(format!("duration {} must be finite and > 0", self.duration_s));
         }
@@ -119,6 +136,12 @@ impl ServeConfig {
         self.batch.validate()?;
         self.accel_cfg.validate()?;
         self.flags.validate()
+    }
+
+    /// Number of independent scheduling slots: shard groups of `shards`
+    /// chips each (the whole fleet when `shards == 1`).
+    pub fn shard_groups(&self) -> usize {
+        self.accelerators / self.shards.max(1)
     }
 
     /// The engine requests resolving each tenant's service profile.
@@ -155,7 +178,13 @@ pub fn simulate_with_workers(
 ) -> Result<ServeReport, SimError> {
     cfg.validate().map_err(SimError::InvalidConfig)?;
     let reqs = cfg.tenant_requests();
-    let resolved = par_map_workers(&reqs, workers, |req| engine.service_profile(req));
+    let resolved = if cfg.shards > 1 {
+        par_map_workers(&reqs, workers, |req| {
+            engine.sharded_service_profile(req, cfg.shards)
+        })
+    } else {
+        par_map_workers(&reqs, workers, |req| engine.service_profile(req))
+    };
     let profiles = collect_profiles(cfg, resolved)?;
     simulate_fleet(cfg, &profiles)
 }
@@ -165,7 +194,11 @@ pub fn simulate_with_workers(
 pub fn simulate(engine: &BatchEngine, cfg: &ServeConfig) -> Result<ServeReport, SimError> {
     cfg.validate().map_err(SimError::InvalidConfig)?;
     let reqs = cfg.tenant_requests();
-    let resolved = par_map(&reqs, |req| engine.service_profile(req));
+    let resolved = if cfg.shards > 1 {
+        par_map(&reqs, |req| engine.sharded_service_profile(req, cfg.shards))
+    } else {
+        par_map(&reqs, |req| engine.service_profile(req))
+    };
     let profiles = collect_profiles(cfg, resolved)?;
     simulate_fleet(cfg, &profiles)
 }
@@ -213,9 +246,44 @@ mod tests {
         let mut c = base.clone();
         c.traffic = TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: -5.0 };
         assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.accelerators = 4;
+        c.shards = 3; // does not divide the fleet
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.accelerators = 4;
+        c.shards = 2;
+        c.validate().unwrap();
+        assert_eq!(c.shard_groups(), 2);
         let mut c = base;
         c.accel_cfg.r_c = 25;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sharded_fleet_schedules_whole_groups() {
+        // 4 chips in 2 shard groups: requests occupy a whole group; the
+        // report still exposes per-chip stats, identical within a group.
+        let mut cfg = ServeConfig::new(
+            single_tenant(),
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 200.0 },
+        );
+        cfg.accelerators = 4;
+        cfg.shards = 2;
+        cfg.duration_s = 0.2;
+        let engine = BatchEngine::new();
+        let report = simulate_with_workers(&engine, &cfg, 1).unwrap();
+        assert_eq!(report.accels.len(), 4);
+        assert_eq!(report.offered, report.completed);
+        for pair in report.accels.chunks(2) {
+            assert_eq!(pair[0], pair[1], "chips of one shard group diverged");
+        }
+        // The profiles came from the sharded path.
+        assert_eq!(engine.sharded_plan_builds(), 1);
+        assert_eq!(engine.profile_builds(), 0);
     }
 
     #[test]

@@ -223,6 +223,36 @@ pub fn sequential_costs(groups: &[&[StageCost]]) -> CostScheduleResult {
     out
 }
 
+/// Makespan of a barriered multi-chip schedule. `chip_phases[c][p]` is the
+/// local busy time chip `c` spends inside synchronization phase `p`; a
+/// barrier at every phase boundary means phase `p + 1` starts (on every
+/// chip) only when the slowest chip has finished phase `p`, so the
+/// makespan is `Σ_p max_c chip_phases[c][p]`. Every chip must report the
+/// same phase count — a chip skipping a barrier would deadlock the real
+/// machine — so ragged input is a [`RaggedStages`] error (`group` is the
+/// offending chip index). With one chip this reduces to the plain sum of
+/// its phases.
+pub fn barriered_makespan(chip_phases: &[Vec<f64>]) -> Result<f64, RaggedStages> {
+    if chip_phases.is_empty() {
+        return Ok(0.0);
+    }
+    let n_phases = chip_phases[0].len();
+    for (ci, phases) in chip_phases.iter().enumerate() {
+        if phases.len() != n_phases {
+            return Err(RaggedStages { group: ci, expected: n_phases, got: phases.len() });
+        }
+    }
+    let mut makespan = 0.0f64;
+    for p in 0..n_phases {
+        let mut slowest = 0.0f64;
+        for phases in chip_phases {
+            slowest = slowest.max(phases[p]);
+        }
+        makespan += slowest;
+    }
+    Ok(makespan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,5 +414,28 @@ mod tests {
         let e = RaggedStages { group: 3, expected: 4, got: 2 };
         let msg = e.to_string();
         assert!(msg.contains('3') && msg.contains('4') && msg.contains('2'), "{msg}");
+    }
+
+    #[test]
+    fn barriered_makespan_is_sum_of_phase_maxima() {
+        // Chip 0: [2, 1, 4], chip 1: [1, 3, 2] → 2 + 3 + 4 = 9.
+        let phases = vec![vec![2.0, 1.0, 4.0], vec![1.0, 3.0, 2.0]];
+        assert_eq!(barriered_makespan(&phases).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn barriered_single_chip_reduces_to_sum() {
+        let phases = vec![vec![1.5, 2.5, 3.0]];
+        assert_eq!(barriered_makespan(&phases).unwrap(), 7.0);
+        assert_eq!(barriered_makespan(&[]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn barriered_ragged_chip_is_an_error() {
+        let phases = vec![vec![1.0, 2.0], vec![1.0]];
+        assert_eq!(
+            barriered_makespan(&phases).unwrap_err(),
+            RaggedStages { group: 1, expected: 2, got: 1 }
+        );
     }
 }

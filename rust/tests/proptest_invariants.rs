@@ -4,14 +4,14 @@
 //! deterministic PCG generator with many sampled cases per property.
 
 use ghost::config::GhostConfig;
-use ghost::coordinator::{simulate_workload, OptFlags};
+use ghost::coordinator::{build_sharded, evaluate_sharded, simulate_workload, OptFlags};
 use ghost::gnn::models::ModelKind;
 use ghost::gnn::quant;
 use ghost::graph::csr::CsrGraph;
 use ghost::graph::datasets::{
     generate_rmat_graph, generate_skewed_graph, Dataset, DatasetSpec, GraphGen, Task,
 };
-use ghost::graph::partition::PartitionMatrix;
+use ghost::graph::partition::{PartitionMatrix, ShardPlan};
 use ghost::sim;
 use ghost::util::rng::Pcg64;
 
@@ -274,6 +274,126 @@ fn prop_generated_graphs_respect_spec() {
         // No self loops.
         for v in 0..n {
             assert!(!g.neighbors(v).contains(&(v as u32)), "self loop at {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_shard_plan_partitions_groups_and_conserves_traffic() {
+    // Over seeded R-MAT graphs: the shard assignment is an exact partition
+    // of output-group space, per-chip footprints are additive slices of
+    // the whole-graph footprint, the exchange matrix has a zero diagonal,
+    // and cross-shard + shard-local edges conserve the graph's edge count.
+    let mut rng = Pcg64::seed_from_u64(1111);
+    for _ in 0..CASES {
+        let n_v = rng.gen_range(2, 600);
+        let e = rng.gen_range(1, 4 * n_v);
+        let g = generate_rmat_graph(n_v, e, rng.gen_range(2, 48), &mut rng);
+        let pm = PartitionMatrix::build(&g, rng.gen_range(1, 30), rng.gen_range(1, 30));
+        let shards = rng.gen_range(1, 9);
+        let feat = rng.gen_range(1, 512);
+        let sp = ShardPlan::build(std::slice::from_ref(&pm), shards, feat);
+
+        let mut covered = 0usize;
+        let mut fp_sum = 0u64;
+        let mut local_edges = 0u64;
+        for s in 0..shards {
+            let r = sp.group_range(0, s);
+            assert_eq!(r.start, covered, "shard ranges must be contiguous");
+            covered = r.end;
+            let fp = pm.group_range_footprint_bytes(r.clone(), feat);
+            fp_sum += fp;
+            // Single-graph dataset: the chip footprint is its range's.
+            assert_eq!(sp.chip_footprints()[s], fp);
+            for og in r.clone() {
+                assert_eq!(sp.shard_of_group(0, og), s, "range/ownership disagree");
+                for b in pm.group_blocks(og) {
+                    if sp.owner_of_input_group(0, &pm, b.input_group as usize) == s {
+                        local_edges += b.n_edges as u64;
+                    }
+                }
+            }
+        }
+        assert_eq!(covered, pm.n_output_groups(), "shards must cover every group");
+        assert_eq!(fp_sum, pm.footprint_bytes(feat), "footprint additivity");
+        for s in 0..shards {
+            assert_eq!(sp.exchange_edges(0, s, s), 0, "diagonal exchange must be 0");
+        }
+        assert_eq!(
+            sp.cross_shard_edges(0) + local_edges,
+            pm.total_edges(),
+            "cross-shard + local edges must conserve the edge count"
+        );
+        if shards == 1 {
+            assert_eq!(sp.total_cross_shard_edges(), 0);
+        }
+        // The budget predicate is exact at the max chip footprint.
+        let max = sp.max_chip_footprint_bytes();
+        assert!(sp.fits_budget(max));
+        if max > 0 {
+            assert!(!sp.fits_budget(max - 1));
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_plan_remote_gather_traffic_matches_cross_shard_edges() {
+    // The sharded plan's RemoteGather stages carry exactly the halo
+    // traffic the shard assignment implies: one exchange of every
+    // cross-shard edge per exchanging layer, with one stage per
+    // (chip, exchanging layer, graph, remote source) pair that has
+    // traffic. Evaluation charges the link iff there is traffic.
+    let mut rng = Pcg64::seed_from_u64(1212);
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    for case in 0..8 {
+        let ds = Dataset::generate(DatasetSpec {
+            name: "shardprop",
+            avg_nodes: rng.gen_range(100, 900),
+            avg_edges: rng.gen_range(200, 4000),
+            n_features: rng.gen_range(8, 128),
+            n_labels: rng.gen_range(2, 8),
+            n_graphs: 1 + (case % 3) as usize,
+            task: Task::NodeClassification,
+            max_degree_cap: 64,
+            seed: 11_000 + case,
+            generator: GraphGen::RMat,
+        });
+        let partitions: Vec<PartitionMatrix> =
+            ds.graphs.iter().map(|g| PartitionMatrix::build(g, cfg.v, cfg.n)).collect();
+        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+            let shards = rng.gen_range(2, 7);
+            let plan = build_sharded(kind, &ds, &partitions, cfg, flags, shards)
+                .expect("small random dataset fits the paper budget");
+            assert_eq!(
+                plan.remote_gather_edges,
+                plan.exchange_layers as u64 * plan.shard_plan.total_cross_shard_edges(),
+                "remote gather traffic != exchange layers x cross-shard edges"
+            );
+            let expected_stages: usize = plan.exchange_layers
+                * (0..ds.graphs.len())
+                    .map(|gi| {
+                        let mut pairs = 0;
+                        for dst in 0..shards {
+                            for src in 0..shards {
+                                if dst != src
+                                    && plan.shard_plan.exchange_edges(gi, dst, src) > 0
+                                {
+                                    pairs += 1;
+                                }
+                            }
+                        }
+                        pairs
+                    })
+                    .sum::<usize>();
+            assert_eq!(plan.n_remote_gathers(), expected_stages);
+            let r = evaluate_sharded(&plan).expect("sharded evaluation");
+            assert_eq!(
+                r.kinds.remote_gather.latency_s > 0.0,
+                plan.remote_gather_edges > 0,
+                "link busy time iff there is halo traffic"
+            );
+            assert!(plan.shard_plan.fits_budget(cfg.chip_mem_bytes));
         }
     }
 }
