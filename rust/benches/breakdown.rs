@@ -9,7 +9,7 @@ use ghost::util::bench::{bench, black_box, time_once};
 
 fn main() {
     let cfg = GhostConfig::paper_optimal();
-    let rows = time_once("fig9_full_evaluation", || figures::fig9(cfg));
+    let rows = time_once("fig9_full_evaluation", || figures::fig9(cfg).unwrap());
     println!("== Fig. 9: latency breakdown ==");
     println!("  {:<10} {:<12} {:>9} {:>9} {:>9}", "Model", "Dataset", "Agg", "Comb", "Upd");
     for r in &rows {

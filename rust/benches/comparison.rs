@@ -8,7 +8,7 @@ use ghost::util::bench::time_once;
 
 fn main() {
     let cfg = GhostConfig::paper_optimal();
-    let summary = time_once("fig10_11_12_summary", || figures::comparison_summary(cfg));
+    let summary = time_once("fig10_11_12_summary", || figures::comparison_summary(cfg).unwrap());
     println!("== Figs. 10-12: GHOST vs platforms (geomean, >1 = GHOST wins) ==");
     println!(
         "  {:<10} {:>12} {:>12} {:>14}",
@@ -22,7 +22,7 @@ fn main() {
     }
 
     println!("\n== per-workload detail (Fig. 10 series) ==");
-    let detail = time_once("fig10_detail", || figures::comparison_detail(cfg));
+    let detail = time_once("fig10_detail", || figures::comparison_detail(cfg).unwrap());
     for (kind, ds, ghost_m, rows) in &detail {
         print!("  {:<10} {:<12} GHOST {:>9.1} GOPS |", kind.name(), ds, ghost_m.gops());
         for (name, m) in rows {

@@ -2,7 +2,9 @@
 //! printing the EPB/GOPS frontier and the rank of the paper's optimum, and
 //! times the full parallel sweep through the BatchEngine, the
 //! serial-vs-parallel grid speedup (same warm engine, worker count
-//! pinned), plus warm- and cold-cache single-configuration evaluations.
+//! pinned), the delta-re-costing vs full-rebuild throughput in points/sec
+//! (asserted >=10x), plus warm- and cold-cache single-configuration
+//! evaluations.
 
 use std::time::Instant;
 
@@ -66,6 +68,46 @@ fn main() {
     println!(
         "parallel sweep speedup: {:.2}x over serial on {workers} workers",
         serial.as_secs_f64() / parallel.as_secs_f64().max(1e-12)
+    );
+
+    // Delta re-costing vs full rebuild, both pinned to one worker so the
+    // ratio isolates the algorithm rather than the thread pool. The full
+    // path re-lowers every (cfg, workload) plan from scratch — exactly
+    // what the GHOST_DSE_DELTA=0 sweep does per point — while the delta
+    // path Gray-walks the grid and patches only provenance-affected
+    // lanes. Both run on the warm engine, so partition builds are out of
+    // the picture on either side.
+    assert!(
+        dse::delta_evaluation_enabled(),
+        "unset GHOST_DSE_DELTA before running this bench: the delta-vs-full \
+         comparison below needs the delta path on"
+    );
+    let valid: Vec<GhostConfig> =
+        grid.iter().copied().filter(|c| c.validate().is_ok()).collect();
+    let t0 = Instant::now();
+    for &cfg in &valid {
+        black_box(dse::evaluate_with_engine(&engine, cfg, &workloads).ok());
+    }
+    let full = t0.elapsed();
+    let t0 = Instant::now();
+    let delta_report =
+        black_box(dse::explore_with_engine_workers(&engine, &grid, &workloads, 1));
+    let delta = t0.elapsed();
+    let full_pps = valid.len() as f64 / full.as_secs_f64().max(1e-12);
+    let delta_pps = valid.len() as f64 / delta.as_secs_f64().max(1e-12);
+    println!(
+        "full rebuild:  {full_pps:>10.1} points/sec ({} valid points in {full:?})",
+        valid.len()
+    );
+    println!(
+        "delta sweep:   {delta_pps:>10.1} points/sec ({} rebuilds, {} lane patches)",
+        delta_report.delta.rebuilds, delta_report.delta.patches
+    );
+    println!("delta re-costing speedup: {:.1}x over full rebuild", delta_pps / full_pps);
+    assert!(
+        delta_pps >= 10.0 * full_pps,
+        "delta sweep must clear 10x the full-rebuild throughput: \
+         {delta_pps:.1} vs {full_pps:.1} points/sec"
     );
 
     // Warm cache: every (dataset, V, N) the paper point needs already sits

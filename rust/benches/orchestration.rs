@@ -10,7 +10,7 @@ use ghost::util::bench::{bench, black_box, time_once};
 
 fn main() {
     let cfg = GhostConfig::paper_optimal();
-    let rows = time_once("fig8_full_evaluation", || figures::fig8(cfg));
+    let rows = time_once("fig8_full_evaluation", || figures::fig8(cfg).unwrap());
     println!("== Fig. 8: normalized energy (baseline = 1.0) ==");
     for r in &rows {
         println!("  {:<22} mean {:.3} ({:.2}x reduction)", r.label, r.mean, 1.0 / r.mean);

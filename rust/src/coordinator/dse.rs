@@ -10,16 +10,34 @@
 //! the sweep's dominant cost otherwise. Failing points (unknown dataset,
 //! infeasible config, non-finite metric) degrade to recorded
 //! [`DseFailure`] entries instead of aborting the sweep.
+//!
+//! By default the sweep **delta-evaluates**: the grid is visited in a
+//! mixed-radix reflected-Gray order ([`gray_order`]) so neighboring points
+//! differ in as few (and as inner) parameters as possible, and each
+//! workload keeps one incrementally re-costed
+//! [`DeltaPlan`](super::soa::DeltaPlan) across the whole chain — only the
+//! lanes whose [`StageKind::provenance`] intersects the changed parameters
+//! are re-costed between points, with a full rebuild only when `n`, `v`,
+//! or the memory budget changes. The resulting [`DseReport`] is
+//! bit-identical to the full-rebuild path (pinned by a test and by the
+//! `GHOST_DSE_CHECK` debug mode, which re-derives every point through the
+//! retained reference evaluator and `assert_eq!`s the whole `SimReport`).
+//! Set `GHOST_DSE_DELTA=0` (or `off`/`false`) to force the full-rebuild
+//! path.
+//!
+//! [`StageKind::provenance`]: super::plan::StageKind::provenance
 
 use crate::config::GhostConfig;
 use crate::energy::geomean;
 use crate::gnn::models::ModelKind;
 use crate::graph::datasets::Dataset;
+use crate::graph::partition::PartitionMatrix;
 
 use super::engine::BatchEngine;
 use super::error::SimError;
 use super::optimizations::OptFlags;
-use super::schedule::{simulate_with_partitions, simulate_workload};
+use super::plan;
+use super::soa::DeltaPlan;
 
 /// One evaluated architecture point.
 #[derive(Debug, Clone, Copy)]
@@ -40,12 +58,28 @@ pub struct DseFailure {
     pub error: SimError,
 }
 
+/// Counters describing how a delta sweep moved across the grid: how many
+/// points paid a full plan rebuild versus an incremental lane patch,
+/// summed over every workload chain. Zero/zero for the full-rebuild path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Full `plan::build` reconstructions (structural parameter changes —
+    /// `n` / `v` / memory budget — plus each chain's first point).
+    pub rebuilds: usize,
+    /// Provenance-targeted lane patches (only `r_r` / `r_c` / `t_r`
+    /// moved).
+    pub patches: usize,
+}
+
 /// Outcome of a sweep: the frontier (sorted by EPB/GOPS ascending, best
 /// first) plus every point that failed or was filtered, with its reason.
 #[derive(Debug, Clone, Default)]
 pub struct DseReport {
     pub points: Vec<ArchDsePoint>,
     pub failures: Vec<DseFailure>,
+    /// Rebuild/patch counters of the delta evaluator (all-zero when the
+    /// sweep ran the full-rebuild path).
+    pub delta: DeltaStats,
 }
 
 impl DseReport {
@@ -115,19 +149,26 @@ pub fn workload_set(quick: bool) -> Result<Vec<(ModelKind, Dataset)>, SimError> 
 }
 
 /// Evaluate one configuration over a workload set (geometric means),
-/// rebuilding partitions from scratch — the uncached reference the engine
-/// path is tested against. A failing workload is propagated with its
-/// `(model, dataset)` identity attached.
+/// rebuilding partitions from scratch — the uncached reference oracle the
+/// engine and delta paths are tested against. Goes straight through
+/// [`plan::build`] / [`plan::evaluate`] like every other consumer. A
+/// failing workload is propagated with its `(model, dataset)` identity
+/// attached.
 pub fn evaluate(
     cfg: GhostConfig,
     workloads: &[(ModelKind, Dataset)],
 ) -> Result<ArchDsePoint, SimError> {
+    // Validate before partitioning: a zero-dimension config must come back
+    // as an error, not trip the partition builder's assert.
+    cfg.validate().map_err(SimError::InvalidConfig)?;
     let flags = OptFlags::ghost_default();
     let mut epb_gops = Vec::with_capacity(workloads.len());
     let mut gops = Vec::with_capacity(workloads.len());
     let mut epb = Vec::with_capacity(workloads.len());
     for (kind, ds) in workloads {
-        let r = simulate_workload(*kind, ds, cfg, flags)
+        let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+        let r = plan::build(*kind, ds, &pms, cfg, flags)
+            .and_then(|p| plan::evaluate(&p))
             .map_err(|e| e.in_workload(*kind, ds.spec.name))?;
         epb_gops.push(r.metrics.epb_per_gops());
         gops.push(r.metrics.gops());
@@ -155,7 +196,8 @@ pub fn evaluate_with_engine(
     let mut epb = Vec::with_capacity(workloads.len());
     for (kind, ds) in workloads {
         let pms = engine.partitions_for(ds, cfg.v, cfg.n)?;
-        let r = simulate_with_partitions(*kind, ds, &pms, cfg, flags)
+        let r = plan::build(*kind, ds, &pms, cfg, flags)
+            .and_then(|p| plan::evaluate(&p))
             .map_err(|e| e.in_workload(*kind, ds.spec.name))?;
         epb_gops.push(r.metrics.epb_per_gops());
         gops.push(r.metrics.gops());
@@ -197,7 +239,7 @@ fn sift_points(raw: Vec<(GhostConfig, Result<ArchDsePoint, SimError>)>) -> DseRe
         }
     }
     points.sort_by(|a, b| a.epb_per_gops.total_cmp(&b.epb_per_gops));
-    DseReport { points, failures }
+    DseReport { points, failures, delta: DeltaStats::default() }
 }
 
 /// Run the sweep (thread-pool parallel) through a sweep-local engine that
@@ -256,10 +298,211 @@ pub fn explore_with_engine_workers(
             let _ = engine.partitions_for(ds, v, n);
         }
     });
-    let raw = crate::util::parallel::par_map_workers(grid, workers, |&cfg| {
-        (cfg, evaluate_with_engine(engine, cfg, workloads))
-    });
-    sift_points(raw)
+    if delta_evaluation_enabled() {
+        let (raw, delta) = delta_sweep(engine, grid, workloads, workers);
+        let mut report = sift_points(raw);
+        report.delta = delta;
+        report
+    } else {
+        let raw = crate::util::parallel::par_map_workers(grid, workers, |&cfg| {
+            (cfg, evaluate_with_engine(engine, cfg, workloads))
+        });
+        sift_points(raw)
+    }
+}
+
+/// Whether sweeps delta-evaluate (the default). `GHOST_DSE_DELTA=0` /
+/// `off` / `false` forces the full-rebuild path — the CI smoke diffs the
+/// two frontiers.
+pub fn delta_evaluation_enabled() -> bool {
+    !matches!(
+        std::env::var("GHOST_DSE_DELTA").as_deref(),
+        Ok("0") | Ok("off") | Ok("false")
+    )
+}
+
+/// Whether every delta-evaluated point is re-derived through the retained
+/// reference oracle ([`plan::reference_evaluate`] over a fresh
+/// [`plan::build`]) and `assert_eq!`d on the full `SimReport`. Always on
+/// under `debug_assertions` (so `cargo test` pins bit-identity
+/// everywhere); `GHOST_DSE_CHECK=1` / `on` / `true` forces it in release.
+fn delta_check_enabled() -> bool {
+    cfg!(debug_assertions)
+        || matches!(
+            std::env::var("GHOST_DSE_CHECK").as_deref(),
+            Ok("1") | Ok("on") | Ok("true")
+        )
+}
+
+/// Mixed-radix reflected-Gray visiting order over the grid, as indices
+/// into `grid`.
+///
+/// Digits are `[chip_mem, n, v, r_r, r_c, t_r]`, outermost (least
+/// frequently changing) first — so the structural axes that force a plan
+/// rebuild (`n`, `v`, memory) change between only a handful of adjacent
+/// visits, while the cheap patchable axes (`r_r`, `r_c`, `t_r`) absorb
+/// almost every transition. Reflection makes each digit sweep
+/// back-and-forth instead of wrapping around, so consecutive points in a
+/// full lattice differ in exactly one digit; validity holes in the grid
+/// can merge a few transitions but never reorder the blocks. Points with
+/// equal codes (duplicates) keep their grid order.
+pub fn gray_order(grid: &[GhostConfig]) -> Vec<usize> {
+    fn uniq(mut v: Vec<u64>) -> Vec<u64> {
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+    fn digits_of(cfg: &GhostConfig) -> [u64; 6] {
+        [
+            cfg.chip_mem_bytes,
+            cfg.n as u64,
+            cfg.v as u64,
+            cfg.r_r as u64,
+            cfg.r_c as u64,
+            cfg.t_r as u64,
+        ]
+    }
+    /// Position of a mixed-radix digit string in reflected-Gray visiting
+    /// order: the first digit picks a block of `∏ radices[1..]` codes, and
+    /// odd blocks are traversed in reverse so the boundary between blocks
+    /// is a single-digit step.
+    fn gray_pos(digits: &[usize], radices: &[usize]) -> usize {
+        if digits.is_empty() {
+            return 0;
+        }
+        let block: usize = radices[1..].iter().product();
+        let sub = gray_pos(&digits[1..], &radices[1..]);
+        digits[0] * block + if digits[0] % 2 == 0 { sub } else { block - 1 - sub }
+    }
+    let mut axes: [Vec<u64>; 6] = Default::default();
+    for (a, axis) in axes.iter_mut().enumerate() {
+        *axis = uniq(grid.iter().map(|c| digits_of(c)[a]).collect());
+    }
+    let radices: Vec<usize> = axes.iter().map(|a| a.len()).collect();
+    let mut keyed: Vec<(usize, usize)> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| {
+            let vals = digits_of(cfg);
+            let digits: Vec<usize> = vals
+                .iter()
+                .zip(&axes)
+                .map(|(v, axis)| {
+                    axis.binary_search(v).expect("axis values were collected from the grid")
+                })
+                .collect();
+            (gray_pos(&digits, &radices), i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// The delta sweep: every workload runs one [`DeltaPlan`] chain over the
+/// Gray-ordered grid (chains are independent, so they fan out over the
+/// worker pool and the merged result is worker-count invariant), then
+/// per-point results are reassembled in grid order with exactly the
+/// full-rebuild path's semantics — invalid configs fail with
+/// `InvalidConfig`, a failing workload reports the error of the *first*
+/// failing workload in workload order, and surviving points geomean the
+/// same per-workload metric values (bit-identical reports → bit-identical
+/// geomeans).
+fn delta_sweep(
+    engine: &BatchEngine,
+    grid: &[GhostConfig],
+    workloads: &[(ModelKind, Dataset)],
+    workers: usize,
+) -> (Vec<(GhostConfig, Result<ArchDsePoint, SimError>)>, DeltaStats) {
+    let flags = OptFlags::ghost_default();
+    let check = delta_check_enabled();
+    let order = gray_order(grid);
+    let wl_idx: Vec<usize> = (0..workloads.len()).collect();
+    type Slot = Option<Result<(f64, f64, f64), SimError>>;
+    let chains: Vec<(Vec<Slot>, DeltaStats)> =
+        crate::util::parallel::par_map_workers(&wl_idx, workers, |&wi| {
+            let (kind, ds) = &workloads[wi];
+            let mut dp = DeltaPlan::new(*kind, ds, flags, 1);
+            let mut slots: Vec<Slot> = vec![None; grid.len()];
+            for &gi in &order {
+                let cfg = grid[gi];
+                if cfg.validate().is_err() {
+                    // Never retarget onto an invalid config: the assembly
+                    // below reports it as an `InvalidConfig` failure, same
+                    // as `evaluate_with_engine`'s up-front validation.
+                    continue;
+                }
+                // Partition-cache errors propagate unwrapped and
+                // build/evaluate errors carry the workload identity —
+                // mirroring `evaluate_with_engine` exactly.
+                let res = match engine.partitions_for(ds, cfg.v, cfg.n) {
+                    Err(e) => Err(e),
+                    Ok(pms) => {
+                        let r = dp.retarget(cfg, &pms).and_then(|_| dp.evaluate());
+                        if check {
+                            if let Ok(report) = &r {
+                                let fresh = plan::build(*kind, ds, &pms, cfg, flags)
+                                    .and_then(|p| plan::reference_evaluate(&p))
+                                    .expect(
+                                        "delta path evaluated a config the reference \
+                                         oracle rejects",
+                                    );
+                                assert_eq!(
+                                    report, &fresh,
+                                    "delta evaluation diverged from the reference \
+                                     oracle at {cfg:?}"
+                                );
+                            }
+                        }
+                        r.map_err(|e| e.in_workload(*kind, ds.spec.name))
+                    }
+                };
+                slots[gi] = Some(res.map(|r| {
+                    (r.metrics.epb_per_gops(), r.metrics.gops(), r.metrics.epb())
+                }));
+            }
+            (slots, DeltaStats { rebuilds: dp.rebuilds(), patches: dp.patches() })
+        });
+
+    let mut stats = DeltaStats::default();
+    for (_, s) in &chains {
+        stats.rebuilds += s.rebuilds;
+        stats.patches += s.patches;
+    }
+    let mut raw = Vec::with_capacity(grid.len());
+    for (gi, cfg) in grid.iter().enumerate() {
+        if let Err(e) = cfg.validate() {
+            raw.push((*cfg, Err(SimError::InvalidConfig(e))));
+            continue;
+        }
+        let mut epb_gops = Vec::with_capacity(workloads.len());
+        let mut gops = Vec::with_capacity(workloads.len());
+        let mut epb = Vec::with_capacity(workloads.len());
+        let mut first_err = None;
+        for (slots, _) in &chains {
+            match slots[gi].as_ref().expect("every valid point is visited by each chain") {
+                Err(e) => {
+                    first_err = Some(e.clone());
+                    break;
+                }
+                Ok((a, b, c)) => {
+                    epb_gops.push(*a);
+                    gops.push(*b);
+                    epb.push(*c);
+                }
+            }
+        }
+        let res = match first_err {
+            Some(e) => Err(e),
+            None => Ok(ArchDsePoint {
+                cfg: *cfg,
+                epb_per_gops: geomean(epb_gops),
+                gops: geomean(gops),
+                epb: geomean(epb),
+            }),
+        };
+        raw.push((*cfg, res));
+    }
+    (raw, stats)
 }
 
 #[cfg(test)]
@@ -401,5 +644,106 @@ mod tests {
         assert_eq!(workload_names(true).len(), 4);
         assert_eq!(workload_names(false).len(), 16);
         assert_eq!(workload_set(false).unwrap().len(), 16);
+    }
+
+    #[test]
+    fn gray_order_is_a_permutation_with_minimal_structural_churn() {
+        use crate::coordinator::soa::ParamSet;
+        let grid = default_grid();
+        let order = gray_order(&grid);
+        // A permutation of the grid indices.
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..grid.len()).collect::<Vec<_>>());
+        // Structural (n / v / mem) transitions happen exactly at the
+        // boundaries between (mem, n, v) blocks: with every point of a
+        // block contiguous in Gray order, that is #blocks − 1 transitions
+        // no matter how many validity holes the inner axes have.
+        let mut blocks: Vec<(u64, usize, usize)> =
+            grid.iter().map(|c| (c.chip_mem_bytes, c.n, c.v)).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        let structural = order
+            .windows(2)
+            .filter(|w| {
+                ParamSet::diff(&grid[w[0]], &grid[w[1]]).intersects(ParamSet::STRUCTURAL)
+            })
+            .count();
+        assert_eq!(structural, blocks.len() - 1, "grid of {} points", grid.len());
+        // And almost every transition is patchable: far fewer rebuild
+        // boundaries than points.
+        assert!(structural * 10 < grid.len());
+    }
+
+    #[test]
+    fn delta_sweep_is_bit_identical_to_full_rebuild_sweep() {
+        // The acceptance gate in miniature: the same grid (including an
+        // infeasible point) swept via the delta chains and via per-point
+        // full rebuilds must produce the identical raw results — every
+        // metric bit, every failure — before sift_points ever runs.
+        let workloads = workload_set(true).unwrap();
+        let paper = GhostConfig::paper_optimal();
+        let grid = vec![
+            paper,
+            GhostConfig { t_r: 11, ..paper },
+            GhostConfig { r_c: 14, ..paper },
+            GhostConfig { r_r: 12, r_c: 14, ..paper },
+            GhostConfig { v: 10, ..paper },
+            GhostConfig { v: 10, t_r: 11, ..paper },
+            GhostConfig { n: 10, r_c: 25, ..paper }, // infeasible → failure
+        ];
+        let engine = BatchEngine::new();
+        let (raw_delta, stats) = delta_sweep(&engine, &grid, &workloads, 2);
+        let raw_full: Vec<(GhostConfig, Result<ArchDsePoint, SimError>)> = grid
+            .iter()
+            .map(|&cfg| (cfg, evaluate_with_engine(&engine, cfg, &workloads)))
+            .collect();
+        assert_eq!(raw_delta.len(), raw_full.len());
+        for ((ca, ra), (cb, rb)) in raw_delta.iter().zip(&raw_full) {
+            assert_eq!(ca, cb);
+            match (ra, rb) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.cfg, b.cfg);
+                    assert_eq!(a.epb_per_gops, b.epb_per_gops, "{ca:?}");
+                    assert_eq!(a.gops, b.gops, "{ca:?}");
+                    assert_eq!(a.epb, b.epb, "{ca:?}");
+                }
+                (Err(ea), Err(eb)) => {
+                    assert!(
+                        matches!(ea, SimError::InvalidConfig(_))
+                            && matches!(eb, SimError::InvalidConfig(_)),
+                        "mismatched failures at {ca:?}: {ea:?} vs {eb:?}"
+                    );
+                }
+                other => panic!("delta/full outcome mismatch at {ca:?}: {other:?}"),
+            }
+        }
+        // Six valid points × four workloads: each chain rebuilds for its
+        // first point and for the v-change boundary, patches the rest.
+        assert_eq!(stats.rebuilds + stats.patches, 6 * workloads.len());
+        assert!(stats.rebuilds >= workloads.len());
+        assert!(stats.patches > stats.rebuilds, "stats: {stats:?}");
+    }
+
+    #[test]
+    fn explore_reports_delta_counters() {
+        let workloads = workload_set(true).unwrap();
+        let paper = GhostConfig::paper_optimal();
+        let grid = vec![
+            paper,
+            GhostConfig { t_r: 11, ..paper },
+            GhostConfig { r_c: 14, ..paper },
+        ];
+        let report = explore_with_engine(&BatchEngine::new(), &grid, &workloads);
+        assert_eq!(report.points.len(), 3);
+        if delta_evaluation_enabled() {
+            assert_eq!(
+                report.delta.rebuilds + report.delta.patches,
+                grid.len() * workloads.len()
+            );
+            assert!(report.delta.patches > 0);
+        } else {
+            assert_eq!(report.delta, DeltaStats::default());
+        }
     }
 }

@@ -15,8 +15,14 @@
 //!   [`ServiceProfile`]s behind concurrent maps and fans [`SimRequest`]
 //!   batches out over the thread pool.
 //! * [`error`] — the structured [`SimError`] every fallible path returns.
+//! * [`soa`] — the structure-of-arrays cost core: every plan carries a
+//!   [`PlanSoA`] lowering (flat latency/energy lanes + cached per-group /
+//!   per-segment partials) that evaluation replays, and [`DeltaPlan`]
+//!   re-costs only provenance-affected lanes between neighboring sweep
+//!   points.
 //! * [`dse`] — the architectural design-space exploration of Fig. 7(c)
-//!   over `[N, V, R_r, R_c, T_r]`, run through the engine.
+//!   over `[N, V, R_r, R_c, T_r]`, run through the engine; sweeps walk the
+//!   grid in Gray order and delta-evaluate by default.
 //!
 //! [`StageCost`]: crate::arch::StageCost
 
@@ -26,12 +32,15 @@ pub mod error;
 pub mod optimizations;
 pub mod plan;
 pub mod schedule;
+pub mod soa;
 
 pub use engine::{BatchEngine, ServiceProfile, SimRequest};
 pub use error::SimError;
 pub use optimizations::OptFlags;
 pub use plan::{
-    build_sharded, evaluate_sharded, ChipPlan, KindTotals, PipelineSegment, PlanItem,
-    ShardedStagePlan, StageKind, StagePlan,
+    build_sharded, evaluate_sharded, reference_evaluate, reference_evaluate_sharded,
+    ChipPlan, KindTotals, PipelineSegment, PlanItem, ShardedStagePlan, StageKind,
+    StagePlan,
 };
+pub use soa::{DeltaPlan, ParamSet, PlanSoA};
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

@@ -45,6 +45,7 @@ use crate::util::parallel::par_map;
 use super::error::SimError;
 use super::optimizations::OptFlags;
 use super::schedule::SimReport;
+use super::soa::{EvalHeader, ParamSet, PlanSoA, SoaEntry};
 
 /// Fraction of MR banks whose per-layer retarget exceeds the EO range and
 /// needs the TO heater (with TED decoupling).
@@ -132,6 +133,48 @@ impl StageKind {
             StageKind::EdgeStream
             | StageKind::WeightStage
             | StageKind::RemoteGather { .. } => None,
+        }
+    }
+
+    /// Cost provenance: which [`crate::config::GhostConfig`] parameters
+    /// this kind's stage cost depends on (directly or through the cost
+    /// helpers it is built from). The delta evaluator
+    /// ([`crate::coordinator::soa::DeltaPlan`]) re-costs a lane between
+    /// neighboring sweep points only when its provenance intersects the
+    /// changed parameter set; `chip_mem_bytes`, `n`, and `v` changes
+    /// rebuild outright (they reshape the partition / plan structure), so
+    /// only the `r_r` / `r_c` / `t_r` bits below ever gate a patch.
+    ///
+    /// Derivation, per kind:
+    /// * `EdgeStream` — `ecu::edge_stage_cost` reads HBM/ECU constants
+    ///   only.
+    /// * `WeightStage` — the HBM stream is config-free, but the retune
+    ///   floor/energy scale with the MR bank counts
+    ///   (`aggregate_mrs`/`combine_mrs`: `v`, `r_r`, `r_c`, `t_r`).
+    /// * `RemoteGather` — link parameters only.
+    /// * `Gather` — lane count `v` (own-vertex bytes, effective-group
+    ///   capping); HBM/buffer constants otherwise.
+    /// * `Reduce` — `v` (balanced effective degree), `r_c` (passes),
+    ///   `r_r` (chunks, VCSEL/PD idle-energy term).
+    /// * `Transform` — `r_r` (input chunks), `t_r` (output chunks / tile),
+    ///   `v` (vector count); GAT attention adds `t_r`, `r_r` passes.
+    /// * `Update` — `t_r` (activation passes), `v` (softmax lanes).
+    /// * `Readout` — `v`/`r_c` (vertex passes), `r_r` (width chunks).
+    pub fn provenance(&self) -> ParamSet {
+        match self {
+            StageKind::EdgeStream | StageKind::RemoteGather { .. } => ParamSet::NONE,
+            StageKind::WeightStage => ParamSet::V
+                .union(ParamSet::R_R)
+                .union(ParamSet::R_C)
+                .union(ParamSet::T_R),
+            StageKind::Gather { .. } => ParamSet::V,
+            StageKind::Reduce | StageKind::Readout => {
+                ParamSet::V.union(ParamSet::R_R).union(ParamSet::R_C)
+            }
+            StageKind::Transform => {
+                ParamSet::V.union(ParamSet::R_R).union(ParamSet::T_R)
+            }
+            StageKind::Update => ParamSet::V.union(ParamSet::T_R),
         }
     }
 }
@@ -252,6 +295,9 @@ pub struct StagePlan {
     pub ops: u64,
     /// Workload bit count (for [`Metrics`]).
     pub bits: u64,
+    /// Structure-of-arrays lowering of `items`, cached at build time —
+    /// what [`evaluate`] actually walks.
+    pub soa: PlanSoA,
 }
 
 impl StagePlan {
@@ -376,6 +422,7 @@ pub fn build(
         }
     }
 
+    let soa = PlanSoA::lower_single(&items, flags.pipelining);
     Ok(StagePlan {
         model: kind,
         dataset: dataset.spec.name.to_string(),
@@ -386,6 +433,7 @@ pub fn build(
         platform_w: crate::arch::platform_power_w(&ctx, flags.dac_sharing),
         ops: workload.total_ops(),
         bits: workload.total_bits(),
+        soa,
     })
 }
 
@@ -428,7 +476,7 @@ fn check_chip_memory(
 /// Cost of staging one layer's weight matrix into the MR banks: the HBM
 /// stream overlapped with (bounded below by) the TO retarget latency, plus
 /// the retune energy.
-fn weight_stage_item(ctx: &ArchContext, layer: &LayerSpec) -> StageCost {
+pub(crate) fn weight_stage_item(ctx: &ArchContext, layer: &LayerSpec) -> StageCost {
     let wc =
         ecu::weight_stage_cost(ctx, (layer.in_dim * layer.out_dim * layer.heads) as u64);
     StageCost {
@@ -439,7 +487,7 @@ fn weight_stage_item(ctx: &ArchContext, layer: &LayerSpec) -> StageCost {
 
 /// Cost of the sum-pool readout over `n_vertices` embeddings of `width`
 /// elements on the reduce arrays.
-fn readout_item(ctx: &ArchContext, n_vertices: usize, width: usize) -> StageCost {
+pub(crate) fn readout_item(ctx: &ArchContext, n_vertices: usize, width: usize) -> StageCost {
     let cfg = &ctx.cfg;
     let passes = ceil_div(n_vertices, cfg.v * cfg.r_c) * ceil_div(width, cfg.r_r);
     StageCost {
@@ -524,6 +572,9 @@ pub struct ShardedStagePlan {
     pub platform_w: f64,
     pub ops: u64,
     pub bits: u64,
+    /// Structure-of-arrays lowering of `chips`, cached at build time —
+    /// what [`evaluate_sharded`] actually walks.
+    pub soa: PlanSoA,
 }
 
 impl ShardedStagePlan {
@@ -715,6 +766,7 @@ pub fn build_sharded(
         chips.push(ChipPlan { phases });
     }
 
+    let soa = PlanSoA::lower_sharded(&chips, flags.pipelining);
     Ok(ShardedStagePlan {
         model: kind,
         dataset: dataset.spec.name.to_string(),
@@ -729,6 +781,7 @@ pub fn build_sharded(
         platform_w: crate::arch::platform_power_w(&ctx, flags.dac_sharing),
         ops: workload.total_ops(),
         bits: workload.total_bits(),
+        soa,
     })
 }
 
@@ -855,11 +908,131 @@ impl EvalAccum {
     }
 }
 
-/// Evaluates a plan: one walk over the items running the pipelined
-/// recurrence per segment and deriving every [`SimReport`] field — the
-/// report's accumulators are queries over the typed stages, no longer
-/// hand-threaded through construction.
+/// Evaluates a plan: an `O(groups)` replay of the cached [`PlanSoA`]
+/// (per-group block sums, per-segment recurrence results), deriving every
+/// [`SimReport`] field. Bit-identical to the retained item walk
+/// ([`reference_evaluate`]) because the cached quantities are exactly the
+/// partials that walk accumulates, consumed in the same order.
 pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
+    let header = EvalHeader {
+        model: plan.model,
+        dataset: plan.dataset.clone(),
+        cfg: plan.cfg,
+        flags: plan.flags,
+        shards: 1,
+        spilled_layer_gathers: plan.spilled_layer_gathers,
+        platform_w: plan.platform_w,
+        ops: plan.ops,
+        bits: plan.bits,
+    };
+    Ok(evaluate_soa(&plan.soa, &header))
+}
+
+/// Evaluates a sharded plan via its cached [`PlanSoA`]: each chip's phases
+/// accumulate locally, the makespan is the barriered recurrence over chips
+/// ([`sim::barriered_lanes`] — phases advance together, each gated by its
+/// slowest chip), and platform power burns on every chip for the whole
+/// makespan. With 1 shard the result is bit-identical to [`evaluate`] of
+/// the single-chip plan (one chip, one phase, identical lanes).
+pub fn evaluate_sharded(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
+    let header = EvalHeader {
+        model: plan.model,
+        dataset: plan.dataset.clone(),
+        cfg: plan.cfg,
+        flags: plan.flags,
+        shards: plan.shards,
+        spilled_layer_gathers: plan.spilled_layer_gathers,
+        platform_w: plan.platform_w,
+        ops: plan.ops,
+        bits: plan.bits,
+    };
+    Ok(evaluate_soa(&plan.soa, &header))
+}
+
+/// The SoA evaluator both public entry points (and [`soa::DeltaPlan`],
+/// which carries its own header) share: walk the lowered entries
+/// `(chip, phase)`-major, replaying cached per-group sums and per-segment
+/// schedule results, then close over the barriered makespan. Infallible —
+/// lowering guarantees uniform four-slot groups, so no ragged-schedule
+/// error can arise.
+///
+/// [`soa::DeltaPlan`]: super::soa::DeltaPlan
+pub(crate) fn evaluate_soa(soa: &PlanSoA, h: &EvalHeader) -> SimReport {
+    let mut acc = EvalAccum::default();
+    let mut phase_busy = Vec::with_capacity(soa.n_chips * soa.n_phases);
+    for c in 0..soa.n_chips {
+        let count_weight_stage = c == 0;
+        for p in 0..soa.n_phases {
+            let mut local = 0.0f64;
+            for entry in &soa.entries[soa.phase_span(c, p)] {
+                match entry {
+                    SoaEntry::Serial { kind, cost } => {
+                        local += cost.latency_s;
+                        acc.dynamic_energy += cost.energy_j;
+                        acc.kinds.add(*kind, cost.latency_s, cost.energy_j);
+                        match kind {
+                            StageKind::WeightStage if count_weight_stage => {
+                                acc.weight_stage_s += cost.latency_s;
+                                acc.weight_stage_energy_j += cost.energy_j;
+                            }
+                            StageKind::Readout => {
+                                acc.aggregate_s += cost.latency_s;
+                                acc.readout_s += cost.latency_s;
+                            }
+                            _ => {}
+                        }
+                    }
+                    SoaEntry::Segment { seg } => {
+                        let m = soa.segs[*seg];
+                        for g in m.group_start..m.group_start + m.n_groups {
+                            acc.dynamic_energy += soa.group_energy[g];
+                            acc.aggregate_s += soa.group_agg[g];
+                            acc.combine_s += soa.group_comb[g];
+                            acc.update_s += soa.group_upd[g];
+                        }
+                        let sched = &soa.scheds[*seg];
+                        local += sched.makespan_s;
+                        // The reference walk's per-kind adds cover
+                        // `stage_busy_s.len()` stages, which is zero for an
+                        // empty segment — mirror that skip exactly.
+                        if m.n_groups > 0 {
+                            for (s, kind) in m.kinds.iter().enumerate() {
+                                acc.kinds.add(
+                                    *kind,
+                                    sched.stage_busy_s[s],
+                                    sched.stage_energy_j[s],
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            phase_busy.push(local);
+        }
+    }
+    let latency = sim::barriered_lanes(&phase_busy, soa.n_phases);
+    // `x * 1.0 == x` bitwise, so the sharded energy formula covers the
+    // single-chip case without a branch.
+    let energy = acc.dynamic_energy + h.platform_w * latency * h.shards as f64;
+    acc.into_report(
+        h.model,
+        h.dataset.clone(),
+        h.cfg,
+        h.flags,
+        latency,
+        energy,
+        h.ops,
+        h.bits,
+        h.spilled_layer_gathers,
+        h.platform_w,
+    )
+}
+
+/// The retained reference evaluator: the original per-item walk over
+/// `plan.items`, running the pipelined recurrence per segment. Kept as the
+/// oracle the SoA replay is pinned against (schedule property tests,
+/// `GHOST_DSE_CHECK`) — [`evaluate`] must reproduce it bit-identically.
+pub fn reference_evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
     let mut acc = EvalAccum::default();
     let mut latency = 0.0f64;
     for item in &plan.items {
@@ -881,14 +1054,10 @@ pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
     ))
 }
 
-/// Evaluates a sharded plan: each chip's phases accumulate locally with
-/// the same per-item walk as [`evaluate`]; the makespan is the barriered
-/// recurrence over chips ([`sim::barriered_makespan`] — phases advance
-/// together, each gated by its slowest chip), and platform power burns on
-/// every chip for the whole makespan. With 1 shard the result is
-/// bit-identical to [`evaluate`] of the single-chip plan (one chip, one
-/// phase, identical items).
-pub fn evaluate_sharded(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
+/// The retained sharded reference evaluator (see [`reference_evaluate`]):
+/// per-chip per-phase item walks closed over
+/// [`sim::barriered_makespan`] — the oracle for [`evaluate_sharded`].
+pub fn reference_evaluate_sharded(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
     let mut acc = EvalAccum::default();
     let mut chip_phase_times: Vec<Vec<f64>> = Vec::with_capacity(plan.chips.len());
     for (ci, chip) in plan.chips.iter().enumerate() {
@@ -986,7 +1155,8 @@ fn build_segment(
 }
 
 /// The pipeline stage costs of one output-vertex group for one layer
-/// (§3.4.2 orderings; see [`segment_kinds`] for the position → kind map).
+/// (§3.4.2 orderings; see [`segment_kinds`] for the position → kind map):
+/// one [`position_cost`] call per slot over the sample-capped group.
 fn group_stage_costs(
     ctx: &ArchContext,
     model: &Model,
@@ -995,41 +1165,69 @@ fn group_stage_costs(
     flags: OptFlags,
     from_dram: bool,
 ) -> [StageCost; PIPELINE_STAGES] {
-    let out_width = layer.out_dim * layer.heads;
     // GraphSAGE-style neighbor sampling caps the effective group shape.
     let grp_eff = effective_group(grp, layer.neighbor_sample, ctx.cfg.v);
+    std::array::from_fn(|s| position_cost(ctx, model, layer, &grp_eff, flags, from_dram, s))
+}
 
-    match (layer.reduction, model.ordering) {
-        (None, _) => {
-            // Pure MLP layer (GIN inner layers): features already on-chip,
-            // transform + update only.
-            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
-            let u = update::update_cost(ctx, layer.activation, out_width, 0)
-                .then(update::writeback_cost(ctx, out_width));
-            [StageCost::ZERO, StageCost::ZERO, t, u]
+/// The cost of one pipeline position of one (sample-capped) group — the
+/// single recompute unit of delta re-costing: when a parameter change
+/// intersects a position's [`StageKind::provenance`],
+/// [`crate::coordinator::soa::DeltaPlan`] re-runs exactly this function
+/// for the affected lanes. `grp_eff` must already be the
+/// [`effective_group`] of the raw group plan (the cap depends only on the
+/// layer and `v`, both fixed across patches).
+pub(crate) fn position_cost(
+    ctx: &ArchContext,
+    model: &Model,
+    layer: &LayerSpec,
+    grp_eff: &OutputGroupPlan,
+    flags: OptFlags,
+    from_dram: bool,
+    pos: usize,
+) -> StageCost {
+    let out_width = layer.out_dim * layer.heads;
+    match (layer.reduction, model.ordering, pos) {
+        // Pure MLP layer (GIN inner layers): features already on-chip,
+        // transform + update only — the gather/reduce slots exist but are
+        // zero-cost.
+        (None, _, 0) | (None, _, 1) => StageCost::ZERO,
+        (None, _, 2) => {
+            combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false)
         }
-        (Some(red), ExecOrdering::AggregateFirst) => {
-            let g = gather_stage(ctx, &grp_eff, layer.in_dim, flags.buffer_partition, from_dram);
-            let r = aggregate::reduce_cost(ctx, &grp_eff, layer.in_dim, red, flags.workload_balancing);
-            let t = combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, true);
-            let u = update::update_cost(ctx, layer.activation, out_width, 0)
-                .then(update::writeback_cost(ctx, out_width));
-            [g, r, t, u]
+        (None, _, _) => update::update_cost(ctx, layer.activation, out_width, 0)
+            .then(update::writeback_cost(ctx, out_width)),
+        (Some(_), ExecOrdering::AggregateFirst, 0) => {
+            gather_stage(ctx, grp_eff, layer.in_dim, flags.buffer_partition, from_dram)
         }
-        (Some(red), ExecOrdering::TransformFirst) => {
-            // GAT: each lane fetches *its own* vertex once (transforms are
-            // independent, §3.4.2), W-transforms it and computes attention
-            // logits; LeakyReLU + neighborhood softmax run in the update
-            // block; the final reduce aggregates the *transformed*
-            // (out_width-dim) neighbor features from the intermediate
-            // buffer.
-            let g = own_vertex_gather(ctx, layer.in_dim, flags.buffer_partition, from_dram);
-            let mut t =
-                combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false);
-            t = t.then(attention_cost(ctx, layer, &grp_eff));
+        (Some(red), ExecOrdering::AggregateFirst, 1) => {
+            aggregate::reduce_cost(ctx, grp_eff, layer.in_dim, red, flags.workload_balancing)
+        }
+        (Some(_), ExecOrdering::AggregateFirst, 2) => {
+            combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, true)
+        }
+        (Some(_), ExecOrdering::AggregateFirst, _) => {
+            update::update_cost(ctx, layer.activation, out_width, 0)
+                .then(update::writeback_cost(ctx, out_width))
+        }
+        // GAT: each lane fetches *its own* vertex once (transforms are
+        // independent, §3.4.2), W-transforms it and computes attention
+        // logits; LeakyReLU + neighborhood softmax run in the update
+        // block; the final reduce aggregates the *transformed*
+        // (out_width-dim) neighbor features from the intermediate buffer.
+        (Some(_), ExecOrdering::TransformFirst, 0) => {
+            own_vertex_gather(ctx, layer.in_dim, flags.buffer_partition, from_dram)
+        }
+        (Some(_), ExecOrdering::TransformFirst, 1) => {
+            combine::transform_cost(ctx, layer.in_dim, out_width, flags.dac_sharing, false)
+                .then(attention_cost(ctx, layer, grp_eff))
+        }
+        (Some(_), ExecOrdering::TransformFirst, 2) => {
             let softmax_elems = grp_eff.total_edges as usize * layer.heads;
-            let u = update::update_cost(ctx, Activation::Softmax, out_width, softmax_elems)
-                .then(update::writeback_cost(ctx, out_width));
+            update::update_cost(ctx, Activation::Softmax, out_width, softmax_elems)
+                .then(update::writeback_cost(ctx, out_width))
+        }
+        (Some(red), ExecOrdering::TransformFirst, _) => {
             // Neighbor fetch of transformed features (on-chip intermediate
             // buffer) + the coherent summation itself.
             let nbr_bytes = grp_eff.distinct_sources as usize * out_width;
@@ -1037,15 +1235,35 @@ fn group_stage_costs(
                 latency_s: ctx.buffers.input_vertices.stream_latency_s(nbr_bytes),
                 energy_j: ctx.buffers.input_vertices.stream_energy_j(nbr_bytes),
             };
-            let r = fetch
-                .then(aggregate::reduce_cost(ctx, &grp_eff, out_width, red, flags.workload_balancing));
-            [g, t, u, r]
+            fetch.then(aggregate::reduce_cost(
+                ctx,
+                grp_eff,
+                out_width,
+                red,
+                flags.workload_balancing,
+            ))
         }
     }
 }
 
+/// Whether a pipeline position's cost is identical for every group of a
+/// segment (no [`OutputGroupPlan`] field feeds it) — the delta evaluator
+/// then computes it once and broadcasts across the lane instead of
+/// looping groups.
+pub(crate) fn position_group_invariant(model: &Model, layer: &LayerSpec, pos: usize) -> bool {
+    match (layer.reduction, model.ordering) {
+        // MLP slots never read the group shape.
+        (None, _) => true,
+        // Transform and update depend only on layer dims.
+        (Some(_), ExecOrdering::AggregateFirst) => pos >= 2,
+        // Only the own-vertex fetch is shape-free; attention, softmax, and
+        // the final reduce all read edge counts.
+        (Some(_), ExecOrdering::TransformFirst) => pos == 0,
+    }
+}
+
 /// Applies a neighbor-sample cap to a group's shape (GraphSAGE §2.1).
-fn effective_group(
+pub(crate) fn effective_group(
     grp: &OutputGroupPlan,
     sample: Option<usize>,
     v: usize,

@@ -708,4 +708,111 @@ mod tests {
             }
         }
     }
+
+    /// The SoA-refactor pin: the lane-replay evaluator behind
+    /// [`plan::evaluate`] / [`plan::evaluate_sharded`] must reproduce the
+    /// retained item-walk reference **bit-identically** — every
+    /// [`SimReport`] field, via `PartialEq` — across all 8 Table-2
+    /// datasets × all 4 models × every Fig. 8 optimization-flag
+    /// combination × shard counts {1, 4}.
+    #[test]
+    fn soa_evaluation_bit_identical_to_reference() {
+        let cfg = GhostConfig::paper_optimal();
+        let presets = OptFlags::fig8_presets();
+        for spec in ALL_DATASETS.iter() {
+            let ds = Dataset::by_name(spec.name).unwrap();
+            let pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+            for kind in ModelKind::ALL {
+                for &flags in &presets {
+                    let ctx = format!("{}/{}/{}", kind.name(), spec.name, flags.label());
+                    let p = plan::build(kind, &ds, &pms, cfg, flags)
+                        .unwrap_or_else(|e| panic!("build failed for {ctx}: {e}"));
+                    let soa = plan::evaluate(&p)
+                        .unwrap_or_else(|e| panic!("SoA eval failed for {ctx}: {e}"));
+                    let reference = plan::reference_evaluate(&p)
+                        .unwrap_or_else(|e| panic!("reference eval failed for {ctx}: {e}"));
+                    assert_eq!(soa, reference, "SoA report diverged for {ctx}");
+                    for shards in [1usize, 4] {
+                        let sp = plan::build_sharded(kind, &ds, &pms, cfg, flags, shards)
+                            .unwrap_or_else(|e| {
+                                panic!("{shards}-shard build failed for {ctx}: {e}")
+                            });
+                        let soa = plan::evaluate_sharded(&sp).unwrap_or_else(|e| {
+                            panic!("{shards}-shard SoA eval failed for {ctx}: {e}")
+                        });
+                        let reference =
+                            plan::reference_evaluate_sharded(&sp).unwrap_or_else(|e| {
+                                panic!("{shards}-shard reference eval failed for {ctx}: {e}")
+                            });
+                        assert_eq!(
+                            soa, reference,
+                            "{shards}-shard SoA report diverged for {ctx}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The delta-evaluation pin: walking a neighbor chain of configs
+    /// through one [`DeltaPlan`] (patching only provenance-affected lanes
+    /// between points) must reproduce a fresh build + reference evaluation
+    /// **bit-identically** at every point — for 1-shard and 4-shard plans.
+    #[test]
+    fn delta_plan_chain_bit_identical_to_fresh_builds() {
+        use super::super::soa::DeltaPlan;
+        use std::sync::Arc;
+        let base = GhostConfig::paper_optimal();
+        // Neighbor chain: non-structural steps (r_r, r_c, t_r), one
+        // structural step (v), then a combined step back — exercising both
+        // the patch path and the rebuild path.
+        let chain = [
+            base,
+            GhostConfig { t_r: 12, ..base },
+            GhostConfig { r_r: 14, t_r: 12, ..base },
+            GhostConfig { r_c: 10, r_r: 14, t_r: 12, ..base },
+            GhostConfig { v: 10, r_c: 10, r_r: 14, t_r: 12, ..base },
+            base,
+        ];
+        let flags = OptFlags::ghost_default();
+        for (kind, name) in
+            [(ModelKind::Gcn, "Cora"), (ModelKind::Gat, "Citeseer"), (ModelKind::Gin, "Mutag")]
+        {
+            let ds = Dataset::by_name(name).unwrap();
+            for shards in [1usize, 4] {
+                let mut dp = DeltaPlan::new(kind, &ds, flags, shards);
+                for cfg in chain {
+                    let pms =
+                        Arc::new(PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n));
+                    dp.retarget(cfg, &pms).unwrap_or_else(|e| {
+                        panic!("retarget failed for {}/{name}: {e}", kind.name())
+                    });
+                    let delta = dp.evaluate().unwrap_or_else(|e| {
+                        panic!("delta eval failed for {}/{name}: {e}", kind.name())
+                    });
+                    let fresh = if shards == 1 {
+                        plan::build(kind, &ds, &pms, cfg, flags)
+                            .and_then(|p| plan::reference_evaluate(&p))
+                    } else {
+                        plan::build_sharded(kind, &ds, &pms, cfg, flags, shards)
+                            .and_then(|p| plan::reference_evaluate_sharded(&p))
+                    }
+                    .unwrap_or_else(|e| {
+                        panic!("fresh eval failed for {}/{name}: {e}", kind.name())
+                    });
+                    assert_eq!(
+                        delta,
+                        fresh,
+                        "delta report diverged for {}/{name} x{shards} at {cfg:?}",
+                        kind.name()
+                    );
+                }
+                // The chain above has exactly two structural boundaries
+                // (the v change and the return to base); everything else
+                // must have gone through the lane-patch path.
+                assert_eq!(dp.rebuilds(), 3, "{}/{name} x{shards}", kind.name());
+                assert_eq!(dp.patches(), 3, "{}/{name} x{shards}", kind.name());
+            }
+        }
+    }
 }

@@ -1,0 +1,650 @@
+//! Structure-of-arrays lowering of the plan IR, cost provenance, and
+//! delta re-costing.
+//!
+//! [`super::plan::build`] lowers every plan into a [`PlanSoA`] at build
+//! time: flat `latency` / `energy` lanes (segment-major, group-major,
+//! position-minor — mirroring the flat-CSR `PartitionMatrix` layout), the
+//! per-group block sums and per-segment schedule results the evaluator
+//! consumes, and a walk directory (`SoaEntry`) in schedule order.
+//! Evaluation ([`super::plan::evaluate`]) is then an `O(groups)` replay of
+//! cached quantities instead of an `O(slots)` re-derivation — and, because
+//! the cached values are exactly the per-group / per-segment partials the
+//! reference item walk accumulates, the replay is bit-identical to it.
+//!
+//! [`ParamSet`] records *cost provenance*: which [`GhostConfig`] parameters
+//! each [`StageKind`]'s cost depends on. [`DeltaPlan`] exploits it for the
+//! DSE sweep: between neighboring grid points it re-costs only the lanes
+//! whose provenance intersects the changed parameters (patching the
+//! derived sums and re-running the recurrence for affected segments)
+//! instead of rebuilding the plan — a full rebuild happens only when a
+//! structural parameter (`n`, `v`, or the chip memory budget) changes.
+
+use std::sync::Arc;
+
+use crate::arch::{ArchContext, StageCost};
+use crate::config::GhostConfig;
+use crate::gnn::models::{Model, ModelKind};
+use crate::graph::datasets::Dataset;
+use crate::graph::partition::{OutputGroupPlan, PartitionMatrix, ShardPlan};
+use crate::sim::{self, QuadSched};
+
+use super::error::SimError;
+use super::optimizations::OptFlags;
+use super::plan::{self, Block, ChipPlan, PlanItem, StageKind, PIPELINE_STAGES};
+use super::schedule::SimReport;
+
+/// A set of [`GhostConfig`] parameters, as a bitmask — the provenance
+/// vocabulary of the delta evaluator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ParamSet(u8);
+
+impl ParamSet {
+    /// The empty set: a cost that no config parameter influences.
+    pub const NONE: ParamSet = ParamSet(0);
+    /// Edge-control-unit count `N`.
+    pub const N: ParamSet = ParamSet(1);
+    /// Gather/reduce lane count `V`.
+    pub const V: ParamSet = ParamSet(1 << 1);
+    /// Reduce-array rows (wavelengths) `R_r`.
+    pub const R_R: ParamSet = ParamSet(1 << 2);
+    /// Reduce-array columns (coherent MRs) `R_c`.
+    pub const R_C: ParamSet = ParamSet(1 << 3);
+    /// Transform-array rows `T_r`.
+    pub const T_R: ParamSet = ParamSet(1 << 4);
+    /// Per-chip memory budget (not an arch lattice axis, but it gates the
+    /// footprint check, so a change forces a rebuild).
+    pub const MEM: ParamSet = ParamSet(1 << 5);
+    /// Parameters whose change invalidates the plan *structure* — the
+    /// partitioning (and with it every group shape) is keyed on `(v, n)`,
+    /// and the memory budget gates whether the plan exists at all. A delta
+    /// across any of these rebuilds instead of patching.
+    pub const STRUCTURAL: ParamSet = ParamSet(Self::N.0 | Self::V.0 | Self::MEM.0);
+
+    /// Set union.
+    pub const fn union(self, other: ParamSet) -> ParamSet {
+        ParamSet(self.0 | other.0)
+    }
+
+    /// Whether the two sets share any parameter.
+    pub const fn intersects(self, other: ParamSet) -> bool {
+        self.0 & other.0 != 0
+    }
+
+    /// Whether no parameter is in the set.
+    pub const fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// The set of parameters on which two configurations differ.
+    pub fn diff(a: &GhostConfig, b: &GhostConfig) -> ParamSet {
+        let mut d = ParamSet::NONE;
+        if a.n != b.n {
+            d = d.union(ParamSet::N);
+        }
+        if a.v != b.v {
+            d = d.union(ParamSet::V);
+        }
+        if a.r_r != b.r_r {
+            d = d.union(ParamSet::R_R);
+        }
+        if a.r_c != b.r_c {
+            d = d.union(ParamSet::R_C);
+        }
+        if a.t_r != b.t_r {
+            d = d.union(ParamSet::T_R);
+        }
+        if a.chip_mem_bytes != b.chip_mem_bytes {
+            d = d.union(ParamSet::MEM);
+        }
+        d
+    }
+}
+
+/// One walk entry of the lowered plan, in schedule order.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum SoaEntry {
+    /// A serial stage; the cost is stored inline (and patched in place by
+    /// [`DeltaPlan`]).
+    Serial { kind: StageKind, cost: StageCost },
+    /// A pipelined segment, by index into [`PlanSoA::segs`].
+    Segment { seg: usize },
+}
+
+/// Per-segment directory entry: where the segment's slots and groups live
+/// in the flat lanes, plus the tags delta re-costing needs.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SegMeta {
+    /// Graph index within the dataset.
+    pub graph: u32,
+    /// Layer index within the model.
+    pub layer: u32,
+    /// Owning chip (0 for single-chip plans).
+    pub chip: u32,
+    /// Stage kind at each pipeline position.
+    pub kinds: [StageKind; PIPELINE_STAGES],
+    /// First slot of this segment in the `latency` / `energy` lanes.
+    pub slot_start: usize,
+    /// First entry of this segment in the per-group derived lanes.
+    pub group_start: usize,
+    /// Group count (slots span `n_groups * PIPELINE_STAGES`).
+    pub n_groups: usize,
+}
+
+/// The structure-of-arrays mirror of a plan, cached at build time.
+#[derive(Debug, Clone)]
+pub struct PlanSoA {
+    /// Walk entries in schedule order, flattened `(chip, phase)`-major for
+    /// sharded plans.
+    pub(crate) entries: Vec<SoaEntry>,
+    /// Entry-index boundaries of each `(chip, phase)` span, row-major:
+    /// chip `c`'s phase `p` covers
+    /// `entries[phase_ptr[c * n_phases + p]..phase_ptr[c * n_phases + p + 1]]`.
+    pub(crate) phase_ptr: Vec<usize>,
+    pub(crate) n_chips: usize,
+    pub(crate) n_phases: usize,
+    /// Flat per-slot latency lane, segment-major then group-major then
+    /// position-minor (`PIPELINE_STAGES` slots per group).
+    pub(crate) latency: Vec<f64>,
+    /// Flat per-slot dynamic-energy lane, same layout.
+    pub(crate) energy: Vec<f64>,
+    /// Derived per-group sums, indexed by a global group index
+    /// (`SegMeta::group_start`): total dynamic energy of the group's four
+    /// slots, and its latency attributed to each Fig. 9 block — the exact
+    /// partials the reference evaluator accumulates per group.
+    pub(crate) group_energy: Vec<f64>,
+    pub(crate) group_agg: Vec<f64>,
+    pub(crate) group_comb: Vec<f64>,
+    pub(crate) group_upd: Vec<f64>,
+    /// Derived per-segment schedule results for the plan's pipelining
+    /// flag (the recurrence only re-runs when a lane of the segment
+    /// changes).
+    pub(crate) scheds: Vec<QuadSched>,
+    /// Segment directory, in schedule order.
+    pub(crate) segs: Vec<SegMeta>,
+}
+
+impl PlanSoA {
+    fn empty() -> PlanSoA {
+        PlanSoA {
+            entries: Vec::new(),
+            phase_ptr: vec![0],
+            n_chips: 0,
+            n_phases: 0,
+            latency: Vec::new(),
+            energy: Vec::new(),
+            group_energy: Vec::new(),
+            group_agg: Vec::new(),
+            group_comb: Vec::new(),
+            group_upd: Vec::new(),
+            scheds: Vec::new(),
+            segs: Vec::new(),
+        }
+    }
+
+    /// Lowers a single-chip item list: one chip, one phase.
+    pub(crate) fn lower_single(items: &[PlanItem], pipelining: bool) -> PlanSoA {
+        let mut soa = PlanSoA::empty();
+        soa.n_chips = 1;
+        soa.n_phases = 1;
+        soa.push_items(items, 0, pipelining);
+        soa.phase_ptr.push(soa.entries.len());
+        soa
+    }
+
+    /// Lowers a sharded plan's per-chip phased item lists. Every chip must
+    /// carry the same phase count (guaranteed by `build_sharded`).
+    pub(crate) fn lower_sharded(chips: &[ChipPlan], pipelining: bool) -> PlanSoA {
+        let mut soa = PlanSoA::empty();
+        soa.n_chips = chips.len();
+        soa.n_phases = chips.first().map(|c| c.phases.len()).unwrap_or(0);
+        for (ci, chip) in chips.iter().enumerate() {
+            debug_assert_eq!(chip.phases.len(), soa.n_phases);
+            for phase in &chip.phases {
+                soa.push_items(phase, ci as u32, pipelining);
+                soa.phase_ptr.push(soa.entries.len());
+            }
+        }
+        soa
+    }
+
+    fn push_items(&mut self, items: &[PlanItem], chip: u32, pipelining: bool) {
+        for item in items {
+            match item {
+                PlanItem::Serial { kind, cost } => {
+                    self.entries.push(SoaEntry::Serial { kind: *kind, cost: *cost });
+                }
+                PlanItem::Pipeline(seg) => {
+                    let slot_start = self.latency.len();
+                    let group_start = self.group_energy.len();
+                    let n_groups = seg.n_groups();
+                    for c in &seg.costs {
+                        self.latency.push(c.latency_s);
+                        self.energy.push(c.energy_j);
+                    }
+                    let new_groups = group_start + n_groups;
+                    self.group_energy.resize(new_groups, 0.0);
+                    self.group_agg.resize(new_groups, 0.0);
+                    self.group_comb.resize(new_groups, 0.0);
+                    self.group_upd.resize(new_groups, 0.0);
+                    let idx = self.segs.len();
+                    self.segs.push(SegMeta {
+                        graph: seg.graph,
+                        layer: seg.layer,
+                        chip,
+                        kinds: seg.kinds,
+                        slot_start,
+                        group_start,
+                        n_groups,
+                    });
+                    self.scheds.push(QuadSched::default());
+                    self.entries.push(SoaEntry::Segment { seg: idx });
+                    self.rederive_segment(idx, pipelining);
+                }
+            }
+        }
+    }
+
+    /// The entry range of one `(chip, phase)` span.
+    pub(crate) fn phase_span(&self, chip: usize, phase: usize) -> std::ops::Range<usize> {
+        let i = chip * self.n_phases + phase;
+        self.phase_ptr[i]..self.phase_ptr[i + 1]
+    }
+
+    /// Recomputes one segment's derived state from its lanes: the
+    /// per-group block sums (in the reference evaluator's exact
+    /// accumulation order) and the pipelined / sequential recurrence.
+    pub(crate) fn rederive_segment(&mut self, idx: usize, pipelining: bool) {
+        let seg = self.segs[idx];
+        for g in 0..seg.n_groups {
+            let base = seg.slot_start + g * PIPELINE_STAGES;
+            let mut group_energy = 0.0f64;
+            let mut agg = 0.0f64;
+            let mut comb = 0.0f64;
+            let mut upd = 0.0f64;
+            for s in 0..PIPELINE_STAGES {
+                group_energy += self.energy[base + s];
+                match seg.kinds[s].block() {
+                    Some(Block::Aggregate) => agg += self.latency[base + s],
+                    Some(Block::Combine) => comb += self.latency[base + s],
+                    Some(Block::Update) => upd += self.latency[base + s],
+                    None => {}
+                }
+            }
+            self.group_energy[seg.group_start + g] = group_energy;
+            self.group_agg[seg.group_start + g] = agg;
+            self.group_comb[seg.group_start + g] = comb;
+            self.group_upd[seg.group_start + g] = upd;
+        }
+        let slots = seg.slot_start..seg.slot_start + seg.n_groups * PIPELINE_STAGES;
+        self.scheds[idx] = if pipelining {
+            sim::pipelined_quads(&self.latency[slots.clone()], &self.energy[slots])
+        } else {
+            sim::sequential_quads(&self.latency[slots.clone()], &self.energy[slots])
+        };
+    }
+}
+
+/// The non-lane half of an evaluated plan — everything
+/// [`super::plan::evaluate`] needs besides the [`PlanSoA`] itself.
+/// [`DeltaPlan`] keeps one alongside its lanes so patched plans evaluate
+/// without materializing a `StagePlan`.
+#[derive(Debug, Clone)]
+pub(crate) struct EvalHeader {
+    pub model: ModelKind,
+    pub dataset: String,
+    pub cfg: GhostConfig,
+    pub flags: OptFlags,
+    pub shards: usize,
+    pub spilled_layer_gathers: usize,
+    pub platform_w: f64,
+    pub ops: u64,
+    pub bits: u64,
+}
+
+/// Current lowered state of a [`DeltaPlan`].
+#[derive(Debug)]
+struct DeltaState {
+    header: EvalHeader,
+    soa: PlanSoA,
+    /// `Some` iff `shards > 1`.
+    shard_plan: Option<ShardPlan>,
+    /// Effective (neighbor-sample-capped) group plans, aligned with the
+    /// global group index of `soa` — the per-group inputs a lane recompute
+    /// needs. Capping depends only on `(v, layer)`, both fixed within one
+    /// lowered state.
+    eff_groups: Vec<OutputGroupPlan>,
+}
+
+/// Incrementally re-costed plan for sweeps that visit many configurations
+/// of one `(model, dataset, flags, shards)` workload.
+///
+/// [`DeltaPlan::retarget`] moves the plan to a new configuration: if only
+/// non-structural parameters (`r_r`, `r_c`, `t_r`) changed, it re-costs
+/// exactly the lanes whose [`StageKind::provenance`] intersects the
+/// changed set — through the same cost helpers construction uses, so the
+/// patched lanes are bit-identical to a fresh build's — and re-derives the
+/// affected segments' sums and recurrences. Structural changes (`n`, `v`,
+/// memory budget) rebuild from scratch.
+#[derive(Debug)]
+pub struct DeltaPlan<'a> {
+    kind: ModelKind,
+    flags: OptFlags,
+    shards: usize,
+    dataset: &'a Dataset,
+    model: Model,
+    partitions: Option<Arc<Vec<PartitionMatrix>>>,
+    state: Option<DeltaState>,
+    rebuilds: usize,
+    patches: usize,
+}
+
+impl<'a> DeltaPlan<'a> {
+    /// Creates an untargeted delta plan; call [`Self::retarget`] before
+    /// [`Self::evaluate`]. `shards == 1` builds single-chip plans (the
+    /// same path as `plan::build`), larger counts build sharded plans.
+    pub fn new(
+        kind: ModelKind,
+        dataset: &'a Dataset,
+        flags: OptFlags,
+        shards: usize,
+    ) -> DeltaPlan<'a> {
+        DeltaPlan {
+            kind,
+            flags,
+            shards,
+            dataset,
+            model: Model::for_dataset(kind, &dataset.spec),
+            partitions: None,
+            state: None,
+            rebuilds: 0,
+            patches: 0,
+        }
+    }
+
+    /// Full rebuilds performed so far (first target included).
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Incremental lane patches performed so far.
+    pub fn patches(&self) -> usize {
+        self.patches
+    }
+
+    /// Moves the plan to `cfg`. `partitions` must be the `(cfg.v, cfg.n)`
+    /// partition set of the dataset (the engine's cache hands these out);
+    /// it is only consulted when a structural change forces a rebuild.
+    pub fn retarget(
+        &mut self,
+        cfg: GhostConfig,
+        partitions: &Arc<Vec<PartitionMatrix>>,
+    ) -> Result<(), SimError> {
+        let rebuild = match &self.state {
+            None => true,
+            Some(st) => {
+                let diff = ParamSet::diff(&st.header.cfg, &cfg);
+                if diff.is_empty() {
+                    return Ok(());
+                }
+                diff.intersects(ParamSet::STRUCTURAL)
+            }
+        };
+        if rebuild {
+            self.rebuild(cfg, partitions)
+        } else {
+            self.patch(cfg);
+            Ok(())
+        }
+    }
+
+    /// Evaluates the current target. Bit-identical to building a fresh
+    /// plan at the same configuration and evaluating it (pinned by the
+    /// schedule property tests and the DSE debug-check mode).
+    pub fn evaluate(&self) -> Result<SimReport, SimError> {
+        let st = self.state.as_ref().ok_or_else(|| {
+            SimError::InvalidConfig("DeltaPlan::evaluate before retarget".into())
+        })?;
+        Ok(plan::evaluate_soa(&st.soa, &st.header))
+    }
+
+    fn rebuild(
+        &mut self,
+        cfg: GhostConfig,
+        partitions: &Arc<Vec<PartitionMatrix>>,
+    ) -> Result<(), SimError> {
+        self.state = None;
+        self.rebuilds += 1;
+        let (header, soa, shard_plan) = if self.shards == 1 {
+            let p = plan::build(self.kind, self.dataset, partitions, cfg, self.flags)?;
+            let header = EvalHeader {
+                model: p.model,
+                dataset: p.dataset,
+                cfg: p.cfg,
+                flags: p.flags,
+                shards: 1,
+                spilled_layer_gathers: p.spilled_layer_gathers,
+                platform_w: p.platform_w,
+                ops: p.ops,
+                bits: p.bits,
+            };
+            (header, p.soa, None)
+        } else {
+            let p = plan::build_sharded(
+                self.kind,
+                self.dataset,
+                partitions,
+                cfg,
+                self.flags,
+                self.shards,
+            )?;
+            let header = EvalHeader {
+                model: p.model,
+                dataset: p.dataset,
+                cfg: p.cfg,
+                flags: p.flags,
+                shards: p.shards,
+                spilled_layer_gathers: p.spilled_layer_gathers,
+                platform_w: p.platform_w,
+                ops: p.ops,
+                bits: p.bits,
+            };
+            (header, p.soa, Some(p.shard_plan))
+        };
+        let mut eff_groups = Vec::with_capacity(soa.group_energy.len());
+        for seg in &soa.segs {
+            let layer = &self.model.layers[seg.layer as usize];
+            let pm = &partitions[seg.graph as usize];
+            let groups: &[OutputGroupPlan] = match &shard_plan {
+                None => &pm.groups,
+                Some(sp) => &pm.groups[sp.group_range(seg.graph as usize, seg.chip as usize)],
+            };
+            debug_assert_eq!(groups.len(), seg.n_groups);
+            for grp in groups {
+                eff_groups.push(plan::effective_group(grp, layer.neighbor_sample, cfg.v));
+            }
+        }
+        self.partitions = Some(Arc::clone(partitions));
+        self.state = Some(DeltaState { header, soa, shard_plan, eff_groups });
+        Ok(())
+    }
+
+    /// Re-costs only what the parameter delta touches; `diff` is known to
+    /// be non-structural here (no `n` / `v` / memory change), so group
+    /// shapes, spill decisions, phase structure, and workload totals are
+    /// all unchanged.
+    fn patch(&mut self, cfg: GhostConfig) {
+        self.patches += 1;
+        let st = self.state.as_mut().expect("patch requires a lowered state");
+        let diff = ParamSet::diff(&st.header.cfg, &cfg);
+        let ctx = ArchContext::paper(cfg);
+        let soa = &mut st.soa;
+
+        // Serial stages. Weight staging and readout are the only serial
+        // kinds with non-empty non-structural provenance; both recompute
+        // from walk-order counters (weight stages appear in layer order
+        // and readouts in graph order within each chip, by construction).
+        let patch_ws = StageKind::WeightStage.provenance().intersects(diff);
+        let patch_ro = StageKind::Readout.provenance().intersects(diff);
+        if patch_ws || patch_ro {
+            let ro_width =
+                self.model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
+            let partitions =
+                self.partitions.as_ref().expect("patch requires partitions");
+            for c in 0..soa.n_chips {
+                let chip_entries =
+                    soa.phase_ptr[c * soa.n_phases]..soa.phase_ptr[(c + 1) * soa.n_phases];
+                let mut li = 0usize;
+                let mut ro_gi = 0usize;
+                for e in &mut soa.entries[chip_entries] {
+                    match e {
+                        SoaEntry::Serial { kind: StageKind::WeightStage, cost } => {
+                            if patch_ws {
+                                *cost =
+                                    plan::weight_stage_item(&ctx, &self.model.layers[li]);
+                            }
+                            li += 1;
+                        }
+                        SoaEntry::Serial { kind: StageKind::Readout, cost } => {
+                            if patch_ro {
+                                let pm = &partitions[ro_gi];
+                                let n_vertices = match &st.shard_plan {
+                                    None => pm.n_vertices,
+                                    Some(sp) => pm
+                                        .group_range_vertices(sp.group_range(ro_gi, c)),
+                                };
+                                *cost = plan::readout_item(&ctx, n_vertices, ro_width);
+                            }
+                            ro_gi += 1;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+
+        // Pipelined segments: re-cost each position whose provenance
+        // intersects the delta, then re-derive the segment's sums and
+        // recurrence once. Group-invariant positions cost one helper call
+        // broadcast across the lane.
+        for idx in 0..soa.segs.len() {
+            let seg = soa.segs[idx];
+            if seg.n_groups == 0 {
+                continue;
+            }
+            let layer = &self.model.layers[seg.layer as usize];
+            let from_dram = match seg.kinds[0] {
+                StageKind::Gather { from_dram } => from_dram,
+                _ => false,
+            };
+            let mut changed = false;
+            for s in 0..PIPELINE_STAGES {
+                if !seg.kinds[s].provenance().intersects(diff) {
+                    continue;
+                }
+                changed = true;
+                if plan::position_group_invariant(&self.model, layer, s) {
+                    let c = plan::position_cost(
+                        &ctx,
+                        &self.model,
+                        layer,
+                        &st.eff_groups[seg.group_start],
+                        self.flags,
+                        from_dram,
+                        s,
+                    );
+                    for g in 0..seg.n_groups {
+                        let slot = seg.slot_start + g * PIPELINE_STAGES + s;
+                        soa.latency[slot] = c.latency_s;
+                        soa.energy[slot] = c.energy_j;
+                    }
+                } else {
+                    for g in 0..seg.n_groups {
+                        let c = plan::position_cost(
+                            &ctx,
+                            &self.model,
+                            layer,
+                            &st.eff_groups[seg.group_start + g],
+                            self.flags,
+                            from_dram,
+                            s,
+                        );
+                        let slot = seg.slot_start + g * PIPELINE_STAGES + s;
+                        soa.latency[slot] = c.latency_s;
+                        soa.energy[slot] = c.energy_j;
+                    }
+                }
+            }
+            if changed {
+                soa.rederive_segment(idx, self.flags.pipelining);
+            }
+        }
+
+        st.header.cfg = cfg;
+        st.header.platform_w = crate::arch::platform_power_w(&ctx, self.flags.dac_sharing);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_set_diff_names_exactly_the_changed_axes() {
+        let a = GhostConfig::paper_optimal();
+        assert!(ParamSet::diff(&a, &a).is_empty());
+        let b = GhostConfig { t_r: a.t_r + 1, ..a };
+        let d = ParamSet::diff(&a, &b);
+        assert!(d.intersects(ParamSet::T_R));
+        assert!(!d.intersects(ParamSet::STRUCTURAL));
+        let c = GhostConfig { v: a.v + 1, chip_mem_bytes: a.chip_mem_bytes * 2, ..a };
+        let d = ParamSet::diff(&a, &c);
+        assert!(d.intersects(ParamSet::V) && d.intersects(ParamSet::MEM));
+        assert!(d.intersects(ParamSet::STRUCTURAL));
+    }
+
+    /// The provenance-targeted patch pin: after one `t_r`-only retarget,
+    /// every lane, derived sum, cached recurrence, and serial cost of the
+    /// patched [`PlanSoA`] is bit-identical to a from-scratch build at the
+    /// new configuration — not just the evaluated report.
+    #[test]
+    fn one_lane_patch_matches_a_full_rebuild() {
+        let base = GhostConfig::paper_optimal();
+        let stepped = GhostConfig { t_r: 12, ..base };
+        let flags = OptFlags::ghost_default();
+        let ds = Dataset::by_name("Cora").unwrap();
+        let pms = Arc::new(PartitionMatrix::build_all(&ds.graphs, base.v, base.n));
+
+        let mut dp = DeltaPlan::new(ModelKind::Gat, &ds, flags, 1);
+        dp.retarget(base, &pms).unwrap();
+        dp.retarget(stepped, &pms).unwrap();
+        assert_eq!(dp.rebuilds(), 1, "only the first target may rebuild");
+        assert_eq!(dp.patches(), 1, "the t_r step must go through the patch path");
+
+        let fresh = plan::build(ModelKind::Gat, &ds, &pms, stepped, flags).unwrap();
+        let patched = &dp.state.as_ref().unwrap().soa;
+        assert_eq!(patched.latency, fresh.soa.latency, "latency lanes diverged");
+        assert_eq!(patched.energy, fresh.soa.energy, "energy lanes diverged");
+        assert_eq!(patched.group_energy, fresh.soa.group_energy);
+        assert_eq!(patched.group_agg, fresh.soa.group_agg);
+        assert_eq!(patched.group_comb, fresh.soa.group_comb);
+        assert_eq!(patched.group_upd, fresh.soa.group_upd);
+        assert_eq!(patched.scheds, fresh.soa.scheds, "cached recurrences diverged");
+        for (i, (a, b)) in patched.entries.iter().zip(&fresh.soa.entries).enumerate() {
+            match (a, b) {
+                (
+                    SoaEntry::Serial { kind: ka, cost: ca },
+                    SoaEntry::Serial { kind: kb, cost: cb },
+                ) => {
+                    assert_eq!(ka, kb, "entry {i} kind");
+                    assert_eq!(ca.latency_s, cb.latency_s, "entry {i} ({ka:?}) latency");
+                    assert_eq!(ca.energy_j, cb.energy_j, "entry {i} ({ka:?}) energy");
+                }
+                (SoaEntry::Segment { seg: sa }, SoaEntry::Segment { seg: sb }) => {
+                    assert_eq!(sa, sb, "entry {i} segment index")
+                }
+                _ => panic!("entry {i}: walk shapes diverged"),
+            }
+        }
+        assert_eq!(dp.evaluate().unwrap(), plan::reference_evaluate(&fresh).unwrap());
+    }
+}

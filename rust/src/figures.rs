@@ -27,17 +27,15 @@ pub fn all_pairs() -> Vec<(ModelKind, &'static str)> {
 /// Runs the GHOST simulator on every workload with the given flags,
 /// fanned out in parallel through the process-wide [`BatchEngine`] (each
 /// dataset is generated and partitioned once per `(dataset, V, N)` for the
-/// whole process, however many figures ask for it).
-pub fn ghost_reports(cfg: GhostConfig, flags: OptFlags) -> Vec<SimReport> {
+/// whole process, however many figures ask for it). The first failing
+/// workload aborts the batch with its [`SimError`] — figures never panic
+/// on an unsimulatable configuration.
+pub fn ghost_reports(cfg: GhostConfig, flags: OptFlags) -> Result<Vec<SimReport>, SimError> {
     let reqs: Vec<SimRequest> = all_pairs()
         .into_iter()
         .map(|(kind, ds)| SimRequest::new(kind, ds, cfg, flags))
         .collect();
-    BatchEngine::global()
-        .run_batch(&reqs)
-        .into_iter()
-        .map(|r| r.expect("table-2 workload simulates"))
-        .collect()
+    BatchEngine::global().run_batch(&reqs).into_iter().collect()
 }
 
 // ---------------------------------------------------------------- Table 1
@@ -78,36 +76,37 @@ pub struct Table2Row {
     pub n_graphs: usize,
 }
 
-pub fn table2() -> Vec<Table2Row> {
+pub fn table2() -> Result<Vec<Table2Row>, SimError> {
     let engine = BatchEngine::global();
     ALL_DATASETS
         .iter()
         .map(|spec| {
-            let d = engine.dataset(spec.name).expect("table-2 dataset");
-            Table2Row {
+            let d = engine.dataset(spec.name)?;
+            Ok(Table2Row {
                 name: spec.name,
                 avg_nodes: d.total_vertices() as f64 / d.graphs.len() as f64,
                 avg_edges: d.total_edges() as f64 / d.graphs.len() as f64,
                 n_features: spec.n_features,
                 n_labels: spec.n_labels,
                 n_graphs: spec.n_graphs,
-            }
+            })
         })
         .collect()
 }
 
-pub fn print_table2() {
+pub fn print_table2() -> Result<(), SimError> {
     println!("Table 2: graph dataset parameters (generated)");
     println!(
         "{:<12} {:>10} {:>10} {:>10} {:>8} {:>8}",
         "Dataset", "#Nodes", "#Edges", "#Feat", "#Labels", "#Graphs"
     );
-    for r in table2() {
+    for r in table2()? {
         println!(
             "{:<12} {:>10.1} {:>10.1} {:>10} {:>8} {:>8}",
             r.name, r.avg_nodes, r.avg_edges, r.n_features, r.n_labels, r.n_graphs
         );
     }
+    Ok(())
 }
 
 // -------------------------------------------------------- dataset catalog
@@ -177,15 +176,15 @@ pub struct Fig8Row {
     pub mean: f64,
 }
 
-pub fn fig8(cfg: GhostConfig) -> Vec<Fig8Row> {
+pub fn fig8(cfg: GhostConfig) -> Result<Vec<Fig8Row>, SimError> {
     // The engine's partition cache makes the 9 preset evaluations share
     // one partitioning per workload (offline preprocessing is
     // flag-independent, so every preset hits the same (dataset, V, N) key).
-    let baseline: Vec<SimReport> = ghost_reports(cfg, OptFlags::baseline());
+    let baseline: Vec<SimReport> = ghost_reports(cfg, OptFlags::baseline())?;
     OptFlags::fig8_presets()
         .into_iter()
         .map(|flags| {
-            let reports = ghost_reports(cfg, flags);
+            let reports = ghost_reports(cfg, flags)?;
             let per_workload: Vec<(String, String, f64)> = reports
                 .iter()
                 .zip(&baseline)
@@ -198,16 +197,17 @@ pub fn fig8(cfg: GhostConfig) -> Vec<Fig8Row> {
                 })
                 .collect();
             let mean = geomean(per_workload.iter().map(|(_, _, e)| *e));
-            Fig8Row { label: flags.label(), per_workload, mean }
+            Ok(Fig8Row { label: flags.label(), per_workload, mean })
         })
         .collect()
 }
 
-pub fn print_fig8(cfg: GhostConfig) {
+pub fn print_fig8(cfg: GhostConfig) -> Result<(), SimError> {
     println!("Fig. 8: normalized energy per optimization combination (baseline = 1.0)");
-    for row in fig8(cfg) {
+    for row in fig8(cfg)? {
         println!("{:<22} mean {:.3}  (reduction {:.2}x)", row.label, row.mean, 1.0 / row.mean);
     }
+    Ok(())
 }
 
 // ----------------------------------------------------------------- Fig. 9
@@ -234,8 +234,8 @@ pub struct Fig9Row {
     pub total_busy_s: f64,
 }
 
-pub fn fig9(cfg: GhostConfig) -> Vec<Fig9Row> {
-    ghost_reports(cfg, OptFlags::ghost_default())
+pub fn fig9(cfg: GhostConfig) -> Result<Vec<Fig9Row>, SimError> {
+    Ok(ghost_reports(cfg, OptFlags::ghost_default())?
         .into_iter()
         .map(|r| {
             let (a, c, u) = r.breakdown();
@@ -254,11 +254,11 @@ pub fn fig9(cfg: GhostConfig) -> Vec<Fig9Row> {
                 total_busy_s,
             }
         })
-        .collect()
+        .collect())
 }
 
-pub fn print_fig9(cfg: GhostConfig) {
-    let rows = fig9(cfg);
+pub fn print_fig9(cfg: GhostConfig) -> Result<(), SimError> {
+    let rows = fig9(cfg)?;
     println!("Fig. 9: latency breakdown per block");
     println!("{:<10} {:<12} {:>10} {:>10} {:>10}", "Model", "Dataset", "Aggregate", "Combine", "Update");
     for r in &rows {
@@ -293,6 +293,7 @@ pub fn print_fig9(cfg: GhostConfig) {
             k.remote_gather.latency_s * 1e6,
         );
     }
+    Ok(())
 }
 
 // ----------------------------------------------------- sharded execution
@@ -400,15 +401,14 @@ pub struct ComparisonRow {
 /// Per-workload metrics for GHOST and every supporting platform.
 pub fn comparison_detail(
     cfg: GhostConfig,
-) -> Vec<(ModelKind, &'static str, Metrics, Vec<(&'static str, Metrics)>)> {
+) -> Result<Vec<(ModelKind, &'static str, Metrics, Vec<(&'static str, Metrics)>)>, SimError> {
     let engine = BatchEngine::global();
     all_pairs()
         .into_iter()
         .map(|(kind, ds)| {
-            let dataset = engine.dataset(ds).expect("table-2 dataset");
+            let dataset = engine.dataset(ds)?;
             let ghost = engine
-                .run(&SimRequest::new(kind, ds, cfg, OptFlags::ghost_default()))
-                .expect("table-2 workload simulates")
+                .run(&SimRequest::new(kind, ds, cfg, OptFlags::ghost_default()))?
                 .metrics;
             let model = Model::for_dataset(kind, &dataset.spec);
             let w = Workload::characterize(&model, &dataset);
@@ -417,15 +417,15 @@ pub fn comparison_detail(
                 .filter(|p| supports(p.name, kind))
                 .map(|p| (p.name, run_baseline(p, &w)))
                 .collect();
-            (kind, ds, ghost, rows)
+            Ok((kind, ds, ghost, rows))
         })
         .collect()
 }
 
 /// The Figs. 10–12 summary: geomean ratios per platform.
-pub fn comparison_summary(cfg: GhostConfig) -> Vec<ComparisonRow> {
-    let detail = comparison_detail(cfg);
-    PLATFORMS
+pub fn comparison_summary(cfg: GhostConfig) -> Result<Vec<ComparisonRow>, SimError> {
+    let detail = comparison_detail(cfg)?;
+    Ok(PLATFORMS
         .iter()
         .map(|p| {
             let mut gops = Vec::new();
@@ -446,21 +446,22 @@ pub fn comparison_summary(cfg: GhostConfig) -> Vec<ComparisonRow> {
                 n_workloads: gops.len(),
             }
         })
-        .collect()
+        .collect())
 }
 
-pub fn print_comparison(cfg: GhostConfig) {
+pub fn print_comparison(cfg: GhostConfig) -> Result<(), SimError> {
     println!("Figs. 10-12: GHOST vs platforms (geomean ratios, >1 = GHOST wins)");
     println!(
         "{:<10} {:>12} {:>12} {:>14} {:>6}",
         "Platform", "GOPS ratio", "EPB ratio", "EPB/GOPS", "N"
     );
-    for r in comparison_summary(cfg) {
+    for r in comparison_summary(cfg)? {
         println!(
             "{:<10} {:>11.1}x {:>11.1}x {:>13.2e} {:>6}",
             r.platform, r.gops_ratio, r.epb_ratio, r.epb_gops_ratio, r.n_workloads
         );
     }
+    Ok(())
 }
 
 // ------------------------------------------------------- JSON serializers
@@ -499,9 +500,9 @@ pub fn table1_json() -> Json {
 }
 
 /// Table 2 rows as JSON.
-pub fn table2_json() -> Json {
-    Json::Arr(
-        table2()
+pub fn table2_json() -> Result<Json, SimError> {
+    Ok(Json::Arr(
+        table2()?
             .into_iter()
             .map(|r| {
                 obj(vec![
@@ -514,7 +515,7 @@ pub fn table2_json() -> Json {
                 ])
             })
             .collect(),
-    )
+    ))
 }
 
 /// Dataset catalog rows (both tiers) as JSON.
@@ -538,9 +539,9 @@ pub fn dataset_catalog_json() -> Json {
 }
 
 /// Fig. 8 rows as JSON (per-workload normalized energies + geomean).
-pub fn fig8_json(cfg: GhostConfig) -> Json {
-    Json::Arr(
-        fig8(cfg)
+pub fn fig8_json(cfg: GhostConfig) -> Result<Json, SimError> {
+    Ok(Json::Arr(
+        fig8(cfg)?
             .into_iter()
             .map(|r| {
                 obj(vec![
@@ -564,15 +565,15 @@ pub fn fig8_json(cfg: GhostConfig) -> Json {
                 ])
             })
             .collect(),
-    )
+    ))
 }
 
 /// Fig. 9 rows as JSON: block fractions, total busy time, and the exact
 /// per-kind breakdown (`kinds.<kind>.busy_s` sums to `total_busy_s` — the
 /// CI smoke pins the invariant).
-pub fn fig9_json(cfg: GhostConfig) -> Json {
-    Json::Arr(
-        fig9(cfg)
+pub fn fig9_json(cfg: GhostConfig) -> Result<Json, SimError> {
+    Ok(Json::Arr(
+        fig9(cfg)?
             .into_iter()
             .map(|r| {
                 obj(vec![
@@ -586,7 +587,7 @@ pub fn fig9_json(cfg: GhostConfig) -> Json {
                 ])
             })
             .collect(),
-    )
+    ))
 }
 
 /// Sharding breakdown rows as JSON: makespan, total busy time, and the
@@ -618,9 +619,9 @@ pub fn sharding_json(
 }
 
 /// Figs. 10–12 summary rows as JSON.
-pub fn comparison_json(cfg: GhostConfig) -> Json {
-    Json::Arr(
-        comparison_summary(cfg)
+pub fn comparison_json(cfg: GhostConfig) -> Result<Json, SimError> {
+    Ok(Json::Arr(
+        comparison_summary(cfg)?
             .into_iter()
             .map(|r| {
                 obj(vec![
@@ -632,7 +633,7 @@ pub fn comparison_json(cfg: GhostConfig) -> Json {
                 ])
             })
             .collect(),
-    )
+    ))
 }
 
 #[cfg(test)]
@@ -661,7 +662,7 @@ mod tests {
 
     #[test]
     fn table2_matches_spec() {
-        for r in table2() {
+        for r in table2().unwrap() {
             let spec = crate::graph::datasets::spec_by_name(r.name).unwrap();
             assert_eq!(r.n_graphs, spec.n_graphs);
             // Single-graph datasets match exactly; multi-graph within 30 %.
@@ -700,5 +701,32 @@ mod tests {
                 total = r.total_busy_s
             );
         }
+    }
+
+    #[test]
+    fn unknown_dataset_reaches_figures_as_an_error() {
+        // Regression: figure paths used to `.expect()` on engine results;
+        // an unknown dataset must now surface as a structured SimError.
+        let err = sharding(
+            GhostConfig::paper_optimal(),
+            ModelKind::Gcn,
+            "definitely-not-a-dataset",
+            &[1],
+        )
+        .unwrap_err();
+        match err {
+            SimError::UnknownDataset(name) => assert_eq!(name, "definitely-not-a-dataset"),
+            other => panic!("expected UnknownDataset, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_config_propagates_instead_of_panicking() {
+        // Regression for the former `.expect("table-2 workload simulates")`
+        // in ghost_reports: a chip memory budget far too small for any
+        // Table-2 workload must return Err, not abort the process.
+        let starved = GhostConfig { chip_mem_bytes: 1 << 10, ..GhostConfig::paper_optimal() };
+        assert!(fig9(starved).is_err());
+        assert!(ghost_reports(starved, OptFlags::ghost_default()).is_err());
     }
 }

@@ -38,7 +38,12 @@ USAGE:
         split over N chips and cross-shard gathers become RemoteGather
         stages over the inter-chip link. Graphs whose per-chip footprint
         exceeds the chip memory budget error with the minimum shard count.
-  ghost dse [--coherent] [--noncoherent] [--arch] [--quick]
+  ghost dse [--coherent] [--noncoherent] [--arch] [--quick] [--json]
+        --json runs the architectural sweep and emits the frontier,
+        failures, and delta-evaluator rebuild/patch counters as one JSON
+        object. Sweeps delta-evaluate by default (GHOST_DSE_DELTA=0 forces
+        full rebuilds; GHOST_DSE_CHECK=1 cross-checks every point against
+        the reference evaluator).
   ghost figures [--table1] [--table2] [--table3] [--fig8] [--fig9]
                 [--comparison] [--datasets] [--sharding] [--all] [--json]
                 [--shards <n,n,...>] [--shard-model <m>] [--shard-dataset <d>]
@@ -194,7 +199,70 @@ fn cmd_run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_dse(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["coherent", "noncoherent", "arch", "quick"])?;
+    let args = Args::parse(argv, &["coherent", "noncoherent", "arch", "quick", "json"])?;
+    if args.has("json") {
+        // --json runs the architectural sweep (Fig. 7c) and emits the full
+        // frontier, the failures, and the delta-evaluator counters as one
+        // machine-readable object — the CI smoke diffs this output between
+        // GHOST_DSE_DELTA=0 and =1.
+        let grid = arch_dse::default_grid();
+        let workloads = arch_dse::workload_set(args.has("quick"))?;
+        let engine = BatchEngine::new();
+        let report = arch_dse::explore_with_engine(&engine, &grid, &workloads);
+        let cfg_json = |c: &GhostConfig| {
+            ghost::util::json::obj(vec![
+                ("n", Json::Num(c.n as f64)),
+                ("v", Json::Num(c.v as f64)),
+                ("r_r", Json::Num(c.r_r as f64)),
+                ("r_c", Json::Num(c.r_c as f64)),
+                ("t_r", Json::Num(c.t_r as f64)),
+                ("chip_mem_bytes", Json::Num(c.chip_mem_bytes as f64)),
+            ])
+        };
+        let points = Json::Arr(
+            report
+                .points
+                .iter()
+                .map(|p| {
+                    ghost::util::json::obj(vec![
+                        ("cfg", cfg_json(&p.cfg)),
+                        ("epb_per_gops", Json::Num(p.epb_per_gops)),
+                        ("gops", Json::Num(p.gops)),
+                        ("epb", Json::Num(p.epb)),
+                    ])
+                })
+                .collect(),
+        );
+        let failures = Json::Arr(
+            report
+                .failures
+                .iter()
+                .map(|f| {
+                    ghost::util::json::obj(vec![
+                        ("cfg", cfg_json(&f.cfg)),
+                        ("error", Json::Str(f.error.to_string())),
+                    ])
+                })
+                .collect(),
+        );
+        let delta = ghost::util::json::obj(vec![
+            ("enabled", Json::Bool(arch_dse::delta_evaluation_enabled())),
+            ("rebuilds", Json::Num(report.delta.rebuilds as f64)),
+            ("patches", Json::Num(report.delta.patches as f64)),
+        ]);
+        println!(
+            "{}",
+            ghost::util::json::obj(vec![
+                ("quick", Json::Bool(args.has("quick"))),
+                ("grid_points", Json::Num(grid.len() as f64)),
+                ("partition_builds", Json::Num(engine.partition_builds() as f64)),
+                ("delta", delta),
+                ("points", points),
+                ("failures", failures),
+            ])
+        );
+        return Ok(());
+    }
     let all = !args.has("coherent") && !args.has("noncoherent") && !args.has("arch");
     if args.has("coherent") || all {
         let p = DeviceParams::paper();
@@ -261,6 +329,13 @@ fn cmd_dse(argv: &[String]) -> Result<()> {
             "  partition sets built once per (dataset, V, N): {}",
             engine.partition_builds()
         );
+        if arch_dse::delta_evaluation_enabled() {
+            println!(
+                "  delta evaluation: {} full rebuilds, {} lane patches \
+                 (GHOST_DSE_DELTA=0 to disable)",
+                report.delta.rebuilds, report.delta.patches
+            );
+        }
     }
     Ok(())
 }
@@ -313,19 +388,19 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
             sections.push(("table1", figures::table1_json()));
         }
         if args.has("table2") || all {
-            sections.push(("table2", figures::table2_json()));
+            sections.push(("table2", figures::table2_json()?));
         }
         if args.has("table3") || all {
             sections.push(("table3", table3_json()));
         }
         if args.has("fig8") || all {
-            sections.push(("fig8", figures::fig8_json(cfg)));
+            sections.push(("fig8", figures::fig8_json(cfg)?));
         }
         if args.has("fig9") || all {
-            sections.push(("fig9", figures::fig9_json(cfg)));
+            sections.push(("fig9", figures::fig9_json(cfg)?));
         }
         if args.has("comparison") || all {
-            sections.push(("comparison", figures::comparison_json(cfg)));
+            sections.push(("comparison", figures::comparison_json(cfg)?));
         }
         if args.has("sharding") {
             let (kind, dataset, shard_counts) = parse_sharding_args(&args)?;
@@ -346,7 +421,7 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
         println!();
     }
     if args.has("table2") || all {
-        figures::print_table2();
+        figures::print_table2()?;
         println!();
     }
     if args.has("table3") || all {
@@ -354,15 +429,15 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
         println!();
     }
     if args.has("fig8") || all {
-        figures::print_fig8(cfg);
+        figures::print_fig8(cfg)?;
         println!();
     }
     if args.has("fig9") || all {
-        figures::print_fig9(cfg);
+        figures::print_fig9(cfg)?;
         println!();
     }
     if args.has("comparison") || all {
-        figures::print_comparison(cfg);
+        figures::print_comparison(cfg)?;
         println!();
     }
     if args.has("sharding") {

@@ -156,38 +156,80 @@ impl CostScheduleResult {
     }
 }
 
+/// Copy an array-of-structs schedule into flat structure-of-arrays lanes
+/// plus a CSR-style group offset table (mirroring `PartitionMatrix`'s flat
+/// layout): `group_ptr[g]..group_ptr[g + 1]` indexes group `g`'s slots in
+/// both lanes.
+fn lanes_of(groups: &[&[StageCost]]) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+    let n_slots: usize = groups.iter().map(|g| g.len()).sum();
+    let mut latency_s = Vec::with_capacity(n_slots);
+    let mut energy_j = Vec::with_capacity(n_slots);
+    let mut group_ptr = Vec::with_capacity(groups.len() + 1);
+    group_ptr.push(0);
+    for g in groups {
+        for c in *g {
+            latency_s.push(c.latency_s);
+            energy_j.push(c.energy_j);
+        }
+        group_ptr.push(latency_s.len());
+    }
+    (latency_s, energy_j, group_ptr)
+}
+
 /// Exact makespan of the two-level pipelined schedule over full stage
 /// costs — the same recurrence as [`pipelined`], evaluated on
 /// `latency_s`, while energy and per-position busy totals accumulate in
-/// the same pass. Every group must carry the same stage count.
+/// the same pass. Every group must carry the same stage count. Thin view
+/// over [`pipelined_lanes`].
 pub fn pipelined_costs(groups: &[&[StageCost]]) -> Result<CostScheduleResult, RaggedStages> {
-    if groups.is_empty() {
+    let (latency_s, energy_j, group_ptr) = lanes_of(groups);
+    pipelined_lanes(&latency_s, &energy_j, &group_ptr)
+}
+
+/// [`pipelined_costs`] over structure-of-arrays lanes: flat `latency_s` /
+/// `energy_j` slots partitioned into groups by the CSR offset table
+/// `group_ptr` (`group_ptr[0] == 0`, `group_ptr.last() == slots`). The
+/// recurrence runs tight over the lanes with no per-group allocation;
+/// accumulation order is exactly that of the array-of-structs walk, so
+/// results are bit-identical.
+pub fn pipelined_lanes(
+    latency_s: &[f64],
+    energy_j: &[f64],
+    group_ptr: &[usize],
+) -> Result<CostScheduleResult, RaggedStages> {
+    let n_groups = group_ptr.len().saturating_sub(1);
+    if n_groups == 0 {
         return Ok(CostScheduleResult::empty());
     }
-    let n_stages = groups[0].len();
+    let n_stages = group_ptr[1] - group_ptr[0];
+    for gi in 0..n_groups {
+        let got = group_ptr[gi + 1] - group_ptr[gi];
+        if got != n_stages {
+            return Err(RaggedStages { group: gi, expected: n_stages, got });
+        }
+    }
     let mut prev_end = vec![0.0f64; n_stages];
+    let mut cur_end = vec![0.0f64; n_stages];
     let mut total = 0.0;
     let mut energy = 0.0;
     let mut stage_busy_s = vec![0.0f64; n_stages];
     let mut stage_energy_j = vec![0.0f64; n_stages];
-    for (gi, g) in groups.iter().enumerate() {
-        if g.len() != n_stages {
-            return Err(RaggedStages { group: gi, expected: n_stages, got: g.len() });
-        }
-        let mut cur_end = vec![0.0f64; n_stages];
+    let lat_groups = latency_s[..n_groups * n_stages].chunks_exact(n_stages);
+    let en_groups = energy_j[..n_groups * n_stages].chunks_exact(n_stages);
+    for (lat, en) in lat_groups.zip(en_groups) {
         let mut prev_stage_end = 0.0f64;
         let mut group_energy = 0.0f64;
-        for (s, c) in g.iter().enumerate() {
+        for s in 0..n_stages {
             let start = prev_stage_end.max(prev_end[s]);
-            cur_end[s] = start + c.latency_s;
+            cur_end[s] = start + lat[s];
             prev_stage_end = cur_end[s];
-            total += c.latency_s;
-            stage_busy_s[s] += c.latency_s;
-            stage_energy_j[s] += c.energy_j;
-            group_energy += c.energy_j;
+            total += lat[s];
+            stage_busy_s[s] += lat[s];
+            stage_energy_j[s] += en[s];
+            group_energy += en[s];
         }
         energy += group_energy;
-        prev_end = cur_end;
+        std::mem::swap(&mut prev_end, &mut cur_end);
     }
     Ok(CostScheduleResult {
         makespan_s: prev_end.last().copied().unwrap_or(0.0),
@@ -201,22 +243,111 @@ pub fn pipelined_costs(groups: &[&[StageCost]]) -> Result<CostScheduleResult, Ra
 /// Cost-schedule evaluation with no pipelining: every stage of every group
 /// runs sequentially (the makespan is the flat latency sum). Ragged groups
 /// are tolerated, mirroring [`sequential`]; per-position totals are sized
-/// to the longest group.
+/// to the longest group. Thin view over [`sequential_lanes`].
 pub fn sequential_costs(groups: &[&[StageCost]]) -> CostScheduleResult {
-    let n_stages = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+    let (latency_s, energy_j, group_ptr) = lanes_of(groups);
+    sequential_lanes(&latency_s, &energy_j, &group_ptr)
+}
+
+/// [`sequential_costs`] over structure-of-arrays lanes (see
+/// [`pipelined_lanes`] for the layout). Ragged groups are tolerated.
+pub fn sequential_lanes(
+    latency_s: &[f64],
+    energy_j: &[f64],
+    group_ptr: &[usize],
+) -> CostScheduleResult {
+    let n_groups = group_ptr.len().saturating_sub(1);
+    let n_stages =
+        (0..n_groups).map(|g| group_ptr[g + 1] - group_ptr[g]).max().unwrap_or(0);
     let mut out = CostScheduleResult {
         stage_busy_s: vec![0.0; n_stages],
         stage_energy_j: vec![0.0; n_stages],
         ..CostScheduleResult::empty()
     };
-    for g in groups {
+    for g in 0..n_groups {
         let mut group_energy = 0.0f64;
-        for (s, c) in g.iter().enumerate() {
-            out.makespan_s += c.latency_s;
-            out.total_stage_time_s += c.latency_s;
-            out.stage_busy_s[s] += c.latency_s;
-            out.stage_energy_j[s] += c.energy_j;
-            group_energy += c.energy_j;
+        for (s, slot) in (group_ptr[g]..group_ptr[g + 1]).enumerate() {
+            out.makespan_s += latency_s[slot];
+            out.total_stage_time_s += latency_s[slot];
+            out.stage_busy_s[s] += latency_s[slot];
+            out.stage_energy_j[s] += energy_j[slot];
+            group_energy += energy_j[slot];
+        }
+        out.energy_j += group_energy;
+    }
+    out
+}
+
+/// Width of the fixed-size lane core used by the plan IR: every
+/// `PipelineSegment` carries exactly this many stage positions per group
+/// (`plan::PIPELINE_STAGES`).
+pub const QUAD_WIDTH: usize = 4;
+
+/// [`CostScheduleResult`] specialized to the plan IR's fixed four-stage
+/// segments: per-position totals live in stack arrays, so evaluating a
+/// segment allocates nothing. Field-by-field bit-identical to the
+/// general result on the same lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct QuadSched {
+    /// End-to-end makespan, seconds.
+    pub makespan_s: f64,
+    /// Sum of all stage latencies.
+    pub total_stage_time_s: f64,
+    /// Total dynamic energy, joules.
+    pub energy_j: f64,
+    /// Busy time per stage position across all groups, seconds.
+    pub stage_busy_s: [f64; QUAD_WIDTH],
+    /// Dynamic energy per stage position across all groups, joules.
+    pub stage_energy_j: [f64; QUAD_WIDTH],
+}
+
+/// Pipelined recurrence over width-4 lanes (`latency_s`/`energy_j` are
+/// group-major, `4 * n_groups` slots each). Branch-free inner loop over
+/// stack arrays; bit-identical to [`pipelined_lanes`] with a uniform
+/// `group_ptr` of stride 4.
+pub fn pipelined_quads(latency_s: &[f64], energy_j: &[f64]) -> QuadSched {
+    debug_assert_eq!(latency_s.len() % QUAD_WIDTH, 0);
+    debug_assert_eq!(latency_s.len(), energy_j.len());
+    let mut out = QuadSched::default();
+    let mut prev_end = [0.0f64; QUAD_WIDTH];
+    for (lat, en) in
+        latency_s.chunks_exact(QUAD_WIDTH).zip(energy_j.chunks_exact(QUAD_WIDTH))
+    {
+        let mut cur_end = [0.0f64; QUAD_WIDTH];
+        let mut prev_stage_end = 0.0f64;
+        let mut group_energy = 0.0f64;
+        for s in 0..QUAD_WIDTH {
+            let start = prev_stage_end.max(prev_end[s]);
+            cur_end[s] = start + lat[s];
+            prev_stage_end = cur_end[s];
+            out.total_stage_time_s += lat[s];
+            out.stage_busy_s[s] += lat[s];
+            out.stage_energy_j[s] += en[s];
+            group_energy += en[s];
+        }
+        out.energy_j += group_energy;
+        prev_end = cur_end;
+    }
+    out.makespan_s = prev_end[QUAD_WIDTH - 1];
+    out
+}
+
+/// Sequential (no-pipelining) evaluation over width-4 lanes; bit-identical
+/// to [`sequential_lanes`] with a uniform stride-4 `group_ptr`.
+pub fn sequential_quads(latency_s: &[f64], energy_j: &[f64]) -> QuadSched {
+    debug_assert_eq!(latency_s.len() % QUAD_WIDTH, 0);
+    debug_assert_eq!(latency_s.len(), energy_j.len());
+    let mut out = QuadSched::default();
+    for (lat, en) in
+        latency_s.chunks_exact(QUAD_WIDTH).zip(energy_j.chunks_exact(QUAD_WIDTH))
+    {
+        let mut group_energy = 0.0f64;
+        for s in 0..QUAD_WIDTH {
+            out.makespan_s += lat[s];
+            out.total_stage_time_s += lat[s];
+            out.stage_busy_s[s] += lat[s];
+            out.stage_energy_j[s] += en[s];
+            group_energy += en[s];
         }
         out.energy_j += group_energy;
     }
@@ -242,15 +373,28 @@ pub fn barriered_makespan(chip_phases: &[Vec<f64>]) -> Result<f64, RaggedStages>
             return Err(RaggedStages { group: ci, expected: n_phases, got: phases.len() });
         }
     }
+    let flat: Vec<f64> = chip_phases.iter().flat_map(|p| p.iter().copied()).collect();
+    Ok(barriered_lanes(&flat, n_phases))
+}
+
+/// [`barriered_makespan`] over a flat chip-major lane:
+/// `phase_busy_s[c * n_phases + p]` is chip `c`'s local busy time in phase
+/// `p`. The lane length must be a multiple of `n_phases` (checked by the
+/// slice-of-`Vec` entry point); branch-free maxima over strided slots.
+pub fn barriered_lanes(phase_busy_s: &[f64], n_phases: usize) -> f64 {
+    if n_phases == 0 {
+        return 0.0;
+    }
+    debug_assert_eq!(phase_busy_s.len() % n_phases, 0);
     let mut makespan = 0.0f64;
     for p in 0..n_phases {
         let mut slowest = 0.0f64;
-        for phases in chip_phases {
-            slowest = slowest.max(phases[p]);
+        for chip in phase_busy_s.chunks_exact(n_phases) {
+            slowest = slowest.max(chip[p]);
         }
         makespan += slowest;
     }
-    Ok(makespan)
+    makespan
 }
 
 #[cfg(test)]
@@ -428,6 +572,54 @@ mod tests {
         let phases = vec![vec![1.5, 2.5, 3.0]];
         assert_eq!(barriered_makespan(&phases).unwrap(), 7.0);
         assert_eq!(barriered_makespan(&[]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn quad_core_bit_identical_to_general_lanes() {
+        // 3 groups × 4 stages with awkward magnitudes to surface any
+        // accumulation-order drift between the stack-array core and the
+        // general lane walk.
+        let lat = [2.0, 1.0, 0.5, 3.0, 1e-9, 4.0, 2.5, 0.125, 7.0, 1.0, 1.0, 9.0];
+        let en = [1.0, 0.5, 2.0, 0.25, 4.0, 8.0, 1e-12, 3.0, 0.75, 6.0, 0.5, 2.5];
+        let ptr = [0usize, 4, 8, 12];
+        let general = pipelined_lanes(&lat, &en, &ptr).unwrap();
+        let quad = pipelined_quads(&lat, &en);
+        assert_eq!(quad.makespan_s, general.makespan_s);
+        assert_eq!(quad.total_stage_time_s, general.total_stage_time_s);
+        assert_eq!(quad.energy_j, general.energy_j);
+        assert_eq!(quad.stage_busy_s.to_vec(), general.stage_busy_s);
+        assert_eq!(quad.stage_energy_j.to_vec(), general.stage_energy_j);
+        let general_seq = sequential_lanes(&lat, &en, &ptr);
+        let quad_seq = sequential_quads(&lat, &en);
+        assert_eq!(quad_seq.makespan_s, general_seq.makespan_s);
+        assert_eq!(quad_seq.energy_j, general_seq.energy_j);
+        assert_eq!(quad_seq.stage_busy_s.to_vec(), general_seq.stage_busy_s);
+        assert_eq!(quad_seq.stage_energy_j.to_vec(), general_seq.stage_energy_j);
+        // Empty lanes: zero makespan, zero totals.
+        assert_eq!(pipelined_quads(&[], &[]).makespan_s, 0.0);
+        assert_eq!(sequential_quads(&[], &[]).energy_j, 0.0);
+    }
+
+    #[test]
+    fn lane_ragged_group_is_an_error() {
+        let lat = [1.0, 2.0, 3.0];
+        let en = [0.0, 0.0, 0.0];
+        assert_eq!(
+            pipelined_lanes(&lat, &en, &[0, 2, 3]).unwrap_err(),
+            RaggedStages { group: 1, expected: 2, got: 1 }
+        );
+        // Sequential tolerates ragged groups, sizing totals to the longest.
+        let seq = sequential_lanes(&lat, &en, &[0, 2, 3]);
+        assert_eq!(seq.makespan_s, 6.0);
+        assert_eq!(seq.stage_busy_s, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn barriered_lanes_matches_slice_view() {
+        let phases = vec![vec![2.0, 1.0, 4.0], vec![1.0, 3.0, 2.0]];
+        let flat = [2.0, 1.0, 4.0, 1.0, 3.0, 2.0];
+        assert_eq!(barriered_lanes(&flat, 3), barriered_makespan(&phases).unwrap());
+        assert_eq!(barriered_lanes(&[], 0), 0.0);
     }
 
     #[test]

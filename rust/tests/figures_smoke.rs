@@ -17,7 +17,7 @@ fn table1_prints_paper_rows() {
 
 #[test]
 fn table2_has_all_eight_datasets() {
-    let rows = figures::table2();
+    let rows = figures::table2().unwrap();
     assert_eq!(rows.len(), 8);
     let cora = rows.iter().find(|r| r.name == "Cora").unwrap();
     assert_eq!(cora.avg_nodes as usize, 2708);
@@ -49,7 +49,7 @@ fn fig7b_anchor_18_wavelengths() {
 
 #[test]
 fn fig8_rows_complete() {
-    let rows = figures::fig8(GhostConfig::paper_optimal());
+    let rows = figures::fig8(GhostConfig::paper_optimal()).unwrap();
     assert_eq!(rows.len(), 9);
     for r in &rows {
         assert_eq!(r.per_workload.len(), 16, "{}", r.label);
@@ -59,7 +59,7 @@ fn fig8_rows_complete() {
 
 #[test]
 fn fig9_rows_complete() {
-    let rows = figures::fig9(GhostConfig::paper_optimal());
+    let rows = figures::fig9(GhostConfig::paper_optimal()).unwrap();
     assert_eq!(rows.len(), 16);
 }
 
@@ -69,7 +69,7 @@ fn fig9_kind_breakdown_sums_to_total_busy_time() {
     // accumulators: summing the seven kinds recovers total busy time.
     // (This is the same invariant the CI `ghost figures --fig9 --json`
     // smoke asserts on the serialized output.)
-    let rows = figures::fig9(GhostConfig::paper_optimal());
+    let rows = figures::fig9(GhostConfig::paper_optimal()).unwrap();
     for r in &rows {
         let sum: f64 = r.kinds.rows().iter().map(|(_, c)| c.latency_s).sum();
         assert!(
@@ -93,7 +93,7 @@ fn fig9_kind_breakdown_sums_to_total_busy_time() {
 
 #[test]
 fn fig9_json_carries_per_kind_breakdown() {
-    let json = figures::fig9_json(GhostConfig::paper_optimal());
+    let json = figures::fig9_json(GhostConfig::paper_optimal()).unwrap();
     let rows = json.as_array().unwrap();
     assert_eq!(rows.len(), 16);
     for r in rows {
@@ -119,7 +119,7 @@ fn fig9_json_carries_per_kind_breakdown() {
 
 #[test]
 fn comparison_covers_supported_workloads() {
-    let rows = figures::comparison_summary(GhostConfig::paper_optimal());
+    let rows = figures::comparison_summary(GhostConfig::paper_optimal()).unwrap();
     assert_eq!(rows.len(), 9);
     let n: std::collections::HashMap<&str, usize> =
         rows.iter().map(|r| (r.platform, r.n_workloads)).collect();

@@ -15,7 +15,7 @@ fn ghost_cfg() -> GhostConfig {
 #[test]
 fn fig8_ghost_default_reduction_near_paper() {
     // Paper §4.4: BP+PP+DAC sharing reduces energy ~4.94× vs baseline.
-    let rows = figures::fig8(ghost_cfg());
+    let rows = figures::fig8(ghost_cfg()).unwrap();
     let default_row = rows.iter().find(|r| r.label == "BP+PP+DAC_Sharing").unwrap();
     let reduction = 1.0 / default_row.mean;
     assert!(
@@ -27,7 +27,7 @@ fn fig8_ghost_default_reduction_near_paper() {
 #[test]
 fn fig8_wb_weaker_than_dac_sharing() {
     // Paper §4.4: BP+PP+WB (2.92×) is weaker than BP+PP+DAC (4.94×).
-    let rows = figures::fig8(ghost_cfg());
+    let rows = figures::fig8(ghost_cfg()).unwrap();
     let dac = rows.iter().find(|r| r.label == "BP+PP+DAC_Sharing").unwrap().mean;
     let wb = rows.iter().find(|r| r.label == "BP+PP+WB").unwrap().mean;
     assert!(dac < wb, "DAC-sharing combo must beat the WB combo (dac={dac}, wb={wb})");
@@ -35,7 +35,7 @@ fn fig8_wb_weaker_than_dac_sharing() {
 
 #[test]
 fn fig8_every_optimization_helps() {
-    let rows = figures::fig8(ghost_cfg());
+    let rows = figures::fig8(ghost_cfg()).unwrap();
     for r in &rows {
         assert!(
             r.mean <= 1.0 + 1e-9,
@@ -52,7 +52,7 @@ fn fig8_every_optimization_helps() {
 
 #[test]
 fn fig9_breakdown_shapes() {
-    let rows = figures::fig9(ghost_cfg());
+    let rows = figures::fig9(ghost_cfg()).unwrap();
     for r in &rows {
         let total = r.aggregate + r.combine + r.update;
         assert!((total - 1.0).abs() < 1e-9, "fractions must sum to 1, got {total}");
@@ -85,7 +85,7 @@ fn fig9_breakdown_shapes() {
 
 #[test]
 fn comparison_ratios_match_paper_shape() {
-    let rows = figures::comparison_summary(ghost_cfg());
+    let rows = figures::comparison_summary(ghost_cfg()).unwrap();
     let get = |name: &str| rows.iter().find(|r| r.platform == name).unwrap();
     // Headline claim: ≥10.2× throughput vs the best competitor (HW_ACC)
     // and ≥3.8× energy efficiency vs the best (EnGN).
@@ -112,7 +112,7 @@ fn comparison_ratios_match_paper_shape() {
 fn gin_shows_largest_gops_gains() {
     // Paper §4.6.1: the largest GOPS improvements are observed with the
     // GIN datasets (per-graph overheads dominate the baselines).
-    let detail = figures::comparison_detail(ghost_cfg());
+    let detail = figures::comparison_detail(ghost_cfg()).unwrap();
     let mut gin_ratios = Vec::new();
     let mut other_ratios = Vec::new();
     for (kind, _, ghost_metrics, rows) in &detail {
