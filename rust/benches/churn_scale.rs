@@ -1,0 +1,163 @@
+//! Bench: incremental graph-churn maintenance vs cold rebuild on a
+//! million-edge R-MAT graph.
+//!
+//! Each epoch applies one random [`GraphDelta`] batch (pure edge churn —
+//! no vertex growth, so the output-group count is stable and every epoch
+//! takes the patch path) and times the full incremental pipeline — CSR
+//! splice + touched-group partition re-derivation + [`GraphDeltaPlan`]
+//! patch + evaluation — against the cold pipeline the patch replaces:
+//! re-partitioning the whole graph, rebuilding the [`StagePlan`], and
+//! evaluating it. Bit-identity of both the spliced partitions and the
+//! patched plan's report is asserted *outside* the timed regions every
+//! epoch, and the summed speedup is asserted >= 10x. Results land in
+//! `BENCH_churn.json` for the CI perf-trajectory artifact.
+//!
+//! [`GraphDelta`]: ghost::graph::mutate::GraphDelta
+//! [`GraphDeltaPlan`]: ghost::coordinator::GraphDeltaPlan
+//! [`StagePlan`]: ghost::coordinator::StagePlan
+
+use std::time::Instant;
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{plan, GraphDeltaPlan, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::graph::datasets::Dataset;
+use ghost::graph::mutate::{self, apply_to_dataset, random_batch};
+use ghost::graph::partition::PartitionMatrix;
+use ghost::util::bench::black_box;
+use ghost::util::json::{obj, Json};
+use ghost::util::rng::{mix_seed, Pcg64};
+
+const DATASET: &str = "rmat-131072v-1000000e-32f";
+const EPOCHS: usize = 20;
+/// Edge operations per epoch: 20 x 250 = 5000 ops, 0.5% of the edge set
+/// over the whole run — the "small batch against a big graph" regime the
+/// incremental path exists for.
+const BATCH: usize = 250;
+const ADD_FRACTION: f64 = 0.6;
+
+fn main() {
+    assert!(
+        !mutate::churn_check_enabled(),
+        "unset GHOST_CHURN_CHECK before running this bench: the oracle \
+         re-partitions the whole graph inside the timed incremental region"
+    );
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let kind = ModelKind::Gcn;
+    let mut dataset = Dataset::by_name(DATASET).expect("parameterized R-MAT spec");
+    let n_edges0 = dataset.graphs[0].n_edges();
+    println!(
+        "churn bench: {} ({} vertices, {} edges), {} epochs x {} ops",
+        DATASET, dataset.graphs[0].n_vertices, n_edges0, EPOCHS, BATCH
+    );
+
+    let t0 = Instant::now();
+    let mut partitions = PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+    println!("bench churn_initial_partition            single run {:>12?}", t0.elapsed());
+    let mut delta_plan = GraphDeltaPlan::new(kind, &dataset.spec, cfg, flags, 1);
+    let t0 = Instant::now();
+    delta_plan.retarget_graph(&dataset, &partitions, None).expect("priming rebuild");
+    println!("bench churn_priming_rebuild              single run {:>12?}", t0.elapsed());
+
+    let mut rng = Pcg64::seed_from_u64(mix_seed(2024, 0));
+    let mut incremental_s = 0.0f64;
+    let mut full_s = 0.0f64;
+    let mut per_epoch = Vec::with_capacity(EPOCHS);
+    for epoch in 0..EPOCHS {
+        let batch = random_batch(&dataset.graphs[0], BATCH, ADD_FRACTION, 0.0, &mut rng);
+
+        // Incremental: splice the CSR + partitions, patch the plan's
+        // touched groups, evaluate.
+        let t0 = Instant::now();
+        let applied = apply_to_dataset(&mut dataset, &mut partitions, 0, &batch)
+            .expect("random batches always validate");
+        delta_plan
+            .retarget_graph(&dataset, &partitions, Some(std::slice::from_ref(&applied)))
+            .expect("patch retarget");
+        let inc_report = delta_plan.evaluate().expect("patched evaluation");
+        let inc = t0.elapsed().as_secs_f64();
+        incremental_s += inc;
+
+        // Cold: what serving would pay without the incremental machinery —
+        // re-partition the whole mutated graph, rebuild and evaluate the
+        // plan from scratch.
+        let t0 = Instant::now();
+        let cold_partitions = PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+        let cold_plan = plan::build(kind, &dataset, &cold_partitions, cfg, flags)
+            .expect("cold plan build");
+        let cold_report = plan::evaluate(&cold_plan).expect("cold evaluation");
+        let full = t0.elapsed().as_secs_f64();
+        full_s += full;
+
+        // Bit-identity, release-asserted outside both timed regions.
+        assert_eq!(
+            partitions, cold_partitions,
+            "epoch {epoch}: spliced partitions diverged from a cold build"
+        );
+        assert_eq!(
+            inc_report, cold_report,
+            "epoch {epoch}: patched plan diverged from a cold rebuild"
+        );
+        black_box(&inc_report);
+        per_epoch.push((applied.new_n_edges, inc, full));
+    }
+
+    let speedup = full_s / incremental_s.max(1e-12);
+    println!(
+        "incremental: {:>9.3} ms total ({:.3} ms/epoch)",
+        incremental_s * 1e3,
+        incremental_s * 1e3 / EPOCHS as f64
+    );
+    println!(
+        "cold rebuild:{:>9.3} ms total ({:.3} ms/epoch)",
+        full_s * 1e3,
+        full_s * 1e3 / EPOCHS as f64
+    );
+    println!(
+        "churn speedup: {speedup:.1}x over cold rebuild ({} rebuilds, {} patches)",
+        delta_plan.rebuilds(),
+        delta_plan.patches()
+    );
+    assert_eq!(delta_plan.rebuilds(), 1, "only the priming build may rebuild");
+    assert_eq!(delta_plan.patches(), EPOCHS, "every epoch must take the patch path");
+
+    let json = obj(vec![
+        ("dataset", Json::Str(DATASET.to_string())),
+        ("n_edges_initial", Json::Num(n_edges0 as f64)),
+        ("epochs", Json::Num(EPOCHS as f64)),
+        ("batch_ops", Json::Num(BATCH as f64)),
+        (
+            "churn_fraction",
+            Json::Num((EPOCHS * BATCH) as f64 / n_edges0 as f64),
+        ),
+        ("incremental_s", Json::Num(incremental_s)),
+        ("full_s", Json::Num(full_s)),
+        ("speedup", Json::Num(speedup)),
+        ("rebuilds", Json::Num(delta_plan.rebuilds() as f64)),
+        ("patches", Json::Num(delta_plan.patches() as f64)),
+        (
+            "per_epoch",
+            Json::Arr(
+                per_epoch
+                    .iter()
+                    .map(|&(edges, inc, full)| {
+                        obj(vec![
+                            ("n_edges", Json::Num(edges as f64)),
+                            ("incremental_s", Json::Num(inc)),
+                            ("full_s", Json::Num(full)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_churn.json", format!("{json}\n")).expect("write BENCH_churn.json");
+    println!("wrote BENCH_churn.json");
+
+    assert!(
+        speedup >= 10.0,
+        "incremental maintenance must clear 10x the cold-rebuild cost at \
+         <=1% churn: measured {speedup:.1}x"
+    );
+}

@@ -12,6 +12,7 @@ use ghost::config::GhostConfig;
 use ghost::coordinator::dse;
 use ghost::coordinator::BatchEngine;
 use ghost::util::bench::{bench, black_box, time_once};
+use ghost::util::json::{obj, Json};
 use ghost::util::parallel::default_workers;
 
 fn main() {
@@ -109,6 +110,19 @@ fn main() {
         "delta sweep must clear 10x the full-rebuild throughput: \
          {delta_pps:.1} vs {full_pps:.1} points/sec"
     );
+
+    let json = obj(vec![
+        ("grid_points", Json::Num(grid.len() as f64)),
+        ("valid_points", Json::Num(valid.len() as f64)),
+        ("workloads", Json::Num(workloads.len() as f64)),
+        ("full_points_per_s", Json::Num(full_pps)),
+        ("delta_points_per_s", Json::Num(delta_pps)),
+        ("speedup", Json::Num(delta_pps / full_pps)),
+        ("rebuilds", Json::Num(delta_report.delta.rebuilds as f64)),
+        ("patches", Json::Num(delta_report.delta.patches as f64)),
+    ]);
+    std::fs::write("BENCH_dse.json", format!("{json}\n")).expect("write BENCH_dse.json");
+    println!("wrote BENCH_dse.json");
 
     // Warm cache: every (dataset, V, N) the paper point needs already sits
     // in the engine from the sweep above.

@@ -68,8 +68,15 @@ impl SimRequest {
 
 type DatasetCell = Arc<OnceLock<Arc<Dataset>>>;
 type PartitionCell = Arc<OnceLock<Arc<Vec<PartitionMatrix>>>>;
-type PartitionKey = (String, usize, usize);
-type ProfileKey = (ModelKind, String, GhostConfig, OptFlags);
+/// `(canonical name, graph-mutation epoch, V, N)`. The epoch
+/// ([`Dataset::epoch`], bumped by [`crate::graph::mutate::apply_to_dataset`])
+/// keys mutated dataset instances away from the canonical epoch-0 entries,
+/// so a churned graph can never alias a stale cached partition set.
+type PartitionKey = (String, u64, usize, usize);
+/// `(model, canonical name, graph-mutation epoch, config, flags)` — the
+/// epoch field makes stale plans/profiles unreachable once a dataset
+/// mutates (see [`BatchEngine::evict_dataset_epochs_below`]).
+type ProfileKey = (ModelKind, String, u64, GhostConfig, OptFlags);
 /// Plans and profiles key on the identical request tuple — one alias, so
 /// the two caches cannot silently diverge if the key ever gains a field.
 type PlanKey = ProfileKey;
@@ -110,6 +117,19 @@ pub struct ServiceProfile {
 }
 
 impl ServiceProfile {
+    /// Derives the decomposition from a full report — the single formula
+    /// the cached path, the sharded path, and the churn engine's live
+    /// re-profiles all share (so they cannot drift apart).
+    pub fn from_report(report: &SimReport) -> Self {
+        ServiceProfile {
+            latency_s: report.metrics.latency_s,
+            weight_stage_s: report.weight_stage_s,
+            energy_j: report.metrics.energy_j,
+            weight_stage_energy_j: report.weight_stage_energy_j
+                + report.platform_w * report.weight_stage_s,
+        }
+    }
+
     /// Per-request service time once the weights are programmed.
     pub fn per_request_s(&self) -> f64 {
         (self.latency_s - self.weight_stage_s).max(0.0)
@@ -156,6 +176,7 @@ pub struct BatchEngine {
     plan_builds: AtomicUsize,
     sharded_plan_builds: AtomicUsize,
     profile_builds: AtomicUsize,
+    evictions: AtomicUsize,
 }
 
 /// Locks a mutex, recovering the guard from a poisoned lock (the protected
@@ -239,7 +260,7 @@ impl BatchEngine {
                 "partition dimensions must be non-zero, got (V, N) = ({v}, {n})"
             )));
         }
-        let key: PartitionKey = (dataset.spec.name.to_string(), v, n);
+        let key: PartitionKey = (dataset.spec.name.to_string(), dataset.epoch, v, n);
         let cell: PartitionCell = lock(&self.partitions).entry(key).or_default().clone();
         let pms = cell.get_or_init(|| {
             self.partition_builds.fetch_add(1, Ordering::Relaxed);
@@ -303,7 +324,8 @@ impl BatchEngine {
             .ok_or_else(|| SimError::UnknownDataset(req.dataset.clone()))?;
         let dataset = self.dataset(&req.dataset)?;
         let partitions = self.partitions_for(&dataset, req.cfg.v, req.cfg.n)?;
-        let key: PlanKey = (req.model, spec.name.to_string(), req.cfg, req.flags);
+        let key: PlanKey =
+            (req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags);
         let cell: PlanCell = lock(&self.plans).entry(key).or_default().clone();
         // Built outside the map lock; concurrent losers block on the cell.
         // A build failure (unreachable in practice: config and flags were
@@ -352,7 +374,7 @@ impl BatchEngine {
         let dataset = self.dataset(&req.dataset)?;
         let partitions = self.partitions_for(&dataset, req.cfg.v, req.cfg.n)?;
         let key: ShardedPlanKey =
-            ((req.model, spec.name.to_string(), req.cfg, req.flags), shards);
+            ((req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags), shards);
         let cell: ShardedPlanCell =
             lock(&self.sharded_plans).entry(key).or_default().clone();
         // Built outside the map lock; failures (e.g. a slice over the
@@ -395,13 +417,7 @@ impl BatchEngine {
         shards: usize,
     ) -> Result<ServiceProfile, SimError> {
         let report = self.run_sharded(req, shards)?;
-        Ok(ServiceProfile {
-            latency_s: report.metrics.latency_s,
-            weight_stage_s: report.weight_stage_s,
-            energy_j: report.metrics.energy_j,
-            weight_stage_energy_j: report.weight_stage_energy_j
-                + report.platform_w * report.weight_stage_s,
-        })
+        Ok(ServiceProfile::from_report(&report))
     }
 
     /// The cached [`ServiceProfile`] of a request: one full simulation the
@@ -419,19 +435,19 @@ impl BatchEngine {
     pub fn service_profile(&self, req: &SimRequest) -> Result<ServiceProfile, SimError> {
         let spec = spec_by_name(&req.dataset)
             .ok_or_else(|| SimError::UnknownDataset(req.dataset.clone()))?;
-        let key: ProfileKey = (req.model, spec.name.to_string(), req.cfg, req.flags);
+        // Resolve the dataset first: its graph-mutation epoch is part of
+        // the key, so a profile cached before a mutation can never be
+        // served after it (the churn path evicts superseded epochs, and
+        // even an unevicted entry is unreachable under the new epoch).
+        let dataset = self.dataset(&req.dataset)?;
+        let key: ProfileKey =
+            (req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags);
         if let Some(p) = lock(&self.profiles).get(&key) {
             return Ok(*p);
         }
         self.profile_builds.fetch_add(1, Ordering::Relaxed);
         let report = self.run(req)?;
-        let profile = ServiceProfile {
-            latency_s: report.metrics.latency_s,
-            weight_stage_s: report.weight_stage_s,
-            energy_j: report.metrics.energy_j,
-            weight_stage_energy_j: report.weight_stage_energy_j
-                + report.platform_w * report.weight_stage_s,
-        };
+        let profile = ServiceProfile::from_report(&report);
         lock(&self.profiles).insert(key, profile);
         Ok(profile)
     }
@@ -440,6 +456,55 @@ impl BatchEngine {
     /// (cache misses, including any first-lookup races).
     pub fn profile_builds(&self) -> usize {
         self.profile_builds.load(Ordering::Relaxed)
+    }
+
+    /// Drops every partition / plan / sharded-plan / profile cache entry
+    /// of `dataset_name` whose graph-mutation epoch is below `epoch`,
+    /// returning how many entries were evicted. The churn path calls this
+    /// after each applied [`crate::graph::mutate::GraphDelta`] batch: the
+    /// epoch-in-key scheme already makes superseded entries unreachable
+    /// for the mutated instance, so this is memory hygiene plus an
+    /// observable counter ([`Self::evictions`]) for the serve report.
+    /// Unknown names evict nothing.
+    pub fn evict_dataset_epochs_below(&self, dataset_name: &str, epoch: u64) -> usize {
+        let Some(spec) = spec_by_name(dataset_name) else {
+            return 0;
+        };
+        let name = spec.name;
+        let mut evicted = 0usize;
+        {
+            let mut m = lock(&self.partitions);
+            let before = m.len();
+            m.retain(|(n, e, _, _), _| n.as_str() != name || *e >= epoch);
+            evicted += before - m.len();
+        }
+        {
+            let mut m = lock(&self.plans);
+            let before = m.len();
+            m.retain(|(_, n, e, _, _), _| n.as_str() != name || *e >= epoch);
+            evicted += before - m.len();
+        }
+        {
+            let mut m = lock(&self.sharded_plans);
+            let before = m.len();
+            m.retain(|((_, n, e, _, _), _), _| n.as_str() != name || *e >= epoch);
+            evicted += before - m.len();
+        }
+        {
+            let mut m = lock(&self.profiles);
+            let before = m.len();
+            m.retain(|(_, n, e, _, _), _| n.as_str() != name || *e >= epoch);
+            evicted += before - m.len();
+        }
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    /// How many cache entries [`Self::evict_dataset_epochs_below`] has
+    /// dropped over this engine's lifetime (monotone, like the build
+    /// counters).
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Fans a batch of requests out over the scoped thread pool
@@ -543,6 +608,7 @@ mod tests {
         let modified = Dataset {
             spec: canonical.spec,
             graphs: vec![crate::graph::csr::CsrGraph::from_edges(10, &[(0, 1), (1, 2)])],
+            epoch: 0,
         };
         let fresh = engine.partitions_for(&modified, 20, 20).unwrap();
         assert!(!Arc::ptr_eq(&cached, &fresh));
@@ -776,6 +842,47 @@ mod tests {
         assert!(r.kinds.remote_gather.energy_j > 0.0);
         let plan = engine.sharded_plan(&req, 4).unwrap();
         assert!(plan.shard_plan.fits_budget(cfg.chip_mem_bytes));
+    }
+
+    /// The churn-safety regression pin: once a dataset mutates (epoch
+    /// bump), every cache row keyed at the old epoch is unreachable for
+    /// the mutated instance and evictable by name — a mutated dataset can
+    /// never be served a stale partition set, plan, or [`ServiceProfile`].
+    #[test]
+    fn mutated_dataset_epoch_keys_and_eviction_prevent_stale_serving() {
+        use crate::graph::mutate::{self, GraphDelta};
+        let engine = BatchEngine::new();
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let req = SimRequest::new(ModelKind::Gcn, "Cora", cfg, flags);
+        let stale = engine.service_profile(&req).unwrap();
+        assert_eq!(engine.profile_builds(), 1);
+        // Mutate a private copy (the engine's canonical Arc is immutable):
+        // the epoch bumps and the spliced partitions ride along.
+        let mut ds = (*engine.dataset("Cora").unwrap()).clone();
+        let mut pms = (*engine.partitions_for(&ds, cfg.v, cfg.n).unwrap()).clone();
+        let batch = vec![GraphDelta::AddEdge { src: 0, dst: 1 }; 50];
+        mutate::apply_to_dataset(&mut ds, &mut pms, 0, &batch).unwrap();
+        assert_eq!(ds.epoch, 1);
+        // One partition set, one plan, one profile were cached at epoch 0.
+        let evicted = engine.evict_dataset_epochs_below("Cora", ds.epoch);
+        assert_eq!(evicted, 3, "epoch-0 partition/plan/profile rows must go");
+        assert_eq!(engine.evictions(), 3);
+        // The mutated instance keys its own partition row (epoch 1) and
+        // gets partitions matching its mutated graph, not Cora's.
+        let fresh = engine.partitions_for(&ds, cfg.v, cfg.n).unwrap();
+        assert_eq!(fresh[0].total_edges(), ds.graphs[0].n_edges() as u64);
+        let again = engine.partitions_for(&ds, cfg.v, cfg.n).unwrap();
+        assert!(Arc::ptr_eq(&fresh, &again), "epoch-keyed row is cached, not a fallback");
+        // A canonical re-request re-simulates — the stale profile is gone
+        // from the map, and the canonical state is unchanged, so the new
+        // value agrees.
+        let rebuilt = engine.service_profile(&req).unwrap();
+        assert_eq!(engine.profile_builds(), 2, "stale profile must not be served");
+        assert_eq!(stale, rebuilt);
+        // from_report is the same formula the cached path used.
+        let r = engine.run(&req).unwrap();
+        assert_eq!(ServiceProfile::from_report(&r), rebuilt);
     }
 
     #[test]

@@ -43,6 +43,10 @@ pub enum SimError {
     /// graph — a construction-path invariant violation (one segment per
     /// layer per graph), previously a panic.
     SegmentShapeMismatch { graph: usize, expected: usize, got: usize },
+    /// A graph-mutation batch was rejected
+    /// ([`crate::graph::mutate::MutateError`], pre-rendered — the delta
+    /// never touched the graph, partition, or epoch).
+    Mutation(String),
     /// A specific workload inside a multi-workload evaluation failed;
     /// carries which `(model, dataset)` pair so sweeps can report why a
     /// configuration point vanished.
@@ -84,6 +88,7 @@ impl fmt::Display for SimError {
                 "plan assembly for graph {graph} expected {expected} pipeline segment(s) \
                  (one per layer) but produced {got}"
             ),
+            SimError::Mutation(msg) => write!(f, "graph mutation rejected: {msg}"),
             SimError::Workload { model, dataset, source } => {
                 write!(f, "workload {}/{dataset}: {source}", model.name())
             }
@@ -110,6 +115,12 @@ impl SimError {
 impl From<crate::sim::RaggedStages> for SimError {
     fn from(e: crate::sim::RaggedStages) -> Self {
         SimError::RaggedSchedule(e)
+    }
+}
+
+impl From<crate::graph::mutate::MutateError> for SimError {
+    fn from(e: crate::graph::mutate::MutateError) -> Self {
+        SimError::Mutation(e.to_string())
     }
 }
 

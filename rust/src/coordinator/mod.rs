@@ -17,9 +17,10 @@
 //! * [`error`] — the structured [`SimError`] every fallible path returns.
 //! * [`soa`] — the structure-of-arrays cost core: every plan carries a
 //!   [`PlanSoA`] lowering (flat latency/energy lanes + cached per-group /
-//!   per-segment partials) that evaluation replays, and [`DeltaPlan`]
+//!   per-segment partials) that evaluation replays, [`DeltaPlan`]
 //!   re-costs only provenance-affected lanes between neighboring sweep
-//!   points.
+//!   points, and [`GraphDeltaPlan`] re-costs only mutation-touched groups
+//!   when the *graph* changes under a fixed configuration.
 //! * [`dse`] — the architectural design-space exploration of Fig. 7(c)
 //!   over `[N, V, R_r, R_c, T_r]`, run through the engine; sweeps walk the
 //!   grid in Gray order and delta-evaluate by default.
@@ -42,5 +43,5 @@ pub use plan::{
     ChipPlan, KindTotals, PipelineSegment, PlanItem, ShardedStagePlan, StageKind,
     StagePlan,
 };
-pub use soa::{DeltaPlan, ParamSet, PlanSoA};
+pub use soa::{delta_counters, DeltaPlan, GraphDeltaPlan, ParamSet, PlanSoA};
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

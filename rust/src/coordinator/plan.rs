@@ -454,8 +454,10 @@ fn resident_feat_bytes(model: &Model) -> usize {
 
 /// Rejects workloads whose single-chip resident footprint exceeds the
 /// configured per-chip memory budget, naming the smallest shard count
-/// whose even split could hold it.
-fn check_chip_memory(
+/// whose even split could hold it. `pub(crate)` so the churn engine's
+/// [`super::soa::GraphDeltaPlan`] can re-gate a vertex-grown graph on the
+/// patch path exactly as a cold build would.
+pub(crate) fn check_chip_memory(
     model: &Model,
     partitions: &[PartitionMatrix],
     cfg: GhostConfig,

@@ -18,13 +18,24 @@
 //! derived sums and re-running the recurrence for affected segments)
 //! instead of rebuilding the plan — a full rebuild happens only when a
 //! structural parameter (`n`, `v`, or the chip memory budget) changes.
+//!
+//! [`GraphDeltaPlan`] is the *graph-churn* counterpart: the configuration
+//! is fixed but the graph mutates under it
+//! ([`crate::graph::mutate::apply_to_dataset`]). A patch re-costs only the
+//! lane positions of the output groups a mutation's [`AppliedDelta`] names
+//! (plus the mutated graph's edge-stream and readout serial stages),
+//! falling back to a rebuild when the mutation reshapes the plan itself
+//! (group-count change, a DRAM-spill flip, or a sharded plan).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::arch::{ArchContext, StageCost};
+use crate::arch::{ecu, ArchContext, StageCost};
 use crate::config::GhostConfig;
 use crate::gnn::models::{Model, ModelKind};
-use crate::graph::datasets::Dataset;
+use crate::gnn::workload::Workload;
+use crate::graph::datasets::{Dataset, DatasetSpec};
+use crate::graph::mutate::AppliedDelta;
 use crate::graph::partition::{OutputGroupPlan, PartitionMatrix, ShardPlan};
 use crate::sim::{self, QuadSched};
 
@@ -32,6 +43,23 @@ use super::error::SimError;
 use super::optimizations::OptFlags;
 use super::plan::{self, Block, ChipPlan, PlanItem, StageKind, PIPELINE_STAGES};
 use super::schedule::SimReport;
+
+/// Process-wide full-rebuild count across every delta-plan instance
+/// ([`DeltaPlan`] and [`GraphDeltaPlan`]) — surfaced by
+/// [`delta_counters`] for the `--json` outputs of `ghost run` / `ghost
+/// serve` / `ghost dse`.
+static GLOBAL_REBUILDS: AtomicUsize = AtomicUsize::new(0);
+/// Process-wide incremental-patch count, same scope as
+/// [`GLOBAL_REBUILDS`].
+static GLOBAL_PATCHES: AtomicUsize = AtomicUsize::new(0);
+
+/// `(rebuilds, patches)` performed by every delta plan in this process so
+/// far — both the DSE sweep's [`DeltaPlan`] retargets and the churn
+/// engine's [`GraphDeltaPlan`] graph retargets. Monotone counters; readers
+/// diff two snapshots to attribute work to a phase.
+pub fn delta_counters() -> (usize, usize) {
+    (GLOBAL_REBUILDS.load(Ordering::Relaxed), GLOBAL_PATCHES.load(Ordering::Relaxed))
+}
 
 /// A set of [`GhostConfig`] parameters, as a bitmask — the provenance
 /// vocabulary of the delta evaluator.
@@ -414,6 +442,7 @@ impl<'a> DeltaPlan<'a> {
     ) -> Result<(), SimError> {
         self.state = None;
         self.rebuilds += 1;
+        GLOBAL_REBUILDS.fetch_add(1, Ordering::Relaxed);
         let (header, soa, shard_plan) = if self.shards == 1 {
             let p = plan::build(self.kind, self.dataset, partitions, cfg, self.flags)?;
             let header = EvalHeader {
@@ -474,6 +503,7 @@ impl<'a> DeltaPlan<'a> {
     /// all unchanged.
     fn patch(&mut self, cfg: GhostConfig) {
         self.patches += 1;
+        GLOBAL_PATCHES.fetch_add(1, Ordering::Relaxed);
         let st = self.state.as_mut().expect("patch requires a lowered state");
         let diff = ParamSet::diff(&st.header.cfg, &cfg);
         let ctx = ArchContext::paper(cfg);
@@ -584,6 +614,293 @@ impl<'a> DeltaPlan<'a> {
     }
 }
 
+/// Incrementally maintained plan for a *mutating graph* under a fixed
+/// `(model, dataset, config, flags, shards)` workload — the plan-level
+/// half of the churn engine (level 1 and 2 are CSR / partition splicing in
+/// [`crate::graph::mutate`]).
+///
+/// [`GraphDeltaPlan::retarget_graph`] moves the plan to the dataset's
+/// current mutation epoch. Handed the [`AppliedDelta`]s since the last
+/// target, it patches in place: the mutated graph's edge-stream and
+/// readout serial stages are re-costed from the new edge/vertex counts,
+/// and within each of that graph's segments only the `changed_groups`
+/// lanes are re-costed (and of those only the positions that read the
+/// group shape — [`super::plan::position_group_invariant`] positions
+/// cannot have moved, since layer dims and config are fixed). Patched
+/// state is bit-identical to a cold [`super::plan::build`] on the mutated
+/// dataset — the same cost helpers run over the same inputs — which the
+/// churn oracle (`GHOST_CHURN_CHECK`, always-on in debug) asserts against
+/// a fresh build after every patch.
+///
+/// A full rebuild happens when patching cannot be sound: no prior state,
+/// no delta provided, a sharded plan (group→chip ranges move with group
+/// shapes), a group-count change (lane layout reshapes), or a DRAM-spill
+/// flip (vertex growth pushed a layer's feature map past the input-vertex
+/// buffer, changing segment kinds and spill accounting).
+#[derive(Debug)]
+pub struct GraphDeltaPlan {
+    kind: ModelKind,
+    cfg: GhostConfig,
+    flags: OptFlags,
+    shards: usize,
+    model: Model,
+    state: Option<DeltaState>,
+    rebuilds: usize,
+    patches: usize,
+}
+
+impl GraphDeltaPlan {
+    /// Creates an untargeted plan; call [`Self::retarget_graph`] before
+    /// [`Self::evaluate`]. The model shape depends only on the dataset
+    /// *spec*, which mutation never changes, so it is built once here.
+    pub fn new(
+        kind: ModelKind,
+        spec: &DatasetSpec,
+        cfg: GhostConfig,
+        flags: OptFlags,
+        shards: usize,
+    ) -> GraphDeltaPlan {
+        GraphDeltaPlan {
+            kind,
+            cfg,
+            flags,
+            shards,
+            model: Model::for_dataset(kind, spec),
+            state: None,
+            rebuilds: 0,
+            patches: 0,
+        }
+    }
+
+    /// Full rebuilds performed so far (first target included).
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Incremental graph patches performed so far.
+    pub fn patches(&self) -> usize {
+        self.patches
+    }
+
+    /// Moves the plan to the dataset's current state. `partitions` must be
+    /// the dataset's current `(cfg.v, cfg.n)` partition set (kept current
+    /// by [`crate::graph::mutate::apply_to_dataset`]); `applied` is the
+    /// mutation trail since the previous target — `None` (or an empty
+    /// prior state) forces a rebuild.
+    pub fn retarget_graph(
+        &mut self,
+        dataset: &Dataset,
+        partitions: &[PartitionMatrix],
+        applied: Option<&[AppliedDelta]>,
+    ) -> Result<(), SimError> {
+        let rebuild = match (&self.state, applied) {
+            (None, _) | (_, None) => true,
+            (Some(_), Some(ads)) => {
+                self.shards != 1
+                    || ads.iter().any(|ad| ad.new_n_groups != ad.old_n_groups)
+                    || self.spill_flipped(ads)
+            }
+        };
+        if rebuild {
+            self.rebuild_graph(dataset, partitions)
+        } else {
+            self.patch_graph(dataset, partitions, applied.unwrap_or(&[]))
+        }
+    }
+
+    /// Evaluates the current target. Bit-identical to building a fresh
+    /// plan over the mutated dataset and evaluating it.
+    pub fn evaluate(&self) -> Result<SimReport, SimError> {
+        let st = self.state.as_ref().ok_or_else(|| {
+            SimError::InvalidConfig("GraphDeltaPlan::evaluate before retarget_graph".into())
+        })?;
+        Ok(plan::evaluate_soa(&st.soa, &st.header))
+    }
+
+    /// Whether vertex growth flipped any post-layer-0 reduction layer's
+    /// input feature map across the input-vertex-buffer boundary — the
+    /// `from_dram` spill test of plan construction. A flip changes segment
+    /// kinds (and the spill counter), so the plan must rebuild.
+    fn spill_flipped(&self, ads: &[AppliedDelta]) -> bool {
+        let buf = ArchContext::paper(self.cfg).buffers.input_vertices.size_bytes;
+        ads.iter().any(|ad| {
+            ad.old_n_vertices != ad.new_n_vertices
+                && self.model.layers.iter().skip(1).any(|l| {
+                    l.reduction.is_some()
+                        && (ad.old_n_vertices * l.in_dim > buf)
+                            != (ad.new_n_vertices * l.in_dim > buf)
+                })
+        })
+    }
+
+    fn rebuild_graph(
+        &mut self,
+        dataset: &Dataset,
+        partitions: &[PartitionMatrix],
+    ) -> Result<(), SimError> {
+        self.state = None;
+        self.rebuilds += 1;
+        GLOBAL_REBUILDS.fetch_add(1, Ordering::Relaxed);
+        let (header, soa, shard_plan) = if self.shards == 1 {
+            let p = plan::build(self.kind, dataset, partitions, self.cfg, self.flags)?;
+            let header = EvalHeader {
+                model: p.model,
+                dataset: p.dataset,
+                cfg: p.cfg,
+                flags: p.flags,
+                shards: 1,
+                spilled_layer_gathers: p.spilled_layer_gathers,
+                platform_w: p.platform_w,
+                ops: p.ops,
+                bits: p.bits,
+            };
+            (header, p.soa, None)
+        } else {
+            let p = plan::build_sharded(
+                self.kind,
+                dataset,
+                partitions,
+                self.cfg,
+                self.flags,
+                self.shards,
+            )?;
+            let header = EvalHeader {
+                model: p.model,
+                dataset: p.dataset,
+                cfg: p.cfg,
+                flags: p.flags,
+                shards: p.shards,
+                spilled_layer_gathers: p.spilled_layer_gathers,
+                platform_w: p.platform_w,
+                ops: p.ops,
+                bits: p.bits,
+            };
+            (header, p.soa, Some(p.shard_plan))
+        };
+        let mut eff_groups = Vec::with_capacity(soa.group_energy.len());
+        for seg in &soa.segs {
+            let layer = &self.model.layers[seg.layer as usize];
+            let pm = &partitions[seg.graph as usize];
+            let groups: &[OutputGroupPlan] = match &shard_plan {
+                None => &pm.groups,
+                Some(sp) => &pm.groups[sp.group_range(seg.graph as usize, seg.chip as usize)],
+            };
+            debug_assert_eq!(groups.len(), seg.n_groups);
+            for grp in groups {
+                eff_groups.push(plan::effective_group(grp, layer.neighbor_sample, self.cfg.v));
+            }
+        }
+        self.state = Some(DeltaState { header, soa, shard_plan, eff_groups });
+        Ok(())
+    }
+
+    /// Patches the lowered state through one or more applied mutations.
+    /// Only reached for single-chip plans with unchanged group counts and
+    /// no spill flip, so lane layout, segment kinds, phase structure, and
+    /// the shard plan are all still valid.
+    fn patch_graph(
+        &mut self,
+        dataset: &Dataset,
+        partitions: &[PartitionMatrix],
+        applied: &[AppliedDelta],
+    ) -> Result<(), SimError> {
+        // Vertex growth can push the resident footprint past the chip
+        // budget — the same gate a cold build would apply.
+        plan::check_chip_memory(&self.model, partitions, self.cfg)?;
+        self.patches += 1;
+        GLOBAL_PATCHES.fetch_add(1, Ordering::Relaxed);
+        let ctx = ArchContext::paper(self.cfg);
+        let st = self.state.as_mut().expect("patch requires a lowered state");
+        let DeltaState { header, soa, shard_plan: _, eff_groups } = st;
+        let ro_width = self.model.layers.last().map(|l| l.out_dim * l.heads).unwrap_or(0);
+        for ad in applied {
+            debug_assert!(ad.graph < partitions.len(), "applied delta names a live graph");
+            let pm = &partitions[ad.graph];
+            // The mutated graph's serial stages: its edge stream scales
+            // with the new edge count, its readout with the new vertex
+            // count. Both appear once per graph in graph order within the
+            // single chip's walk, by construction.
+            let mut es_gi = 0usize;
+            let mut ro_gi = 0usize;
+            for e in soa.entries.iter_mut() {
+                match e {
+                    SoaEntry::Serial { kind: StageKind::EdgeStream, cost } => {
+                        if es_gi == ad.graph {
+                            *cost = ecu::edge_stage_cost(&ctx, ad.new_n_edges as u64 * 8);
+                        }
+                        es_gi += 1;
+                    }
+                    SoaEntry::Serial { kind: StageKind::Readout, cost } => {
+                        if ro_gi == ad.graph {
+                            *cost = plan::readout_item(&ctx, ad.new_n_vertices, ro_width);
+                        }
+                        ro_gi += 1;
+                    }
+                    _ => {}
+                }
+            }
+            // The mutated graph's segments: refresh the effective group
+            // plan of every changed group and re-cost the positions that
+            // read the group shape. Shape-free positions depend only on
+            // layer dims and config — both fixed — so their lanes are
+            // already bit-identical to a cold build's.
+            for idx in 0..soa.segs.len() {
+                let seg = soa.segs[idx];
+                if seg.graph as usize != ad.graph || seg.n_groups == 0 {
+                    continue;
+                }
+                let layer = &self.model.layers[seg.layer as usize];
+                let from_dram = match seg.kinds[0] {
+                    StageKind::Gather { from_dram } => from_dram,
+                    _ => false,
+                };
+                let mut changed = false;
+                for &cg in &ad.changed_groups {
+                    let g = cg as usize;
+                    debug_assert!(g < seg.n_groups, "changed group within segment");
+                    changed = true;
+                    eff_groups[seg.group_start + g] =
+                        plan::effective_group(&pm.groups[g], layer.neighbor_sample, self.cfg.v);
+                    for s in 0..PIPELINE_STAGES {
+                        if plan::position_group_invariant(&self.model, layer, s) {
+                            continue;
+                        }
+                        let c = plan::position_cost(
+                            &ctx,
+                            &self.model,
+                            layer,
+                            &eff_groups[seg.group_start + g],
+                            self.flags,
+                            from_dram,
+                            s,
+                        );
+                        let slot = seg.slot_start + g * PIPELINE_STAGES + s;
+                        soa.latency[slot] = c.latency_s;
+                        soa.energy[slot] = c.energy_j;
+                    }
+                }
+                if changed {
+                    soa.rederive_segment(idx, self.flags.pipelining);
+                }
+            }
+        }
+        // Workload totals follow the mutated edge/vertex counts.
+        let workload = Workload::characterize(&self.model, dataset);
+        header.ops = workload.total_ops();
+        header.bits = workload.total_bits();
+        if crate::graph::mutate::churn_check_enabled() {
+            let fresh = plan::build(self.kind, dataset, partitions, self.cfg, self.flags)?;
+            let got = plan::evaluate_soa(soa, header);
+            let want = plan::reference_evaluate(&fresh)?;
+            assert_eq!(
+                got, want,
+                "graph-delta patch diverged from a cold rebuild on the mutated dataset"
+            );
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -645,6 +962,63 @@ mod tests {
                 _ => panic!("entry {i}: walk shapes diverged"),
             }
         }
+        assert_eq!(dp.evaluate().unwrap(), plan::reference_evaluate(&fresh).unwrap());
+    }
+
+    /// The graph-churn patch pin: after an edge-churn mutation batch, one
+    /// `retarget_graph` goes through the patch path (not a rebuild) and
+    /// the patched evaluation equals a cold rebuild on the mutated
+    /// dataset, for both execution orderings.
+    #[test]
+    fn graph_patch_matches_a_cold_rebuild_after_mutation() {
+        use crate::graph::mutate;
+        use crate::util::rng::Pcg64;
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        for (kind, seed) in [(ModelKind::Gcn, 11u64), (ModelKind::Gat, 12u64)] {
+            let mut ds = Dataset::by_name("Cora").unwrap();
+            let mut pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+            let mut dp = GraphDeltaPlan::new(kind, &ds.spec, cfg, flags, 1);
+            dp.retarget_graph(&ds, &pms, None).unwrap();
+            assert_eq!((dp.rebuilds(), dp.patches()), (1, 0));
+            let mut rng = Pcg64::seed_from_u64(seed);
+            // Pure edge churn (no vertex adds) keeps the group count, so
+            // the retarget must patch.
+            let batch = mutate::random_batch(&ds.graphs[0], 250, 0.6, 0.0, &mut rng);
+            let ad = mutate::apply_to_dataset(&mut ds, &mut pms, 0, &batch).unwrap();
+            dp.retarget_graph(&ds, &pms, Some(std::slice::from_ref(&ad))).unwrap();
+            assert_eq!(
+                (dp.rebuilds(), dp.patches()),
+                (1, 1),
+                "{kind:?}: edge churn must take the patch path"
+            );
+            let fresh = plan::build(kind, &ds, &pms, cfg, flags).unwrap();
+            assert_eq!(
+                dp.evaluate().unwrap(),
+                plan::reference_evaluate(&fresh).unwrap(),
+                "{kind:?}: patched evaluation diverged from a cold rebuild"
+            );
+        }
+    }
+
+    /// Vertex growth that crosses a group boundary reshapes the lane
+    /// layout, so the retarget must rebuild — and still match a cold
+    /// build.
+    #[test]
+    fn group_count_change_forces_a_rebuild() {
+        let cfg = GhostConfig::paper_optimal();
+        let flags = OptFlags::ghost_default();
+        let mut ds = Dataset::by_name("Citeseer").unwrap();
+        let mut pms = PartitionMatrix::build_all(&ds.graphs, cfg.v, cfg.n);
+        let mut dp = GraphDeltaPlan::new(ModelKind::Gcn, &ds.spec, cfg, flags, 1);
+        dp.retarget_graph(&ds, &pms, None).unwrap();
+        // Enough vertex adds to guarantee a new output group.
+        let batch: Vec<_> = (0..cfg.v + 1).map(|_| crate::graph::mutate::GraphDelta::AddVertex).collect();
+        let ad = crate::graph::mutate::apply_to_dataset(&mut ds, &mut pms, 0, &batch).unwrap();
+        assert!(ad.new_n_groups > ad.old_n_groups);
+        dp.retarget_graph(&ds, &pms, Some(std::slice::from_ref(&ad))).unwrap();
+        assert_eq!((dp.rebuilds(), dp.patches()), (2, 0));
+        let fresh = plan::build(ModelKind::Gcn, &ds, &pms, cfg, flags).unwrap();
         assert_eq!(dp.evaluate().unwrap(), plan::reference_evaluate(&fresh).unwrap());
     }
 }

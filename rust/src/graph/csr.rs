@@ -77,6 +77,15 @@ impl CsrGraph {
         }
         self.n_edges() as f64 / (self.n_vertices as f64 * self.n_vertices as f64)
     }
+
+    /// `(src, dst)` endpoints of edge slot `e` (an index into `col_idx`):
+    /// the destination is the row owning the slot, found by binary search
+    /// over the row pointers. Panics when `e >= n_edges()`.
+    pub fn edge_endpoints(&self, e: usize) -> (u32, u32) {
+        assert!(e < self.n_edges(), "edge index {e} out of range");
+        let dst = self.row_ptr.partition_point(|&p| p as usize <= e) - 1;
+        (self.col_idx[e], dst as u32)
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +127,16 @@ mod tests {
     fn duplicate_edges_kept() {
         let g = CsrGraph::from_edges(2, &[(0, 1), (0, 1)]);
         assert_eq!(g.neighbors(1), &[0, 0]);
+    }
+
+    #[test]
+    fn edge_endpoints_cover_every_slot() {
+        let g = tiny();
+        let mut recovered: Vec<(u32, u32)> =
+            (0..g.n_edges()).map(|e| g.edge_endpoints(e)).collect();
+        recovered.sort_unstable();
+        let mut expected = vec![(0, 2), (1, 2), (2, 0), (0, 1)];
+        expected.sort_unstable();
+        assert_eq!(recovered, expected);
     }
 }

@@ -310,6 +310,11 @@ fn parse_rmat_name(lower: &str) -> Option<DatasetSpec> {
 pub struct Dataset {
     pub spec: DatasetSpec,
     pub graphs: Vec<CsrGraph>,
+    /// Graph-mutation epoch: 0 for a freshly generated dataset, bumped by
+    /// [`crate::graph::mutate::apply_to_dataset`] on every applied delta
+    /// batch. Cache keys include it so a mutated dataset can never alias a
+    /// stale cached partition set, plan, or service profile.
+    pub epoch: u64,
 }
 
 impl Dataset {
@@ -339,7 +344,7 @@ impl Dataset {
                 GraphGen::RMat => generate_rmat_graph(n, e, spec.max_degree_cap, &mut rng),
             }
         });
-        Self { spec, graphs }
+        Self { spec, graphs, epoch: 0 }
     }
 
     /// Generate a dataset by name (any tier; see [`spec_by_name`]).

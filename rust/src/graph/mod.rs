@@ -8,11 +8,17 @@
 //!   only through the size/sparsity/degree statistics matched here).
 //! * [`partition`] — the V×N "buffer & partition" matrix (§3.4.1) with
 //!   all-zero-block skipping and offline prefetch ordering.
+//! * [`mutate`] — typed graph-mutation batches ([`mutate::GraphDelta`])
+//!   applied incrementally: CSR row splicing plus
+//!   [`PartitionMatrix::splice`] group re-derivation, validated
+//!   byte-identical against from-scratch rebuilds.
 
 pub mod csr;
 pub mod datasets;
+pub mod mutate;
 pub mod partition;
 
 pub use csr::CsrGraph;
 pub use datasets::{Dataset, DatasetSpec};
+pub use mutate::{AppliedDelta, GraphDelta, MutateError};
 pub use partition::{PartitionMatrix, ShardPlan};

@@ -84,29 +84,40 @@ struct ChunkPlan {
     block_ptr: Vec<u32>,
 }
 
-/// Builds the plans for output groups `range` of the graph. Scratch state
-/// (per-input-group edge counters, epoch stamps for distinct-source
-/// counting, the touched-block list) is local to the call, so ranges can be
-/// built concurrently.
-fn build_group_range(
-    graph: &CsrGraph,
-    v: usize,
-    n: usize,
-    range: std::ops::Range<usize>,
-) -> ChunkPlan {
-    let n_in_groups = graph.n_vertices.div_ceil(n).max(1);
-    // Scratch: edge counts per input group, reused across output groups.
-    let mut block_edges = vec![0u32; n_in_groups];
-    // Scratch: epoch stamps for distinct-source counting; a source is new
-    // in this group iff its stamp differs from the group epoch.
-    let mut seen_epoch = vec![u32::MAX; graph.n_vertices];
-    // Scratch: input groups touched by the current output group.
-    let mut touched: Vec<u32> = Vec::new();
-    let mut groups = Vec::with_capacity(range.len());
-    let mut blocks: Vec<BlockRef> = Vec::new();
-    let mut block_ptr = Vec::with_capacity(range.len() + 1);
-    block_ptr.push(0u32);
-    for og in range {
+/// Reusable scratch for deriving single output-group plans: per-input-group
+/// edge counters, epoch stamps for distinct-source counting, and the
+/// touched-block list. One allocation serves any number of *distinct*
+/// output groups (the epoch stamps key on the group index), which is what
+/// makes scattered-group re-derivation in [`PartitionMatrix::splice`] as
+/// cheap per group as the bulk build.
+struct GroupScratch {
+    block_edges: Vec<u32>,
+    seen_epoch: Vec<u32>,
+    touched: Vec<u32>,
+}
+
+impl GroupScratch {
+    fn new(graph: &CsrGraph, n: usize) -> Self {
+        let n_in_groups = graph.n_vertices.div_ceil(n).max(1);
+        Self {
+            block_edges: vec![0u32; n_in_groups],
+            seen_epoch: vec![u32::MAX; graph.n_vertices],
+            touched: Vec::new(),
+        }
+    }
+
+    /// Derives the plan for output group `og`, appending its non-empty
+    /// blocks to `blocks` in ascending input-group order. Each distinct
+    /// `og` may be derived at most once per scratch lifetime (a source
+    /// vertex stamped by group `og` would be missed on a second pass).
+    fn derive_group(
+        &mut self,
+        graph: &CsrGraph,
+        v: usize,
+        n: usize,
+        og: usize,
+        blocks: &mut Vec<BlockRef>,
+    ) -> OutputGroupPlan {
         let lo = og * v;
         let hi = ((og + 1) * v).min(graph.n_vertices);
         let mut max_lane_degree = 0u32;
@@ -118,30 +129,49 @@ fn build_group_range(
             max_lane_degree = max_lane_degree.max(deg);
             total_edges += deg;
             for &src in graph.neighbors(dst) {
-                if seen_epoch[src as usize] != epoch {
-                    seen_epoch[src as usize] = epoch;
+                if self.seen_epoch[src as usize] != epoch {
+                    self.seen_epoch[src as usize] = epoch;
                     distinct_sources += 1;
                 }
                 let ig = src as usize / n;
-                if block_edges[ig] == 0 {
-                    touched.push(ig as u32);
+                if self.block_edges[ig] == 0 {
+                    self.touched.push(ig as u32);
                 }
-                block_edges[ig] += 1;
+                self.block_edges[ig] += 1;
             }
         }
-        touched.sort_unstable();
-        for &ig in &touched {
-            blocks.push(BlockRef { input_group: ig, n_edges: block_edges[ig as usize] });
-            block_edges[ig as usize] = 0; // reset scratch
+        self.touched.sort_unstable();
+        for &ig in &self.touched {
+            blocks.push(BlockRef { input_group: ig, n_edges: self.block_edges[ig as usize] });
+            self.block_edges[ig as usize] = 0; // reset scratch
         }
-        groups.push(OutputGroupPlan {
+        let plan = OutputGroupPlan {
             out_group: og as u32,
-            n_blocks: touched.len() as u32,
+            n_blocks: self.touched.len() as u32,
             max_lane_degree,
             total_edges,
             distinct_sources,
-        });
-        touched.clear();
+        };
+        self.touched.clear();
+        plan
+    }
+}
+
+/// Builds the plans for output groups `range` of the graph. Scratch state
+/// is local to the call, so ranges can be built concurrently.
+fn build_group_range(
+    graph: &CsrGraph,
+    v: usize,
+    n: usize,
+    range: std::ops::Range<usize>,
+) -> ChunkPlan {
+    let mut scratch = GroupScratch::new(graph, n);
+    let mut groups = Vec::with_capacity(range.len());
+    let mut blocks: Vec<BlockRef> = Vec::new();
+    let mut block_ptr = Vec::with_capacity(range.len() + 1);
+    block_ptr.push(0u32);
+    for og in range {
+        groups.push(scratch.derive_group(graph, v, n, og, &mut blocks));
         block_ptr.push(blocks.len() as u32);
     }
     ChunkPlan { groups, blocks, block_ptr }
@@ -303,6 +333,54 @@ impl PartitionMatrix {
     /// Number of vertices owned by output groups `range`.
     pub fn group_range_vertices(&self, range: std::ops::Range<usize>) -> usize {
         (range.end * self.v).min(self.n_vertices) - (range.start * self.v).min(self.n_vertices)
+    }
+
+    /// Incrementally patches this partition after the underlying graph
+    /// mutated: re-derives only the output groups named in `changed`
+    /// (sorted, deduplicated indices in the *new* group space), any group
+    /// beyond the old group count, and the boundary group whose vertex
+    /// range was clamped by the old vertex count — every other group's
+    /// plan and block slice is copied verbatim. Output groups are derived
+    /// independently of each other, so as long as `changed` covers every
+    /// group owning a destination vertex whose in-edge row was touched,
+    /// the result is byte-identical to
+    /// [`Self::build_serial`]`(graph, v, n)` on the mutated graph (the
+    /// property tests and the `GHOST_CHURN_CHECK` oracle pin this).
+    pub fn splice(&mut self, graph: &CsrGraph, changed: &[u32]) {
+        debug_assert!(
+            changed.windows(2).all(|w| w[0] < w[1]),
+            "changed groups must be sorted and deduplicated"
+        );
+        let new_n_out = graph.n_vertices.div_ceil(self.v).max(1);
+        let old_n_out = self.n_output_groups();
+        let mut scratch = GroupScratch::new(graph, self.n);
+        let mut groups = Vec::with_capacity(new_n_out);
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut block_ptr = Vec::with_capacity(new_n_out + 1);
+        block_ptr.push(0u32);
+        let mut next_changed = 0usize;
+        for og in 0..new_n_out {
+            let is_changed =
+                next_changed < changed.len() && changed[next_changed] as usize == og;
+            if is_changed {
+                next_changed += 1;
+            }
+            // A group also changes structurally when it did not exist
+            // before or when vertex growth unclamped its range.
+            let old_hi = ((og + 1) * self.v).min(self.n_vertices);
+            let new_hi = ((og + 1) * self.v).min(graph.n_vertices);
+            if is_changed || og >= old_n_out || old_hi != new_hi {
+                groups.push(scratch.derive_group(graph, self.v, self.n, og, &mut blocks));
+            } else {
+                groups.push(self.groups[og]);
+                blocks.extend_from_slice(self.group_blocks(og));
+            }
+            block_ptr.push(blocks.len() as u32);
+        }
+        self.n_vertices = graph.n_vertices;
+        self.groups = groups;
+        self.blocks = blocks;
+        self.block_ptr = block_ptr;
     }
 }
 
@@ -582,6 +660,43 @@ mod tests {
         let one = PartitionMatrix::build_all(&cora.graphs, 20, 20);
         assert_eq!(one.len(), 1);
         assert_eq!(one[0], PartitionMatrix::build_serial(&cora.graphs[0], 20, 20));
+    }
+
+    #[test]
+    fn splice_matches_full_rebuild_after_edits() {
+        let d = Dataset::by_name("Citeseer").unwrap();
+        let g = &d.graphs[0];
+        let nv = g.n_vertices;
+        // Rebuild the edge list, drop a few edges, add a few, and a vertex.
+        let mut edges: Vec<(u32, u32)> =
+            (0..g.n_edges()).map(|e| g.edge_endpoints(e)).collect();
+        let removed = [edges[3], edges[100], edges[2001]];
+        edges.retain(|e| !removed.contains(e));
+        let added = [(5u32, 9u32), (17, 9), (0, nv as u32)];
+        edges.extend_from_slice(&added);
+        let mutated = CsrGraph::from_edges(nv + 1, &edges);
+        for &(v, n) in &[(20usize, 20usize), (10, 30), (37, 11)] {
+            let mut pm = PartitionMatrix::build_serial(g, v, n);
+            let mut changed: Vec<u32> = removed
+                .iter()
+                .chain(added.iter())
+                .map(|&(_, dst)| (dst as usize / v) as u32)
+                .collect();
+            changed.sort_unstable();
+            changed.dedup();
+            pm.splice(&mutated, &changed);
+            assert_eq!(pm, PartitionMatrix::build_serial(&mutated, v, n), "({v}, {n})");
+        }
+    }
+
+    #[test]
+    fn splice_with_no_changes_is_identity() {
+        let d = Dataset::by_name("Cora").unwrap();
+        let g = &d.graphs[0];
+        let mut pm = PartitionMatrix::build_serial(g, 20, 20);
+        let reference = pm.clone();
+        pm.splice(g, &[]);
+        assert_eq!(pm, reference);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use ghost::config::GhostConfig;
-use ghost::coordinator::{dse as arch_dse, BatchEngine, OptFlags, SimRequest};
+use ghost::coordinator::{delta_counters, dse as arch_dse, BatchEngine, OptFlags, SimRequest};
 use ghost::figures;
 use ghost::gnn::models::ModelKind;
 use ghost::photonics::devices::DeviceParams;
@@ -19,8 +19,8 @@ use ghost::photonics::dse as device_dse;
 #[cfg(feature = "pjrt")]
 use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
 use ghost::serve::{
-    self, ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig, TenantMix, TenantProfile,
-    TrafficSpec,
+    self, ArrivalProcess, BatchPolicy, ChurnSpec, RoutePolicy, ServeConfig, TenantMix,
+    TenantProfile, TrafficSpec,
 };
 use ghost::util::json::Json;
 
@@ -29,7 +29,7 @@ ghost — GHOST silicon-photonic GNN accelerator (paper reproduction)
 
 USAGE:
   ghost run --model <gcn|graphsage|gin|gat> --dataset <name>
-            [--no-bp] [--no-pp] [--no-dac-sharing] [--wb] [--shards N]
+            [--no-bp] [--no-pp] [--no-dac-sharing] [--wb] [--shards N] [--json]
         <name>: a Table-2 dataset (Cora, PubMed, Citeseer, Amazon,
         Proteins, Mutag, BZR, IMDB-binary), a large-tier dataset
         (ogbn-arxiv-syn, reddit-syn), or a parameterized R-MAT spec
@@ -38,6 +38,8 @@ USAGE:
         split over N chips and cross-shard gathers become RemoteGather
         stages over the inter-chip link. Graphs whose per-chip footprint
         exceeds the chip memory budget error with the minimum shard count.
+        --json emits the report plus the process-wide incremental-plan
+        rebuild/patch counters as one JSON object.
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick] [--json]
         --json runs the architectural sweep and emits the frontier,
         failures, and delta-evaluator rebuild/patch counters as one JSON
@@ -57,12 +59,19 @@ USAGE:
               [--rps N] [--accelerators N] [--duration S] [--seed N]
               [--policy rr|jsq|affinity] [--batch immediate|max:<n>:<ms>|slo[:<n>]]
               [--arrival poisson|bursty|diurnal] [--slo-ms MS]
-              [--clients N --think-ms MS] [--shards N] [--json]
+              [--clients N --think-ms MS] [--shards N]
+              [--churn <edges/s> [--churn-batch N]] [--json]
         online-serving simulation: replay a request stream against an
         N-accelerator fleet; report throughput, utilization, and exact
         p50/p95/p99/p999 latency. --clients switches to closed loop.
         --shards N gangs the fleet into groups of N chips; every request
         occupies its tenant's whole shard group (accelerators % N == 0).
+        --churn serves under graph mutation: a seeded Poisson stream of
+        edge-edit batches (--churn-batch ops each, default 8) mutates
+        tenant datasets mid-run; partitions are spliced and plans patched
+        incrementally (GHOST_CHURN_CHECK=1 cross-checks every patch
+        against a cold rebuild), and the report gains a churn block plus
+        the delta rebuild/patch counters under --json.
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 
@@ -156,7 +165,7 @@ fn main() -> Result<()> {
 }
 
 fn cmd_run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["no-bp", "no-pp", "no-dac-sharing", "wb"])?;
+    let args = Args::parse(argv, &["no-bp", "no-pp", "no-dac-sharing", "wb", "json"])?;
     let model = args.require("model")?;
     let dataset = args.require("dataset")?;
     let kind = ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
@@ -171,6 +180,41 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let req = SimRequest::new(kind, dataset, GhostConfig::paper_optimal(), flags);
     let engine = BatchEngine::global();
     let r = if shards > 1 { engine.run_sharded(&req, shards)? } else { engine.run(&req)? };
+    if args.has("json") {
+        let (a, c, u) = r.breakdown();
+        let (rebuilds, patches) = delta_counters();
+        println!(
+            "{}",
+            ghost::util::json::obj(vec![
+                ("model", Json::Str(r.model.name().to_string())),
+                ("dataset", Json::Str(r.dataset.clone())),
+                ("flags", Json::Str(r.flags.label())),
+                ("shards", Json::Num(shards as f64)),
+                ("latency_s", Json::Num(r.metrics.latency_s)),
+                ("energy_j", Json::Num(r.metrics.energy_j)),
+                ("power_w", Json::Num(r.metrics.power_w())),
+                ("gops", Json::Num(r.metrics.gops())),
+                ("epb", Json::Num(r.metrics.epb())),
+                ("epb_per_gops", Json::Num(r.metrics.epb_per_gops())),
+                (
+                    "breakdown",
+                    ghost::util::json::obj(vec![
+                        ("aggregate", Json::Num(a)),
+                        ("combine", Json::Num(c)),
+                        ("update", Json::Num(u)),
+                    ])
+                ),
+                (
+                    "delta",
+                    ghost::util::json::obj(vec![
+                        ("rebuilds", Json::Num(rebuilds as f64)),
+                        ("patches", Json::Num(patches as f64)),
+                    ])
+                ),
+            ])
+        );
+        return Ok(());
+    }
     println!("GHOST simulation: {} / {}", r.model.name(), r.dataset);
     println!("  flags        : {}", r.flags.label());
     if shards > 1 {
@@ -554,10 +598,34 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     cfg.duration_s = duration_s;
     cfg.seed = args.get("seed").unwrap_or("7").parse()?;
     cfg.slo_s = slo_s;
+    match args.get("churn") {
+        Some(rate) => {
+            let mut spec = ChurnSpec::new(rate.parse()?);
+            if let Some(b) = args.get("churn-batch") {
+                spec.batch = b.parse()?;
+            }
+            cfg.churn = Some(spec);
+        }
+        None if args.get("churn-batch").is_some() => {
+            bail!("--churn-batch only applies with --churn");
+        }
+        None => {}
+    }
 
     let report = serve::simulate(BatchEngine::global(), &cfg)?;
     if args.has("json") {
-        println!("{}", report.to_json());
+        let mut j = report.to_json();
+        if let Json::Obj(o) = &mut j {
+            let (rebuilds, patches) = delta_counters();
+            o.insert(
+                "delta".into(),
+                ghost::util::json::obj(vec![
+                    ("rebuilds", Json::Num(rebuilds as f64)),
+                    ("patches", Json::Num(patches as f64)),
+                ]),
+            );
+        }
+        println!("{j}");
         return Ok(());
     }
     let tenant_list = cfg
@@ -637,6 +705,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         report.queue_depth.max()
     );
     println!("  energy       : {:.3} J photonic inference", report.energy_j);
+    if let Some(c) = &report.churn {
+        println!(
+            "  churn        : {} events (+{} / -{} edges, +{} vertices)",
+            c.events, c.edges_added, c.edges_removed, c.vertices_added
+        );
+        println!(
+            "  maintenance  : {} incremental patches, {} rebuilds, {} re-profiles, \
+             {} cache evictions",
+            c.patches, c.rebuilds, c.reprofiles, c.evictions
+        );
+    }
     if let (Some(slo), Some(att)) = (cfg.slo_s, report.slo_attainment) {
         println!("  SLO {:.2} ms  : {:.2}% attainment", slo * 1e3, att * 100.0);
     }

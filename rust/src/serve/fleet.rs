@@ -11,10 +11,13 @@
 //! serving is the engine-side service-profile resolution, which is
 //! worker-count-invariant by the engine's own guarantees).
 //!
-//! Five event kinds drive the loop: open-loop arrivals (each schedules its
+//! Six event kinds drive the loop: open-loop arrivals (each schedules its
 //! successor from the lazy generator), closed-loop client arrivals
 //! (rescheduled think-time after each response), batch completions,
-//! batcher wake-ups (deadline re-evaluation), and metric sampling ticks.
+//! batcher wake-ups (deadline re-evaluation), metric sampling ticks, and
+//! — in serving-under-churn mode — graph-mutation events that splice the
+//! tenant's dataset in place and refresh its service profile through
+//! incremental plan maintenance ([`crate::coordinator::GraphDeltaPlan`]).
 //!
 //! ## Accelerator model
 //!
@@ -31,11 +34,16 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::coordinator::{ServiceProfile, SimError};
+use crate::coordinator::{BatchEngine, GraphDeltaPlan, ServiceProfile, SimError};
+use crate::graph::datasets::Dataset;
+use crate::graph::mutate::{apply_to_dataset, random_batch};
+use crate::graph::partition::PartitionMatrix;
 use crate::util::rng::{mix_seed, Pcg64};
 
-use super::metrics::{AccelStats, LatencyRecorder, ServeReport, TenantStats, TimeSeries};
-use super::traffic::{exp_sample, OpenLoopArrivals, TrafficSpec};
+use super::metrics::{
+    AccelStats, ChurnStats, LatencyRecorder, ServeReport, TenantStats, TimeSeries,
+};
+use super::traffic::{exp_sample, ChurnSpec, OpenLoopArrivals, TenantMix, TrafficSpec};
 use super::ServeConfig;
 
 /// How arriving requests are spread across the fleet.
@@ -84,6 +92,8 @@ enum EventKind {
     Wake { accel: usize },
     /// Metrics sampling tick.
     Sample,
+    /// A graph-mutation batch lands (serving-under-churn mode).
+    Churn,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -166,9 +176,189 @@ impl Accel {
     }
 }
 
+/// Dense dataset ids over the tenant mix: `names[id]` is the dataset of
+/// every tenant `t` with `tenant_dataset[t] == id` (tenants sharing a
+/// dataset share an id — and therefore residency and churn state).
+fn dense_dataset_ids(mix: &TenantMix) -> (Vec<String>, Vec<usize>) {
+    let mut names: Vec<String> = Vec::new();
+    let mut tenant_dataset = Vec::with_capacity(mix.len());
+    for t in mix.tenants() {
+        let id = match names.iter().position(|d| d == &t.dataset) {
+            Some(i) => i,
+            None => {
+                names.push(t.dataset.clone());
+                names.len() - 1
+            }
+        };
+        tenant_dataset.push(id);
+    }
+    (names, tenant_dataset)
+}
+
+/// Live mutation state of a serving-under-churn run: per-dataset mutable
+/// graph + partition copies (the engine's cached instances stay canonical
+/// at their original epoch), one [`GraphDeltaPlan`] per tenant, and the
+/// dedicated churn PCG stream.
+///
+/// Each mutation event samples a tenant by mix weight, applies one
+/// [`crate::graph::mutate::GraphDelta`] batch to that tenant's dataset
+/// (splicing the partition matrices in place and bumping the graph
+/// epoch), evicts the engine's superseded-epoch cache entries, and
+/// re-profiles every tenant sharing the dataset through its delta plan —
+/// an incremental *patch* of only the mutation-touched groups in steady
+/// state, never a cold re-simulation.
+struct ChurnRuntime<'e> {
+    engine: &'e BatchEngine,
+    spec: ChurnSpec,
+    rng: Pcg64,
+    /// Dense dataset id → mutable dataset instance (epoch advances here).
+    datasets: Vec<Dataset>,
+    /// Dense dataset id → its `(V, N)` partition set, spliced in place.
+    partitions: Vec<Vec<PartitionMatrix>>,
+    /// Tenant index → incrementally maintained plan.
+    plans: Vec<GraphDeltaPlan>,
+    tenant_dataset: Vec<usize>,
+    events: u64,
+    edges_added: u64,
+    edges_removed: u64,
+    vertices_added: u64,
+    reprofiles: u64,
+    evictions: u64,
+    epochs: TimeSeries,
+}
+
+impl<'e> ChurnRuntime<'e> {
+    /// Clones the engine's canonical datasets/partitions into mutable
+    /// churn state and primes every tenant's delta plan with one cold
+    /// build, so each in-loop mutation event runs the incremental path.
+    fn new(
+        engine: &'e BatchEngine,
+        cfg: &ServeConfig,
+        spec: ChurnSpec,
+    ) -> Result<Self, SimError> {
+        let (names, tenant_dataset) = dense_dataset_ids(&cfg.mix);
+        let mut datasets = Vec::with_capacity(names.len());
+        let mut partitions = Vec::with_capacity(names.len());
+        for name in &names {
+            let ds = engine.dataset(name)?;
+            let pms = engine.partitions_for(&ds, cfg.accel_cfg.v, cfg.accel_cfg.n)?;
+            datasets.push((*ds).clone());
+            partitions.push((*pms).clone());
+        }
+        let mut plans = Vec::with_capacity(cfg.mix.len());
+        for (i, t) in cfg.mix.tenants().iter().enumerate() {
+            let ds_id = tenant_dataset[i];
+            let mut plan = GraphDeltaPlan::new(
+                t.model,
+                &datasets[ds_id].spec,
+                cfg.accel_cfg,
+                cfg.flags,
+                cfg.shards,
+            );
+            plan.retarget_graph(&datasets[ds_id], &partitions[ds_id], None)
+                .map_err(|e| e.in_workload(t.model, t.dataset.clone()))?;
+            plans.push(plan);
+        }
+        Ok(Self {
+            engine,
+            spec,
+            rng: Pcg64::seed_from_u64(mix_seed(cfg.seed, 3)),
+            datasets,
+            partitions,
+            plans,
+            tenant_dataset,
+            events: 0,
+            edges_added: 0,
+            edges_removed: 0,
+            vertices_added: 0,
+            reprofiles: 0,
+            evictions: 0,
+            epochs: TimeSeries::default(),
+        })
+    }
+
+    /// Gap to the next mutation event (exponential at `edges_per_s /
+    /// batch` events/sec).
+    fn next_gap(&mut self) -> f64 {
+        exp_sample(&mut self.rng, self.spec.events_per_s())
+    }
+
+    /// Applies one mutation event: mutate a tenant-sampled dataset, evict
+    /// the engine's stale-epoch entries, and refresh the in-fleet service
+    /// profile of every tenant sharing the dataset. In-flight batches
+    /// keep the service time they were dispatched with; batches launched
+    /// after this instant use the refreshed profiles.
+    fn apply_event(
+        &mut self,
+        mix: &TenantMix,
+        profiles: &mut [ServiceProfile],
+    ) -> Result<(), SimError> {
+        self.events += 1;
+        let tenant = mix.sample(&mut self.rng);
+        let ds_id = self.tenant_dataset[tenant];
+        let dataset = &mut self.datasets[ds_id];
+        let g = if dataset.graphs.len() > 1 {
+            self.rng.gen_range(0, dataset.graphs.len())
+        } else {
+            0
+        };
+        let batch = random_batch(
+            &dataset.graphs[g],
+            self.spec.batch,
+            self.spec.add_fraction,
+            self.spec.vertex_fraction,
+            &mut self.rng,
+        );
+        let applied = apply_to_dataset(dataset, &mut self.partitions[ds_id], g, &batch)?;
+        self.edges_added += applied.edges_added as u64;
+        self.edges_removed += applied.edges_removed as u64;
+        self.vertices_added += applied.vertices_added as u64;
+        self.evictions +=
+            self.engine.evict_dataset_epochs_below(&dataset.spec.name, dataset.epoch) as u64;
+        let trail = [applied];
+        for (t, plan) in self.plans.iter_mut().enumerate() {
+            if self.tenant_dataset[t] != ds_id {
+                continue;
+            }
+            plan.retarget_graph(&self.datasets[ds_id], &self.partitions[ds_id], Some(&trail))
+                .map_err(|e| {
+                    let tn = &mix.tenants()[t];
+                    e.in_workload(tn.model, tn.dataset.clone())
+                })?;
+            let report = plan.evaluate()?;
+            profiles[t] = ServiceProfile::from_report(&report);
+            self.reprofiles += 1;
+        }
+        Ok(())
+    }
+
+    /// Records the applied-epoch total on a metrics sampling tick.
+    fn sample(&mut self, now: f64) {
+        let total: u64 = self.datasets.iter().map(|d| d.epoch).sum();
+        self.epochs.push(now, total as f64);
+    }
+
+    /// Final per-run churn accounting for the serve report.
+    fn stats(self) -> ChurnStats {
+        ChurnStats {
+            events: self.events,
+            edges_added: self.edges_added,
+            edges_removed: self.edges_removed,
+            vertices_added: self.vertices_added,
+            rebuilds: self.plans.iter().map(|p| p.rebuilds() as u64).sum(),
+            patches: self.plans.iter().map(|p| p.patches() as u64).sum(),
+            reprofiles: self.reprofiles,
+            evictions: self.evictions,
+            epochs: self.epochs,
+        }
+    }
+}
+
 struct FleetSim<'a> {
     cfg: &'a ServeConfig,
-    profiles: &'a [ServiceProfile],
+    profiles: Vec<ServiceProfile>,
+    /// Present exactly when `cfg.churn` is set and an engine was supplied.
+    churn: Option<ChurnRuntime<'a>>,
     /// Tenant index → dense dataset id (tenants sharing a dataset share
     /// residency).
     tenant_dataset: Vec<usize>,
@@ -345,6 +535,9 @@ impl<'a> FleetSim<'a> {
         let busy = self.accels.iter().filter(|a| a.busy).count();
         self.queue_depth.push(now, waiting as f64);
         self.busy_frac.push(now, busy as f64 / self.accels.len() as f64);
+        if let Some(c) = self.churn.as_mut() {
+            c.sample(now);
+        }
     }
 }
 
@@ -354,9 +547,47 @@ impl<'a> FleetSim<'a> {
 /// Arrivals stop at `cfg.duration_s`; the fleet then drains, so every
 /// offered request completes and the report's makespan extends past the
 /// horizon exactly when the offered load exceeded fleet capacity.
+///
+/// Rejects configurations with [`ServeConfig::churn`] set: mutation
+/// events re-derive service profiles through the engine's incremental
+/// machinery, which a profile-only entry point cannot reach — use
+/// [`super::simulate`] (or [`super::simulate_with_workers`]) for
+/// serving-under-churn runs.
 pub fn simulate_fleet(
     cfg: &ServeConfig,
     profiles: &[ServiceProfile],
+) -> Result<ServeReport, SimError> {
+    if cfg.churn.is_some() {
+        return Err(SimError::InvalidConfig(
+            "serving under churn maintains plans through an engine; use serve::simulate \
+             or serve::simulate_with_workers instead of the profile-only entry point"
+                .into(),
+        ));
+    }
+    run_fleet(cfg, profiles.to_vec(), None)
+}
+
+/// [`simulate_fleet`] plus the serving-under-churn mode: when
+/// `cfg.churn` is set, a [`ChurnRuntime`] interleaves graph-mutation
+/// events with the request stream and refreshes tenant profiles through
+/// incremental plan maintenance.
+pub(crate) fn simulate_fleet_churn(
+    engine: &BatchEngine,
+    cfg: &ServeConfig,
+    profiles: Vec<ServiceProfile>,
+) -> Result<ServeReport, SimError> {
+    cfg.validate().map_err(SimError::InvalidConfig)?;
+    let churn = match cfg.churn {
+        Some(spec) => Some(ChurnRuntime::new(engine, cfg, spec)?),
+        None => None,
+    };
+    run_fleet(cfg, profiles, churn)
+}
+
+fn run_fleet<'a>(
+    cfg: &'a ServeConfig,
+    profiles: Vec<ServiceProfile>,
+    churn: Option<ChurnRuntime<'a>>,
 ) -> Result<ServeReport, SimError> {
     cfg.validate().map_err(SimError::InvalidConfig)?;
     if profiles.len() != cfg.mix.len() {
@@ -397,23 +628,13 @@ pub fn simulate_fleet(
     // expanded from the group stats at the end.
     let slots = cfg.shard_groups();
     // Dense dataset ids: tenants sharing a dataset share residency.
-    let mut dataset_names: Vec<&str> = Vec::new();
-    let mut tenant_dataset = Vec::with_capacity(n_tenants);
-    for t in cfg.mix.tenants() {
-        let id = match dataset_names.iter().position(|&d| d == t.dataset.as_str()) {
-            Some(i) => i,
-            None => {
-                dataset_names.push(t.dataset.as_str());
-                dataset_names.len() - 1
-            }
-        };
-        tenant_dataset.push(id);
-    }
+    let (dataset_names, tenant_dataset) = dense_dataset_ids(&cfg.mix);
     let n_datasets = dataset_names.len();
 
     let mut sim = FleetSim {
         cfg,
         profiles,
+        churn,
         tenant_dataset,
         accels: (0..slots).map(|_| Accel::new(n_tenants, n_datasets)).collect(),
         heap: BinaryHeap::new(),
@@ -463,6 +684,18 @@ pub fn simulate_fleet(
     for k in 1..=cfg.samples {
         sim.push(k as f64 * sample_dt, EventKind::Sample);
     }
+    // Churn events stop at the horizon with the arrivals, so the drain
+    // phase serves the final graph state.
+    let first_churn = match sim.churn.as_mut() {
+        Some(c) => {
+            let t0 = c.next_gap();
+            (t0 <= cfg.duration_s).then_some(t0)
+        }
+        None => None,
+    };
+    if let Some(t0) = first_churn {
+        sim.push(t0, EventKind::Churn);
+    }
 
     // The event loop. Arrivals stop at the horizon; the heap then drains.
     while let Some(Reverse(ev)) = sim.heap.pop() {
@@ -492,6 +725,19 @@ pub fn simulate_fleet(
                 sim.try_dispatch(accel, now);
             }
             EventKind::Sample => sim.sample_metrics(now),
+            EventKind::Churn => {
+                let mut next = None;
+                if let Some(c) = sim.churn.as_mut() {
+                    c.apply_event(&cfg.mix, &mut sim.profiles)?;
+                    let t = now + c.next_gap();
+                    if t <= cfg.duration_s {
+                        next = Some(t);
+                    }
+                }
+                if let Some(t) = next {
+                    sim.push(t, EventKind::Churn);
+                }
+            }
         }
     }
 
@@ -540,5 +786,6 @@ pub fn simulate_fleet(
         accels,
         queue_depth: sim.queue_depth,
         busy_frac: sim.busy_frac,
+        churn: sim.churn.map(ChurnRuntime::stats),
     })
 }

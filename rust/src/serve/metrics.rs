@@ -160,6 +160,48 @@ impl AccelStats {
     }
 }
 
+/// Outcome of the graph-mutation stream of a serving-under-churn run
+/// (present on the report exactly when [`super::ServeConfig::churn`] was
+/// set).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChurnStats {
+    /// Mutation events fired (each applies one edge-operation batch).
+    pub events: u64,
+    pub edges_added: u64,
+    pub edges_removed: u64,
+    pub vertices_added: u64,
+    /// Full plan reconstructions across all tenant delta plans (first
+    /// targeting, group-count changes, spill flips, sharded tenants).
+    pub rebuilds: u64,
+    /// Incremental plan patches: only mutation-touched groups re-costed.
+    pub patches: u64,
+    /// Service-profile refreshes pushed into the fleet (one per tenant
+    /// sharing the mutated dataset, per event).
+    pub reprofiles: u64,
+    /// Engine cache entries dropped because their graph epoch was
+    /// superseded ([`crate::coordinator::BatchEngine::evict_dataset_epochs_below`]).
+    pub evictions: u64,
+    /// Total applied graph epochs across churned datasets, sampled on the
+    /// metric ticks — monotone nondecreasing by construction.
+    pub epochs: TimeSeries,
+}
+
+impl ChurnStats {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("events".into(), Json::Num(self.events as f64));
+        o.insert("edges_added".into(), Json::Num(self.edges_added as f64));
+        o.insert("edges_removed".into(), Json::Num(self.edges_removed as f64));
+        o.insert("vertices_added".into(), Json::Num(self.vertices_added as f64));
+        o.insert("rebuilds".into(), Json::Num(self.rebuilds as f64));
+        o.insert("patches".into(), Json::Num(self.patches as f64));
+        o.insert("reprofiles".into(), Json::Num(self.reprofiles as f64));
+        o.insert("evictions".into(), Json::Num(self.evictions as f64));
+        o.insert("epochs".into(), self.epochs.to_json());
+        Json::Obj(o)
+    }
+}
+
 /// Full result of one serving simulation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
@@ -184,6 +226,9 @@ pub struct ServeReport {
     pub queue_depth: TimeSeries,
     /// Fraction of accelerators busy at each sample instant.
     pub busy_frac: TimeSeries,
+    /// Graph-mutation outcome; `Some` exactly when the run served under
+    /// churn ([`super::ServeConfig::churn`]).
+    pub churn: Option<ChurnStats>,
 }
 
 impl ServeReport {
@@ -258,6 +303,9 @@ impl ServeReport {
         );
         o.insert("queue_depth".into(), self.queue_depth.to_json());
         o.insert("busy_frac".into(), self.busy_frac.to_json());
+        if let Some(c) = &self.churn {
+            o.insert("churn".into(), c.to_json());
+        }
         Json::Obj(o)
     }
 }
@@ -341,9 +389,28 @@ mod tests {
             }],
             queue_depth: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
             busy_frac: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
+            churn: None,
         };
         let text = report.to_json().to_string();
         let parsed = Json::parse(&text).expect("report JSON parses");
+        assert!(parsed.get("churn").is_none(), "no churn block without churn");
+        let mut churned = report.clone();
+        churned.churn = Some(ChurnStats {
+            events: 3,
+            edges_added: 20,
+            edges_removed: 4,
+            patches: 3,
+            epochs: TimeSeries { points: vec![(0.5, 2.0), (1.0, 3.0)] },
+            ..ChurnStats::default()
+        });
+        let parsed_churn = Json::parse(&churned.to_json().to_string()).unwrap();
+        assert_eq!(
+            parsed_churn
+                .get("churn")
+                .and_then(|c| c.get("patches"))
+                .and_then(Json::as_u64),
+            Some(3)
+        );
         assert_eq!(parsed.get("offered").and_then(Json::as_u64), Some(2));
         assert_eq!(
             parsed

@@ -22,6 +22,17 @@
 //!   and per-accelerator breakdowns, serialized through
 //!   [`crate::util::json`].
 //!
+//! Setting [`ServeConfig::churn`] turns the run into *serving under
+//! mutation*: a seeded Poisson stream of graph-edit batches
+//! ([`crate::graph::mutate::GraphDelta`]) interleaves with the request
+//! stream, each event splicing the tenant's partition matrices in place,
+//! evicting superseded engine cache epochs, and refreshing the affected
+//! service profiles through incremental
+//! [`crate::coordinator::GraphDeltaPlan`] patches — the report then
+//! answers "what p99 does the fleet hold while the graph changes
+//! underneath it", with the maintenance work itemized in
+//! [`ChurnStats`].
+//!
 //! Service times come from the same simulator that reproduces the paper:
 //! each tenant resolves to a cached
 //! [`ServiceProfile`](crate::coordinator::ServiceProfile) through
@@ -47,9 +58,12 @@ pub mod traffic;
 pub use batcher::BatchPolicy;
 pub use fleet::RoutePolicy;
 pub use metrics::{
-    AccelStats, LatencyRecorder, LatencySummary, ServeReport, TenantStats, TimeSeries,
+    AccelStats, ChurnStats, LatencyRecorder, LatencySummary, ServeReport, TenantStats,
+    TimeSeries,
 };
-pub use traffic::{ArrivalProcess, OpenLoopArrivals, TenantMix, TenantProfile, TrafficSpec};
+pub use traffic::{
+    ArrivalProcess, ChurnSpec, OpenLoopArrivals, TenantMix, TenantProfile, TrafficSpec,
+};
 
 use crate::config::GhostConfig;
 use crate::coordinator::{BatchEngine, OptFlags, ServiceProfile, SimError, SimRequest};
@@ -85,6 +99,15 @@ pub struct ServeConfig {
     pub flags: OptFlags,
     /// Queue-depth / busy-fraction samples taken over `duration_s` (≥ 1).
     pub samples: usize,
+    /// Serve under graph mutation: when set, a seeded Poisson stream of
+    /// [`crate::graph::mutate::GraphDelta`] batches mutates tenant
+    /// datasets *during* the run. Each event splices the partition
+    /// matrices incrementally, evicts superseded engine cache epochs, and
+    /// refreshes affected tenants' service profiles through
+    /// [`crate::coordinator::GraphDeltaPlan`] patches — so the report's
+    /// tail latency is measured *under churn*. Requires the engine-backed
+    /// entry points ([`simulate`] / [`simulate_with_workers`]).
+    pub churn: Option<ChurnSpec>,
 }
 
 impl ServeConfig {
@@ -102,6 +125,7 @@ impl ServeConfig {
             accel_cfg: GhostConfig::paper_optimal(),
             flags: OptFlags::ghost_default(),
             samples: 100,
+            churn: None,
         }
     }
 
@@ -134,6 +158,9 @@ impl ServeConfig {
         }
         self.traffic.validate()?;
         self.batch.validate()?;
+        if let Some(churn) = &self.churn {
+            churn.validate()?;
+        }
         self.accel_cfg.validate()?;
         self.flags.validate()
     }
@@ -186,7 +213,7 @@ pub fn simulate_with_workers(
         par_map_workers(&reqs, workers, |req| engine.service_profile(req))
     };
     let profiles = collect_profiles(cfg, resolved)?;
-    simulate_fleet(cfg, &profiles)
+    fleet::simulate_fleet_churn(engine, cfg, profiles)
 }
 
 /// [`simulate_with_workers`] at the pool's default parallelism
@@ -200,11 +227,12 @@ pub fn simulate(engine: &BatchEngine, cfg: &ServeConfig) -> Result<ServeReport, 
         par_map(&reqs, |req| engine.service_profile(req))
     };
     let profiles = collect_profiles(cfg, resolved)?;
-    simulate_fleet(cfg, &profiles)
+    fleet::simulate_fleet_churn(engine, cfg, profiles)
 }
 
 /// Runs the fleet against already-resolved profiles (`profiles[i]` pairs
 /// with `cfg.mix.tenants()[i]`) — lets benches time the event loop alone.
+/// Rejects churn configurations (no engine to maintain plans against).
 pub fn simulate_with_profiles(
     cfg: &ServeConfig,
     profiles: &[ServiceProfile],
@@ -316,5 +344,67 @@ mod tests {
             simulate_with_profiles(&cfg, &[]),
             Err(SimError::InvalidConfig(_))
         ));
+    }
+
+    #[test]
+    fn churn_serving_mutates_patches_and_stays_deterministic() {
+        let mut cfg = ServeConfig::new(
+            TenantMix::new(vec![
+                TenantProfile::new(ModelKind::Gcn, "Cora", 2.0),
+                TenantProfile::new(ModelKind::Gat, "Citeseer", 1.0),
+            ])
+            .unwrap(),
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 300.0 },
+        );
+        cfg.duration_s = 0.5;
+        cfg.churn = Some(ChurnSpec::new(400.0));
+        let engine = BatchEngine::new();
+        let report = simulate_with_workers(&engine, &cfg, 1).unwrap();
+        let churn = report.churn.as_ref().expect("churn stats present");
+        assert!(churn.events > 0, "no mutation events over the horizon");
+        assert_eq!(churn.reprofiles, churn.events, "one tenant per dataset here");
+        // Priming rebuilds once per tenant; every in-loop event patches.
+        assert_eq!(churn.rebuilds, cfg.mix.len() as u64);
+        assert_eq!(churn.patches, churn.events);
+        assert!(churn.evictions > 0, "superseded epochs were never evicted");
+        assert_eq!(engine.evictions() as u64, churn.evictions);
+        assert!(
+            churn.edges_added + churn.edges_removed > 0,
+            "events applied no edge operations"
+        );
+        // Epoch series is monotone and ends at the applied total.
+        let epochs = &churn.epochs.points;
+        assert!(epochs.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(epochs.last().map(|&(_, e)| e), Some(churn.events as f64));
+        assert_eq!(report.offered, report.completed);
+        // Bit-identical replay: same config + seed, fresh engine.
+        let replay = simulate_with_workers(&BatchEngine::new(), &cfg, 4).unwrap();
+        assert_eq!(report, replay, "churn serving must stay deterministic");
+        // Without churn the same config yields no churn block.
+        cfg.churn = None;
+        let quiet = simulate_with_workers(&BatchEngine::new(), &cfg, 1).unwrap();
+        assert!(quiet.churn.is_none());
+    }
+
+    #[test]
+    fn churn_rejected_without_an_engine() {
+        let mut cfg = ServeConfig::new(
+            single_tenant(),
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 100.0 },
+        );
+        cfg.churn = Some(ChurnSpec::new(100.0));
+        let p = ServiceProfile {
+            latency_s: 1e-4,
+            weight_stage_s: 1e-5,
+            energy_j: 1e-6,
+            weight_stage_energy_j: 1e-7,
+        };
+        assert!(matches!(
+            simulate_with_profiles(&cfg, &[p]),
+            Err(SimError::InvalidConfig(_))
+        ));
+        let mut bad = cfg.clone();
+        bad.churn = Some(ChurnSpec { batch: 0, ..ChurnSpec::new(100.0) });
+        assert!(bad.validate().is_err());
     }
 }

@@ -195,6 +195,65 @@ impl TrafficSpec {
     }
 }
 
+/// Graph-mutation stream interleaved with the request stream: the
+/// serving-under-churn mode. Mutation *events* arrive as a Poisson
+/// process at `edges_per_s / batch` events/sec; each event applies one
+/// [`crate::graph::mutate::GraphDelta`] batch of `batch` edge operations
+/// to a tenant-sampled dataset, so the long-run average mutation rate is
+/// `edges_per_s` regardless of the batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnSpec {
+    /// Long-run average edge mutations per second across the fleet (> 0).
+    pub edges_per_s: f64,
+    /// Edge operations applied per mutation event (≥ 1). Larger batches
+    /// amortize the incremental re-plan over more edges.
+    pub batch: usize,
+    /// Fraction of operations that add (vs. remove) an edge, in `[0, 1]`.
+    pub add_fraction: f64,
+    /// Fraction of operations that add a *vertex* instead of touching an
+    /// edge, in `[0, 1]`. Vertex growth that crosses a `V` boundary
+    /// changes the output-group count and forces a plan rebuild, so the
+    /// default keeps this at 0 (pure edge churn — the patchable regime).
+    pub vertex_fraction: f64,
+}
+
+impl ChurnSpec {
+    /// Pure edge churn at `edges_per_s`, 8-op batches, 70% additions.
+    pub fn new(edges_per_s: f64) -> Self {
+        Self { edges_per_s, batch: 8, add_fraction: 0.7, vertex_fraction: 0.0 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.edges_per_s.is_finite() || self.edges_per_s <= 0.0 {
+            return Err(format!(
+                "churn rate {} edges/s must be finite and > 0",
+                self.edges_per_s
+            ));
+        }
+        if self.batch == 0 {
+            return Err("churn batch must be >= 1 edge operation".into());
+        }
+        if !(0.0..=1.0).contains(&self.add_fraction) {
+            return Err(format!(
+                "churn add fraction {} must be in [0, 1]",
+                self.add_fraction
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.vertex_fraction) {
+            return Err(format!(
+                "churn vertex fraction {} must be in [0, 1]",
+                self.vertex_fraction
+            ));
+        }
+        Ok(())
+    }
+
+    /// Mutation events per second (`edges_per_s / batch`).
+    pub fn events_per_s(&self) -> f64 {
+        self.edges_per_s / self.batch as f64
+    }
+}
+
 /// Exponential sample with the given rate (inverse-CDF over the PCG
 /// stream). `u ∈ [0, 1)` keeps `1 - u ∈ (0, 1]`, so the log never blows
 /// up.
@@ -394,5 +453,17 @@ mod tests {
         assert!(ArrivalProcess::Diurnal { period_s: 1.0, amplitude: 1.0 }.validate().is_err());
         assert!(TrafficSpec::Closed { clients: 0, mean_think_s: 0.1 }.validate().is_err());
         assert!(TrafficSpec::Closed { clients: 4, mean_think_s: -1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn churn_spec_validates_each_field() {
+        let base = ChurnSpec::new(1000.0);
+        base.validate().unwrap();
+        assert!((base.events_per_s() - 125.0).abs() < 1e-12);
+        assert!(ChurnSpec { edges_per_s: 0.0, ..base }.validate().is_err());
+        assert!(ChurnSpec { edges_per_s: f64::INFINITY, ..base }.validate().is_err());
+        assert!(ChurnSpec { batch: 0, ..base }.validate().is_err());
+        assert!(ChurnSpec { add_fraction: 1.5, ..base }.validate().is_err());
+        assert!(ChurnSpec { vertex_fraction: -0.1, ..base }.validate().is_err());
     }
 }

@@ -1,0 +1,258 @@
+//! Property and integration tests for the incremental graph-churn engine:
+//! CSR splicing vs edge-list rebuilds, partition splicing vs the serial
+//! reference builder, and `GraphDeltaPlan` patches vs cold plan rebuilds
+//! across models and shard counts. Every comparison here is exact
+//! (`assert_eq!`) — the incremental paths promise bit-identity, not
+//! approximation.
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{plan, GraphDeltaPlan, OptFlags};
+use ghost::gnn::models::ModelKind;
+use ghost::graph::csr::CsrGraph;
+use ghost::graph::datasets::Dataset;
+use ghost::graph::mutate::{
+    apply_batch, apply_to_dataset, random_batch, GraphDelta, MutateError,
+};
+use ghost::graph::partition::PartitionMatrix;
+use ghost::util::rng::{mix_seed, Pcg64};
+
+/// Replays a delta batch against a plain edge list — the O(V + E)
+/// reference the CSR splicer must agree with.
+fn replay_on_edge_list(
+    graph: &CsrGraph,
+    batch: &[GraphDelta],
+) -> (usize, Vec<(u32, u32)>) {
+    let mut n_vertices = graph.n_vertices;
+    let mut edges: Vec<(u32, u32)> =
+        (0..graph.n_edges()).map(|e| graph.edge_endpoints(e)).collect();
+    for &op in batch {
+        match op {
+            GraphDelta::AddVertex => n_vertices += 1,
+            GraphDelta::AddEdge { src, dst } => edges.push((src, dst)),
+            GraphDelta::RemoveEdge { src, dst } => {
+                let at = edges
+                    .iter()
+                    .position(|&e| e == (src, dst))
+                    .expect("validated removal exists in the mirror");
+                edges.swap_remove(at);
+            }
+        }
+    }
+    (n_vertices, edges)
+}
+
+#[test]
+fn random_batches_splice_csr_identical_to_edge_list_rebuild() {
+    let base = Dataset::by_name("rmat-800v-5000e-8f-4l").unwrap();
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::seed_from_u64(mix_seed(seed, 0));
+        // Chain three batches so later batches run against spliced output,
+        // not just the pristine generator graph.
+        let mut graph = base.graphs[0].clone();
+        for round in 0..3 {
+            let batch = random_batch(&graph, 120, 0.5, 0.15, &mut rng);
+            let (n_vertices, edges) = replay_on_edge_list(&graph, &batch);
+            let patch = apply_batch(&graph, &batch)
+                .expect("random batches always validate");
+            assert_eq!(
+                patch.graph,
+                CsrGraph::from_edges(n_vertices, &edges),
+                "seed {seed} round {round}: spliced CSR diverged from a \
+                 from_edges rebuild of the mutated edge multiset"
+            );
+            assert_eq!(
+                patch.graph.n_edges(),
+                graph.n_edges() + patch.edges_added - patch.edges_removed,
+                "seed {seed} round {round}: edge conservation"
+            );
+            // Touched rows must cover every row whose content changed.
+            for dst in 0..graph.n_vertices {
+                if graph.neighbors(dst) != patch.graph.neighbors(dst)
+                    && !patch.touched_dsts.contains(&(dst as u32))
+                {
+                    panic!("seed {seed} round {round}: row {dst} changed silently");
+                }
+            }
+            graph = patch.graph;
+        }
+    }
+}
+
+#[test]
+fn spliced_partitions_match_serial_rebuild_across_block_shapes() {
+    for (v, n) in [(8usize, 8usize), (20, 20), (13, 7)] {
+        let mut dataset = Dataset::by_name("rmat-1500v-9000e-8f-4l").unwrap();
+        let mut partitions =
+            PartitionMatrix::build_all(&dataset.graphs, v, n);
+        let mut rng = Pcg64::seed_from_u64(mix_seed(7, v as u64));
+        for round in 0..4 {
+            let batch =
+                random_batch(&dataset.graphs[0], 90, 0.5, 0.2, &mut rng);
+            apply_to_dataset(&mut dataset, &mut partitions, 0, &batch)
+                .expect("random batches always validate");
+            assert_eq!(
+                partitions[0],
+                PartitionMatrix::build_serial(&dataset.graphs[0], v, n),
+                "({v},{n}) round {round}: spliced partition diverged from \
+                 the serial reference builder"
+            );
+        }
+        assert_eq!(dataset.epoch, 4, "({v},{n}): one epoch bump per batch");
+    }
+}
+
+#[test]
+fn patched_plans_match_cold_rebuilds_across_models_and_shards() {
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    for (kind, name) in [(ModelKind::Gcn, "Cora"), (ModelKind::Gat, "Citeseer")] {
+        for shards in [1usize, 4] {
+            let mut dataset = Dataset::by_name(name).unwrap();
+            let mut partitions =
+                PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+            let mut dp = GraphDeltaPlan::new(kind, &dataset.spec, cfg, flags, shards);
+            dp.retarget_graph(&dataset, &partitions, None).expect("priming rebuild");
+            let mut rng = Pcg64::seed_from_u64(mix_seed(11, shards as u64));
+            const EPOCHS: usize = 3;
+            for epoch in 0..EPOCHS {
+                // Pure edge churn: the group count stays fixed, so the
+                // single-chip plan must take the patch path every epoch.
+                let batch =
+                    random_batch(&dataset.graphs[0], 64, 0.6, 0.0, &mut rng);
+                let applied =
+                    apply_to_dataset(&mut dataset, &mut partitions, 0, &batch)
+                        .expect("random batches always validate");
+                dp.retarget_graph(
+                    &dataset,
+                    &partitions,
+                    Some(std::slice::from_ref(&applied)),
+                )
+                .expect("retarget after mutation");
+                let incremental = dp.evaluate().expect("patched evaluation");
+                let cold_partitions =
+                    PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+                let cold = if shards == 1 {
+                    let p = plan::build(kind, &dataset, &cold_partitions, cfg, flags)
+                        .expect("cold build");
+                    plan::evaluate(&p).expect("cold evaluation")
+                } else {
+                    let p = plan::build_sharded(
+                        kind, &dataset, &cold_partitions, cfg, flags, shards,
+                    )
+                    .expect("cold sharded build");
+                    plan::evaluate_sharded(&p).expect("cold sharded evaluation")
+                };
+                assert_eq!(
+                    incremental, cold,
+                    "{kind:?}/{name} shards={shards} epoch {epoch}: patched \
+                     plan diverged from a cold rebuild"
+                );
+            }
+            if shards == 1 {
+                assert_eq!(dp.rebuilds(), 1, "{kind:?}/{name}: priming only");
+                assert_eq!(dp.patches(), EPOCHS, "{kind:?}/{name}: pure patches");
+            } else {
+                // Sharded plans fall back to rebuilds; the counters prove
+                // the fallback is taken rather than silently mis-patching.
+                assert_eq!(dp.rebuilds(), 1 + EPOCHS, "{kind:?}/{name} sharded");
+                assert_eq!(dp.patches(), 0, "{kind:?}/{name} sharded");
+            }
+        }
+    }
+}
+
+#[test]
+fn vertex_growth_across_a_group_boundary_forces_a_rebuild() {
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let mut dataset = Dataset::by_name("Cora").unwrap();
+    let mut partitions = PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+    let mut dp = GraphDeltaPlan::new(ModelKind::Gcn, &dataset.spec, cfg, flags, 1);
+    dp.retarget_graph(&dataset, &partitions, None).expect("priming rebuild");
+    // Enough vertices to guarantee the output-group count grows (v = 20).
+    let batch = vec![GraphDelta::AddVertex; cfg.v + 1];
+    let applied = apply_to_dataset(&mut dataset, &mut partitions, 0, &batch)
+        .expect("vertex growth always validates");
+    assert!(applied.new_n_groups > applied.old_n_groups);
+    dp.retarget_graph(&dataset, &partitions, Some(std::slice::from_ref(&applied)))
+        .expect("retarget after growth");
+    assert_eq!(dp.rebuilds(), 2, "group-count change must rebuild, not patch");
+    assert_eq!(dp.patches(), 0);
+    let incremental = dp.evaluate().expect("evaluation after growth");
+    let cold_partitions = PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+    let p = plan::build(ModelKind::Gcn, &dataset, &cold_partitions, cfg, flags)
+        .expect("cold build");
+    assert_eq!(incremental, plan::evaluate(&p).expect("cold evaluation"));
+}
+
+#[test]
+fn multi_graph_dataset_patches_only_the_mutated_graph() {
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    let mut dataset = Dataset::by_name("Mutag").unwrap();
+    assert!(dataset.graphs.len() > 1, "Mutag is the multi-graph case");
+    let mut partitions = PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+    let mut dp = GraphDeltaPlan::new(ModelKind::Gin, &dataset.spec, cfg, flags, 1);
+    dp.retarget_graph(&dataset, &partitions, None).expect("priming rebuild");
+    let mut rng = Pcg64::seed_from_u64(mix_seed(23, 0));
+    for (round, graph) in [7usize, 0, 150].into_iter().enumerate() {
+        let batch = random_batch(&dataset.graphs[graph], 10, 0.7, 0.0, &mut rng);
+        let applied = apply_to_dataset(&mut dataset, &mut partitions, graph, &batch)
+            .expect("random batches always validate");
+        assert_eq!(applied.graph, graph);
+        dp.retarget_graph(&dataset, &partitions, Some(std::slice::from_ref(&applied)))
+            .expect("retarget after mutation");
+        let incremental = dp.evaluate().expect("patched evaluation");
+        let cold_partitions =
+            PartitionMatrix::build_all(&dataset.graphs, cfg.v, cfg.n);
+        let p = plan::build(ModelKind::Gin, &dataset, &cold_partitions, cfg, flags)
+            .expect("cold build");
+        assert_eq!(
+            incremental,
+            plan::evaluate(&p).expect("cold evaluation"),
+            "round {round} (graph {graph}): patched multi-graph plan diverged"
+        );
+    }
+    assert_eq!(dp.rebuilds(), 1);
+    assert_eq!(dp.patches(), 3);
+}
+
+#[test]
+fn rejected_batches_leave_dataset_partitions_and_epoch_untouched() {
+    let mut dataset = Dataset::by_name("Cora").unwrap();
+    let mut partitions = PartitionMatrix::build_all(&dataset.graphs, 20, 20);
+    let graphs_before = dataset.graphs.clone();
+    let partitions_before = partitions.clone();
+    let n = dataset.graphs[0].n_vertices as u32;
+
+    // A vertex added mid-batch has no edges, so removing one must fail —
+    // after the earlier ops in the batch already passed validation.
+    let missing = vec![
+        GraphDelta::AddEdge { src: 0, dst: 1 },
+        GraphDelta::AddVertex,
+        GraphDelta::RemoveEdge { src: n, dst: n },
+    ];
+    match apply_to_dataset(&mut dataset, &mut partitions, 0, &missing) {
+        Err(MutateError::MissingEdge { index: 2, src, dst }) => {
+            assert_eq!((src, dst), (n, n));
+        }
+        other => panic!("expected MissingEdge, got {other:?}"),
+    }
+
+    let out_of_range = vec![GraphDelta::AddEdge { src: n, dst: 0 }];
+    match apply_to_dataset(&mut dataset, &mut partitions, 0, &out_of_range) {
+        Err(MutateError::VertexOutOfRange { index: 0, vertex, .. }) => {
+            assert_eq!(vertex, n);
+        }
+        other => panic!("expected VertexOutOfRange, got {other:?}"),
+    }
+
+    assert!(matches!(
+        apply_to_dataset(&mut dataset, &mut partitions, 99, &[]),
+        Err(MutateError::GraphOutOfRange { graph: 99, n_graphs: 1 })
+    ));
+
+    assert_eq!(dataset.graphs, graphs_before, "rejected batches must not splice");
+    assert_eq!(partitions, partitions_before);
+    assert_eq!(dataset.epoch, 0, "rejected batches must not bump the epoch");
+}
