@@ -1,0 +1,87 @@
+//! Bench: disabled-path cost of the telemetry spans on the evaluate hot
+//! path.
+//!
+//! `plan::evaluate` is `plan::evaluate_core` plus one [`telemetry::span`]
+//! site; with tracing disabled a span is a single relaxed atomic load and
+//! no allocation, so the instrumented entry must stay within 5% of the
+//! uninstrumented core. Each sample times a burst of evaluations of a
+//! mid-size R-MAT plan (big enough that one evaluation is microseconds,
+//! not nanoseconds, so scheduler noise doesn't dominate), and the
+//! assertion compares the noise-robust per-bench minimum. Results land in
+//! `BENCH_telemetry.json` for the CI perf-trajectory artifact.
+//!
+//! [`telemetry::span`]: ghost::util::telemetry::span
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{plan, BatchEngine, OptFlags, SimRequest};
+use ghost::gnn::models::ModelKind;
+use ghost::util::bench::{bench, black_box};
+use ghost::util::json::{obj, Json};
+use ghost::util::telemetry;
+
+const DATASET: &str = "rmat-20000v-120000e";
+const WARMUP: u32 = 30;
+const ITERS: u32 = 300;
+/// Evaluations per timed sample.
+const BURST: u32 = 10;
+const MAX_OVERHEAD: f64 = 1.05;
+
+fn main() {
+    assert!(
+        !telemetry::enabled(),
+        "unset GHOST_TRACE before running this bench: it measures the \
+         disabled path"
+    );
+    let engine = BatchEngine::new();
+    let req = SimRequest::new(
+        ModelKind::Gcn,
+        DATASET,
+        GhostConfig::paper_optimal(),
+        OptFlags::ghost_default(),
+    );
+    let plan = engine.plan(&req).expect("plan build");
+    println!("telemetry overhead bench: {BURST} evaluations x {ITERS} samples on {DATASET}");
+
+    let core = bench("evaluate_core (uninstrumented)", WARMUP, ITERS, || {
+        for _ in 0..BURST {
+            black_box(plan::evaluate_core(black_box(&plan)).expect("evaluate_core"));
+        }
+    });
+    let instrumented = bench("evaluate (span site, disabled)", WARMUP, ITERS, || {
+        for _ in 0..BURST {
+            black_box(plan::evaluate(black_box(&plan)).expect("evaluate"));
+        }
+    });
+
+    let core_min_s = core.min.as_secs_f64();
+    let instr_min_s = instrumented.min.as_secs_f64();
+    let ratio = instr_min_s / core_min_s.max(1e-12);
+    println!(
+        "disabled-path overhead: {:.2}% (core min {:.3} us, instrumented min {:.3} us per burst)",
+        (ratio - 1.0) * 100.0,
+        core_min_s * 1e6,
+        instr_min_s * 1e6
+    );
+
+    let json = obj(vec![
+        ("dataset", Json::Str(DATASET.to_string())),
+        ("burst", Json::Num(BURST as f64)),
+        ("iters", Json::Num(ITERS as f64)),
+        ("core_min_s", Json::Num(core_min_s)),
+        ("core_median_s", Json::Num(core.median.as_secs_f64())),
+        ("instrumented_min_s", Json::Num(instr_min_s)),
+        ("instrumented_median_s", Json::Num(instrumented.median.as_secs_f64())),
+        ("overhead_ratio", Json::Num(ratio)),
+        ("max_overhead_ratio", Json::Num(MAX_OVERHEAD)),
+    ]);
+    std::fs::write("BENCH_telemetry.json", format!("{json}\n"))
+        .expect("write BENCH_telemetry.json");
+    println!("wrote BENCH_telemetry.json");
+
+    assert!(
+        ratio <= MAX_OVERHEAD,
+        "disabled telemetry must cost <=5% on the evaluate hot path: \
+         measured {:.2}%",
+        (ratio - 1.0) * 100.0
+    );
+}

@@ -288,6 +288,7 @@ pub fn explore_with_engine_workers(
     workloads: &[(ModelKind, Dataset)],
     workers: usize,
 ) -> DseReport {
+    let _span = crate::util::telemetry::span("dse.explore");
     // Pre-warm the partition cache: one parallel build per distinct shape.
     let mut shapes: Vec<(usize, usize)> = grid.iter().map(|c| (c.v, c.n)).collect();
     shapes.sort_unstable();
@@ -420,6 +421,10 @@ fn delta_sweep(
     type Slot = Option<Result<(f64, f64, f64), SimError>>;
     let chains: Vec<(Vec<Slot>, DeltaStats)> =
         crate::util::parallel::par_map_workers(&wl_idx, workers, |&wi| {
+            // One Gray-order chain per workload; the span lands on the
+            // worker's own trace track, nested over the per-point
+            // delta.patch / delta.rebuild spans.
+            let _span = crate::util::telemetry::span("dse.chain");
             let (kind, ds) = &workloads[wi];
             let mut dp = DeltaPlan::new(*kind, ds, flags, 1);
             let mut slots: Vec<Slot> = vec![None; grid.len()];

@@ -31,7 +31,6 @@
 //! error, never a process abort.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use crate::config::GhostConfig;
@@ -39,6 +38,7 @@ use crate::gnn::models::ModelKind;
 use crate::graph::datasets::{spec_by_name, Dataset};
 use crate::graph::partition::PartitionMatrix;
 use crate::util::parallel::par_map;
+use crate::util::telemetry::{self, Counter};
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
@@ -164,19 +164,52 @@ impl ServiceProfile {
 
 /// Cached, parallel batch simulation session. Cheap to share by reference
 /// across threads; see the module docs for the caching contract.
-#[derive(Default)]
+///
+/// The build/hit/eviction counters are [`telemetry::Counter`]s held
+/// *per instance* — tests build private engines and assert exact counts,
+/// so instances cannot share process-wide state. Only the global engine's
+/// set is adopted into the telemetry registry (see [`BatchEngine::global`]),
+/// under the `engine.*` names.
 pub struct BatchEngine {
     datasets: Mutex<HashMap<String, DatasetCell>>,
     partitions: Mutex<HashMap<PartitionKey, PartitionCell>>,
     plans: Mutex<HashMap<PlanKey, PlanCell>>,
     sharded_plans: Mutex<HashMap<ShardedPlanKey, ShardedPlanCell>>,
     profiles: Mutex<HashMap<ProfileKey, ServiceProfile>>,
-    dataset_builds: AtomicUsize,
-    partition_builds: AtomicUsize,
-    plan_builds: AtomicUsize,
-    sharded_plan_builds: AtomicUsize,
-    profile_builds: AtomicUsize,
-    evictions: AtomicUsize,
+    dataset_builds: Arc<Counter>,
+    partition_builds: Arc<Counter>,
+    plan_builds: Arc<Counter>,
+    sharded_plan_builds: Arc<Counter>,
+    profile_builds: Arc<Counter>,
+    evictions: Arc<Counter>,
+    dataset_hits: Arc<Counter>,
+    partition_hits: Arc<Counter>,
+    plan_hits: Arc<Counter>,
+    sharded_plan_hits: Arc<Counter>,
+    profile_hits: Arc<Counter>,
+}
+
+impl Default for BatchEngine {
+    fn default() -> Self {
+        BatchEngine {
+            datasets: Mutex::default(),
+            partitions: Mutex::default(),
+            plans: Mutex::default(),
+            sharded_plans: Mutex::default(),
+            profiles: Mutex::default(),
+            dataset_builds: Counter::new("engine.dataset.builds"),
+            partition_builds: Counter::new("engine.partition.builds"),
+            plan_builds: Counter::new("engine.plan.builds"),
+            sharded_plan_builds: Counter::new("engine.sharded_plan.builds"),
+            profile_builds: Counter::new("engine.profile.builds"),
+            evictions: Counter::new("engine.evictions"),
+            dataset_hits: Counter::new("engine.dataset.hits"),
+            partition_hits: Counter::new("engine.partition.hits"),
+            plan_hits: Counter::new("engine.plan.hits"),
+            sharded_plan_hits: Counter::new("engine.sharded_plan.hits"),
+            profile_hits: Counter::new("engine.profile.hits"),
+        }
+    }
 }
 
 /// Locks a mutex, recovering the guard from a poisoned lock (the protected
@@ -213,7 +246,29 @@ impl BatchEngine {
     /// or call `clear()` between sweeps.
     pub fn global() -> &'static BatchEngine {
         static GLOBAL: OnceLock<BatchEngine> = OnceLock::new();
-        GLOBAL.get_or_init(BatchEngine::new)
+        GLOBAL.get_or_init(|| {
+            let engine = BatchEngine::new();
+            // Only the process-wide engine's counters are visible in the
+            // registry; private engines (tests, sweeps) keep theirs local
+            // so exact-count assertions can't interfere across threads.
+            let registry = telemetry::registry();
+            for counter in [
+                &engine.dataset_builds,
+                &engine.partition_builds,
+                &engine.plan_builds,
+                &engine.sharded_plan_builds,
+                &engine.profile_builds,
+                &engine.evictions,
+                &engine.dataset_hits,
+                &engine.partition_hits,
+                &engine.plan_hits,
+                &engine.sharded_plan_hits,
+                &engine.profile_hits,
+            ] {
+                registry.adopt_counter(counter);
+            }
+            engine
+        })
     }
 
     /// Drops every cached dataset and partition set (in-flight users keep
@@ -238,9 +293,12 @@ impl BatchEngine {
             spec_by_name(name).ok_or_else(|| SimError::UnknownDataset(name.to_string()))?;
         let cell: DatasetCell =
             lock(&self.datasets).entry(spec.name.to_string()).or_default().clone();
+        if cell.get().is_some() {
+            self.dataset_hits.inc();
+        }
         // Built outside the map lock; concurrent losers block on the cell.
         let ds = cell.get_or_init(|| {
-            self.dataset_builds.fetch_add(1, Ordering::Relaxed);
+            self.dataset_builds.inc();
             Arc::new(Dataset::generate(spec))
         });
         Ok(ds.clone())
@@ -262,8 +320,11 @@ impl BatchEngine {
         }
         let key: PartitionKey = (dataset.spec.name.to_string(), dataset.epoch, v, n);
         let cell: PartitionCell = lock(&self.partitions).entry(key).or_default().clone();
+        if cell.get().is_some() {
+            self.partition_hits.inc();
+        }
         let pms = cell.get_or_init(|| {
-            self.partition_builds.fetch_add(1, Ordering::Relaxed);
+            self.partition_builds.inc();
             Arc::new(PartitionMatrix::build_all(&dataset.graphs, v, n))
         });
         // The cache is keyed by name and first-writer-wins; a caller may
@@ -278,7 +339,7 @@ impl BatchEngine {
         // canonical instances of one name should use separate engines (or
         // simulate_workload, which never touches the cache).
         if !partitions_match(pms, dataset) {
-            self.partition_builds.fetch_add(1, Ordering::Relaxed);
+            self.partition_builds.inc();
             return Ok(Arc::new(PartitionMatrix::build_all(&dataset.graphs, v, n)));
         }
         Ok(pms.clone())
@@ -297,7 +358,7 @@ impl BatchEngine {
 
     /// How many dataset generations this engine has actually performed.
     pub fn dataset_builds(&self) -> usize {
-        self.dataset_builds.load(Ordering::Relaxed)
+        self.dataset_builds.get()
     }
 
     /// How many partition sets this engine has actually built: one per
@@ -305,7 +366,7 @@ impl BatchEngine {
     /// many simulations shared it — plus any structural-mismatch fallback
     /// builds (see [`Self::partitions_for`]), so cache churn is visible.
     pub fn partition_builds(&self) -> usize {
-        self.partition_builds.load(Ordering::Relaxed)
+        self.partition_builds.get()
     }
 
     /// The cached [`StagePlan`] of a request, constructed at most once per
@@ -327,13 +388,16 @@ impl BatchEngine {
         let key: PlanKey =
             (req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags);
         let cell: PlanCell = lock(&self.plans).entry(key).or_default().clone();
+        if cell.get().is_some() {
+            self.plan_hits.inc();
+        }
         // Built outside the map lock; concurrent losers block on the cell.
         // A build failure (unreachable in practice: config and flags were
         // validated above and the partitions come from the same dataset
         // and shape) is cached like a success — it is just as
         // deterministic.
         cell.get_or_init(|| {
-            self.plan_builds.fetch_add(1, Ordering::Relaxed);
+            self.plan_builds.inc();
             plan::build(req.model, &dataset, &partitions, req.cfg, req.flags).map(Arc::new)
         })
         .clone()
@@ -343,7 +407,7 @@ impl BatchEngine {
     /// per distinct `(model, dataset, config, flags)` key ever requested,
     /// however many evaluations shared it.
     pub fn plan_builds(&self) -> usize {
-        self.plan_builds.load(Ordering::Relaxed)
+        self.plan_builds.get()
     }
 
     /// Runs one simulation through the caches: dataset, partitions, and
@@ -377,11 +441,14 @@ impl BatchEngine {
             ((req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags), shards);
         let cell: ShardedPlanCell =
             lock(&self.sharded_plans).entry(key).or_default().clone();
+        if cell.get().is_some() {
+            self.sharded_plan_hits.inc();
+        }
         // Built outside the map lock; failures (e.g. a slice over the
         // per-chip memory budget) are deterministic and cached like
         // successes.
         cell.get_or_init(|| {
-            self.sharded_plan_builds.fetch_add(1, Ordering::Relaxed);
+            self.sharded_plan_builds.inc();
             plan::build_sharded(req.model, &dataset, &partitions, req.cfg, req.flags, shards)
                 .map(Arc::new)
         })
@@ -390,7 +457,7 @@ impl BatchEngine {
 
     /// How many [`ShardedStagePlan`]s this engine has actually constructed.
     pub fn sharded_plan_builds(&self) -> usize {
-        self.sharded_plan_builds.load(Ordering::Relaxed)
+        self.sharded_plan_builds.get()
     }
 
     /// Runs one simulation sharded across `shards` chips through the
@@ -443,9 +510,10 @@ impl BatchEngine {
         let key: ProfileKey =
             (req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags);
         if let Some(p) = lock(&self.profiles).get(&key) {
+            self.profile_hits.inc();
             return Ok(*p);
         }
-        self.profile_builds.fetch_add(1, Ordering::Relaxed);
+        self.profile_builds.inc();
         let report = self.run(req)?;
         let profile = ServiceProfile::from_report(&report);
         lock(&self.profiles).insert(key, profile);
@@ -455,7 +523,7 @@ impl BatchEngine {
     /// How many full simulations [`Self::service_profile`] has performed
     /// (cache misses, including any first-lookup races).
     pub fn profile_builds(&self) -> usize {
-        self.profile_builds.load(Ordering::Relaxed)
+        self.profile_builds.get()
     }
 
     /// Drops every partition / plan / sharded-plan / profile cache entry
@@ -496,7 +564,7 @@ impl BatchEngine {
             m.retain(|(_, n, e, _, _), _| n.as_str() != name || *e >= epoch);
             evicted += before - m.len();
         }
-        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        self.evictions.add(evicted);
         evicted
     }
 
@@ -504,7 +572,7 @@ impl BatchEngine {
     /// dropped over this engine's lifetime (monotone, like the build
     /// counters).
     pub fn evictions(&self) -> usize {
-        self.evictions.load(Ordering::Relaxed)
+        self.evictions.get()
     }
 
     /// Fans a batch of requests out over the scoped thread pool

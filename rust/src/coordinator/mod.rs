@@ -40,8 +40,8 @@ pub use error::SimError;
 pub use optimizations::OptFlags;
 pub use plan::{
     build_sharded, evaluate_sharded, reference_evaluate, reference_evaluate_sharded,
-    ChipPlan, KindTotals, PipelineSegment, PlanItem, ShardedStagePlan, StageKind,
-    StagePlan,
+    sim_timeline, sim_timeline_sharded, ChipPlan, KindTotals, PipelineSegment, PlanItem,
+    ShardedStagePlan, StageKind, StagePlan,
 };
 pub use soa::{delta_counters, DeltaPlan, GraphDeltaPlan, ParamSet, PlanSoA};
 pub use schedule::{simulate, simulate_with_partitions, simulate_workload, SimReport};

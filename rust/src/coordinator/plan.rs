@@ -40,7 +40,10 @@ use crate::gnn::workload::Workload;
 use crate::graph::datasets::Dataset;
 use crate::graph::partition::{OutputGroupPlan, PartitionMatrix, ShardPlan};
 use crate::sim;
+use crate::util::json::{obj, Json};
 use crate::util::parallel::par_map;
+use crate::util::telemetry;
+use crate::util::telemetry::trace as ttrace;
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
@@ -331,6 +334,7 @@ pub fn build(
     cfg: GhostConfig,
     flags: OptFlags,
 ) -> Result<StagePlan, SimError> {
+    let _span = telemetry::span("plan.build");
     cfg.validate().map_err(SimError::InvalidConfig)?;
     flags.validate().map_err(SimError::InvalidFlags)?;
     // Real checks, not debug_asserts: a mismatched partition silently
@@ -619,6 +623,7 @@ pub fn build_sharded(
     flags: OptFlags,
     shards: usize,
 ) -> Result<ShardedStagePlan, SimError> {
+    let _span = telemetry::span("plan.build_sharded");
     cfg.validate().map_err(SimError::InvalidConfig)?;
     flags.validate().map_err(SimError::InvalidFlags)?;
     if shards == 0 {
@@ -916,6 +921,14 @@ impl EvalAccum {
 /// ([`reference_evaluate`]) because the cached quantities are exactly the
 /// partials that walk accumulates, consumed in the same order.
 pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
+    let _span = telemetry::span("plan.evaluate");
+    evaluate_core(plan)
+}
+
+/// [`evaluate`] minus the telemetry span — the pre-instrumentation
+/// baseline `benches/telemetry_overhead.rs` pins the instrumented entry
+/// against (disabled-path overhead ≤5%).
+pub fn evaluate_core(plan: &StagePlan) -> Result<SimReport, SimError> {
     let header = EvalHeader {
         model: plan.model,
         dataset: plan.dataset.clone(),
@@ -937,6 +950,12 @@ pub fn evaluate(plan: &StagePlan) -> Result<SimReport, SimError> {
 /// makespan. With 1 shard the result is bit-identical to [`evaluate`] of
 /// the single-chip plan (one chip, one phase, identical lanes).
 pub fn evaluate_sharded(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
+    let _span = telemetry::span("plan.evaluate_sharded");
+    evaluate_sharded_core(plan)
+}
+
+/// [`evaluate_sharded`] minus the telemetry span (see [`evaluate_core`]).
+pub fn evaluate_sharded_core(plan: &ShardedStagePlan) -> Result<SimReport, SimError> {
     let header = EvalHeader {
         model: plan.model,
         dataset: plan.dataset.clone(),
@@ -1028,6 +1047,161 @@ pub(crate) fn evaluate_soa(soa: &PlanSoA, h: &EvalHeader) -> SimReport {
         h.spilled_layer_gathers,
         h.platform_w,
     )
+}
+
+/// Trace track id of a chip's serial lane (edge streams, weight staging,
+/// remote gathers, readouts); pipeline positions render on tids `1..=4`.
+const SIM_SERIAL_TID: u64 = 0;
+
+/// The simulated-time timeline of a single-chip plan as a Chrome-trace
+/// JSON document (`ghost run --trace-sim`): the modeled hardware schedule
+/// with one Perfetto process per chip and one track per pipeline position,
+/// events named (and therefore colored) by [`StageKind`]. See
+/// [`sim_timeline_sharded`] for the multi-chip variant and the conservation
+/// guarantee both share.
+pub fn sim_timeline(plan: &StagePlan) -> Result<Json, SimError> {
+    let report = evaluate_core(plan)?;
+    Ok(sim_timeline_soa(&plan.soa, &report))
+}
+
+/// The simulated-time timeline of a sharded plan: chips render as separate
+/// Perfetto processes, and phase barriers (every chip waits for the
+/// slowest before its [`StageKind::RemoteGather`] items run) appear as
+/// `barrier` instants plus idle gaps on the faster chips.
+pub fn sim_timeline_sharded(plan: &ShardedStagePlan) -> Result<Json, SimError> {
+    let report = evaluate_sharded_core(plan)?;
+    Ok(sim_timeline_soa(&plan.soa, &report))
+}
+
+/// Renders the SoA schedule as trace events. **Conservation contract:**
+/// one `cat:"sim-stage"` event is emitted per `KindTotals::add` call of
+/// [`evaluate_soa`], in the same `(chip, phase, entry)` walk order, with
+/// the exact f64 addends in `args.busy_s` / `args.energy_j`. A checker
+/// that folds the events per kind in array order therefore performs the
+/// identical sequence of f64 additions and reproduces
+/// [`SimReport::kinds`] *bitwise* — the embedded `ghost.kind_totals` block
+/// is the reference it must match exactly.
+///
+/// Timestamps are modeled microseconds: phase `p` starts once every chip
+/// has finished phase `p-1` ([`sim::barriered_lanes`] semantics) and each
+/// chip lays its entries out sequentially within the phase; a segment's
+/// four position tracks overlap for the segment's makespan, each busy for
+/// its own `stage_busy_s`.
+fn sim_timeline_soa(soa: &PlanSoA, report: &SimReport) -> Json {
+    // Pass 1: per-(chip, phase) busy time — evaluate_soa's `local` sums.
+    let mut phase_busy = vec![vec![0.0f64; soa.n_phases]; soa.n_chips];
+    for (c, chip_busy) in phase_busy.iter_mut().enumerate() {
+        for (p, busy) in chip_busy.iter_mut().enumerate() {
+            let mut local = 0.0f64;
+            for entry in &soa.entries[soa.phase_span(c, p)] {
+                match entry {
+                    SoaEntry::Serial { cost, .. } => local += cost.latency_s,
+                    SoaEntry::Segment { seg } => local += soa.scheds[*seg].makespan_s,
+                }
+            }
+            *busy = local;
+        }
+    }
+    let mut phase_start = vec![0.0f64; soa.n_phases + 1];
+    for p in 0..soa.n_phases {
+        let widest =
+            (0..soa.n_chips).map(|c| phase_busy[c][p]).fold(0.0f64, f64::max);
+        phase_start[p + 1] = phase_start[p] + widest;
+    }
+
+    // Track metadata: one viewer process per chip, named tracks per lane.
+    let mut events = Vec::new();
+    for c in 0..soa.n_chips {
+        let pid = c as u64;
+        events.push(ttrace::process_name(pid, &format!("chip {c}")));
+        events.push(ttrace::thread_name(pid, SIM_SERIAL_TID, "serial"));
+        for s in 0..PIPELINE_STAGES {
+            events.push(ttrace::thread_name(pid, 1 + s as u64, &format!("pipe {s}")));
+        }
+    }
+
+    // Pass 2: the event walk (see the conservation contract above).
+    for c in 0..soa.n_chips {
+        let pid = c as u64;
+        for p in 0..soa.n_phases {
+            let mut t = phase_start[p];
+            if p > 0 {
+                events.push(ttrace::instant_event(
+                    "barrier",
+                    "sim-barrier",
+                    pid,
+                    SIM_SERIAL_TID,
+                    t * 1e6,
+                ));
+            }
+            for entry in &soa.entries[soa.phase_span(c, p)] {
+                match entry {
+                    SoaEntry::Serial { kind, cost } => {
+                        events.push(ttrace::complete_event(
+                            kind.name(),
+                            "sim-stage",
+                            pid,
+                            SIM_SERIAL_TID,
+                            t * 1e6,
+                            cost.latency_s * 1e6,
+                            Some(obj(vec![
+                                ("busy_s", Json::Num(cost.latency_s)),
+                                ("energy_j", Json::Num(cost.energy_j)),
+                            ])),
+                        ));
+                        t += cost.latency_s;
+                    }
+                    SoaEntry::Segment { seg } => {
+                        let m = soa.segs[*seg];
+                        let sched = &soa.scheds[*seg];
+                        if m.n_groups > 0 {
+                            for (s, kind) in m.kinds.iter().enumerate() {
+                                events.push(ttrace::complete_event(
+                                    kind.name(),
+                                    "sim-stage",
+                                    pid,
+                                    1 + s as u64,
+                                    t * 1e6,
+                                    sched.stage_busy_s[s] * 1e6,
+                                    Some(obj(vec![
+                                        ("busy_s", Json::Num(sched.stage_busy_s[s])),
+                                        ("energy_j", Json::Num(sched.stage_energy_j[s])),
+                                        ("layer", Json::Num(f64::from(m.layer))),
+                                        ("graph", Json::Num(f64::from(m.graph))),
+                                        ("groups", Json::Num(m.n_groups as f64)),
+                                    ])),
+                                ));
+                            }
+                        }
+                        t += sched.makespan_s;
+                    }
+                }
+            }
+        }
+    }
+
+    let kind_totals: Vec<(&str, Json)> = report
+        .kinds
+        .rows()
+        .iter()
+        .map(|(name, cost)| {
+            (
+                *name,
+                obj(vec![
+                    ("busy_s", Json::Num(cost.latency_s)),
+                    ("energy_j", Json::Num(cost.energy_j)),
+                ]),
+            )
+        })
+        .collect();
+    let ghost = obj(vec![
+        ("clock", Json::Str("simulated".to_string())),
+        ("chips", Json::Num(soa.n_chips as f64)),
+        ("phases", Json::Num(soa.n_phases as f64)),
+        ("latency_s", Json::Num(report.metrics.latency_s)),
+        ("kind_totals", obj(kind_totals)),
+    ]);
+    ttrace::trace_doc(events, ghost)
 }
 
 /// The retained reference evaluator: the original per-item walk over

@@ -27,8 +27,8 @@
 //! falling back to a rebuild when the mutation reshapes the plan itself
 //! (group-count change, a DRAM-spill flip, or a sharded plan).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::sync::OnceLock;
 
 use crate::arch::{ecu, ArchContext, StageCost};
 use crate::config::GhostConfig;
@@ -38,6 +38,7 @@ use crate::graph::datasets::{Dataset, DatasetSpec};
 use crate::graph::mutate::AppliedDelta;
 use crate::graph::partition::{OutputGroupPlan, PartitionMatrix, ShardPlan};
 use crate::sim::{self, QuadSched};
+use crate::util::telemetry::{self, Counter};
 
 use super::error::SimError;
 use super::optimizations::OptFlags;
@@ -45,20 +46,28 @@ use super::plan::{self, Block, ChipPlan, PlanItem, StageKind, PIPELINE_STAGES};
 use super::schedule::SimReport;
 
 /// Process-wide full-rebuild count across every delta-plan instance
-/// ([`DeltaPlan`] and [`GraphDeltaPlan`]) — surfaced by
-/// [`delta_counters`] for the `--json` outputs of `ghost run` / `ghost
-/// serve` / `ghost dse`.
-static GLOBAL_REBUILDS: AtomicUsize = AtomicUsize::new(0);
-/// Process-wide incremental-patch count, same scope as
-/// [`GLOBAL_REBUILDS`].
-static GLOBAL_PATCHES: AtomicUsize = AtomicUsize::new(0);
+/// ([`DeltaPlan`] and [`GraphDeltaPlan`]) — a registry counter
+/// (`delta.rebuilds`), surfaced by [`delta_counters`] for the `--json`
+/// outputs of `ghost run` / `ghost serve` / `ghost dse`.
+fn global_rebuilds() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| telemetry::registry().counter("delta.rebuilds"))
+}
+
+/// Process-wide incremental-patch count (`delta.patches` in the registry),
+/// same scope as [`global_rebuilds`].
+fn global_patches() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| telemetry::registry().counter("delta.patches"))
+}
 
 /// `(rebuilds, patches)` performed by every delta plan in this process so
 /// far — both the DSE sweep's [`DeltaPlan`] retargets and the churn
 /// engine's [`GraphDeltaPlan`] graph retargets. Monotone counters; readers
-/// diff two snapshots to attribute work to a phase.
+/// diff two snapshots to attribute work to a phase. Thin wrapper over the
+/// `delta.rebuilds` / `delta.patches` registry counters.
 pub fn delta_counters() -> (usize, usize) {
-    (GLOBAL_REBUILDS.load(Ordering::Relaxed), GLOBAL_PATCHES.load(Ordering::Relaxed))
+    (global_rebuilds().get(), global_patches().get())
 }
 
 /// A set of [`GhostConfig`] parameters, as a bitmask — the provenance
@@ -440,9 +449,10 @@ impl<'a> DeltaPlan<'a> {
         cfg: GhostConfig,
         partitions: &Arc<Vec<PartitionMatrix>>,
     ) -> Result<(), SimError> {
+        let _span = telemetry::span("delta.rebuild");
         self.state = None;
         self.rebuilds += 1;
-        GLOBAL_REBUILDS.fetch_add(1, Ordering::Relaxed);
+        global_rebuilds().inc();
         let (header, soa, shard_plan) = if self.shards == 1 {
             let p = plan::build(self.kind, self.dataset, partitions, cfg, self.flags)?;
             let header = EvalHeader {
@@ -502,8 +512,9 @@ impl<'a> DeltaPlan<'a> {
     /// shapes, spill decisions, phase structure, and workload totals are
     /// all unchanged.
     fn patch(&mut self, cfg: GhostConfig) {
+        let _span = telemetry::span("delta.patch");
         self.patches += 1;
-        GLOBAL_PATCHES.fetch_add(1, Ordering::Relaxed);
+        global_patches().inc();
         let st = self.state.as_mut().expect("patch requires a lowered state");
         let diff = ParamSet::diff(&st.header.cfg, &cfg);
         let ctx = ArchContext::paper(cfg);
@@ -738,9 +749,10 @@ impl GraphDeltaPlan {
         dataset: &Dataset,
         partitions: &[PartitionMatrix],
     ) -> Result<(), SimError> {
+        let _span = telemetry::span("delta.rebuild_graph");
         self.state = None;
         self.rebuilds += 1;
-        GLOBAL_REBUILDS.fetch_add(1, Ordering::Relaxed);
+        global_rebuilds().inc();
         let (header, soa, shard_plan) = if self.shards == 1 {
             let p = plan::build(self.kind, dataset, partitions, self.cfg, self.flags)?;
             let header = EvalHeader {
@@ -804,11 +816,12 @@ impl GraphDeltaPlan {
         partitions: &[PartitionMatrix],
         applied: &[AppliedDelta],
     ) -> Result<(), SimError> {
+        let _span = telemetry::span("delta.patch_graph");
         // Vertex growth can push the resident footprint past the chip
         // budget — the same gate a cold build would apply.
         plan::check_chip_memory(&self.model, partitions, self.cfg)?;
         self.patches += 1;
-        GLOBAL_PATCHES.fetch_add(1, Ordering::Relaxed);
+        global_patches().inc();
         let ctx = ArchContext::paper(self.cfg);
         let st = self.state.as_mut().expect("patch requires a lowered state");
         let DeltaState { header, soa, shard_plan: _, eff_groups } = st;

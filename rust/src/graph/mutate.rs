@@ -243,6 +243,7 @@ pub fn apply_to_dataset(
     graph: usize,
     batch: &[GraphDelta],
 ) -> Result<AppliedDelta, MutateError> {
+    let _span = crate::util::telemetry::span("mutate.apply_to_dataset");
     if graph >= dataset.graphs.len() {
         return Err(MutateError::GraphOutOfRange { graph, n_graphs: dataset.graphs.len() });
     }

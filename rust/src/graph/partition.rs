@@ -220,6 +220,7 @@ impl PartitionMatrix {
     /// dataset lets [`Self::build`] fan its output groups out instead.
     /// Per-graph output is identical either way.
     pub fn build_all(graphs: &[CsrGraph], v: usize, n: usize) -> Vec<Self> {
+        let _span = crate::util::telemetry::span("partition.build_all");
         if graphs.len() > 1 {
             par_map(graphs, |g| Self::build_serial(g, v, n))
         } else {

@@ -30,6 +30,7 @@ ghost — GHOST silicon-photonic GNN accelerator (paper reproduction)
 USAGE:
   ghost run --model <gcn|graphsage|gin|gat> --dataset <name>
             [--no-bp] [--no-pp] [--no-dac-sharing] [--wb] [--shards N] [--json]
+            [--trace] [--trace-out <path>] [--trace-sim <path>]
         <name>: a Table-2 dataset (Cora, PubMed, Citeseer, Amazon,
         Proteins, Mutag, BZR, IMDB-binary), a large-tier dataset
         (ogbn-arxiv-syn, reddit-syn), or a parameterized R-MAT spec
@@ -40,6 +41,13 @@ USAGE:
         exceeds the chip memory budget error with the minimum shard count.
         --json emits the report plus the process-wide incremental-plan
         rebuild/patch counters as one JSON object.
+        --trace enables wall-clock span tracing (also GHOST_TRACE=1) and
+        writes a Chrome-trace-event JSON (load at ui.perfetto.dev) to
+        --trace-out (default ghost_trace.json, or GHOST_TRACE=<path>).
+        --trace-sim <path> writes the modeled hardware schedule as a
+        simulated-time Chrome trace: one track per chip pipeline
+        position, stages labeled by kind, RemoteGather barriers marked;
+        its per-kind busy/energy totals equal the report's exactly.
   ghost dse [--coherent] [--noncoherent] [--arch] [--quick] [--json]
         --json runs the architectural sweep and emits the frontier,
         failures, and delta-evaluator rebuild/patch counters as one JSON
@@ -61,6 +69,7 @@ USAGE:
               [--arrival poisson|bursty|diurnal] [--slo-ms MS]
               [--clients N --think-ms MS] [--shards N]
               [--churn <edges/s> [--churn-batch N]] [--json]
+              [--trace [--trace-out <path>]]
         online-serving simulation: replay a request stream against an
         N-accelerator fleet; report throughput, utilization, and exact
         p50/p95/p99/p999 latency. --clients switches to closed loop.
@@ -72,6 +81,8 @@ USAGE:
         incrementally (GHOST_CHURN_CHECK=1 cross-checks every patch
         against a cold rebuild), and the report gains a churn block plus
         the delta rebuild/patch counters under --json.
+        --trace records spans for the serve event loop (and everything
+        beneath it) and writes the wall-clock Chrome trace on exit.
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 
@@ -165,7 +176,10 @@ fn main() -> Result<()> {
 }
 
 fn cmd_run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["no-bp", "no-pp", "no-dac-sharing", "wb", "json"])?;
+    let args = Args::parse(argv, &["no-bp", "no-pp", "no-dac-sharing", "wb", "json", "trace"])?;
+    if args.has("trace") {
+        ghost::util::telemetry::set_enabled(true);
+    }
     let model = args.require("model")?;
     let dataset = args.require("dataset")?;
     let kind = ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
@@ -179,6 +193,17 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let shards: usize = args.get("shards").unwrap_or("1").parse()?;
     let req = SimRequest::new(kind, dataset, GhostConfig::paper_optimal(), flags);
     let engine = BatchEngine::global();
+    if let Some(path) = args.get("trace-sim") {
+        // The simulated-time timeline comes from the same cached plan the
+        // run below evaluates, so the trace and the report agree exactly.
+        let timeline = if shards > 1 {
+            ghost::coordinator::sim_timeline_sharded(&engine.sharded_plan(&req, shards)?)?
+        } else {
+            ghost::coordinator::sim_timeline(&engine.plan(&req)?)?
+        };
+        std::fs::write(path, format!("{timeline}\n"))?;
+        eprintln!("wrote simulated-time trace to {path}");
+    }
     let r = if shards > 1 { engine.run_sharded(&req, shards)? } else { engine.run(&req)? };
     if args.has("json") {
         let (a, c, u) = r.breakdown();
@@ -213,6 +238,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
                 ),
             ])
         );
+        maybe_write_wall_trace(&args)?;
         return Ok(());
     }
     println!("GHOST simulation: {} / {}", r.model.name(), r.dataset);
@@ -239,6 +265,25 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         c * 100.0,
         u * 100.0
     );
+    maybe_write_wall_trace(&args)?;
+    Ok(())
+}
+
+/// Writes the wall-clock Chrome trace when tracing is enabled: to
+/// `--trace-out`, else `GHOST_TRACE=<path>`, else `ghost_trace.json`.
+/// The notice goes to stderr so `--json` stdout stays machine-readable.
+fn maybe_write_wall_trace(args: &Args) -> Result<()> {
+    use ghost::util::telemetry;
+    if !telemetry::enabled() {
+        return Ok(());
+    }
+    let path = args
+        .get("trace-out")
+        .map(str::to_string)
+        .or_else(telemetry::env_trace_path)
+        .unwrap_or_else(|| "ghost_trace.json".to_string());
+    telemetry::trace::write_wall_trace(&path)?;
+    eprintln!("wrote wall-clock trace to {path}");
     Ok(())
 }
 
@@ -540,7 +585,10 @@ fn parse_batch_policy(spec: &str, slo_s: Option<f64>) -> Result<BatchPolicy> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["json"])?;
+    let args = Args::parse(argv, &["json", "trace"])?;
+    if args.has("trace") {
+        ghost::util::telemetry::set_enabled(true);
+    }
     // Reject conflicting flag sets instead of silently ignoring one side
     // (the same rationale as the duplicate-flag error).
     if args.get("mix").is_some() && (args.get("model").is_some() || args.get("dataset").is_some())
@@ -626,6 +674,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             );
         }
         println!("{j}");
+        maybe_write_wall_trace(&args)?;
         return Ok(());
     }
     let tenant_list = cfg
@@ -730,6 +779,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             );
         }
     }
+    maybe_write_wall_trace(&args)?;
     Ok(())
 }
 

@@ -39,6 +39,7 @@ use crate::graph::datasets::Dataset;
 use crate::graph::mutate::{apply_to_dataset, random_batch};
 use crate::graph::partition::PartitionMatrix;
 use crate::util::rng::{mix_seed, Pcg64};
+use crate::util::telemetry;
 
 use super::metrics::{
     AccelStats, ChurnStats, LatencyRecorder, ServeReport, TenantStats, TimeSeries,
@@ -174,6 +175,15 @@ impl Accel {
     fn depth(&self) -> usize {
         self.queued + self.current.len()
     }
+}
+
+/// Process-wide dispatched-batch-size distribution (`serve.batch.size` in
+/// the telemetry registry), cached so the dispatch hot path pays one
+/// relaxed add instead of a registry lock per batch.
+fn batch_size_hist() -> &'static std::sync::Arc<telemetry::Histogram> {
+    static H: std::sync::OnceLock<std::sync::Arc<telemetry::Histogram>> =
+        std::sync::OnceLock::new();
+    H.get_or_init(|| telemetry::registry().histogram("serve.batch.size"))
 }
 
 /// Dense dataset ids over the tenant mix: `names[id]` is the dataset of
@@ -481,6 +491,7 @@ impl<'a> FleetSim<'a> {
             }
         }
         a.queued -= take;
+        batch_size_hist().record(take as f64);
         let programmed = a.programmed == Some(tenant);
         if !programmed {
             a.weight_programs += 1;
@@ -698,10 +709,21 @@ fn run_fleet<'a>(
     }
 
     // The event loop. Arrivals stop at the horizon; the heap then drains.
+    // Event counters are looked up once and bumped per pop — process-wide
+    // registry counters (`serve.events.*`), cheap relaxed adds.
+    let _loop_span = telemetry::span("serve.event_loop");
+    let registry = telemetry::registry();
+    let ev_arrival = registry.counter("serve.events.arrival");
+    let ev_batch_done = registry.counter("serve.events.batch_done");
+    let ev_wake = registry.counter("serve.events.wake");
+    let ev_sample = registry.counter("serve.events.sample");
+    let ev_churn = registry.counter("serve.events.churn");
+    let queue_gauge = registry.gauge("serve.queue_depth");
     while let Some(Reverse(ev)) = sim.heap.pop() {
         let now = ev.time;
         match ev.kind {
             EventKind::Arrival { tenant } => {
+                ev_arrival.inc();
                 sim.enqueue(tenant, now, None);
                 if let Some(src) = arrivals.as_mut() {
                     let t = src.next_arrival();
@@ -712,11 +734,16 @@ fn run_fleet<'a>(
                 }
             }
             EventKind::ClientArrival { client } => {
+                ev_arrival.inc();
                 let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
                 sim.enqueue(tenant, now, Some(client));
             }
-            EventKind::BatchDone { accel } => sim.complete_batch(accel, now),
+            EventKind::BatchDone { accel } => {
+                ev_batch_done.inc();
+                sim.complete_batch(accel, now);
+            }
             EventKind::Wake { accel } => {
+                ev_wake.inc();
                 // This wake (or an earlier stale one) has fired; allow the
                 // next deadline to schedule a fresh one.
                 if sim.accels[accel].next_wake_s <= now {
@@ -724,8 +751,14 @@ fn run_fleet<'a>(
                 }
                 sim.try_dispatch(accel, now);
             }
-            EventKind::Sample => sim.sample_metrics(now),
+            EventKind::Sample => {
+                ev_sample.inc();
+                sim.sample_metrics(now);
+                queue_gauge.set(sim.accels.iter().map(|a| a.queued).sum::<usize>() as f64);
+            }
             EventKind::Churn => {
+                let _span = telemetry::span("serve.churn_event");
+                ev_churn.inc();
                 let mut next = None;
                 if let Some(c) = sim.churn.as_mut() {
                     c.apply_event(&cfg.mix, &mut sim.profiles)?;

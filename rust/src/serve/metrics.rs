@@ -93,15 +93,75 @@ impl LatencySummary {
     }
 }
 
-/// A sampled `(time, value)` series (queue depth, busy fraction).
-#[derive(Debug, Clone, Default, PartialEq)]
+/// A sampled `(time, value)` series (queue depth, busy fraction) with
+/// bounded memory: pushes are decimated by a sampling `stride`, and when
+/// the retained buffer reaches `cap` points it is halved (every other
+/// point dropped, oldest-first parity so the first point survives) and the
+/// stride doubles. The result holds at most `cap` points for any stream
+/// length, deterministically — no RNG, so equal streams stay equal.
+///
+/// The default cap ([`TimeSeries::DEFAULT_CAP`]) is far above any normal
+/// serve run's sample count, so short runs retain every point and their
+/// JSON output is unchanged from the unbounded implementation.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TimeSeries {
     pub points: Vec<(f64, f64)>,
+    /// Retain ceiling; reaching it triggers a halve-and-double-stride step.
+    cap: usize,
+    /// Keep every `stride`-th observation (1 = keep all).
+    stride: u64,
+    /// Observations offered via [`TimeSeries::push`], including dropped.
+    seen: u64,
+}
+
+impl Default for TimeSeries {
+    fn default() -> Self {
+        Self::with_cap(Self::DEFAULT_CAP)
+    }
 }
 
 impl TimeSeries {
+    /// Default retain ceiling: 64k points (1 MB of `(f64, f64)`), far
+    /// above the sample counts any current caller produces.
+    pub const DEFAULT_CAP: usize = 65_536;
+
+    /// An empty series that will never retain more than `cap` points
+    /// (minimum 2, so decimation always makes progress).
+    pub fn with_cap(cap: usize) -> Self {
+        TimeSeries { points: Vec::new(), cap: cap.max(2), stride: 1, seen: 0 }
+    }
+
+    /// Observations offered over the series' lifetime (retained or not).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Current sampling stride (doubles on every decimation).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Retain ceiling of this series.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
     pub fn push(&mut self, t_s: f64, value: f64) {
+        let keep = self.seen % self.stride == 0;
+        self.seen += 1;
+        if !keep {
+            return;
+        }
         self.points.push((t_s, value));
+        if self.points.len() >= self.cap {
+            let mut i = 0;
+            self.points.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
     }
 
     pub fn max(&self) -> f64 {
@@ -360,6 +420,49 @@ mod tests {
     }
 
     #[test]
+    fn time_series_short_runs_retain_every_point() {
+        let mut ts = TimeSeries::default();
+        for k in 0..1000 {
+            ts.push(k as f64, (k * 2) as f64);
+        }
+        assert_eq!(ts.points.len(), 1000);
+        assert_eq!(ts.stride(), 1);
+        assert_eq!(ts.seen(), 1000);
+        assert_eq!(ts.points[7], (7.0, 14.0));
+    }
+
+    #[test]
+    fn time_series_memory_bounded_on_one_million_events() {
+        let mut ts = TimeSeries::with_cap(1024);
+        for k in 0..1_000_000u64 {
+            ts.push(k as f64 * 1e-3, k as f64);
+        }
+        assert!(
+            ts.points.len() <= 1024,
+            "cap violated: {} points retained",
+            ts.points.len()
+        );
+        assert!(ts.points.len() >= 512, "decimation overshot: {}", ts.points.len());
+        assert_eq!(ts.seen(), 1_000_000);
+        // Retained points are exactly the stride-multiples of the
+        // observation index, so the series stays a uniform subsample.
+        let stride = ts.stride();
+        assert!(stride.is_power_of_two() && stride > 1);
+        for (i, &(_, v)) in ts.points.iter().enumerate() {
+            assert_eq!(v, (i as u64 * stride) as f64);
+        }
+        // First observation always survives; max/mean stay well-defined.
+        assert_eq!(ts.points[0], (0.0, 0.0));
+        assert!(ts.max() <= 1e6);
+        // The default cap also bounds a 1M-event run.
+        let mut def = TimeSeries::default();
+        for k in 0..1_000_000u64 {
+            def.push(k as f64, k as f64);
+        }
+        assert!(def.points.len() <= TimeSeries::DEFAULT_CAP);
+    }
+
+    #[test]
     fn report_json_round_trips() {
         let mut rec = LatencyRecorder::new();
         rec.record(1e-3);
@@ -387,8 +490,14 @@ mod tests {
                 batches: 2,
                 weight_programs: 1,
             }],
-            queue_depth: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
-            busy_frac: TimeSeries { points: vec![(0.5, 1.0), (1.0, 0.0)] },
+            queue_depth: TimeSeries {
+                points: vec![(0.5, 1.0), (1.0, 0.0)],
+                ..TimeSeries::default()
+            },
+            busy_frac: TimeSeries {
+                points: vec![(0.5, 1.0), (1.0, 0.0)],
+                ..TimeSeries::default()
+            },
             churn: None,
         };
         let text = report.to_json().to_string();
@@ -400,7 +509,7 @@ mod tests {
             edges_added: 20,
             edges_removed: 4,
             patches: 3,
-            epochs: TimeSeries { points: vec![(0.5, 2.0), (1.0, 3.0)] },
+            epochs: TimeSeries { points: vec![(0.5, 2.0), (1.0, 3.0)], ..TimeSeries::default() },
             ..ChurnStats::default()
         });
         let parsed_churn = Json::parse(&churned.to_json().to_string()).unwrap();

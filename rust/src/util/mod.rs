@@ -1,11 +1,13 @@
 //! In-crate substrates for an offline build: deterministic RNG, JSON
-//! parsing/serialization, a scoped thread-pool map, and the
-//! micro-benchmark harness used by `rust/benches/`.
+//! parsing/serialization, a scoped thread-pool map, the process-wide
+//! telemetry spine (metrics registry + span tracing + Chrome-trace
+//! export), and the micro-benchmark harness used by `rust/benches/`.
 
 pub mod bench;
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod telemetry;
 
 pub use json::Json;
 pub use rng::Pcg64;

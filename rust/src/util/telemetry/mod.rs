@@ -1,0 +1,361 @@
+//! Process-wide telemetry spine: a [`Registry`] of typed, hierarchically
+//! named metrics (counters / gauges / histograms, all cheap atomics), the
+//! wall-clock span API ([`span()`]), and the Chrome-trace exporters
+//! ([`trace`]). Every layer of the stack — `plan`, `engine`, `dse`, `soa`,
+//! `graph::mutate`, `graph::partition`, `serve` — records into this one
+//! module, so the ROADMAP's capacity planner (and any future perf PR) reads
+//! a single spine instead of scattered ad-hoc statics.
+//!
+//! # Naming scheme
+//!
+//! Metric names are dot-separated paths, `layer.object.event`:
+//! `engine.plan.builds`, `engine.plan.hits`, `delta.graph.patches`,
+//! `serve.events.arrival`. The registry treats names as opaque keys; the
+//! hierarchy exists for humans and for prefix-filtering in exported
+//! snapshots.
+//!
+//! # Enablement and the disabled path
+//!
+//! *Counters, gauges, and histograms are always on.* They are single
+//! relaxed atomic ops, they back exact-count getters that existing tests
+//! assert on (`BatchEngine::plan_builds`, `soa::delta_counters`), and their
+//! cost is already inside every pre-telemetry baseline.
+//!
+//! *Spans and trace events* are recorded only when tracing is enabled —
+//! via the `GHOST_TRACE` environment variable (any value other than
+//! `0`/`off`/`false`/`no`; a value containing `/` or ending in `.json`
+//! also names the wall-trace output path) or programmatically via
+//! [`set_enabled`] (the `--trace` CLI flag). The disabled path of a span
+//! site is one relaxed atomic load and zero allocation — pinned ≤5% on the
+//! evaluate hot path by `benches/telemetry_overhead.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock};
+
+use crate::util::json::{obj, Json};
+
+pub mod span;
+pub mod trace;
+
+pub use span::{span, SpanGuard};
+
+/// Global tracing toggle. Seeded lazily from `GHOST_TRACE` on first query;
+/// an explicit [`set_enabled`] (the `--trace` flag) wins over the
+/// environment regardless of call order.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_SEED: Once = Once::new();
+
+fn env_value_on(v: &str) -> bool {
+    !matches!(v.trim().to_ascii_lowercase().as_str(), "" | "0" | "off" | "false" | "no")
+}
+
+/// Whether span/trace recording is on. One relaxed atomic load after the
+/// first call (which seeds the flag from `GHOST_TRACE`).
+pub fn enabled() -> bool {
+    ENV_SEED.call_once(|| {
+        if let Ok(v) = std::env::var("GHOST_TRACE") {
+            if env_value_on(&v) {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatic toggle (the `--trace` CLI flag). Marks the environment
+/// seed as done so a later [`enabled`] cannot override an explicit choice.
+pub fn set_enabled(on: bool) {
+    ENV_SEED.call_once(|| {});
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The wall-trace output path named by `GHOST_TRACE` itself, when its
+/// value looks like a path (`GHOST_TRACE=trace.json ghost run …`) rather
+/// than a bare switch (`GHOST_TRACE=1`).
+pub fn env_trace_path() -> Option<String> {
+    let v = std::env::var("GHOST_TRACE").ok()?;
+    if env_value_on(&v) && (v.contains('/') || v.ends_with(".json")) {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// A monotonically increasing count — one relaxed `fetch_add` per event.
+/// Always on (see module docs): the exact-count getters layered on top
+/// (`BatchEngine::plan_builds`, `soa::delta_counters`) must keep their
+/// pre-telemetry semantics with tracing disabled.
+#[derive(Debug)]
+pub struct Counter {
+    name: String,
+    value: AtomicUsize,
+}
+
+impl Counter {
+    /// A free-standing counter (not yet in any registry); the engine holds
+    /// per-instance counters this way and registers only the global
+    /// engine's set.
+    pub fn new(name: impl Into<String>) -> Arc<Counter> {
+        Arc::new(Counter { name: name.into(), value: AtomicUsize::new(0) })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: usize) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> usize {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (f64 bits in an atomic).
+#[derive(Debug)]
+pub struct Gauge {
+    name: String,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new(name: impl Into<String>) -> Arc<Gauge> {
+        Arc::new(Gauge { name: name.into(), bits: AtomicU64::new(0f64.to_bits()) })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Power-of-two bucketed distribution: `record(v)` lands `v` (truncated to
+/// an integer count of the caller's unit — requests, nanoseconds, …) in
+/// bucket `⌈log2(v)⌉`, alongside an exact running count and sum. Lock-free;
+/// merging concurrent recorders is just per-bucket addition.
+#[derive(Debug)]
+pub struct Histogram {
+    name: String,
+    count: AtomicUsize,
+    /// Sum in the caller's unit, accumulated as integer to stay atomic.
+    sum: AtomicU64,
+    buckets: [AtomicU64; Self::N_BUCKETS],
+}
+
+impl Histogram {
+    pub const N_BUCKETS: usize = 32;
+
+    pub fn new(name: impl Into<String>) -> Arc<Histogram> {
+        Arc::new(Histogram {
+            name: name.into(),
+            count: AtomicUsize::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Records one observation of `v` units (negative values clamp to 0).
+    pub fn record(&self, v: f64) {
+        let u = if v.is_finite() && v > 0.0 { v as u64 } else { 0 };
+        let bucket = (64 - u.leading_zeros() as usize).min(Self::N_BUCKETS - 1);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(u, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .map(|b| Json::Num(b.load(Ordering::Relaxed) as f64))
+            .collect();
+        obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum", Json::Num(self.sum() as f64)),
+            ("pow2_buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// The process-wide metric registry: get-or-create by name per type, plus
+/// adoption of externally owned counters (the global engine's per-instance
+/// set). [`Registry::snapshot`] renders everything for the trace exporter
+/// and `--json` consumers.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::default)
+}
+
+impl Registry {
+    /// Get-or-create the counter named `name`. The `Arc` is cheap to clone
+    /// and cache; hot paths should look their counters up once, not per
+    /// event.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("telemetry registry poisoned");
+        map.entry(name.to_string()).or_insert_with(|| Counter::new(name)).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("telemetry registry poisoned");
+        map.entry(name.to_string()).or_insert_with(|| Gauge::new(name)).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().expect("telemetry registry poisoned");
+        map.entry(name.to_string()).or_insert_with(|| Histogram::new(name)).clone()
+    }
+
+    /// Registers an externally created counter under its own name,
+    /// replacing any placeholder created earlier by [`Registry::counter`].
+    /// Used by [`crate::coordinator::engine::BatchEngine::global`]: engines
+    /// hold per-instance counters (tests build private engines and assert
+    /// exact counts), and only the global engine's set is visible here.
+    pub fn adopt_counter(&self, c: &Arc<Counter>) {
+        let mut map = self.counters.lock().expect("telemetry registry poisoned");
+        map.insert(c.name().to_string(), Arc::clone(c));
+    }
+
+    /// Everything in the registry as one JSON object:
+    /// `{"counters": {name: n}, "gauges": {name: v}, "histograms": {...}}`.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .expect("telemetry registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .expect("telemetry registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::Num(g.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .expect("telemetry registry poisoned")
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_always_on_and_exact() {
+        let c = Counter::new("test.counter.exact");
+        for _ in 0..1000 {
+            c.inc();
+        }
+        c.add(234);
+        assert_eq!(c.get(), 1234);
+    }
+
+    #[test]
+    fn registry_get_or_create_returns_same_instance() {
+        let a = registry().counter("test.registry.same");
+        let b = registry().counter("test.registry.same");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), b.get());
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn adopt_replaces_placeholder() {
+        let mine = Counter::new("test.registry.adopted");
+        mine.add(7);
+        registry().adopt_counter(&mine);
+        assert_eq!(registry().counter("test.registry.adopted").get(), 7);
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        let g = registry().gauge("test.gauge.rt");
+        g.set(0.1 + 0.2);
+        assert_eq!(g.get(), 0.1 + 0.2);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::new("test.hist");
+        for v in [0.0, 1.0, 2.0, 3.0, 1000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(|c| c.as_u64()), Some(5));
+    }
+
+    #[test]
+    fn snapshot_is_valid_json_and_lists_metrics() {
+        registry().counter("test.snapshot.c").add(3);
+        let snap = registry().snapshot();
+        let text = format!("{snap}");
+        let parsed = Json::parse(&text).expect("snapshot must be valid JSON");
+        assert!(
+            parsed
+                .get("counters")
+                .and_then(|c| c.get("test.snapshot.c"))
+                .and_then(|v| v.as_u64())
+                .map(|n| n >= 3)
+                .unwrap_or(false),
+            "snapshot missing test.snapshot.c: {text}"
+        );
+    }
+
+    #[test]
+    fn env_value_parsing() {
+        assert!(!env_value_on("0"));
+        assert!(!env_value_on("off"));
+        assert!(!env_value_on("FALSE"));
+        assert!(!env_value_on(""));
+        assert!(env_value_on("1"));
+        assert!(env_value_on("on"));
+        assert!(env_value_on("trace.json"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Wall-clock span recording with correct per-thread nesting across
+//! [`crate::util::parallel`] workers.
+//!
+//! Each OS thread gets a stable trace `tid` (a process-wide counter, not
+//! the OS thread id, so Perfetto tracks stay small and deterministic in
+//! count) and buffers its finished spans in a thread local. The buffer's
+//! `Drop` flushes into the global sink — `par_map` spawns fresh scoped
+//! threads per call, so worker spans land in the sink by the time the
+//! fan-out returns, with no explicit hand-off at the call sites.
+//!
+//! Nesting is structural: a [`SpanGuard`] records its event at `Drop`, and
+//! Rust drop order guarantees LIFO per thread, so on any single `tid` the
+//! recorded intervals are properly nested (a child's `[ts, ts+dur]` lies
+//! inside its parent's) — the invariant the exporter tests assert.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One finished wall-clock span, timestamps in nanoseconds since the
+/// process trace epoch (first span or explicit [`now_ns`] call).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Trace category, e.g. `"wall"`.
+    pub cat: &'static str,
+    /// Stable per-thread track id (1-based; not the OS thread id).
+    pub tid: u64,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process trace epoch (monotonic).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+struct LocalBuf {
+    tid: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl LocalBuf {
+    fn new() -> LocalBuf {
+        LocalBuf { tid: NEXT_TID.fetch_add(1, Ordering::Relaxed), events: Vec::new() }
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.events.is_empty() {
+            let mut sink = SINK.lock().expect("telemetry sink poisoned");
+            sink.append(&mut self.events);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::new());
+}
+
+/// RAII wall-clock span: created by [`span`], records one trace event on
+/// drop. Inert (no clock read, no allocation) when tracing is disabled at
+/// creation time.
+#[must_use = "a span measures the scope it is bound to; binding to _ drops it immediately"]
+pub struct SpanGuard {
+    name: &'static str,
+    start_ns: u64,
+    active: bool,
+}
+
+/// Opens a span named `name` covering the guard's lifetime. The disabled
+/// path is a single relaxed atomic load (the [`super::enabled`] check).
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { name, start_ns: 0, active: false };
+    }
+    SpanGuard { name, start_ns: now_ns(), active: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_ns();
+        let ev = TraceEvent {
+            name: self.name,
+            cat: "wall",
+            tid: 0, // patched from the thread local below
+            ts_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+        };
+        // `try_with` so a guard outliving its thread's locals (teardown
+        // order) degrades to a direct sink push instead of a panic.
+        let pushed = LOCAL.try_with(|l| {
+            let mut l = l.borrow_mut();
+            let tid = l.tid;
+            l.events.push(TraceEvent { tid, ..ev });
+        });
+        if pushed.is_err() {
+            let mut sink = SINK.lock().expect("telemetry sink poisoned");
+            sink.push(TraceEvent { tid: u64::MAX, ..ev });
+        }
+    }
+}
+
+/// Flushes the calling thread's buffered spans into the global sink.
+/// Exporters call this so the main thread's still-open buffer is included;
+/// worker threads flush automatically when they exit.
+pub fn flush_thread() {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if !l.events.is_empty() {
+            let mut sink = SINK.lock().expect("telemetry sink poisoned");
+            let events = &mut l.events;
+            sink.append(events);
+        }
+    });
+}
+
+/// A snapshot (not a drain) of every flushed span, so concurrent recorders
+/// and multiple exports don't race each other. Flushes the calling thread
+/// first.
+pub fn snapshot() -> Vec<TraceEvent> {
+    flush_thread();
+    SINK.lock().expect("telemetry sink poisoned").clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // Tracing may have been enabled by a concurrent test; only assert
+        // when this thread observes the disabled state.
+        if super::super::enabled() {
+            return;
+        }
+        let before = snapshot().len();
+        {
+            let _s = span("test.disabled");
+        }
+        if super::super::enabled() {
+            // A concurrent test enabled tracing mid-flight; nothing ever
+            // disables it again, so the pre-check can't be trusted. Skip.
+            return;
+        }
+        let after = snapshot()
+            .iter()
+            .filter(|e| e.name == "test.disabled")
+            .count();
+        assert_eq!(after, 0, "disabled span must not record (sink had {before})");
+    }
+
+    #[test]
+    fn spans_nest_per_thread() {
+        super::super::set_enabled(true);
+        {
+            let _outer = span("test.nest.outer");
+            {
+                let _inner = span("test.nest.inner");
+            }
+        }
+        let events = snapshot();
+        let outer = events
+            .iter()
+            .filter(|e| e.name == "test.nest.outer")
+            .max_by_key(|e| e.ts_ns)
+            .copied()
+            .expect("outer span recorded");
+        let inner = events
+            .iter()
+            .filter(|e| e.name == "test.nest.inner" && e.tid == outer.tid)
+            .max_by_key(|e| e.ts_ns)
+            .copied()
+            .expect("inner span recorded on same thread");
+        assert!(inner.ts_ns >= outer.ts_ns);
+        assert!(inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns);
+    }
+
+    #[test]
+    fn parallel_workers_flush_on_scope_exit() {
+        super::super::set_enabled(true);
+        let items: Vec<u32> = (0..64).collect();
+        let _ = crate::util::parallel::par_map(&items, |&x| {
+            let _s = span("test.par.worker");
+            x * 2
+        });
+        let count = snapshot().iter().filter(|e| e.name == "test.par.worker").count();
+        assert!(count >= 64, "expected >=64 worker spans, saw {count}");
+    }
+
+    #[test]
+    fn tids_are_stable_within_a_thread() {
+        super::super::set_enabled(true);
+        {
+            let _a = span("test.tid.a");
+        }
+        {
+            let _b = span("test.tid.b");
+        }
+        let events = snapshot();
+        let a = events.iter().filter(|e| e.name == "test.tid.a").max_by_key(|e| e.ts_ns);
+        let b = events.iter().filter(|e| e.name == "test.tid.b").max_by_key(|e| e.ts_ns);
+        assert_eq!(a.unwrap().tid, b.unwrap().tid);
+    }
+}

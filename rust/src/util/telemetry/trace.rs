@@ -1,0 +1,174 @@
+//! Chrome-trace-event JSON emission (the `{"traceEvents": [...]}` format
+//! Perfetto and `chrome://tracing` load), built on [`crate::util::json`].
+//!
+//! Two exporters share these builders:
+//! * the **wall-clock** trace ([`wall_trace_json`]) — every recorded
+//!   [`super::span()`] plus a snapshot of the metric registry, timestamps in
+//!   real microseconds since the process trace epoch;
+//! * the **simulated-time** timeline
+//!   ([`crate::coordinator::plan::sim_timeline`]) — the modeled hardware
+//!   schedule of an evaluated plan, timestamps in modeled microseconds.
+//!
+//! Top-level keys other than `traceEvents` are legal in the format and
+//! ignored by viewers; both exporters put GHOST-specific payloads (metric
+//! snapshots, exact per-kind totals) under a `"ghost"` key so checkers can
+//! read them back from the same file.
+
+use crate::util::json::{obj, Json};
+
+/// A `ph:"X"` (complete) event: one box on track `(pid, tid)` spanning
+/// `[ts_us, ts_us + dur_us]` microseconds.
+pub fn complete_event(
+    name: &str,
+    cat: &str,
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    args: Option<Json>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts_us)),
+        ("dur", Json::Num(dur_us)),
+    ];
+    if let Some(a) = args {
+        pairs.push(("args", a));
+    }
+    obj(pairs)
+}
+
+/// A `ph:"i"` (instant) event with thread scope — used for phase-barrier
+/// markers on the simulated timeline.
+pub fn instant_event(name: &str, cat: &str, pid: u64, tid: u64, ts_us: f64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("t".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts_us)),
+    ])
+}
+
+/// A `ph:"M"` metadata event naming process `pid` in the viewer.
+pub fn process_name(pid: u64, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// A `ph:"M"` metadata event naming track `(pid, tid)` in the viewer.
+pub fn thread_name(pid: u64, tid: u64, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// Wraps built events into the trace document, attaching the GHOST payload
+/// under the viewer-ignored `"ghost"` key.
+pub fn trace_doc(events: Vec<Json>, ghost: Json) -> Json {
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("ghost", ghost),
+    ])
+}
+
+/// Trace pid of the wall-clock exporter (one process: this one).
+pub const WALL_PID: u64 = 1;
+
+/// The wall-clock trace: every span recorded so far (snapshot, not drain)
+/// plus the current metric-registry snapshot. Timestamps convert ns → µs in
+/// f64, which is exact for any run shorter than ~104 days (2^53 ns).
+pub fn wall_trace_json() -> Json {
+    let spans = super::span::snapshot();
+    let mut events = vec![process_name(WALL_PID, "ghost (wall clock)")];
+    let mut seen_tids: Vec<u64> = Vec::new();
+    for ev in &spans {
+        if !seen_tids.contains(&ev.tid) {
+            seen_tids.push(ev.tid);
+            events.push(thread_name(WALL_PID, ev.tid, &format!("thread {}", ev.tid)));
+        }
+        events.push(complete_event(
+            ev.name,
+            ev.cat,
+            WALL_PID,
+            ev.tid,
+            ev.ts_ns as f64 / 1000.0,
+            ev.dur_ns as f64 / 1000.0,
+            None,
+        ));
+    }
+    let ghost = obj(vec![
+        ("clock", Json::Str("wall".to_string())),
+        ("spans", Json::Num(spans.len() as f64)),
+        ("metrics", super::registry().snapshot()),
+    ]);
+    trace_doc(events, ghost)
+}
+
+/// Renders [`wall_trace_json`] to `path` (with a trailing newline, like
+/// every other artifact the CLI writes).
+pub fn write_wall_trace(path: &str) -> std::io::Result<()> {
+    let doc = wall_trace_json();
+    std::fs::write(path, format!("{doc}\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_event_shape() {
+        let e = complete_event("gather", "sim-stage", 0, 1, 1.5, 2.5, None);
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(e.get("name").and_then(|p| p.as_str()), Some("gather"));
+        assert_eq!(e.get("ts").and_then(|p| p.as_f64()), Some(1.5));
+        assert_eq!(e.get("dur").and_then(|p| p.as_f64()), Some(2.5));
+    }
+
+    #[test]
+    fn wall_trace_parses_as_json() {
+        super::super::set_enabled(true);
+        {
+            let _s = super::super::span("test.trace.roundtrip");
+        }
+        let text = format!("{}", wall_trace_json());
+        let parsed = crate::util::json::Json::parse(&text).expect("trace must parse");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|e| e.as_array())
+            .expect("traceEvents array");
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("test.trace.roundtrip")
+            }),
+            "span missing from exported trace"
+        );
+        assert!(parsed.get("ghost").and_then(|g| g.get("metrics")).is_some());
+    }
+
+    #[test]
+    fn metadata_events_name_tracks() {
+        let p = process_name(3, "chip 3");
+        assert_eq!(p.get("ph").and_then(|x| x.as_str()), Some("M"));
+        let t = thread_name(3, 2, "pipe 1");
+        assert_eq!(
+            t.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()),
+            Some("pipe 1")
+        );
+    }
+}

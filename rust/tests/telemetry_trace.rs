@@ -1,0 +1,250 @@
+//! Integration tests for the telemetry layer: Chrome-trace export shape,
+//! per-thread span nesting, and the simulated-timeline conservation
+//! contract — the per-kind busy/energy totals folded from `--trace-sim`
+//! events must equal [`SimReport::kinds`] **bitwise**, because the
+//! exporter emits one event per `KindTotals` addition in the evaluator's
+//! own walk order (see `plan::sim_timeline_soa`).
+//!
+//! [`SimReport::kinds`]: ghost::coordinator::SimReport
+
+use std::collections::BTreeMap;
+
+use ghost::config::GhostConfig;
+use ghost::coordinator::{sim_timeline, sim_timeline_sharded, BatchEngine, OptFlags, SimRequest};
+use ghost::gnn::models::ModelKind;
+use ghost::util::json::Json;
+use ghost::util::telemetry;
+
+const TABLE2: [&str; 8] =
+    ["Cora", "PubMed", "Citeseer", "Amazon", "Proteins", "Mutag", "BZR", "IMDB-binary"];
+
+/// Folds every `cat:"sim-stage"` event's exact `args` addends per kind, in
+/// array (= walk) order — the same f64 addition sequence the evaluator
+/// performs, so the result must be bit-identical to the report totals.
+fn fold_sim_stage(doc: &Json) -> BTreeMap<String, (f64, f64)> {
+    let events = doc.get("traceEvents").and_then(Json::as_array).expect("traceEvents array");
+    let mut sums: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for e in events {
+        if e.get("cat").and_then(Json::as_str) != Some("sim-stage") {
+            continue;
+        }
+        let name = e.get("name").and_then(Json::as_str).expect("stage name").to_string();
+        let args = e.get("args").expect("sim-stage args");
+        let busy = args.get("busy_s").and_then(Json::as_f64).expect("busy_s");
+        let energy = args.get("energy_j").and_then(Json::as_f64).expect("energy_j");
+        let entry = sums.entry(name).or_insert((0.0, 0.0));
+        entry.0 += busy;
+        entry.1 += energy;
+    }
+    sums
+}
+
+/// Asserts the conservation contract for one rendered timeline against the
+/// report it was derived from.
+fn assert_conserved(doc: &Json, report: &ghost::coordinator::SimReport, label: &str) {
+    // Round-trip through the serialized text: the CI checker reads the
+    // file, so exactness must survive Display + parse.
+    let text = format!("{doc}");
+    let parsed = Json::parse(&text).expect("timeline must parse back");
+    let sums = fold_sim_stage(&parsed);
+    let ghost_totals = parsed.get("ghost").and_then(|g| g.get("kind_totals")).expect("kind_totals");
+    for (name, cost) in report.kinds.rows() {
+        let (busy, energy) = sums.get(name).copied().unwrap_or((0.0, 0.0));
+        assert_eq!(
+            busy.to_bits(),
+            cost.latency_s.to_bits(),
+            "{label}: {name} busy_s drifted: folded {busy:e}, report {:e}",
+            cost.latency_s
+        );
+        assert_eq!(
+            energy.to_bits(),
+            cost.energy_j.to_bits(),
+            "{label}: {name} energy_j drifted: folded {energy:e}, report {:e}",
+            cost.energy_j
+        );
+        let embedded = ghost_totals.get(name).expect("every kind present in ghost.kind_totals");
+        assert_eq!(
+            embedded.get("busy_s").and_then(Json::as_f64).map(f64::to_bits),
+            Some(cost.latency_s.to_bits()),
+            "{label}: embedded {name} busy_s != report"
+        );
+        assert_eq!(
+            embedded.get("energy_j").and_then(Json::as_f64).map(f64::to_bits),
+            Some(cost.energy_j.to_bits()),
+            "{label}: embedded {name} energy_j != report"
+        );
+    }
+}
+
+#[test]
+fn sim_timeline_conserves_kind_totals_exactly() {
+    let engine = BatchEngine::new();
+    let cfg = GhostConfig::paper_optimal();
+    let flags = OptFlags::ghost_default();
+    for dataset in TABLE2 {
+        for model in [ModelKind::Gcn, ModelKind::Gat] {
+            let req = SimRequest::new(model, dataset, cfg, flags);
+            for shards in [1usize, 4] {
+                let label = format!("{model:?}/{dataset}/shards={shards}");
+                let (doc, report) = if shards == 1 {
+                    let plan = engine.plan(&req).expect("plan");
+                    (sim_timeline(&plan).expect("timeline"), engine.run(&req).expect("run"))
+                } else {
+                    let plan = engine.sharded_plan(&req, shards).expect("sharded plan");
+                    (
+                        sim_timeline_sharded(&plan).expect("timeline"),
+                        engine.run_sharded(&req, shards).expect("run"),
+                    )
+                };
+                assert_conserved(&doc, &report, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_timeline_renders_tracks_and_barriers() {
+    let engine = BatchEngine::new();
+    let cfg = GhostConfig::paper_optimal();
+    let req = SimRequest::new(ModelKind::Gcn, "PubMed", cfg, OptFlags::ghost_default());
+    let plan = engine.sharded_plan(&req, 4).expect("sharded plan");
+    let doc = sim_timeline_sharded(&plan).expect("timeline");
+    let text = format!("{doc}");
+    let parsed = Json::parse(&text).expect("parses");
+    let meta = parsed.get("ghost").expect("ghost metadata");
+    assert_eq!(meta.get("chips").and_then(Json::as_u64), Some(4), "4 chips expected");
+    let events = parsed.get("traceEvents").and_then(Json::as_array).unwrap();
+    // Track metadata: every chip is a named viewer process with a serial
+    // track and four pipeline-position tracks.
+    let process_names = events
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("process_name"))
+        .count();
+    assert_eq!(process_names, 4, "one process_name per chip");
+    let thread_names = events
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .count();
+    assert_eq!(thread_names, 4 * 5, "serial + 4 pipe tracks per chip");
+    // Cross-chip communication renders as remote_gather stages, and phase
+    // hand-offs as barrier instants.
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("remote_gather")
+                && e.get("cat").and_then(Json::as_str) == Some("sim-stage")
+        }),
+        "sharded timeline must show remote_gather stages"
+    );
+    let phases = meta.get("phases").and_then(Json::as_u64).expect("phase count");
+    let barriers = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("barrier"))
+        .count() as u64;
+    assert_eq!(barriers, 4 * (phases - 1), "one barrier instant per chip per hand-off");
+    // Timestamps are modeled time: every sim-stage box ends within the
+    // modeled makespan (+ slack for f64 µs conversion).
+    let latency_s = meta.get("latency_s").and_then(Json::as_f64).expect("latency_s");
+    let latency_us = latency_s * 1e6;
+    for e in events.iter().filter(|e| e.get("cat").and_then(Json::as_str) == Some("sim-stage")) {
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+        assert!(
+            ts + dur <= latency_us * (1.0 + 1e-9),
+            "stage [{ts}, {}] exceeds makespan {latency_us}",
+            ts + dur
+        );
+    }
+}
+
+#[test]
+fn wall_trace_spans_nest_per_thread() {
+    telemetry::set_enabled(true);
+    let engine = BatchEngine::new();
+    let req = SimRequest::new(
+        ModelKind::Gcn,
+        "Cora",
+        GhostConfig::paper_optimal(),
+        OptFlags::ghost_default(),
+    );
+    engine.run(&req).expect("run");
+    engine.run_sharded(&req, 2).expect("sharded run");
+    let doc = telemetry::trace::wall_trace_json();
+    let text = format!("{doc}");
+    let parsed = Json::parse(&text).expect("wall trace parses");
+    let events = parsed.get("traceEvents").and_then(Json::as_array).expect("traceEvents");
+
+    let mut spans: Vec<(u64, f64, f64)> = Vec::new(); // (tid, ts, dur)
+    let mut names: Vec<&str> = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        names.push(e.get("name").and_then(Json::as_str).unwrap_or(""));
+        spans.push((
+            e.get("tid").and_then(Json::as_u64).expect("tid"),
+            e.get("ts").and_then(Json::as_f64).expect("ts"),
+            e.get("dur").and_then(Json::as_f64).expect("dur"),
+        ));
+    }
+    for expect in ["plan.build", "plan.evaluate", "plan.evaluate_sharded", "partition.build_all"] {
+        assert!(names.contains(&expect), "wall trace missing span {expect}: {names:?}");
+    }
+
+    // Per-tid containment: sorted by (start asc, dur desc), a stack walk
+    // must never see a span that straddles its enclosing span's end.
+    spans.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(b.2.total_cmp(&a.2)));
+    let slack = 1e-3; // µs; conversion rounding is ~1e-10 µs
+    let mut stack: Vec<(u64, f64, f64)> = Vec::new();
+    for &(tid, ts, dur) in &spans {
+        while let Some(&(top_tid, top_ts, top_dur)) = stack.last() {
+            if top_tid != tid || ts >= top_ts + top_dur - slack {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(_, top_ts, top_dur)) = stack.last() {
+            assert!(
+                ts + dur <= top_ts + top_dur + slack,
+                "span on tid {tid} [{ts}, {}] straddles parent [{top_ts}, {}]",
+                ts + dur,
+                top_ts + top_dur
+            );
+        }
+        stack.push((tid, ts, dur));
+    }
+
+    // The registry snapshot rides along for checkers.
+    assert!(
+        parsed
+            .get("ghost")
+            .and_then(|g| g.get("metrics"))
+            .and_then(|m| m.get("counters"))
+            .is_some(),
+        "wall trace must embed the metric snapshot"
+    );
+}
+
+#[test]
+fn registry_counters_mirror_engine_getters() {
+    // The adopted global-engine counters and the ad-hoc getters are the
+    // same atomics — not two counts that could drift.
+    let engine = BatchEngine::global();
+    let req = SimRequest::new(
+        ModelKind::Gcn,
+        "Cora",
+        GhostConfig::paper_optimal(),
+        OptFlags::ghost_default(),
+    );
+    engine.run(&req).expect("run");
+    engine.run(&req).expect("run again (cache hit)");
+    let snap = telemetry::registry().snapshot();
+    let counters = snap.get("counters").expect("counters");
+    let registered = counters
+        .get("engine.plan.builds")
+        .and_then(Json::as_u64)
+        .expect("engine.plan.builds registered") as usize;
+    assert_eq!(registered, engine.plan_builds(), "registry and getter must agree");
+    assert!(registered >= 1);
+}
