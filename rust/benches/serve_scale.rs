@@ -1,17 +1,27 @@
-//! Bench: the serving event queue at scale.
+//! Bench: the serving event queue at scale, fast path vs retained
+//! baseline, and the parallel scenario-sweep executor.
 //!
 //! Drives ≥100k simulated requests through the discrete-event fleet
 //! scheduler (tenant profiles pre-resolved, so the timing isolates the
-//! event loop: heap churn, routing, batching, metric recording), then
-//! faces the three routing policies off on the same stream.
+//! event loop: routing, batching, metric recording), pins the fast
+//! loop's report bit-identical to the retained pre-fast-path baseline
+//! (`ghost::serve::reference`) while clearing the **≥2× events/sec**
+//! floor over it, then times an 8-scenario fleet-shape sweep serial vs
+//! parallel — the probes share one engine, so the whole sweep performs
+//! exactly one profile and one plan build per tenant (counter-asserted).
+//! Results land in `BENCH_serve.json` for the CI perf-trajectory
+//! artifact.
 
 use ghost::coordinator::BatchEngine;
 use ghost::gnn::models::ModelKind;
 use ghost::serve::{
-    simulate_with_profiles, ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig, TenantMix,
-    TenantProfile, TrafficSpec,
+    reference::simulate_fleet_reference, simulate_with_profiles, sweep_with_workers,
+    ArrivalProcess, BatchPolicy, RoutePolicy, ServeConfig, TenantMix, TenantProfile,
+    TrafficSpec,
 };
 use ghost::util::bench::{bench, black_box, time_once};
+use ghost::util::json::{obj, Json};
+use ghost::util::parallel::default_workers;
 
 fn main() {
     let engine = BatchEngine::new();
@@ -32,7 +42,7 @@ fn main() {
     cfg.seed = 7;
 
     // Resolve the three tenant profiles once — the engine caches them, and
-    // the event-loop bench below reuses the resolved slice directly.
+    // the event-loop benches below reuse the resolved slice directly.
     let profiles = time_once("serve_resolve_3_tenant_profiles", || {
         cfg.tenant_requests()
             .iter()
@@ -58,11 +68,93 @@ fn main() {
     );
     assert_eq!(report.offered, report.completed, "fleet must drain");
 
-    let s = bench("serve_event_loop_125k_requests", 1, 5, || {
+    // The fast loop restructures the event plumbing, not the simulation:
+    // its report must match the retained baseline bit for bit.
+    let baseline = simulate_fleet_reference(&cfg, &profiles).expect("reference simulates");
+    assert_eq!(report, baseline, "fast event loop diverged from the retained baseline");
+
+    let fast = bench("serve_event_loop_fast_125k_requests", 1, 5, || {
         black_box(simulate_with_profiles(&cfg, &profiles).expect("serve simulates"));
     });
-    let req_per_s = report.offered as f64 / s.median.as_secs_f64();
-    println!("event-loop simulation rate: {req_per_s:.0} requests/s (wall clock)");
+    let reference = bench("serve_event_loop_reference_125k_requests", 1, 5, || {
+        black_box(simulate_fleet_reference(&cfg, &profiles).expect("reference simulates"));
+    });
+    let fast_rps = report.offered as f64 / fast.median.as_secs_f64();
+    let reference_rps = report.offered as f64 / reference.median.as_secs_f64();
+    let speedup = reference.median.as_secs_f64() / fast.median.as_secs_f64();
+    println!(
+        "event-loop simulation rate: fast {fast_rps:.0} req/s, \
+         reference {reference_rps:.0} req/s ({speedup:.2}x)"
+    );
+    assert!(
+        speedup >= 2.0,
+        "serve fast path must clear 2x the baseline events/sec, got {speedup:.2}x \
+         (fast {:.1} ms vs reference {:.1} ms median)",
+        fast.median.as_secs_f64() * 1e3,
+        reference.median.as_secs_f64() * 1e3,
+    );
+
+    // Parallel scenario sweep: 8 fleet-shape probes against one shared
+    // engine. The first probe to need a tenant builds its plan + profile;
+    // everyone else blocks on that cell — so the counters equal the
+    // tenant count no matter how many probes or workers ran.
+    let sweep_engine = BatchEngine::new();
+    let mut scenarios = Vec::new();
+    for &accels in &[2usize, 4, 8, 16] {
+        for &rps in &[15_000.0, 25_000.0] {
+            let mut c = cfg.clone();
+            c.accelerators = accels;
+            c.duration_s = 1.0; // ~15-25k arrivals per probe
+            c.traffic = TrafficSpec::Open { process: ArrivalProcess::Poisson, rps };
+            scenarios.push(c);
+        }
+    }
+    let serial_reports = sweep_with_workers(&sweep_engine, &scenarios, 1);
+    assert_eq!(
+        sweep_engine.profile_builds(),
+        3,
+        "sweep must build each tenant profile exactly once"
+    );
+    assert_eq!(
+        sweep_engine.plan_builds(),
+        3,
+        "sweep must build each tenant plan exactly once"
+    );
+    let workers = default_workers().max(2);
+    let parallel_reports = sweep_with_workers(&sweep_engine, &scenarios, workers);
+    assert_eq!(
+        sweep_engine.profile_builds(),
+        3,
+        "re-sweeping must be pure cache hits"
+    );
+    for (s, p) in serial_reports.iter().zip(&parallel_reports) {
+        let (s, p) = (s.as_ref().expect("probe runs"), p.as_ref().expect("probe runs"));
+        assert_eq!(s, p, "sweep reports must not depend on the worker count");
+    }
+
+    let sweep_serial = bench("serve_sweep_8_scenarios_serial", 1, 3, || {
+        black_box(sweep_with_workers(&sweep_engine, &scenarios, 1));
+    });
+    let name = format!("serve_sweep_8_scenarios_{workers}_workers");
+    let sweep_parallel = bench(&name, 1, 3, || {
+        black_box(sweep_with_workers(&sweep_engine, &scenarios, workers));
+    });
+    let sweep_speedup =
+        sweep_serial.median.as_secs_f64() / sweep_parallel.median.as_secs_f64();
+    println!(
+        "sweep of {} scenarios: serial {:.1} ms, {workers} workers {:.1} ms ({sweep_speedup:.2}x)",
+        scenarios.len(),
+        sweep_serial.median.as_secs_f64() * 1e3,
+        sweep_parallel.median.as_secs_f64() * 1e3,
+    );
+    // Scaling is only assertable when the machine has the cores; the
+    // determinism and cache-counter asserts above hold everywhere.
+    if default_workers() >= 4 {
+        assert!(
+            sweep_speedup >= 2.0,
+            "8 independent probes on >=4 cores must scale >=2x, got {sweep_speedup:.2}x"
+        );
+    }
 
     // Routing-policy faceoff on the identical request stream.
     for route in
@@ -80,4 +172,22 @@ fn main() {
             r.total_weight_programs()
         );
     }
+
+    let json = obj(vec![
+        ("offered", Json::Num(report.offered as f64)),
+        ("fast_median_s", Json::Num(fast.median.as_secs_f64())),
+        ("reference_median_s", Json::Num(reference.median.as_secs_f64())),
+        ("fast_req_per_s", Json::Num(fast_rps)),
+        ("reference_req_per_s", Json::Num(reference_rps)),
+        ("speedup", Json::Num(speedup)),
+        ("sweep_scenarios", Json::Num(scenarios.len() as f64)),
+        ("sweep_serial_median_s", Json::Num(sweep_serial.median.as_secs_f64())),
+        ("sweep_parallel_median_s", Json::Num(sweep_parallel.median.as_secs_f64())),
+        ("sweep_workers", Json::Num(workers as f64)),
+        ("sweep_speedup", Json::Num(sweep_speedup)),
+        ("sweep_profile_builds", Json::Num(sweep_engine.profile_builds() as f64)),
+        ("sweep_plan_builds", Json::Num(sweep_engine.plan_builds() as f64)),
+    ]);
+    std::fs::write("BENCH_serve.json", format!("{json}\n")).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
 }

@@ -89,6 +89,11 @@ type PlanCell = Arc<OnceLock<Result<Arc<StagePlan>, SimError>>>;
 /// same workload sharded 2-way and 4-way are different schedules.
 type ShardedPlanKey = (PlanKey, usize);
 type ShardedPlanCell = Arc<OnceLock<Result<Arc<ShardedStagePlan>, SimError>>>;
+/// Profiles use the same cell scheme as plans: concurrent first lookups of
+/// one key block on a single simulation instead of racing to duplicate it,
+/// which is what lets a parallel scenario sweep ([`crate::serve::sweep`])
+/// guarantee exactly one profile build per distinct tenant tuple.
+type ProfileCell = Arc<OnceLock<Result<ServiceProfile, SimError>>>;
 
 /// The service-time decomposition of one `(model, dataset, config, flags)`
 /// request, derived from a full [`SimReport`] and cached by the engine for
@@ -175,7 +180,7 @@ pub struct BatchEngine {
     partitions: Mutex<HashMap<PartitionKey, PartitionCell>>,
     plans: Mutex<HashMap<PlanKey, PlanCell>>,
     sharded_plans: Mutex<HashMap<ShardedPlanKey, ShardedPlanCell>>,
-    profiles: Mutex<HashMap<ProfileKey, ServiceProfile>>,
+    profiles: Mutex<HashMap<ProfileKey, ProfileCell>>,
     dataset_builds: Arc<Counter>,
     partition_builds: Arc<Counter>,
     plan_builds: Arc<Counter>,
@@ -495,10 +500,12 @@ impl BatchEngine {
     /// before its event loop starts, so steady-state serving never
     /// re-simulates.
     ///
-    /// Concurrent first lookups of one key may race and simulate twice;
-    /// the result is deterministic, so last-writer-wins insertion is
-    /// harmless (the partition/dataset caches underneath still build at
-    /// most once). [`Self::profile_builds`] counts actual simulations.
+    /// Profiles live in [`OnceLock`] cells like plans: concurrent first
+    /// lookups of one key block on a single simulation, so a parallel
+    /// scenario sweep resolving the same tenant from many workers still
+    /// builds the profile exactly once ([`Self::profile_builds`] counts
+    /// the actual simulations, and `tests/sweep_capacity.rs` pins the
+    /// guarantee).
     pub fn service_profile(&self, req: &SimRequest) -> Result<ServiceProfile, SimError> {
         let spec = spec_by_name(&req.dataset)
             .ok_or_else(|| SimError::UnknownDataset(req.dataset.clone()))?;
@@ -509,19 +516,25 @@ impl BatchEngine {
         let dataset = self.dataset(&req.dataset)?;
         let key: ProfileKey =
             (req.model, spec.name.to_string(), dataset.epoch, req.cfg, req.flags);
-        if let Some(p) = lock(&self.profiles).get(&key) {
+        let cell: ProfileCell = lock(&self.profiles).entry(key).or_default().clone();
+        if cell.get().is_some() {
             self.profile_hits.inc();
-            return Ok(*p);
         }
-        self.profile_builds.inc();
-        let report = self.run(req)?;
-        let profile = ServiceProfile::from_report(&report);
-        lock(&self.profiles).insert(key, profile);
-        Ok(profile)
+        // Simulated outside the map lock; a failure is as deterministic as
+        // a success for the key (the plan build underneath caches its own
+        // `Result`), so caching it keeps at-most-once without a poisoned
+        // state.
+        cell.get_or_init(|| {
+            self.profile_builds.inc();
+            let report = self.run(req)?;
+            Ok(ServiceProfile::from_report(&report))
+        })
+        .clone()
     }
 
-    /// How many full simulations [`Self::service_profile`] has performed
-    /// (cache misses, including any first-lookup races).
+    /// How many full simulations [`Self::service_profile`] has performed:
+    /// one per distinct `(model, dataset, epoch, config, flags)` key ever
+    /// requested, however many concurrent lookups shared it.
     pub fn profile_builds(&self) -> usize {
         self.profile_builds.get()
     }

@@ -19,8 +19,8 @@ use ghost::photonics::dse as device_dse;
 #[cfg(feature = "pjrt")]
 use ghost::runtime::{argmax_rows, masked_accuracy, Engine};
 use ghost::serve::{
-    self, ArrivalProcess, BatchPolicy, ChurnSpec, RoutePolicy, ServeConfig, TenantMix,
-    TenantProfile, TrafficSpec,
+    self, ArrivalProcess, BatchPolicy, CapacityPlanRequest, ChurnSpec, RoutePolicy,
+    ServeConfig, TenantMix, TenantProfile, TrafficSpec,
 };
 use ghost::util::json::Json;
 
@@ -83,6 +83,22 @@ USAGE:
         the delta rebuild/patch counters under --json.
         --trace records spans for the serve event loop (and everything
         beneath it) and writes the wall-clock Chrome trace on exit.
+  ghost plan-capacity --model <m> --dataset <d> | --mix <m:d[:w],...>
+              --slo-ms MS [--rps N,N,...] [--max-accelerators N]
+              [--duration S] [--seed N] [--policy rr|jsq|affinity]
+              [--batch immediate|max:<n>:<ms>|slo[:<n>]]
+              [--arrival poisson|bursty|diurnal] [--shards N]
+              [--workers N] [--json]
+        capacity planner: for each --rps point (comma-separated offered
+        rates, default 500,1000,2000) bisect the fleet size to the
+        minimum accelerator count whose p99 latency meets --slo-ms, up
+        to --max-accelerators (default 16). Probe rounds fan out over
+        the parallel sweep executor (--workers threads, default machine
+        width); every probe shares the engine caches, so all plan and
+        profile builds happen in round 1 — the curve reports the counter
+        snapshots that witness it. --json emits the capacity-vs-rps
+        curve (per point: min_accelerators or null, p99 at the minimum,
+        p99 one shard group below) as one JSON object.
   ghost infer --artifact <name> [--dir artifacts] [--reps N]   (feature pjrt)
   ghost help
 
@@ -166,6 +182,7 @@ fn main() -> Result<()> {
         "dse" => cmd_dse(rest),
         "figures" => cmd_figures(rest),
         "serve" => cmd_serve(rest),
+        "plan-capacity" => cmd_plan_capacity(rest),
         "infer" => cmd_infer(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -780,6 +797,121 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
     }
     maybe_write_wall_trace(&args)?;
+    Ok(())
+}
+
+fn cmd_plan_capacity(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["json"])?;
+    if args.get("mix").is_some() && (args.get("model").is_some() || args.get("dataset").is_some())
+    {
+        bail!("--mix conflicts with --model/--dataset: pick one way to name tenants");
+    }
+    let mix = match args.get("mix") {
+        Some(spec) => parse_mix(spec)?,
+        None => {
+            let model = args.require("model")?;
+            let dataset = args.require("dataset")?;
+            let kind =
+                ModelKind::by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+            TenantMix::new(vec![TenantProfile::new(kind, dataset, 1.0)])
+                .map_err(|e| anyhow!(e))?
+        }
+    };
+    let duration_s: f64 = args.get("duration").unwrap_or("0.5").parse()?;
+    let slo_ms: f64 = args.require("slo-ms")?.parse()?;
+    let slo_s = slo_ms * 1e-3;
+    let process = match args.get("arrival").unwrap_or("poisson") {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => {
+            ArrivalProcess::Bursty { burst_factor: 4.0, mean_calm_s: 0.2, mean_burst_s: 0.05 }
+        }
+        "diurnal" => ArrivalProcess::Diurnal { period_s: duration_s, amplitude: 0.8 },
+        other => bail!("unknown arrival process '{other}' (poisson | bursty | diurnal)"),
+    };
+    let route = {
+        let name = args.get("policy").unwrap_or("jsq");
+        RoutePolicy::by_name(name)
+            .ok_or_else(|| anyhow!("unknown routing policy '{name}' (rr | jsq | affinity)"))?
+    };
+    let rps_points = args
+        .get("rps")
+        .unwrap_or("500,1000,2000")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad rps point '{s}' (expected a number)"))
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    let mut base = ServeConfig::new(
+        mix,
+        TrafficSpec::Open { process, rps: rps_points.first().copied().unwrap_or(1.0) },
+    );
+    base.shards = args.get("shards").unwrap_or("1").parse()?;
+    base.route = route;
+    base.batch = parse_batch_policy(args.get("batch").unwrap_or("immediate"), Some(slo_s))?;
+    base.duration_s = duration_s;
+    base.seed = args.get("seed").unwrap_or("7").parse()?;
+    base.slo_s = Some(slo_s);
+    let workers = match args.get("workers") {
+        Some(w) => w.parse()?,
+        None => ghost::util::parallel::default_workers(),
+    };
+    let req = CapacityPlanRequest {
+        base,
+        rps_points,
+        slo_p99_s: slo_s,
+        max_accelerators: args.get("max-accelerators").unwrap_or("16").parse()?,
+        workers,
+    };
+    // A fresh (non-global) engine so the curve's plan/profile counter
+    // snapshots account for this plan alone.
+    let engine = BatchEngine::new();
+    let curve = serve::plan_capacity(&engine, &req)?;
+    if args.has("json") {
+        println!("{}", curve.to_json());
+        return Ok(());
+    }
+    println!(
+        "GHOST capacity plan: p99 SLO {:.2} ms, fleet ceiling {} accelerator(s), \
+         shard groups of {}",
+        slo_ms, curve.max_accelerators, curve.shards
+    );
+    for p in &curve.points {
+        match p.min_accelerators {
+            Some(n) => {
+                let below = match p.p99_below_s {
+                    Some(b) => {
+                        format!(", p99 {:.3} ms at {} (violates)", b * 1e3, n - curve.shards)
+                    }
+                    None => String::new(),
+                };
+                println!(
+                    "  {:>8.0} rps : {:>3} accelerator(s)  p99 {:.3} ms{below}",
+                    p.rps,
+                    n,
+                    p.p99_s * 1e3
+                );
+            }
+            None => println!(
+                "  {:>8.0} rps : SLO not met at ceiling (p99 {:.3} ms at {})",
+                p.rps,
+                p.p99_s * 1e3,
+                curve.max_accelerators
+            ),
+        }
+    }
+    println!(
+        "  probes       : {} over {} round(s), {} worker(s)",
+        curve.probes, curve.rounds, req.workers
+    );
+    println!(
+        "  cache builds : plans {} -> {}, profiles {} -> {} (round 1 -> final)",
+        curve.plan_builds_round1,
+        curve.plan_builds_final,
+        curve.profile_builds_round1,
+        curve.profile_builds_final
+    );
     Ok(())
 }
 

@@ -3,21 +3,49 @@
 //!
 //! ## Event model
 //!
-//! A binary min-heap orders events by `(time, sequence)`; the sequence
-//! number breaks time ties in insertion order, so the trace — and every
-//! metric derived from it — is bit-identical for a given
-//! [`super::ServeConfig`] on every run, platform, and host thread count
-//! (the event loop itself is single-threaded; the only parallelism in
-//! serving is the engine-side service-profile resolution, which is
-//! worker-count-invariant by the engine's own guarantees).
+//! Events are totally ordered by `(time, sequence)`; the sequence number
+//! breaks time ties in insertion order, so the trace — and every metric
+//! derived from it — is bit-identical for a given [`super::ServeConfig`]
+//! on every run, platform, and host thread count (the event loop itself
+//! is single-threaded; the only parallelism in serving is the engine-side
+//! service-profile resolution, which is worker-count-invariant by the
+//! engine's own guarantees).
 //!
-//! Six event kinds drive the loop: open-loop arrivals (each schedules its
-//! successor from the lazy generator), closed-loop client arrivals
+//! The loop keeps its three *predictable* event sources out of the binary
+//! heap: the next open-loop arrival, the next metrics sampling tick, and
+//! the next churn event are each a pending `(time, seq)` scalar, and every
+//! iteration picks the earliest of those three and the heap top. Only the
+//! genuinely dynamic events — batch completions, batcher wake-ups, and
+//! closed-loop client arrivals — pay heap traffic, which shrinks the heap
+//! from `O(samples + pending)` to a handful of in-flight entries and
+//! removes two heap operations from the per-arrival path. Sequence
+//! numbers are allocated for side-channel events exactly where the
+//! all-heap loop would have pushed them, so the merged order is identical
+//! to a single heap's — [`super::reference`] retains that original
+//! all-heap loop, and `tests/sweep_capacity.rs` pins the two bit-equal.
+//!
+//! Five event kinds drive the loop: open-loop arrivals (each schedules
+//! its successor from the lazy generator), closed-loop client arrivals
 //! (rescheduled think-time after each response), batch completions,
 //! batcher wake-ups (deadline re-evaluation), metric sampling ticks, and
 //! — in serving-under-churn mode — graph-mutation events that splice the
 //! tenant's dataset in place and refresh its service profile through
 //! incremental plan maintenance ([`crate::coordinator::GraphDeltaPlan`]).
+//!
+//! ## Fast-path bookkeeping
+//!
+//! The per-event costs the original loop paid are hoisted or pooled
+//! (`benches/serve_scale.rs` pins the ≥2× events/sec floor against the
+//! retained baseline):
+//!
+//! * batch buffers round-trip through a per-accelerator spare `Vec`
+//!   instead of allocating per dispatch;
+//! * each accelerator keeps an index table of tenants with waiting
+//!   requests, so dispatch scans only non-empty queues (selection is a
+//!   pure min, so scan order cannot affect the result);
+//! * telemetry event counters and the batch-size histogram are tallied in
+//!   locals and flushed to the process-wide atomics once per run;
+//! * requests are 16 bytes (`f64` arrival + dense `u32` tenant/client).
 //!
 //! ## Accelerator model
 //!
@@ -33,6 +61,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use crate::coordinator::{BatchEngine, GraphDeltaPlan, ServiceProfile, SimError};
 use crate::graph::datasets::Dataset;
@@ -81,20 +110,18 @@ impl RoutePolicy {
     }
 }
 
+/// Heap-resident event kinds — only the dynamically scheduled ones.
+/// Arrivals, sampling ticks, and churn events never enter the heap (see
+/// the module docs); their pending `(time, seq)` scalars merge with the
+/// heap top each iteration.
 #[derive(Debug, Clone, Copy)]
 enum EventKind {
-    /// An open-loop request lands (tenant pre-sampled at schedule time).
-    Arrival { tenant: usize },
     /// A closed-loop client issues its next request.
     ClientArrival { client: u32 },
     /// The in-flight batch on `accel` finishes.
-    BatchDone { accel: usize },
+    BatchDone { accel: u32 },
     /// A batching deadline passed on `accel`; re-evaluate dispatch.
-    Wake { accel: usize },
-    /// Metrics sampling tick.
-    Sample,
-    /// A graph-mutation batch lands (serving-under-churn mode).
-    Churn,
+    Wake { accel: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -124,22 +151,40 @@ impl Ord for Event {
     }
 }
 
+/// Sentinel for [`Request::client`]: the request came from the open-loop
+/// stream, not a closed-loop client.
+const NO_CLIENT: u32 = u32::MAX;
+
+/// One queued request — 16 bytes, half the original layout (`usize`
+/// tenant + `Option<u32>` client), so queue and batch traffic moves less
+/// memory per event.
 #[derive(Debug, Clone, Copy)]
 struct Request {
-    tenant: usize,
     arrival_s: f64,
-    /// Closed-loop client that issued this request, if any.
-    client: Option<u32>,
+    tenant: u32,
+    /// Closed-loop client that issued this request ([`NO_CLIENT`] when
+    /// open-loop).
+    client: u32,
 }
 
 struct Accel {
     /// Per-tenant FIFO queues of waiting requests.
     queues: Vec<VecDeque<Request>>,
+    /// Tenants with a non-empty queue on this accelerator, in no
+    /// particular order (swap-removed when a queue empties). Dispatch
+    /// scans this instead of every tenant; selection is a pure min over
+    /// `(arrival, tenant)`, so the unordered scan cannot change results.
+    active: Vec<u32>,
+    /// Tenant → its position in `active` (`u32::MAX` when queue empty).
+    active_pos: Vec<u32>,
     /// Total waiting requests across all tenant queues.
     queued: usize,
     busy: bool,
     /// Requests of the in-flight batch (empty when idle).
     current: Vec<Request>,
+    /// Retired batch buffer, reused by the next dispatch so steady-state
+    /// batch launches allocate nothing.
+    spare: Vec<Request>,
     /// Tenant whose weights are on the MR banks (None before first batch).
     programmed: Option<usize>,
     /// Earliest pending Wake event for this accelerator (infinity when
@@ -158,9 +203,12 @@ impl Accel {
     fn new(n_tenants: usize, n_datasets: usize) -> Self {
         Self {
             queues: (0..n_tenants).map(|_| VecDeque::new()).collect(),
+            active: Vec::new(),
+            active_pos: vec![u32::MAX; n_tenants],
             queued: 0,
             busy: false,
             current: Vec::new(),
+            spare: Vec::new(),
             programmed: None,
             next_wake_s: f64::INFINITY,
             resident: vec![false; n_datasets],
@@ -178,13 +226,18 @@ impl Accel {
 }
 
 /// Process-wide dispatched-batch-size distribution (`serve.batch.size` in
-/// the telemetry registry), cached so the dispatch hot path pays one
-/// relaxed add instead of a registry lock per batch.
-fn batch_size_hist() -> &'static std::sync::Arc<telemetry::Histogram> {
-    static H: std::sync::OnceLock<std::sync::Arc<telemetry::Histogram>> =
-        std::sync::OnceLock::new();
+/// the telemetry registry). The fast loop tallies sizes locally and
+/// flushes once per run through [`telemetry::Histogram::record_n`]; the
+/// retained baseline ([`super::reference`]) still records per batch.
+pub(crate) fn batch_size_hist() -> &'static Arc<telemetry::Histogram> {
+    static H: std::sync::OnceLock<Arc<telemetry::Histogram>> = std::sync::OnceLock::new();
     H.get_or_init(|| telemetry::registry().histogram("serve.batch.size"))
 }
+
+/// Batch sizes above this are recorded directly instead of through the
+/// dense local tally (bounds the tally allocation for pathological
+/// `max_batch` settings).
+const MAX_TALLIED_BATCH: usize = 1024;
 
 /// Dense dataset ids over the tenant mix: `names[id]` is the dataset of
 /// every tenant `t` with `tenant_dataset[t] == id` (tenants sharing a
@@ -205,10 +258,16 @@ fn dense_dataset_ids(mix: &TenantMix) -> (Vec<String>, Vec<usize>) {
     (names, tenant_dataset)
 }
 
-/// Live mutation state of a serving-under-churn run: per-dataset mutable
-/// graph + partition copies (the engine's cached instances stay canonical
-/// at their original epoch), one [`GraphDeltaPlan`] per tenant, and the
-/// dedicated churn PCG stream.
+/// Live mutation state of a serving-under-churn run: per-dataset
+/// copy-on-write graph + partition handles (the engine's cached instances
+/// stay canonical at their original epoch), one [`GraphDeltaPlan`] per
+/// tenant, and the dedicated churn PCG stream.
+///
+/// Setup shares the engine's `Arc`s directly — no deep dataset or
+/// partition clone at fleet start. The first mutation event touching a
+/// dataset pays one lazy [`Arc::make_mut`] clone (the engine's canonical
+/// copy must not mutate); every later event splices that private copy in
+/// place. A churn config that never fires an event clones nothing.
 ///
 /// Each mutation event samples a tenant by mix weight, applies one
 /// [`crate::graph::mutate::GraphDelta`] batch to that tenant's dataset
@@ -221,10 +280,11 @@ struct ChurnRuntime<'e> {
     engine: &'e BatchEngine,
     spec: ChurnSpec,
     rng: Pcg64,
-    /// Dense dataset id → mutable dataset instance (epoch advances here).
-    datasets: Vec<Dataset>,
-    /// Dense dataset id → its `(V, N)` partition set, spliced in place.
-    partitions: Vec<Vec<PartitionMatrix>>,
+    /// Dense dataset id → copy-on-write dataset handle (epoch advances in
+    /// the private copy; the engine's canonical Arc is never mutated).
+    datasets: Vec<Arc<Dataset>>,
+    /// Dense dataset id → its `(V, N)` partition set, same COW scheme.
+    partitions: Vec<Arc<Vec<PartitionMatrix>>>,
     /// Tenant index → incrementally maintained plan.
     plans: Vec<GraphDeltaPlan>,
     tenant_dataset: Vec<usize>,
@@ -238,9 +298,9 @@ struct ChurnRuntime<'e> {
 }
 
 impl<'e> ChurnRuntime<'e> {
-    /// Clones the engine's canonical datasets/partitions into mutable
-    /// churn state and primes every tenant's delta plan with one cold
-    /// build, so each in-loop mutation event runs the incremental path.
+    /// Adopts the engine's canonical dataset/partition `Arc`s (zero
+    /// copies) and primes every tenant's delta plan with one cold build,
+    /// so each in-loop mutation event runs the incremental path.
     fn new(
         engine: &'e BatchEngine,
         cfg: &ServeConfig,
@@ -252,20 +312,22 @@ impl<'e> ChurnRuntime<'e> {
         for name in &names {
             let ds = engine.dataset(name)?;
             let pms = engine.partitions_for(&ds, cfg.accel_cfg.v, cfg.accel_cfg.n)?;
-            datasets.push((*ds).clone());
-            partitions.push((*pms).clone());
+            datasets.push(ds);
+            partitions.push(pms);
         }
         let mut plans = Vec::with_capacity(cfg.mix.len());
         for (i, t) in cfg.mix.tenants().iter().enumerate() {
             let ds_id = tenant_dataset[i];
+            let ds_ref: &Dataset = &datasets[ds_id];
+            let pm_ref: &[PartitionMatrix] = &partitions[ds_id];
             let mut plan = GraphDeltaPlan::new(
                 t.model,
-                &datasets[ds_id].spec,
+                &ds_ref.spec,
                 cfg.accel_cfg,
                 cfg.flags,
                 cfg.shards,
             );
-            plan.retarget_graph(&datasets[ds_id], &partitions[ds_id], None)
+            plan.retarget_graph(ds_ref, pm_ref, None)
                 .map_err(|e| e.in_workload(t.model, t.dataset.clone()))?;
             plans.push(plan);
         }
@@ -306,7 +368,9 @@ impl<'e> ChurnRuntime<'e> {
         self.events += 1;
         let tenant = mix.sample(&mut self.rng);
         let ds_id = self.tenant_dataset[tenant];
-        let dataset = &mut self.datasets[ds_id];
+        // Copy-on-write: the first event on a dataset detaches it from the
+        // engine's canonical Arc; later events mutate the copy in place.
+        let dataset = Arc::make_mut(&mut self.datasets[ds_id]);
         let g = if dataset.graphs.len() > 1 {
             self.rng.gen_range(0, dataset.graphs.len())
         } else {
@@ -319,7 +383,12 @@ impl<'e> ChurnRuntime<'e> {
             self.spec.vertex_fraction,
             &mut self.rng,
         );
-        let applied = apply_to_dataset(dataset, &mut self.partitions[ds_id], g, &batch)?;
+        let applied = apply_to_dataset(
+            dataset,
+            Arc::make_mut(&mut self.partitions[ds_id]),
+            g,
+            &batch,
+        )?;
         self.edges_added += applied.edges_added as u64;
         self.edges_removed += applied.edges_removed as u64;
         self.vertices_added += applied.vertices_added as u64;
@@ -330,11 +399,12 @@ impl<'e> ChurnRuntime<'e> {
             if self.tenant_dataset[t] != ds_id {
                 continue;
             }
-            plan.retarget_graph(&self.datasets[ds_id], &self.partitions[ds_id], Some(&trail))
-                .map_err(|e| {
-                    let tn = &mix.tenants()[t];
-                    e.in_workload(tn.model, tn.dataset.clone())
-                })?;
+            let ds_ref: &Dataset = &self.datasets[ds_id];
+            let pm_ref: &[PartitionMatrix] = &self.partitions[ds_id];
+            plan.retarget_graph(ds_ref, pm_ref, Some(&trail)).map_err(|e| {
+                let tn = &mix.tenants()[t];
+                e.in_workload(tn.model, tn.dataset.clone())
+            })?;
             let report = plan.evaluate()?;
             profiles[t] = ServiceProfile::from_report(&report);
             self.reprofiles += 1;
@@ -364,6 +434,30 @@ impl<'e> ChurnRuntime<'e> {
     }
 }
 
+/// Which source supplies the next event: the heap of dynamic events or
+/// one of the three pending side-channel scalars.
+#[derive(Clone, Copy)]
+enum NextSource {
+    Heap,
+    Arrival,
+    Sample,
+    Churn,
+}
+
+/// Whether `(t, s)` beats the current best `(time, seq)` candidate —
+/// exactly the heap's `Ord`, so the side-channel merge reproduces the
+/// all-heap event order.
+fn earlier(t: f64, s: u64, best: Option<(f64, u64, NextSource)>) -> bool {
+    match best {
+        None => true,
+        Some((bt, bs, _)) => match t.total_cmp(&bt) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => s < bs,
+        },
+    }
+}
+
 struct FleetSim<'a> {
     cfg: &'a ServeConfig,
     profiles: Vec<ServiceProfile>,
@@ -372,12 +466,22 @@ struct FleetSim<'a> {
     /// Tenant index → dense dataset id (tenants sharing a dataset share
     /// residency).
     tenant_dataset: Vec<usize>,
+    /// Dense dataset id → how many accelerators hold it resident (the
+    /// affinity router's existence check, maintained incrementally instead
+    /// of scanned per arrival).
+    dataset_resident: Vec<u32>,
     accels: Vec<Accel>,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
     rr_next: usize,
     tenant_rng: Pcg64,
     think_rng: Pcg64,
+    /// Mean think time of the closed-loop population (0 when open-loop),
+    /// hoisted out of the completion path.
+    mean_think_s: f64,
+    /// Local tally of dispatched batch sizes (index = size), flushed to
+    /// the `serve.batch.size` histogram once per run.
+    batch_size_counts: Vec<u64>,
     // Metrics accumulators.
     latency: LatencyRecorder,
     tenant_latency: Vec<LatencyRecorder>,
@@ -408,8 +512,7 @@ impl<'a> FleetSim<'a> {
             RoutePolicy::JoinShortestQueue => self.shortest_queue(|_| true),
             RoutePolicy::GraphAffinity => {
                 let ds = self.tenant_dataset[tenant];
-                let any_resident = self.accels.iter().any(|a| a.resident[ds]);
-                if any_resident {
+                if self.dataset_resident[ds] > 0 {
                     self.shortest_queue(|a| a.resident[ds])
                 } else {
                     self.shortest_queue(|_| true)
@@ -433,12 +536,16 @@ impl<'a> FleetSim<'a> {
         best
     }
 
-    fn enqueue(&mut self, tenant: usize, arrival_s: f64, client: Option<u32>) {
+    fn enqueue(&mut self, tenant: usize, arrival_s: f64, client: u32) {
         self.offered += 1;
         self.tenant_offered[tenant] += 1;
         let idx = self.route(tenant);
         let a = &mut self.accels[idx];
-        a.queues[tenant].push_back(Request { tenant, arrival_s, client });
+        if a.queues[tenant].is_empty() {
+            a.active_pos[tenant] = a.active.len() as u32;
+            a.active.push(tenant as u32);
+        }
+        a.queues[tenant].push_back(Request { arrival_s, tenant: tenant as u32, client });
         a.queued += 1;
         self.try_dispatch(idx, arrival_s);
     }
@@ -451,11 +558,20 @@ impl<'a> FleetSim<'a> {
             return;
         }
         let policy = self.cfg.batch;
-        // Decide with a shared borrow, mutate after.
+        // Decide with a shared borrow, mutate after. Only tenants with
+        // waiting requests are scanned; `ready` is a min over
+        // `(arrival, tenant)` and the deadline a min-fold, so the
+        // unordered `active` scan selects exactly what a full ordered
+        // scan would.
         let mut ready: Option<(f64, usize)> = None; // (oldest arrival, tenant)
         let mut next_deadline = f64::INFINITY;
-        for (tn, q) in self.accels[idx].queues.iter().enumerate() {
-            let Some(front) = q.front() else { continue };
+        for &tn in &self.accels[idx].active {
+            let tn = tn as usize;
+            let q = &self.accels[idx].queues[tn];
+            let Some(front) = q.front() else {
+                debug_assert!(false, "active table lists an empty tenant queue");
+                continue;
+            };
             let at = policy.ready_at(front.arrival_s, q.len(), &self.profiles[tn]);
             if at <= now {
                 let cand = (front.arrival_s, tn);
@@ -476,39 +592,61 @@ impl<'a> FleetSim<'a> {
             // later wakes fire as harmless re-evaluations).
             if next_deadline.is_finite() && next_deadline < self.accels[idx].next_wake_s {
                 self.accels[idx].next_wake_s = next_deadline;
-                self.push(next_deadline, EventKind::Wake { accel: idx });
+                self.push(next_deadline, EventKind::Wake { accel: idx as u32 });
             }
             return;
         };
         let ds = self.tenant_dataset[tenant];
         let profile = self.profiles[tenant];
-        let a = &mut self.accels[idx];
-        let take = policy.max_batch().min(a.queues[tenant].len());
-        let mut batch = Vec::with_capacity(take);
-        for _ in 0..take {
-            if let Some(r) = a.queues[tenant].pop_front() {
-                batch.push(r);
+        let take;
+        let programmed;
+        let service_s;
+        let mut newly_resident = false;
+        {
+            let a = &mut self.accels[idx];
+            take = policy.max_batch().min(a.queues[tenant].len());
+            // Reuse the retired batch buffer; steady state allocates
+            // nothing per dispatch.
+            let mut batch = std::mem::take(&mut a.spare);
+            batch.clear();
+            batch.extend(a.queues[tenant].drain(..take));
+            a.queued -= take;
+            if a.queues[tenant].is_empty() {
+                let pos = a.active_pos[tenant] as usize;
+                a.active.swap_remove(pos);
+                if pos < a.active.len() {
+                    a.active_pos[a.active[pos] as usize] = pos as u32;
+                }
+                a.active_pos[tenant] = u32::MAX;
             }
+            programmed = a.programmed == Some(tenant);
+            if !programmed {
+                a.weight_programs += 1;
+            }
+            service_s = profile.batch_service_s(take, programmed);
+            a.programmed = Some(tenant);
+            if !a.resident[ds] {
+                a.resident[ds] = true;
+                newly_resident = true;
+            }
+            a.busy = true;
+            a.current = batch;
+            a.busy_s += service_s;
+            a.batches += 1;
         }
-        a.queued -= take;
-        batch_size_hist().record(take as f64);
-        let programmed = a.programmed == Some(tenant);
-        if !programmed {
-            a.weight_programs += 1;
+        if newly_resident {
+            self.dataset_resident[ds] += 1;
         }
-        let service_s = profile.batch_service_s(take, programmed);
-        a.programmed = Some(tenant);
-        a.resident[ds] = true;
-        a.busy = true;
-        a.current = batch;
-        a.busy_s += service_s;
-        a.batches += 1;
+        if take < self.batch_size_counts.len() {
+            self.batch_size_counts[take] += 1;
+        } else {
+            batch_size_hist().record(take as f64);
+        }
         // Energy is decided at launch (the batch either paid the staging
         // share or not); the fleet drains, so launch-time accounting equals
         // completion-time totals.
-        let batch_energy = profile.batch_energy_j(take, programmed);
-        self.energy_j += batch_energy;
-        self.push(now + service_s, EventKind::BatchDone { accel: idx });
+        self.energy_j += profile.batch_energy_j(take, programmed);
+        self.push(now + service_s, EventKind::BatchDone { accel: idx as u32 });
     }
 
     fn complete_batch(&mut self, idx: usize, now: f64) {
@@ -516,28 +654,28 @@ impl<'a> FleetSim<'a> {
         self.accels[idx].busy = false;
         self.accels[idx].completed += batch.len() as u64;
         self.last_completion_s = now;
-        let mean_think_s = match self.cfg.traffic {
-            TrafficSpec::Closed { mean_think_s, .. } => mean_think_s,
-            TrafficSpec::Open { .. } => 0.0,
-        };
-        for req in batch {
+        for req in &batch {
             let lat = now - req.arrival_s;
             self.latency.record(lat);
-            self.tenant_latency[req.tenant].record(lat);
-            self.tenant_completed[req.tenant] += 1;
+            self.tenant_latency[req.tenant as usize].record(lat);
+            self.tenant_completed[req.tenant as usize] += 1;
             self.completed += 1;
-            if let Some(client) = req.client {
-                let gap = if mean_think_s > 0.0 {
-                    exp_sample(&mut self.think_rng, 1.0 / mean_think_s)
+            if req.client != NO_CLIENT {
+                let gap = if self.mean_think_s > 0.0 {
+                    exp_sample(&mut self.think_rng, 1.0 / self.mean_think_s)
                 } else {
                     0.0
                 };
                 let next = now + gap;
                 if next <= self.cfg.duration_s {
-                    self.push(next, EventKind::ClientArrival { client });
+                    self.push(next, EventKind::ClientArrival { client: req.client });
                 }
             }
         }
+        // Retire the buffer for the next dispatch on this accelerator.
+        let mut spare = batch;
+        spare.clear();
+        self.accels[idx].spare = spare;
         self.try_dispatch(idx, now);
     }
 
@@ -568,6 +706,7 @@ pub fn simulate_fleet(
     cfg: &ServeConfig,
     profiles: &[ServiceProfile],
 ) -> Result<ServeReport, SimError> {
+    cfg.validate()?;
     if cfg.churn.is_some() {
         return Err(SimError::InvalidConfig(
             "serving under churn maintains plans through an engine; use serve::simulate \
@@ -581,13 +720,14 @@ pub fn simulate_fleet(
 /// [`simulate_fleet`] plus the serving-under-churn mode: when
 /// `cfg.churn` is set, a [`ChurnRuntime`] interleaves graph-mutation
 /// events with the request stream and refreshes tenant profiles through
-/// incremental plan maintenance.
+/// incremental plan maintenance. Callers (the `serve::simulate*` entry
+/// points) validate `cfg` before resolving profiles, so this does not
+/// re-validate.
 pub(crate) fn simulate_fleet_churn(
     engine: &BatchEngine,
     cfg: &ServeConfig,
     profiles: Vec<ServiceProfile>,
 ) -> Result<ServeReport, SimError> {
-    cfg.validate().map_err(SimError::InvalidConfig)?;
     let churn = match cfg.churn {
         Some(spec) => Some(ChurnRuntime::new(engine, cfg, spec)?),
         None => None,
@@ -600,7 +740,6 @@ fn run_fleet<'a>(
     profiles: Vec<ServiceProfile>,
     churn: Option<ChurnRuntime<'a>>,
 ) -> Result<ServeReport, SimError> {
-    cfg.validate().map_err(SimError::InvalidConfig)?;
     if profiles.len() != cfg.mix.len() {
         return Err(SimError::InvalidConfig(format!(
             "{} service profiles supplied for {} tenants",
@@ -641,18 +780,25 @@ fn run_fleet<'a>(
     // Dense dataset ids: tenants sharing a dataset share residency.
     let (dataset_names, tenant_dataset) = dense_dataset_ids(&cfg.mix);
     let n_datasets = dataset_names.len();
+    let mean_think_s = match cfg.traffic {
+        TrafficSpec::Closed { mean_think_s, .. } => mean_think_s,
+        TrafficSpec::Open { .. } => 0.0,
+    };
 
     let mut sim = FleetSim {
         cfg,
         profiles,
         churn,
         tenant_dataset,
+        dataset_resident: vec![0; n_datasets],
         accels: (0..slots).map(|_| Accel::new(n_tenants, n_datasets)).collect(),
         heap: BinaryHeap::new(),
         seq: 0,
         rr_next: 0,
         tenant_rng: Pcg64::seed_from_u64(mix_seed(cfg.seed, 1)),
         think_rng: Pcg64::seed_from_u64(mix_seed(cfg.seed, 2)),
+        mean_think_s,
+        batch_size_counts: vec![0; cfg.batch.max_batch().min(MAX_TALLIED_BATCH) + 1],
         latency: LatencyRecorder::new(),
         tenant_latency: (0..n_tenants).map(|_| LatencyRecorder::new()).collect(),
         tenant_offered: vec![0; n_tenants],
@@ -665,7 +811,13 @@ fn run_fleet<'a>(
         last_completion_s: 0.0,
     };
 
-    // Seed the event heap: traffic source plus sampling ticks.
+    // Seed the event sources. Sequence numbers are allocated in the same
+    // order the all-heap loop pushed events — first the traffic source,
+    // then one per sampling tick (a reserved contiguous block; tick `k`
+    // owns `sample_base_seq + k`), then the first churn event — so every
+    // `(time, seq)` comparison, and therefore the event order, matches
+    // the retained baseline bit for bit.
+    let mut pending_arrival: Option<(f64, u64, usize)> = None;
     let mut arrivals = match cfg.traffic {
         TrafficSpec::Open { process, rps } => {
             let mut src = OpenLoopArrivals::new(process, rps, mix_seed(cfg.seed, 0))
@@ -673,7 +825,8 @@ fn run_fleet<'a>(
             let t0 = src.next_arrival();
             if t0 <= cfg.duration_s {
                 let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
-                sim.push(t0, EventKind::Arrival { tenant });
+                sim.seq += 1;
+                pending_arrival = Some((t0, sim.seq, tenant));
             }
             Some(src)
         }
@@ -692,85 +845,118 @@ fn run_fleet<'a>(
         }
     };
     let sample_dt = cfg.duration_s / cfg.samples as f64;
-    for k in 1..=cfg.samples {
-        sim.push(k as f64 * sample_dt, EventKind::Sample);
-    }
+    let sample_base_seq = sim.seq;
+    sim.seq += cfg.samples as u64;
+    let mut next_sample: usize = 1;
     // Churn events stop at the horizon with the arrivals, so the drain
     // phase serves the final graph state.
-    let first_churn = match sim.churn.as_mut() {
-        Some(c) => {
-            let t0 = c.next_gap();
-            (t0 <= cfg.duration_s).then_some(t0)
+    let mut pending_churn: Option<(f64, u64)> = None;
+    if let Some(c) = sim.churn.as_mut() {
+        let t0 = c.next_gap();
+        if t0 <= cfg.duration_s {
+            sim.seq += 1;
+            pending_churn = Some((t0, sim.seq));
         }
-        None => None,
-    };
-    if let Some(t0) = first_churn {
-        sim.push(t0, EventKind::Churn);
     }
 
-    // The event loop. Arrivals stop at the horizon; the heap then drains.
-    // Event counters are looked up once and bumped per pop — process-wide
-    // registry counters (`serve.events.*`), cheap relaxed adds.
+    // The event loop. Arrivals stop at the horizon; the remaining events
+    // then drain. Each iteration merges the heap top with the pending
+    // side-channel events by `(time, seq)`. Event counts are tallied in
+    // locals and flushed to the `serve.events.*` registry counters after
+    // the loop — no per-event atomics.
     let _loop_span = telemetry::span("serve.event_loop");
     let registry = telemetry::registry();
-    let ev_arrival = registry.counter("serve.events.arrival");
-    let ev_batch_done = registry.counter("serve.events.batch_done");
-    let ev_wake = registry.counter("serve.events.wake");
-    let ev_sample = registry.counter("serve.events.sample");
-    let ev_churn = registry.counter("serve.events.churn");
     let queue_gauge = registry.gauge("serve.queue_depth");
-    while let Some(Reverse(ev)) = sim.heap.pop() {
-        let now = ev.time;
-        match ev.kind {
-            EventKind::Arrival { tenant } => {
-                ev_arrival.inc();
-                sim.enqueue(tenant, now, None);
+    let (mut n_arrival, mut n_batch_done, mut n_wake, mut n_sample, mut n_churn) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    loop {
+        let mut best: Option<(f64, u64, NextSource)> =
+            sim.heap.peek().map(|&Reverse(e)| (e.time, e.seq, NextSource::Heap));
+        if let Some((t, s, _)) = pending_arrival {
+            if earlier(t, s, best) {
+                best = Some((t, s, NextSource::Arrival));
+            }
+        }
+        if next_sample <= cfg.samples {
+            let t = next_sample as f64 * sample_dt;
+            let s = sample_base_seq + next_sample as u64;
+            if earlier(t, s, best) {
+                best = Some((t, s, NextSource::Sample));
+            }
+        }
+        if let Some((t, s)) = pending_churn {
+            if earlier(t, s, best) {
+                best = Some((t, s, NextSource::Churn));
+            }
+        }
+        let Some((now, _, source)) = best else { break };
+        match source {
+            NextSource::Heap => {
+                let Some(Reverse(ev)) = sim.heap.pop() else { unreachable!() };
+                match ev.kind {
+                    EventKind::ClientArrival { client } => {
+                        n_arrival += 1;
+                        let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
+                        sim.enqueue(tenant, now, client);
+                    }
+                    EventKind::BatchDone { accel } => {
+                        n_batch_done += 1;
+                        sim.complete_batch(accel as usize, now);
+                    }
+                    EventKind::Wake { accel } => {
+                        n_wake += 1;
+                        let accel = accel as usize;
+                        // This wake (or an earlier stale one) has fired;
+                        // allow the next deadline to schedule a fresh one.
+                        if sim.accels[accel].next_wake_s <= now {
+                            sim.accels[accel].next_wake_s = f64::INFINITY;
+                        }
+                        sim.try_dispatch(accel, now);
+                    }
+                }
+            }
+            NextSource::Arrival => {
+                n_arrival += 1;
+                let (_, _, tenant) = pending_arrival.take().expect("selected pending arrival");
+                sim.enqueue(tenant, now, NO_CLIENT);
                 if let Some(src) = arrivals.as_mut() {
                     let t = src.next_arrival();
                     if t <= cfg.duration_s {
                         let next_tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
-                        sim.push(t, EventKind::Arrival { tenant: next_tenant });
+                        sim.seq += 1;
+                        pending_arrival = Some((t, sim.seq, next_tenant));
                     }
                 }
             }
-            EventKind::ClientArrival { client } => {
-                ev_arrival.inc();
-                let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
-                sim.enqueue(tenant, now, Some(client));
-            }
-            EventKind::BatchDone { accel } => {
-                ev_batch_done.inc();
-                sim.complete_batch(accel, now);
-            }
-            EventKind::Wake { accel } => {
-                ev_wake.inc();
-                // This wake (or an earlier stale one) has fired; allow the
-                // next deadline to schedule a fresh one.
-                if sim.accels[accel].next_wake_s <= now {
-                    sim.accels[accel].next_wake_s = f64::INFINITY;
-                }
-                sim.try_dispatch(accel, now);
-            }
-            EventKind::Sample => {
-                ev_sample.inc();
+            NextSource::Sample => {
+                n_sample += 1;
                 sim.sample_metrics(now);
                 queue_gauge.set(sim.accels.iter().map(|a| a.queued).sum::<usize>() as f64);
+                next_sample += 1;
             }
-            EventKind::Churn => {
+            NextSource::Churn => {
                 let _span = telemetry::span("serve.churn_event");
-                ev_churn.inc();
-                let mut next = None;
+                n_churn += 1;
+                pending_churn = None;
                 if let Some(c) = sim.churn.as_mut() {
                     c.apply_event(&cfg.mix, &mut sim.profiles)?;
                     let t = now + c.next_gap();
                     if t <= cfg.duration_s {
-                        next = Some(t);
+                        sim.seq += 1;
+                        pending_churn = Some((t, sim.seq));
                     }
                 }
-                if let Some(t) = next {
-                    sim.push(t, EventKind::Churn);
-                }
             }
+        }
+    }
+    registry.counter("serve.events.arrival").add(n_arrival);
+    registry.counter("serve.events.batch_done").add(n_batch_done);
+    registry.counter("serve.events.wake").add(n_wake);
+    registry.counter("serve.events.sample").add(n_sample);
+    registry.counter("serve.events.churn").add(n_churn);
+    for (size, &count) in sim.batch_size_counts.iter().enumerate() {
+        if count > 0 {
+            batch_size_hist().record_n(size as f64, count);
         }
     }
 

@@ -3,15 +3,16 @@
 //! serialized through [`crate::util::json`].
 //!
 //! The latency recorder keeps every sample (8 bytes each — a million
-//! requests is 8 MB) and sorts once at summary time, so the reported
-//! p50/p95/p99/p999 are *exact* nearest-rank percentiles over the full
-//! run, not sketch approximations. The percentile math is
-//! [`crate::util::bench::percentile_index`], shared with the bench
-//! harness so "p99" means the same thing in both.
+//! requests is 8 MB) and reduces them at summary time by progressive
+//! quickselect (`select_nth_unstable`, O(n) total instead of an O(n log n)
+//! sort), so the reported p50/p95/p99/p999 are *exact* nearest-rank
+//! percentiles over the full run, not sketch approximations. The
+//! percentile math is [`crate::util::bench::percentile_index`], shared
+//! with the bench harness so "p99" means the same thing in both.
 
 use std::collections::BTreeMap;
 
-use crate::util::bench::percentile_sorted;
+use crate::util::bench::percentile_index;
 use crate::util::json::Json;
 
 /// Collects individual request latencies.
@@ -45,22 +46,50 @@ impl LatencyRecorder {
         ok as f64 / self.samples.len() as f64
     }
 
-    /// Sorts a copy of the samples and reduces them to exact percentiles.
+    /// Reduces a scratch copy of the samples to exact nearest-rank
+    /// percentiles. Each quantile is an order statistic found by
+    /// `select_nth_unstable` on a progressively narrowing tail (the ranks
+    /// are non-decreasing in `q`, and each selection partitions everything
+    /// below its rank to the left), so the whole summary is O(n) — the
+    /// values are identical to sorting and indexing.
     pub fn summary(&self) -> LatencySummary {
         if self.samples.is_empty() {
             return LatencySummary::default();
         }
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(f64::total_cmp);
+        let mut scratch = self.samples.clone();
+        let n = scratch.len();
+        let (mut min_s, mut max_s) = (scratch[0], scratch[0]);
+        for &s in &scratch[1..] {
+            if s.total_cmp(&min_s).is_lt() {
+                min_s = s;
+            }
+            if s.total_cmp(&max_s).is_gt() {
+                max_s = s;
+            }
+        }
+        let ranks = [
+            percentile_index(n, 0.50),
+            percentile_index(n, 0.95),
+            percentile_index(n, 0.99),
+            percentile_index(n, 0.999),
+        ];
+        let mut picked = [0.0f64; 4];
+        let mut floor = 0;
+        for (slot, &rank) in ranks.iter().enumerate() {
+            let (_, v, _) =
+                scratch[floor..].select_nth_unstable_by(rank - floor, f64::total_cmp);
+            picked[slot] = *v;
+            floor = rank;
+        }
         LatencySummary {
-            count: sorted.len() as u64,
-            mean_s: self.sum / sorted.len() as f64,
-            min_s: sorted[0],
-            max_s: sorted[sorted.len() - 1],
-            p50_s: percentile_sorted(&sorted, 0.50),
-            p95_s: percentile_sorted(&sorted, 0.95),
-            p99_s: percentile_sorted(&sorted, 0.99),
-            p999_s: percentile_sorted(&sorted, 0.999),
+            count: n as u64,
+            mean_s: self.sum / n as f64,
+            min_s,
+            max_s,
+            p50_s: picked[0],
+            p95_s: picked[1],
+            p99_s: picked[2],
+            p999_s: picked[3],
         }
     }
 }

@@ -20,7 +20,15 @@
 //! * [`metrics`] — exact p50/p95/p99/p999 latency percentiles, SLO
 //!   attainment, queue-depth and busy-fraction time series, per-tenant
 //!   and per-accelerator breakdowns, serialized through
-//!   [`crate::util::json`].
+//!   [`crate::util::json`];
+//! * [`sweep`] — the parallel scenario-sweep executor
+//!   ([`sweep_with_workers`]) fanning independent config probes over
+//!   worker threads against the shared engine caches, and the capacity
+//!   planner ([`plan_capacity`]) that bisects fleet size to the minimum
+//!   meeting a p99 SLO per rps point;
+//! * [`reference`] — the retained pre-fast-path event loop, kept as the
+//!   bit-identity oracle for `benches/serve_scale.rs` and the equivalence
+//!   tests.
 //!
 //! Setting [`ServeConfig::churn`] turns the run into *serving under
 //! mutation*: a seeded Poisson stream of graph-edit batches
@@ -53,6 +61,8 @@
 pub mod batcher;
 pub mod fleet;
 pub mod metrics;
+pub mod reference;
+pub mod sweep;
 pub mod traffic;
 
 pub use batcher::BatchPolicy;
@@ -61,6 +71,7 @@ pub use metrics::{
     AccelStats, ChurnStats, LatencyRecorder, LatencySummary, ServeReport, TenantStats,
     TimeSeries,
 };
+pub use sweep::{plan_capacity, sweep_with_workers, CapacityCurve, CapacityPlanRequest};
 pub use traffic::{
     ArrivalProcess, ChurnSpec, OpenLoopArrivals, TenantMix, TenantProfile, TrafficSpec,
 };
@@ -129,40 +140,46 @@ impl ServeConfig {
         }
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    /// Structural validation as a typed [`SimError`] — field problems
+    /// (fleet shape, horizon, traffic, batching, churn, accelerator
+    /// config) come back as [`SimError::InvalidConfig`] and optimization
+    /// flags as [`SimError::InvalidFlags`], matching the engine's request
+    /// validation, so CLI and sweep callers report one error type.
+    pub fn validate(&self) -> Result<(), SimError> {
+        let field = |msg: String| Err(SimError::InvalidConfig(msg));
         if self.mix.is_empty() {
-            return Err("tenant mix must not be empty".into());
+            return field("tenant mix must not be empty".into());
         }
         if self.accelerators == 0 {
-            return Err("fleet needs at least one accelerator".into());
+            return field("fleet needs at least one accelerator".into());
         }
         if self.shards == 0 {
-            return Err("shards must be >= 1".into());
+            return field("shards must be >= 1".into());
         }
         if self.accelerators % self.shards != 0 {
-            return Err(format!(
+            return field(format!(
                 "shards ({}) must divide the fleet size ({}) into whole shard groups",
                 self.shards, self.accelerators
             ));
         }
         if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
-            return Err(format!("duration {} must be finite and > 0", self.duration_s));
+            return field(format!("duration {} must be finite and > 0", self.duration_s));
         }
         if self.samples == 0 {
-            return Err("samples must be >= 1".into());
+            return field("samples must be >= 1".into());
         }
         if let Some(slo) = self.slo_s {
             if !slo.is_finite() || slo <= 0.0 {
-                return Err(format!("SLO {slo} must be finite and > 0"));
+                return field(format!("SLO {slo} must be finite and > 0"));
             }
         }
-        self.traffic.validate()?;
-        self.batch.validate()?;
+        self.traffic.validate().map_err(SimError::InvalidConfig)?;
+        self.batch.validate().map_err(SimError::InvalidConfig)?;
         if let Some(churn) = &self.churn {
-            churn.validate()?;
+            churn.validate().map_err(SimError::InvalidConfig)?;
         }
-        self.accel_cfg.validate()?;
-        self.flags.validate()
+        self.accel_cfg.validate().map_err(SimError::InvalidConfig)?;
+        self.flags.validate().map_err(SimError::InvalidFlags)
     }
 
     /// Number of independent scheduling slots: shard groups of `shards`
@@ -203,7 +220,7 @@ pub fn simulate_with_workers(
     cfg: &ServeConfig,
     workers: usize,
 ) -> Result<ServeReport, SimError> {
-    cfg.validate().map_err(SimError::InvalidConfig)?;
+    cfg.validate()?;
     let reqs = cfg.tenant_requests();
     let resolved = if cfg.shards > 1 {
         par_map_workers(&reqs, workers, |req| {
@@ -219,7 +236,7 @@ pub fn simulate_with_workers(
 /// [`simulate_with_workers`] at the pool's default parallelism
 /// ([`par_map`]) — the entry point the CLI and benches use.
 pub fn simulate(engine: &BatchEngine, cfg: &ServeConfig) -> Result<ServeReport, SimError> {
-    cfg.validate().map_err(SimError::InvalidConfig)?;
+    cfg.validate()?;
     let reqs = cfg.tenant_requests();
     let resolved = if cfg.shards > 1 {
         par_map(&reqs, |req| engine.sharded_service_profile(req, cfg.shards))

@@ -1,0 +1,522 @@
+//! The retained baseline event loop: the fleet scheduler exactly as it
+//! stood before the serve fast path landed, kept as an in-crate oracle.
+//!
+//! [`super::fleet`] now runs a restructured loop — side-channel arrival /
+//! sample / churn sources instead of heap residency, pooled batch
+//! buffers, active-tenant index tables, and locally tallied telemetry.
+//! Those are pure mechanical optimizations: for any non-churn
+//! [`ServeConfig`] the fast loop must produce a [`ServeReport`]
+//! **bit-identical** to this module's, and `benches/serve_scale.rs`
+//! measures its events/sec against this baseline (the ≥2× floor). The
+//! equivalence is pinned by `tests/sweep_capacity.rs`; keep this file
+//! frozen unless the simulation *semantics* deliberately change, in which
+//! case both loops move together.
+//!
+//! The implementation notes below are the original ones. One binary heap
+//! orders all six event kinds by `(time, sequence)`; every arrival,
+//! sampling tick, and wake-up is a heap push and pop; each dispatched
+//! batch allocates its own request buffer; per-event telemetry counters
+//! are bumped through process-wide atomics. Churn mode is not replicated
+//! here — it exercises engine machinery, not the loop shape, and the
+//! churn determinism tests pin the live loop against itself.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::coordinator::{ServiceProfile, SimError};
+use crate::util::rng::{mix_seed, Pcg64};
+use crate::util::telemetry;
+
+use super::fleet::RoutePolicy;
+use super::metrics::{
+    AccelStats, LatencyRecorder, ServeReport, TenantStats, TimeSeries,
+};
+use super::traffic::{exp_sample, OpenLoopArrivals, TenantMix, TrafficSpec};
+use super::ServeConfig;
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// An open-loop request lands (tenant pre-sampled at schedule time).
+    Arrival { tenant: usize },
+    /// A closed-loop client issues its next request.
+    ClientArrival { client: u32 },
+    /// The in-flight batch on `accel` finishes.
+    BatchDone { accel: usize },
+    /// A batching deadline passed on `accel`; re-evaluate dispatch.
+    Wake { accel: usize },
+    /// Metrics sampling tick.
+    Sample,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Request {
+    tenant: usize,
+    arrival_s: f64,
+    /// Closed-loop client that issued this request, if any.
+    client: Option<u32>,
+}
+
+struct Accel {
+    /// Per-tenant FIFO queues of waiting requests.
+    queues: Vec<VecDeque<Request>>,
+    /// Total waiting requests across all tenant queues.
+    queued: usize,
+    busy: bool,
+    /// Requests of the in-flight batch (empty when idle).
+    current: Vec<Request>,
+    /// Tenant whose weights are on the MR banks (None before first batch).
+    programmed: Option<usize>,
+    /// Earliest pending Wake event for this accelerator (infinity when
+    /// none) — dedupes wake-ups so queue growth toward a fixed batching
+    /// deadline does not re-push the same event.
+    next_wake_s: f64,
+    /// Dataset ids whose partition sets this accelerator holds.
+    resident: Vec<bool>,
+    busy_s: f64,
+    completed: u64,
+    batches: u64,
+    weight_programs: u64,
+}
+
+impl Accel {
+    fn new(n_tenants: usize, n_datasets: usize) -> Self {
+        Self {
+            queues: (0..n_tenants).map(|_| VecDeque::new()).collect(),
+            queued: 0,
+            busy: false,
+            current: Vec::new(),
+            programmed: None,
+            next_wake_s: f64::INFINITY,
+            resident: vec![false; n_datasets],
+            busy_s: 0.0,
+            completed: 0,
+            batches: 0,
+            weight_programs: 0,
+        }
+    }
+
+    /// Waiting + in-flight requests: the JSQ load signal.
+    fn depth(&self) -> usize {
+        self.queued + self.current.len()
+    }
+}
+
+/// Dense dataset ids over the tenant mix, as the original loop computed
+/// them (tenants sharing a dataset share an id and therefore residency).
+fn dense_dataset_ids(mix: &TenantMix) -> (Vec<String>, Vec<usize>) {
+    let mut names: Vec<String> = Vec::new();
+    let mut tenant_dataset = Vec::with_capacity(mix.len());
+    for t in mix.tenants() {
+        let id = match names.iter().position(|d| d == &t.dataset) {
+            Some(i) => i,
+            None => {
+                names.push(t.dataset.clone());
+                names.len() - 1
+            }
+        };
+        tenant_dataset.push(id);
+    }
+    (names, tenant_dataset)
+}
+
+struct RefSim<'a> {
+    cfg: &'a ServeConfig,
+    profiles: Vec<ServiceProfile>,
+    tenant_dataset: Vec<usize>,
+    accels: Vec<Accel>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    rr_next: usize,
+    tenant_rng: Pcg64,
+    think_rng: Pcg64,
+    latency: LatencyRecorder,
+    tenant_latency: Vec<LatencyRecorder>,
+    tenant_offered: Vec<u64>,
+    tenant_completed: Vec<u64>,
+    offered: u64,
+    completed: u64,
+    energy_j: f64,
+    queue_depth: TimeSeries,
+    busy_frac: TimeSeries,
+    last_completion_s: f64,
+}
+
+impl<'a> RefSim<'a> {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { time, seq: self.seq, kind }));
+    }
+
+    fn route(&mut self, tenant: usize) -> usize {
+        let n = self.accels.len();
+        match self.cfg.route {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            RoutePolicy::JoinShortestQueue => self.shortest_queue(|_| true),
+            RoutePolicy::GraphAffinity => {
+                let ds = self.tenant_dataset[tenant];
+                let any_resident = self.accels.iter().any(|a| a.resident[ds]);
+                if any_resident {
+                    self.shortest_queue(|a| a.resident[ds])
+                } else {
+                    self.shortest_queue(|_| true)
+                }
+            }
+        }
+    }
+
+    /// Lowest-index accelerator with minimum depth among those `keep`
+    /// admits (callers guarantee at least one does).
+    fn shortest_queue<F: Fn(&Accel) -> bool>(&self, keep: F) -> usize {
+        let mut best = usize::MAX;
+        let mut best_depth = usize::MAX;
+        for (i, a) in self.accels.iter().enumerate() {
+            if keep(a) && a.depth() < best_depth {
+                best = i;
+                best_depth = a.depth();
+            }
+        }
+        debug_assert!(best != usize::MAX, "router filter admitted no accelerator");
+        best
+    }
+
+    fn enqueue(&mut self, tenant: usize, arrival_s: f64, client: Option<u32>) {
+        self.offered += 1;
+        self.tenant_offered[tenant] += 1;
+        let idx = self.route(tenant);
+        let a = &mut self.accels[idx];
+        a.queues[tenant].push_back(Request { tenant, arrival_s, client });
+        a.queued += 1;
+        self.try_dispatch(idx, arrival_s);
+    }
+
+    /// If `idx` is idle and some tenant queue is dispatchable now, launch
+    /// the FIFO-oldest ready batch; otherwise schedule a wake-up at the
+    /// earliest batching deadline.
+    fn try_dispatch(&mut self, idx: usize, now: f64) {
+        if self.accels[idx].busy || self.accels[idx].queued == 0 {
+            return;
+        }
+        let policy = self.cfg.batch;
+        // Decide with a shared borrow, mutate after.
+        let mut ready: Option<(f64, usize)> = None; // (oldest arrival, tenant)
+        let mut next_deadline = f64::INFINITY;
+        for (tn, q) in self.accels[idx].queues.iter().enumerate() {
+            let Some(front) = q.front() else { continue };
+            let at = policy.ready_at(front.arrival_s, q.len(), &self.profiles[tn]);
+            if at <= now {
+                let cand = (front.arrival_s, tn);
+                let better = match ready {
+                    None => true,
+                    Some(best) => cand.0 < best.0 || (cand.0 == best.0 && cand.1 < best.1),
+                };
+                if better {
+                    ready = Some(cand);
+                }
+            } else if at < next_deadline {
+                next_deadline = at;
+            }
+        }
+        let Some((_, tenant)) = ready else {
+            // One pending wake per accelerator is enough: re-push only when
+            // the new deadline beats the earliest already scheduled (stale
+            // later wakes fire as harmless re-evaluations).
+            if next_deadline.is_finite() && next_deadline < self.accels[idx].next_wake_s {
+                self.accels[idx].next_wake_s = next_deadline;
+                self.push(next_deadline, EventKind::Wake { accel: idx });
+            }
+            return;
+        };
+        let ds = self.tenant_dataset[tenant];
+        let profile = self.profiles[tenant];
+        let a = &mut self.accels[idx];
+        let take = policy.max_batch().min(a.queues[tenant].len());
+        let mut batch = Vec::with_capacity(take);
+        for _ in 0..take {
+            if let Some(r) = a.queues[tenant].pop_front() {
+                batch.push(r);
+            }
+        }
+        a.queued -= take;
+        super::fleet::batch_size_hist().record(take as f64);
+        let programmed = a.programmed == Some(tenant);
+        if !programmed {
+            a.weight_programs += 1;
+        }
+        let service_s = profile.batch_service_s(take, programmed);
+        a.programmed = Some(tenant);
+        a.resident[ds] = true;
+        a.busy = true;
+        a.current = batch;
+        a.busy_s += service_s;
+        a.batches += 1;
+        // Energy is decided at launch (the batch either paid the staging
+        // share or not); the fleet drains, so launch-time accounting equals
+        // completion-time totals.
+        let batch_energy = profile.batch_energy_j(take, programmed);
+        self.energy_j += batch_energy;
+        self.push(now + service_s, EventKind::BatchDone { accel: idx });
+    }
+
+    fn complete_batch(&mut self, idx: usize, now: f64) {
+        let batch = std::mem::take(&mut self.accels[idx].current);
+        self.accels[idx].busy = false;
+        self.accels[idx].completed += batch.len() as u64;
+        self.last_completion_s = now;
+        let mean_think_s = match self.cfg.traffic {
+            TrafficSpec::Closed { mean_think_s, .. } => mean_think_s,
+            TrafficSpec::Open { .. } => 0.0,
+        };
+        for req in batch {
+            let lat = now - req.arrival_s;
+            self.latency.record(lat);
+            self.tenant_latency[req.tenant].record(lat);
+            self.tenant_completed[req.tenant] += 1;
+            self.completed += 1;
+            if let Some(client) = req.client {
+                let gap = if mean_think_s > 0.0 {
+                    exp_sample(&mut self.think_rng, 1.0 / mean_think_s)
+                } else {
+                    0.0
+                };
+                let next = now + gap;
+                if next <= self.cfg.duration_s {
+                    self.push(next, EventKind::ClientArrival { client });
+                }
+            }
+        }
+        self.try_dispatch(idx, now);
+    }
+
+    fn sample_metrics(&mut self, now: f64) {
+        let waiting: usize = self.accels.iter().map(|a| a.queued).sum();
+        let busy = self.accels.iter().filter(|a| a.busy).count();
+        self.queue_depth.push(now, waiting as f64);
+        self.busy_frac.push(now, busy as f64 / self.accels.len() as f64);
+    }
+}
+
+/// Runs the original (pre-fast-path) serving event loop against
+/// pre-resolved tenant service profiles. Same contract as
+/// [`super::simulate_with_profiles`]: churn configurations are rejected,
+/// arrivals stop at the horizon, the fleet drains.
+pub fn simulate_fleet_reference(
+    cfg: &ServeConfig,
+    profiles: &[ServiceProfile],
+) -> Result<ServeReport, SimError> {
+    cfg.validate()?;
+    if cfg.churn.is_some() {
+        return Err(SimError::InvalidConfig(
+            "the reference event loop does not serve under churn; use serve::simulate"
+                .into(),
+        ));
+    }
+    if profiles.len() != cfg.mix.len() {
+        return Err(SimError::InvalidConfig(format!(
+            "{} service profiles supplied for {} tenants",
+            profiles.len(),
+            cfg.mix.len()
+        )));
+    }
+    for (i, p) in profiles.iter().enumerate() {
+        let finite = p.latency_s.is_finite()
+            && p.weight_stage_s.is_finite()
+            && p.energy_j.is_finite()
+            && p.weight_stage_energy_j.is_finite();
+        if !finite
+            || p.weight_stage_s < 0.0
+            || p.energy_j < 0.0
+            || p.weight_stage_energy_j < 0.0
+            || p.per_request_s() <= 0.0
+        {
+            return Err(SimError::InvalidConfig(format!(
+                "service profile for tenant {} ({}) is degenerate \
+                 (needs finite fields and per-request time > 0): {p:?}",
+                i,
+                cfg.mix.tenants()[i].label()
+            )));
+        }
+    }
+    let n_tenants = cfg.mix.len();
+    let slots = cfg.shard_groups();
+    let (dataset_names, tenant_dataset) = dense_dataset_ids(&cfg.mix);
+    let n_datasets = dataset_names.len();
+
+    let mut sim = RefSim {
+        cfg,
+        profiles: profiles.to_vec(),
+        tenant_dataset,
+        accels: (0..slots).map(|_| Accel::new(n_tenants, n_datasets)).collect(),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        rr_next: 0,
+        tenant_rng: Pcg64::seed_from_u64(mix_seed(cfg.seed, 1)),
+        think_rng: Pcg64::seed_from_u64(mix_seed(cfg.seed, 2)),
+        latency: LatencyRecorder::new(),
+        tenant_latency: (0..n_tenants).map(|_| LatencyRecorder::new()).collect(),
+        tenant_offered: vec![0; n_tenants],
+        tenant_completed: vec![0; n_tenants],
+        offered: 0,
+        completed: 0,
+        energy_j: 0.0,
+        queue_depth: TimeSeries::default(),
+        busy_frac: TimeSeries::default(),
+        last_completion_s: 0.0,
+    };
+
+    // Seed the event heap: traffic source plus sampling ticks — every
+    // sampling tick lives in the heap from the start, as it originally did.
+    let mut arrivals = match cfg.traffic {
+        TrafficSpec::Open { process, rps } => {
+            let mut src = OpenLoopArrivals::new(process, rps, mix_seed(cfg.seed, 0))
+                .map_err(SimError::InvalidConfig)?;
+            let t0 = src.next_arrival();
+            if t0 <= cfg.duration_s {
+                let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
+                sim.push(t0, EventKind::Arrival { tenant });
+            }
+            Some(src)
+        }
+        TrafficSpec::Closed { clients, mean_think_s } => {
+            for client in 0..clients as u32 {
+                let gap = if mean_think_s > 0.0 {
+                    exp_sample(&mut sim.think_rng, 1.0 / mean_think_s)
+                } else {
+                    0.0
+                };
+                if gap <= cfg.duration_s {
+                    sim.push(gap, EventKind::ClientArrival { client });
+                }
+            }
+            None
+        }
+    };
+    let sample_dt = cfg.duration_s / cfg.samples as f64;
+    for k in 1..=cfg.samples {
+        sim.push(k as f64 * sample_dt, EventKind::Sample);
+    }
+
+    // The event loop. Arrivals stop at the horizon; the heap then drains.
+    // Per-event telemetry goes straight to the process-wide atomics — the
+    // baseline cost profile the fast path is measured against.
+    let _loop_span = telemetry::span("serve.event_loop.reference");
+    let registry = telemetry::registry();
+    let ev_arrival = registry.counter("serve.reference.events.arrival");
+    let ev_batch_done = registry.counter("serve.reference.events.batch_done");
+    let ev_wake = registry.counter("serve.reference.events.wake");
+    let ev_sample = registry.counter("serve.reference.events.sample");
+    let queue_gauge = registry.gauge("serve.reference.queue_depth");
+    while let Some(Reverse(ev)) = sim.heap.pop() {
+        let now = ev.time;
+        match ev.kind {
+            EventKind::Arrival { tenant } => {
+                ev_arrival.inc();
+                sim.enqueue(tenant, now, None);
+                if let Some(src) = arrivals.as_mut() {
+                    let t = src.next_arrival();
+                    if t <= cfg.duration_s {
+                        let next_tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
+                        sim.push(t, EventKind::Arrival { tenant: next_tenant });
+                    }
+                }
+            }
+            EventKind::ClientArrival { client } => {
+                ev_arrival.inc();
+                let tenant = sim.cfg.mix.sample(&mut sim.tenant_rng);
+                sim.enqueue(tenant, now, Some(client));
+            }
+            EventKind::BatchDone { accel } => {
+                ev_batch_done.inc();
+                sim.complete_batch(accel, now);
+            }
+            EventKind::Wake { accel } => {
+                ev_wake.inc();
+                // This wake (or an earlier stale one) has fired; allow the
+                // next deadline to schedule a fresh one.
+                if sim.accels[accel].next_wake_s <= now {
+                    sim.accels[accel].next_wake_s = f64::INFINITY;
+                }
+                sim.try_dispatch(accel, now);
+            }
+            EventKind::Sample => {
+                ev_sample.inc();
+                sim.sample_metrics(now);
+                queue_gauge.set(sim.accels.iter().map(|a| a.queued).sum::<usize>() as f64);
+            }
+        }
+    }
+
+    debug_assert_eq!(sim.offered, sim.completed, "fleet must drain every request");
+    let makespan_s = cfg.duration_s.max(sim.last_completion_s);
+    let tenants = cfg
+        .mix
+        .tenants()
+        .iter()
+        .enumerate()
+        .map(|(i, t)| TenantStats {
+            label: t.label(),
+            offered: sim.tenant_offered[i],
+            completed: sim.tenant_completed[i],
+            latency: sim.tenant_latency[i].summary(),
+            slo_attainment: cfg.slo_s.map(|slo| sim.tenant_latency[i].attainment(slo)),
+        })
+        .collect();
+    let mut accels = Vec::with_capacity(slots * cfg.shards);
+    for a in &sim.accels {
+        let stats = AccelStats {
+            utilization: a.busy_s / makespan_s,
+            busy_s: a.busy_s,
+            completed: a.completed,
+            batches: a.batches,
+            weight_programs: a.weight_programs,
+        };
+        for _ in 0..cfg.shards {
+            accels.push(stats);
+        }
+    }
+    Ok(ServeReport {
+        duration_s: cfg.duration_s,
+        makespan_s,
+        offered: sim.offered,
+        completed: sim.completed,
+        throughput_rps: if makespan_s > 0.0 { sim.completed as f64 / makespan_s } else { 0.0 },
+        latency: sim.latency.summary(),
+        slo_attainment: cfg.slo_s.map(|slo| sim.latency.attainment(slo)),
+        energy_j: sim.energy_j,
+        tenants,
+        accels,
+        queue_depth: sim.queue_depth,
+        busy_frac: sim.busy_frac,
+        churn: None,
+    })
+}

@@ -1,0 +1,453 @@
+//! The parallel scenario-sweep executor and the capacity planner built
+//! on it.
+//!
+//! A capacity study asks the serving simulator the same question many
+//! times with one knob turned — fleet sizes, arrival rates, batching
+//! policies — and every probe is an independent deterministic simulation
+//! against the same [`BatchEngine`]. [`sweep_with_workers`] fans those
+//! probes over worker threads while the engine's plan/profile caches stay
+//! shared: concurrent probes that need the same tenant block on one
+//! build ([`BatchEngine::service_profile`]'s once-cell cells) instead of
+//! duplicating it, so a sweep over any number of fleet-shape variants
+//! performs exactly one plan build and one profile build per distinct
+//! tenant tuple — `tests/sweep_capacity.rs` pins the counters, and
+//! `benches/serve_scale.rs` measures the resulting scaling.
+//!
+//! ## Determinism
+//!
+//! The executor inherits the serving layer's guarantee wholesale: each
+//! probe runs [`simulate_with_workers`] with **one** inner worker (the
+//! parallelism budget is spent across probes, not inside them), each
+//! report depends only on its own [`ServeConfig`], and
+//! [`par_map_workers`] preserves input order — so the result vector is
+//! bit-identical for any worker count, 1 through the machine width.
+//!
+//! ## Capacity planning
+//!
+//! [`plan_capacity`] answers "how many accelerators does this tenant mix
+//! need to hold a p99 SLO at R requests/sec" for a whole curve of rates
+//! at once. Fleet size is monotone in feasibility — more shard groups
+//! strictly add service capacity while routing and batching are
+//! unchanged — so each rate point bisects over the group count. Round 1
+//! probes every point at the fleet ceiling (feasibility screen, and the
+//! round that pays every cache build); later rounds batch one bisection
+//! step per unresolved point through the sweep executor, re-using
+//! memoized probes across points. After round 1 the engine's
+//! `plan_builds` / `profile_builds` counters stay flat — the curve
+//! carries before/after snapshots so callers (and the CI smoke) can
+//! assert it.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{BatchEngine, SimError};
+use crate::util::json::Json;
+use crate::util::parallel::par_map_workers;
+
+use super::metrics::ServeReport;
+use super::traffic::TrafficSpec;
+use super::{simulate_with_workers, ServeConfig};
+
+/// Runs every scenario through the engine-backed serving simulator,
+/// fanning the probes over `workers` threads (serial at `workers <= 1`).
+///
+/// Results come back in input order, one per config, each exactly what
+/// [`simulate_with_workers`] returns for that config alone — see the
+/// module docs for why the fan-out cannot change them. Errors are
+/// per-probe: one invalid scenario does not poison its siblings.
+pub fn sweep_with_workers(
+    engine: &BatchEngine,
+    cfgs: &[ServeConfig],
+    workers: usize,
+) -> Vec<Result<ServeReport, SimError>> {
+    par_map_workers(cfgs, workers, |cfg| simulate_with_workers(engine, cfg, 1))
+}
+
+/// A capacity-planning question: for each arrival rate in `rps_points`,
+/// the minimum fleet size (in accelerators, counted in whole shard
+/// groups of `base.shards`) whose p99 latency meets `slo_p99_s`.
+#[derive(Debug, Clone)]
+pub struct CapacityPlanRequest {
+    /// Template scenario: tenant mix, routing, batching, shards, horizon,
+    /// seed, accelerator architecture. Its `accelerators` field and
+    /// open-loop rate are overridden per probe; its traffic must be
+    /// [`TrafficSpec::Open`] (a closed loop self-limits, so "offered
+    /// rps" is not a free variable to plan against).
+    pub base: ServeConfig,
+    /// Offered arrival rates to plan for (requests/sec, each > 0).
+    pub rps_points: Vec<f64>,
+    /// The p99 latency SLO (seconds) a fleet must meet to qualify.
+    pub slo_p99_s: f64,
+    /// Fleet-size ceiling; rates that miss the SLO even at this size
+    /// report `min_accelerators: None`.
+    pub max_accelerators: usize,
+    /// Sweep-executor threads for each probe round.
+    pub workers: usize,
+}
+
+/// One rate point of a [`CapacityCurve`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityPoint {
+    pub rps: f64,
+    /// Minimum qualifying fleet size, `None` when even
+    /// `max_accelerators` misses the SLO.
+    pub min_accelerators: Option<usize>,
+    /// p99 at `min_accelerators` when met, at the ceiling otherwise.
+    pub p99_s: f64,
+    /// p99 one shard group below the minimum — the violation evidence
+    /// (`None` when the minimum is a single group, so no smaller fleet
+    /// exists).
+    pub p99_below_s: Option<f64>,
+    /// Simulations this point consumed (memoized probes not re-counted).
+    pub probes: usize,
+}
+
+/// The capacity-vs-rps curve [`plan_capacity`] produces, plus the
+/// engine-counter snapshots that witness the sweep's cache guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityCurve {
+    pub slo_p99_s: f64,
+    pub max_accelerators: usize,
+    /// Chips per shard group — fleet candidates are its multiples.
+    pub shards: usize,
+    pub points: Vec<CapacityPoint>,
+    /// Total simulations across all rounds and points.
+    pub probes: usize,
+    /// Probe rounds (round 1 is the ceiling screen; each later round is
+    /// one batched bisection step).
+    pub rounds: usize,
+    /// `BatchEngine::plan_builds()` right after round 1 / at the end.
+    /// Equal values are the "every build happens in round 1" guarantee.
+    pub plan_builds_round1: usize,
+    pub plan_builds_final: usize,
+    /// Same snapshots for `BatchEngine::profile_builds()`.
+    pub profile_builds_round1: usize,
+    pub profile_builds_final: usize,
+}
+
+impl CapacityCurve {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("slo_p99_s".into(), Json::Num(self.slo_p99_s));
+        o.insert("max_accelerators".into(), Json::Num(self.max_accelerators as f64));
+        o.insert("shards".into(), Json::Num(self.shards as f64));
+        o.insert("probes".into(), Json::Num(self.probes as f64));
+        o.insert("rounds".into(), Json::Num(self.rounds as f64));
+        o.insert("plan_builds_round1".into(), Json::Num(self.plan_builds_round1 as f64));
+        o.insert("plan_builds_final".into(), Json::Num(self.plan_builds_final as f64));
+        o.insert(
+            "profile_builds_round1".into(),
+            Json::Num(self.profile_builds_round1 as f64),
+        );
+        o.insert(
+            "profile_builds_final".into(),
+            Json::Num(self.profile_builds_final as f64),
+        );
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut po = BTreeMap::new();
+                po.insert("rps".into(), Json::Num(p.rps));
+                po.insert(
+                    "min_accelerators".into(),
+                    match p.min_accelerators {
+                        Some(n) => Json::Num(n as f64),
+                        None => Json::Null,
+                    },
+                );
+                po.insert("slo_met".into(), Json::Bool(p.min_accelerators.is_some()));
+                po.insert("p99_s".into(), Json::Num(p.p99_s));
+                po.insert(
+                    "p99_below_s".into(),
+                    match p.p99_below_s {
+                        Some(v) => Json::Num(v),
+                        None => Json::Null,
+                    },
+                );
+                po.insert("probes".into(), Json::Num(p.probes as f64));
+                Json::Obj(po)
+            })
+            .collect();
+        o.insert("points".into(), Json::Arr(points));
+        Json::Obj(o)
+    }
+}
+
+/// Bisection state of one rate point: the invariant is `ok(hi)` and
+/// `!ok(lo - 1)` (vacuous at `lo == 1`), both in shard-group units.
+struct PointState {
+    rps: f64,
+    lo: usize,
+    hi: usize,
+    /// `Some(None)` = infeasible at the ceiling; `Some(Some(g))` = min
+    /// group count found.
+    resolved: Option<Option<usize>>,
+    /// Group count → measured p99 (every simulation this point ran).
+    memo: BTreeMap<usize, f64>,
+    probes: usize,
+}
+
+/// Bisects each rate point of `req` to the minimum fleet meeting the p99
+/// SLO, batching every round's probes through [`sweep_with_workers`].
+///
+/// The whole plan is deterministic: probes inherit `req.base.seed`, and
+/// the bisection path is a pure function of the (deterministic) probe
+/// outcomes — so a curve is reproducible bit-for-bit from its request,
+/// and `tests/sweep_capacity.rs` pins that the minimum fleet is
+/// non-decreasing in the arrival rate.
+pub fn plan_capacity(
+    engine: &BatchEngine,
+    req: &CapacityPlanRequest,
+) -> Result<CapacityCurve, SimError> {
+    let invalid = |msg: String| Err(SimError::InvalidConfig(msg));
+    if req.rps_points.is_empty() {
+        return invalid("capacity planning needs at least one rps point".into());
+    }
+    for &rps in &req.rps_points {
+        if !rps.is_finite() || rps <= 0.0 {
+            return invalid(format!("rps point {rps} must be finite and > 0"));
+        }
+    }
+    if !req.slo_p99_s.is_finite() || req.slo_p99_s <= 0.0 {
+        return invalid(format!("p99 SLO {} must be finite and > 0", req.slo_p99_s));
+    }
+    let process = match req.base.traffic {
+        TrafficSpec::Open { process, .. } => process,
+        TrafficSpec::Closed { .. } => {
+            return invalid(
+                "capacity planning requires open-loop traffic (a closed loop's offered \
+                 rate follows fleet speed, so rps is not a free variable)"
+                    .into(),
+            )
+        }
+    };
+    let shards = req.base.shards.max(1);
+    let max_groups = req.max_accelerators / shards;
+    if max_groups == 0 {
+        return invalid(format!(
+            "max_accelerators ({}) must fit at least one shard group of {}",
+            req.max_accelerators, shards
+        ));
+    }
+    // Validate the template once at the ceiling; per-probe validation
+    // then only re-checks what the overrides could change.
+    let probe_cfg = |rps: f64, groups: usize| {
+        let mut cfg = req.base.clone();
+        cfg.accelerators = groups * shards;
+        cfg.traffic = TrafficSpec::Open { process, rps };
+        cfg
+    };
+    probe_cfg(req.rps_points[0], max_groups).validate()?;
+
+    let mut points: Vec<PointState> = req
+        .rps_points
+        .iter()
+        .map(|&rps| PointState {
+            rps,
+            lo: 1,
+            hi: max_groups,
+            resolved: None,
+            memo: BTreeMap::new(),
+            probes: 0,
+        })
+        .collect();
+    let slo = req.slo_p99_s;
+    let mut probes_total = 0usize;
+    let mut rounds = 0usize;
+    let mut plan_builds_round1 = 0usize;
+    let mut profile_builds_round1 = 0usize;
+
+    // Run one batched probe round: `wanted[i]` is the group count point
+    // `i` needs measured (deduped against each point's memo by the
+    // caller). Returns the measured p99s in the same order.
+    let run_round = |batch: &[(usize, usize)],
+                     points: &mut [PointState]|
+     -> Result<(), SimError> {
+        let cfgs: Vec<ServeConfig> =
+            batch.iter().map(|&(pi, g)| probe_cfg(points[pi].rps, g)).collect();
+        let reports = sweep_with_workers(engine, &cfgs, req.workers);
+        for (&(pi, g), report) in batch.iter().zip(reports) {
+            let report = report?;
+            points[pi].memo.insert(g, report.latency.p99_s);
+            points[pi].probes += 1;
+        }
+        Ok(())
+    };
+
+    // Round 1: every point at the fleet ceiling. Infeasible points end
+    // here; feasible ones enter bisection with the invariant holding.
+    // This round touches every distinct tenant tuple, so it is the round
+    // that pays every plan/profile build — snapshot the counters after
+    // it and again at the end to witness flatness.
+    let screen: Vec<(usize, usize)> = (0..points.len()).map(|pi| (pi, max_groups)).collect();
+    run_round(&screen, &mut points)?;
+    probes_total += screen.len();
+    rounds += 1;
+    for p in points.iter_mut() {
+        if p.memo[&max_groups] > slo {
+            p.resolved = Some(None);
+        } else if max_groups == 1 {
+            p.resolved = Some(Some(1));
+        }
+    }
+    plan_builds_round1 += engine.plan_builds();
+    profile_builds_round1 += engine.profile_builds();
+
+    loop {
+        // Advance each unresolved point to its next un-memoized probe
+        // (memo hits replay instantly — distinct rps points share no
+        // probes, but a point revisits its own history only when the
+        // evidence pass below asks for an already-measured size).
+        let mut batch: Vec<(usize, usize)> = Vec::new();
+        for (pi, p) in points.iter_mut().enumerate() {
+            if p.resolved.is_some() {
+                continue;
+            }
+            loop {
+                if p.lo == p.hi {
+                    p.resolved = Some(Some(p.lo));
+                    break;
+                }
+                let mid = (p.lo + p.hi) / 2;
+                match p.memo.get(&mid) {
+                    Some(&p99) => {
+                        if p99 <= slo {
+                            p.hi = mid;
+                        } else {
+                            p.lo = mid + 1;
+                        }
+                    }
+                    None => {
+                        batch.push((pi, mid));
+                        break;
+                    }
+                }
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        run_round(&batch, &mut points)?;
+        probes_total += batch.len();
+        rounds += 1;
+    }
+
+    // Evidence pass: make sure every met point has its minimum-minus-one
+    // probe on record (bisection leaves it memoized except when the
+    // search never descended there).
+    let mut evidence: Vec<(usize, usize)> = Vec::new();
+    for (pi, p) in points.iter().enumerate() {
+        if let Some(Some(g)) = p.resolved {
+            if g > 1 && !p.memo.contains_key(&(g - 1)) {
+                evidence.push((pi, g - 1));
+            }
+        }
+    }
+    if !evidence.is_empty() {
+        run_round(&evidence, &mut points)?;
+        probes_total += evidence.len();
+        rounds += 1;
+    }
+
+    let out = points
+        .iter()
+        .map(|p| {
+            let min_groups = p.resolved.expect("every point resolves");
+            let (p99_s, p99_below_s) = match min_groups {
+                Some(g) => (
+                    p.memo[&g],
+                    (g > 1).then(|| p.memo[&(g - 1)]),
+                ),
+                None => (p.memo[&max_groups], None),
+            };
+            CapacityPoint {
+                rps: p.rps,
+                min_accelerators: min_groups.map(|g| g * shards),
+                p99_s,
+                p99_below_s,
+                probes: p.probes,
+            }
+        })
+        .collect();
+    Ok(CapacityCurve {
+        slo_p99_s: slo,
+        max_accelerators: req.max_accelerators,
+        shards,
+        points: out,
+        probes: probes_total,
+        rounds,
+        plan_builds_round1,
+        plan_builds_final: engine.plan_builds(),
+        profile_builds_round1,
+        profile_builds_final: engine.profile_builds(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::models::ModelKind;
+    use crate::serve::traffic::{ArrivalProcess, TenantMix, TenantProfile};
+
+    fn base_cfg() -> ServeConfig {
+        let mix =
+            TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap();
+        let mut cfg = ServeConfig::new(
+            mix,
+            TrafficSpec::Open { process: ArrivalProcess::Poisson, rps: 100.0 },
+        );
+        cfg.duration_s = 0.2;
+        cfg
+    }
+
+    #[test]
+    fn closed_loop_capacity_request_is_rejected() {
+        let mut base = base_cfg();
+        base.traffic = TrafficSpec::Closed { clients: 4, mean_think_s: 0.01 };
+        let req = CapacityPlanRequest {
+            base,
+            rps_points: vec![100.0],
+            slo_p99_s: 0.01,
+            max_accelerators: 4,
+            workers: 1,
+        };
+        assert!(matches!(
+            plan_capacity(&BatchEngine::new(), &req),
+            Err(SimError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn degenerate_capacity_requests_are_rejected() {
+        let mk = |f: fn(&mut CapacityPlanRequest)| {
+            let mut req = CapacityPlanRequest {
+                base: base_cfg(),
+                rps_points: vec![100.0],
+                slo_p99_s: 0.01,
+                max_accelerators: 4,
+                workers: 1,
+            };
+            f(&mut req);
+            req
+        };
+        let engine = BatchEngine::new();
+        for req in [
+            mk(|r| r.rps_points.clear()),
+            mk(|r| r.rps_points = vec![0.0]),
+            mk(|r| r.rps_points = vec![f64::NAN]),
+            mk(|r| r.slo_p99_s = 0.0),
+            mk(|r| r.max_accelerators = 0),
+        ] {
+            assert!(
+                matches!(plan_capacity(&engine, &req), Err(SimError::InvalidConfig(_))),
+                "request should have been rejected"
+            );
+        }
+        // Ceiling smaller than one shard group.
+        let mut req = mk(|_| {});
+        req.base.accelerators = 4;
+        req.base.shards = 4;
+        req.max_accelerators = 2;
+        assert!(matches!(plan_capacity(&engine, &req), Err(SimError::InvalidConfig(_))));
+    }
+}

@@ -173,11 +173,23 @@ impl Histogram {
 
     /// Records one observation of `v` units (negative values clamp to 0).
     pub fn record(&self, v: f64) {
+        self.record_n(v, 1);
+    }
+
+    /// Records `n` observations of `v` units in one shot — three atomic
+    /// ops total instead of `3n`. Hot loops (the serve event loop) tally
+    /// per-value counts locally and flush them here once per run; the
+    /// resulting buckets/count/sum are identical to `n` calls of
+    /// [`Self::record`].
+    pub fn record_n(&self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
         let u = if v.is_finite() && v > 0.0 { v as u64 } else { 0 };
         let bucket = (64 - u.leading_zeros() as usize).min(Self::N_BUCKETS - 1);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(u, Ordering::Relaxed);
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(n as usize, Ordering::Relaxed);
+        self.sum.fetch_add(u * n, Ordering::Relaxed);
+        self.buckets[bucket].fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> usize {
@@ -329,6 +341,22 @@ mod tests {
         assert_eq!(h.sum(), 1006);
         let j = h.to_json();
         assert_eq!(j.get("count").and_then(|c| c.as_u64()), Some(5));
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let a = Histogram::new("test.hist.n.a");
+        let b = Histogram::new("test.hist.n.b");
+        for (v, n) in [(1.0, 3u64), (7.0, 5), (1000.0, 2), (0.0, 4)] {
+            a.record_n(v, n);
+            for _ in 0..n {
+                b.record(v);
+            }
+        }
+        a.record_n(42.0, 0); // no-op
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.sum(), b.sum());
+        assert_eq!(format!("{}", a.to_json()), format!("{}", b.to_json()));
     }
 
     #[test]

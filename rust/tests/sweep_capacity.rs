@@ -1,0 +1,276 @@
+//! Integration tests for the parallel scenario-sweep executor, the
+//! capacity planner, and the serve event-loop fast path.
+//!
+//! The pins here are the PR's contracts: sweep results are bit-identical
+//! for any worker count, the whole sweep performs one plan/profile build
+//! per distinct tenant tuple, the fast event loop reproduces the retained
+//! baseline loop bit for bit across the routing × batching × traffic
+//! matrix, capacity curves are monotone with flat cache counters after
+//! round 1, and churn setup shares engine state instead of cloning it.
+
+use ghost::coordinator::{BatchEngine, OptFlags, SimError};
+use ghost::gnn::models::ModelKind;
+use ghost::serve::{
+    self, plan_capacity, reference::simulate_fleet_reference, simulate_with_profiles,
+    sweep_with_workers, ArrivalProcess, BatchPolicy, CapacityPlanRequest, ChurnSpec,
+    RoutePolicy, ServeConfig, TenantMix, TenantProfile, TrafficSpec,
+};
+
+fn two_tenant_mix() -> TenantMix {
+    TenantMix::new(vec![
+        TenantProfile::new(ModelKind::Gcn, "Cora", 2.0),
+        TenantProfile::new(ModelKind::Gat, "Citeseer", 1.0),
+    ])
+    .unwrap()
+}
+
+fn open(rps: f64) -> TrafficSpec {
+    TrafficSpec::Open { process: ArrivalProcess::Poisson, rps }
+}
+
+/// A small scenario family varying fleet shape, batching, and rate.
+fn scenario_family() -> Vec<ServeConfig> {
+    let mut out = Vec::new();
+    for &(accels, rps) in &[(1usize, 500.0), (2, 1500.0), (4, 3000.0), (4, 6000.0)] {
+        let mut cfg = ServeConfig::new(two_tenant_mix(), open(rps));
+        cfg.accelerators = accels;
+        cfg.duration_s = 0.2;
+        cfg.batch = BatchPolicy::MaxBatchOrWait { max_batch: 4, max_wait_s: 5e-4 };
+        out.push(cfg);
+    }
+    out
+}
+
+#[test]
+fn sweep_reports_bit_identical_across_worker_counts() {
+    let engine = BatchEngine::new();
+    let scenarios = scenario_family();
+    let base: Vec<_> = sweep_with_workers(&engine, &scenarios, 1)
+        .into_iter()
+        .map(|r| r.expect("probe runs"))
+        .collect();
+    // One build per tenant for the whole 4-scenario sweep, already after
+    // the serial pass…
+    assert_eq!(engine.profile_builds(), 2);
+    assert_eq!(engine.plan_builds(), 2);
+    for workers in [2, 4, 16] {
+        let got: Vec<_> = sweep_with_workers(&engine, &scenarios, workers)
+            .into_iter()
+            .map(|r| r.expect("probe runs"))
+            .collect();
+        assert_eq!(base, got, "sweep reports diverged at {workers} workers");
+    }
+    // …and every parallel re-sweep was pure cache hits.
+    assert_eq!(engine.profile_builds(), 2);
+    assert_eq!(engine.plan_builds(), 2);
+}
+
+#[test]
+fn sweep_probe_errors_stay_per_probe() {
+    let engine = BatchEngine::new();
+    let mut scenarios = scenario_family();
+    scenarios[1].accelerators = 0; // invalid — must not poison siblings
+    let results = sweep_with_workers(&engine, &scenarios, 2);
+    assert!(matches!(results[1], Err(SimError::InvalidConfig(_))));
+    for (i, r) in results.iter().enumerate() {
+        if i != 1 {
+            assert!(r.is_ok(), "valid probe {i} failed: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn fast_loop_matches_reference_loop_across_configs() {
+    let engine = BatchEngine::new();
+    let mix = two_tenant_mix();
+    let base = ServeConfig::new(mix, open(2000.0));
+    let profiles: Vec<_> = base
+        .tenant_requests()
+        .iter()
+        .map(|req| engine.service_profile(req).expect("tenant simulates"))
+        .collect();
+    let routes = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::GraphAffinity,
+    ];
+    let batches = [
+        BatchPolicy::Immediate,
+        BatchPolicy::MaxBatchOrWait { max_batch: 4, max_wait_s: 5e-4 },
+        BatchPolicy::SloAware { slo_s: 2e-3, max_batch: 8 },
+    ];
+    let traffics = [
+        open(2000.0),
+        TrafficSpec::Closed { clients: 8, mean_think_s: 1e-3 },
+    ];
+    for route in routes {
+        for batch in batches {
+            for traffic in traffics.iter().cloned() {
+                let mut cfg = base.clone();
+                cfg.route = route;
+                cfg.batch = batch;
+                cfg.traffic = traffic;
+                cfg.accelerators = 3;
+                cfg.duration_s = 0.2;
+                cfg.slo_s = Some(2e-3);
+                let fast = simulate_with_profiles(&cfg, &profiles).expect("fast loop runs");
+                let reference =
+                    simulate_fleet_reference(&cfg, &profiles).expect("reference loop runs");
+                assert_eq!(
+                    fast, reference,
+                    "fast loop diverged from baseline at route {:?} batch {:?} traffic {:?}",
+                    route, cfg.batch, cfg.traffic
+                );
+                assert_eq!(fast.offered, fast.completed, "fleet must drain");
+            }
+        }
+    }
+}
+
+#[test]
+fn capacity_curve_is_monotone_with_flat_builds_after_round_one() {
+    let mut base = ServeConfig::new(
+        TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap(),
+        open(1000.0),
+    );
+    base.duration_s = 0.25;
+    let engine = BatchEngine::new();
+    let req = CapacityPlanRequest {
+        base,
+        rps_points: vec![500.0, 5000.0, 20_000.0],
+        slo_p99_s: 2e-3,
+        max_accelerators: 8,
+        workers: 2,
+    };
+    let curve = plan_capacity(&engine, &req).expect("capacity plan runs");
+    assert_eq!(curve.points.len(), 3);
+
+    // ROADMAP acceptance: every cache build happens in the round-1 screen;
+    // the bisection rounds after it are pure hits.
+    assert_eq!(curve.plan_builds_round1, curve.plan_builds_final, "plan builds not flat");
+    assert_eq!(
+        curve.profile_builds_round1, curve.profile_builds_final,
+        "profile builds not flat"
+    );
+    assert_eq!(curve.profile_builds_final, 1, "one tenant, one profile build");
+
+    // Minimum fleet is non-decreasing in the offered rate (None = not met
+    // at the ceiling, which only ever gets worse as rps grows).
+    let mins: Vec<Option<usize>> = curve.points.iter().map(|p| p.min_accelerators).collect();
+    for w in mins.windows(2) {
+        match (w[0], w[1]) {
+            (Some(a), Some(b)) => assert!(a <= b, "min fleet decreased with rps: {mins:?}"),
+            (None, Some(_)) => panic!("feasibility returned as rps grew: {mins:?}"),
+            _ => {}
+        }
+    }
+    // Per-point witnesses: the minimum meets the SLO, one group below
+    // violates it, and infeasible points report the ceiling's p99.
+    for p in &curve.points {
+        match p.min_accelerators {
+            Some(n) => {
+                assert!(n >= curve.shards && n <= curve.max_accelerators);
+                assert_eq!(n % curve.shards, 0, "fleet must be whole shard groups");
+                assert!(p.p99_s <= curve.slo_p99_s, "reported minimum misses the SLO");
+                if n > curve.shards {
+                    let below = p.p99_below_s.expect("violation evidence for n > 1 group");
+                    assert!(below > curve.slo_p99_s, "one group below must violate");
+                } else {
+                    assert!(p.p99_below_s.is_none());
+                }
+            }
+            None => assert!(p.p99_s > curve.slo_p99_s, "unmet point must show a violation"),
+        }
+    }
+
+    // Determinism: replaying the identical request on a fresh engine
+    // reproduces the curve (counters included — same probe schedule).
+    let replay = plan_capacity(&BatchEngine::new(), &req).expect("replay runs");
+    assert_eq!(curve, replay, "capacity planning must be deterministic");
+}
+
+#[test]
+fn capacity_bisection_agrees_with_linear_scan() {
+    let mut base = ServeConfig::new(
+        TenantMix::new(vec![TenantProfile::new(ModelKind::Gcn, "Cora", 1.0)]).unwrap(),
+        open(1000.0),
+    );
+    base.duration_s = 0.2;
+    let rps = 8000.0;
+    let slo = 2e-3;
+    let max = 6;
+    let engine = BatchEngine::new();
+    let req = CapacityPlanRequest {
+        base: base.clone(),
+        rps_points: vec![rps],
+        slo_p99_s: slo,
+        max_accelerators: max,
+        workers: 1,
+    };
+    let curve = plan_capacity(&engine, &req).expect("capacity plan runs");
+
+    // Brute force the same question one fleet size at a time.
+    let p99_at = |n: usize| {
+        let mut cfg = base.clone();
+        cfg.accelerators = n;
+        cfg.traffic = open(rps);
+        serve::simulate(&engine, &cfg).expect("probe runs").latency.p99_s
+    };
+    let ok: Vec<bool> = (1..=max).map(|n| p99_at(n) <= slo).collect();
+    // The planner's premise: feasibility is monotone in fleet size. Holds
+    // for this workload; if it ever flips here, the workload (not the
+    // bisection) changed.
+    for w in ok.windows(2) {
+        assert!(!(w[0] && !w[1]), "feasibility not monotone in fleet size: {ok:?}");
+    }
+    let linear_min = ok.iter().position(|&b| b).map(|i| i + 1);
+    assert_eq!(
+        curve.points[0].min_accelerators, linear_min,
+        "bisection disagrees with the linear scan"
+    );
+}
+
+#[test]
+fn churn_setup_shares_engine_state_for_same_dataset_tenants() {
+    // Two tenants over ONE dataset: fleet setup must reuse the engine's
+    // dataset and partition set (one build each), not clone per tenant.
+    let mix = TenantMix::new(vec![
+        TenantProfile::new(ModelKind::Gcn, "Cora", 1.0),
+        TenantProfile::new(ModelKind::Gat, "Cora", 1.0),
+    ])
+    .unwrap();
+    let mut cfg = ServeConfig::new(mix, open(400.0));
+    cfg.duration_s = 0.3;
+    cfg.churn = Some(ChurnSpec::new(300.0));
+    let engine = BatchEngine::new();
+    let report = serve::simulate(&engine, &cfg).expect("churn serving runs");
+    assert_eq!(engine.dataset_builds(), 1, "dataset built more than once");
+    assert_eq!(engine.partition_builds(), 1, "partition set built more than once");
+    let churn = report.churn.expect("churn stats present");
+    assert!(churn.events > 0, "no mutation events over the horizon");
+    // Both tenants share the dataset, so every event re-profiles both.
+    assert_eq!(churn.reprofiles, 2 * churn.events);
+    assert_eq!(report.offered, report.completed);
+}
+
+#[test]
+fn serve_validation_yields_typed_errors() {
+    let base = ServeConfig::new(two_tenant_mix(), open(1000.0));
+    base.validate().unwrap();
+    // Field problems are InvalidConfig…
+    let mut c = base.clone();
+    c.duration_s = f64::NAN;
+    assert!(matches!(c.validate(), Err(SimError::InvalidConfig(_))));
+    let mut c = base.clone();
+    c.churn = Some(ChurnSpec { batch: 0, ..ChurnSpec::new(100.0) });
+    assert!(matches!(c.validate(), Err(SimError::InvalidConfig(_))));
+    // …and flag contradictions keep the engine's InvalidFlags shape.
+    let mut c = base;
+    c.flags = OptFlags {
+        buffer_partition: false,
+        pipelining: true,
+        dac_sharing: false,
+        workload_balancing: true,
+    };
+    assert!(matches!(c.validate(), Err(SimError::InvalidFlags(_))));
+}
